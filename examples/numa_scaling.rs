@@ -1,0 +1,82 @@
+//! NUMA-awareness walkthrough: thread placement, the hierarchical solver's
+//! convergence at increasing (virtual) thread counts, and the cost model's
+//! per-epoch breakdown on the paper's 4-node Xeon.
+//!
+//! ```bash
+//! cargo run --release --example numa_scaling
+//! ```
+
+use parlin::data::synthetic;
+use parlin::figures::DsKind;
+use parlin::glm::Objective;
+use parlin::metrics::Table;
+use parlin::simcost::{epoch_time, xeon4, CostOpts, SolverKind};
+use parlin::solver::{Partitioning, SolverConfig};
+use parlin::sysinfo::Topology;
+use parlin::vthread;
+
+fn main() {
+    let machine = xeon4();
+    let topo: &Topology = &machine.topology;
+
+    println!("== thread placement policy (§3) on {} ==", machine.name);
+    let mut t1 = Table::new(&["threads", "placement (threads per node)"]);
+    for threads in [1usize, 4, 8, 12, 16, 32] {
+        t1.row(&[threads.to_string(), format!("{:?}", topo.place_threads(threads))]);
+    }
+    print!("{}", t1.render());
+
+    println!("\n== hierarchical solver: epochs vs virtual threads (dense 20k × 100) ==");
+    let ds = synthetic::dense_classification(20_000, 100, 42);
+    let obj = Objective::Logistic { lambda: 1.0 / ds.n() as f64 };
+    let mut t2 = Table::new(&["threads", "epochs", "gap", "converged"]);
+    for threads in [1usize, 4, 8, 16, 32] {
+        let cfg = SolverConfig::new(obj)
+            .with_threads(threads)
+            .with_partition(Partitioning::Dynamic)
+            .with_tol(1e-4);
+        let out = if threads == 1 {
+            parlin::solver::seq::train_sequential(&ds, &cfg)
+        } else {
+            vthread::train_numa_sim(&ds, &cfg, topo)
+        };
+        t2.row(&[
+            threads.to_string(),
+            out.epochs_run.to_string(),
+            format!("{:.2e}", out.final_gap),
+            out.converged.to_string(),
+        ]);
+    }
+    print!("{}", t2.render());
+    println!("(dynamic partitioning keeps the epoch count near-sequential — the paper's point)");
+
+    println!("\n== modeled per-epoch breakdown at paper scale (criteo-like) ==");
+    let w = DsKind::CriteoLike.paper_workload();
+    let mut t3 = Table::new(&[
+        "threads", "compute", "stream", "alpha", "shared", "shuffle", "merge", "reduce", "total",
+    ]);
+    for threads in [1usize, 8, 16, 32] {
+        let mut o = CostOpts::new(threads);
+        o.bucket_size = 8;
+        o.numa_aware = true;
+        let kind = if threads <= 8 {
+            SolverKind::Domesticated(Partitioning::Dynamic)
+        } else {
+            SolverKind::Numa(Partitioning::Dynamic)
+        };
+        let b = epoch_time(&machine, &w, kind, &o);
+        let f = |x: f64| format!("{x:.3}");
+        t3.row(&[
+            threads.to_string(),
+            f(b.compute),
+            f(b.stream),
+            f(b.alpha),
+            f(b.shared),
+            f(b.shuffle),
+            f(b.merge),
+            f(b.reduce),
+            f(b.total()),
+        ]);
+    }
+    print!("{}", t3.render());
+}

@@ -1,0 +1,91 @@
+//! Host-measured solver comparison (a wall-clock companion to Figure 6).
+//!
+//! Trains logistic regression on a scaled dataset with every solver in the
+//! repo — the paper's SDCA variants and the four baseline classes — and
+//! reports measured time, passes and test loss *on this machine* (no cost
+//! model involved; thread counts limited by the host's cores).
+//!
+//! ```bash
+//! cargo run --release --example solver_comparison [-- <dataset-kind>]
+//! ```
+
+use parlin::baselines::{dual_cd, h2o_auto, lbfgs, sag, BaselineConfig};
+use parlin::figures::DsKind;
+use parlin::glm::{test_loss, Objective};
+use parlin::metrics::Table;
+use parlin::solver::{train, SolverConfig, Variant};
+use parlin::with_ds;
+
+fn main() {
+    let kind = match std::env::args().nth(1).as_deref() {
+        Some("criteo-like") => DsKind::CriteoLike,
+        Some("epsilon-like") => DsKind::EpsilonLike,
+        Some("sparse-synth") => DsKind::SparseSynth,
+        Some("dense-synth") | None => DsKind::DenseSynth,
+        Some(other) => {
+            eprintln!("unknown kind {other}, using dense-synth");
+            DsKind::DenseSynth
+        }
+    };
+    let (ds, test) = kind.make(true, 42).split(0.2, 7); // held-out 20%
+    let lambda = 1.0 / ds.n() as f64;
+    let obj = Objective::Logistic { lambda };
+    println!(
+        "dataset {} (n={}, d={}, nnz={})\n",
+        kind.name(),
+        ds.n(),
+        ds.d(),
+        ds.nnz()
+    );
+
+    let tl = |w: &[f64]| {
+        with_ds!(&test, d => {
+            let idx: Vec<usize> = (0..d.n()).collect();
+            test_loss(d, &obj, w, &idx)
+        })
+    };
+
+    let mut table = Table::new(&["solver", "passes", "wall_s", "test_loss"]);
+
+    // --- this paper's solvers
+    for (label, variant, threads) in [
+        ("snap seq (buckets)", Variant::Sequential, 1usize),
+        ("snap dom 2T", Variant::Domesticated, 2),
+        ("snap numa 4T", Variant::Numa, 4),
+        ("wild 2T", Variant::Wild, 2),
+    ] {
+        let cfg = SolverConfig::new(obj)
+            .with_variant(variant)
+            .with_threads(threads)
+            .with_tol(1e-4);
+        let out = with_ds!(&ds, d => train(d, &cfg));
+        let w = out.weights(&obj);
+        table.row(&[
+            label.into(),
+            out.epochs_run.to_string(),
+            format!("{:.3}", out.record.total_wall_s),
+            format!("{:.4}", tl(&w)),
+        ]);
+    }
+
+    // --- baseline classes
+    let bcfg = BaselineConfig::new(obj).with_tol(1e-6).with_max_epochs(200);
+    let runs = vec![
+        ("liblinear (dual CD)", with_ds!(&ds, d => dual_cd::train_dual_cd(d, &bcfg))),
+        ("lbfgs", with_ds!(&ds, d => lbfgs::train_lbfgs(d, &bcfg))),
+        ("sag", with_ds!(&ds, d => sag::train_sag(d, &bcfg))),
+        ("h2o auto", with_ds!(&ds, d => h2o_auto(d, &bcfg))),
+    ];
+    for (label, out) in runs {
+        table.row(&[
+            label.into(),
+            out.record.epochs_run().to_string(),
+            format!("{:.3}", out.record.total_wall_s),
+            format!("{:.4}", tl(&out.w)),
+        ]);
+    }
+
+    print!("{}", table.render());
+    println!("\n(single-core host: thread counts here exercise correctness, not speedup —");
+    println!(" the Figure 3/6 harnesses model the paper's 32-core testbeds.)");
+}

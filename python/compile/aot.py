@@ -1,0 +1,84 @@
+"""AOT pipeline: lower every Layer-2 function to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes ``<name>.hlo.txt`` per entry in :data:`compile.model.ARTIFACTS` plus
+``manifest.json`` recording the argument/result shapes the rust runtime
+validates against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single-output functions)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str):
+    """Lower one registered artifact; returns (hlo_text, manifest entry)."""
+    fn, example = model.ARTIFACTS[name]
+    args = example()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_shapes = [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in jax.tree_util.tree_leaves(
+            jax.eval_shape(fn, *args)
+        )
+    ]
+    entry = {
+        "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args],
+        "outputs": out_shapes,
+    }
+    return text, entry
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--only",
+        nargs="*",
+        default=None,
+        help="subset of artifact names (default: all registered)",
+    )
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = args.only or list(model.ARTIFACTS)
+    manifest = {}
+    for name in names:
+        text, entry = lower_artifact(name)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = entry
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(names)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles (build-time only)."""
+
+from . import ref  # noqa: F401
+from .sdca_kernels import (  # noqa: F401
+    BUCKET_B,
+    TILE_D,
+    TILE_M,
+    bucket_sdca_step,
+    logloss_metrics,
+    matvec,
+    vmem_bytes_estimate,
+)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Independent implementations of the same math (no Pallas, no shared helper
+code on the numerics) — pytest asserts ``allclose`` between each kernel and
+its oracle across shapes and dtypes. This is the core correctness signal of
+the compile path; the rust test-suite separately validates the loaded HLO
+artifacts against the rust-native f64 implementations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matvec_ref(x, w):
+    """z = X @ w."""
+    return jnp.asarray(x) @ jnp.asarray(w)
+
+
+def logloss_metrics_ref(z, y, mask):
+    """[Σ mask·log(1+e^{−yz}), Σ mask·1[yz>0], Σ mask] — stable log1p."""
+    z = np.asarray(z, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    m = np.asarray(mask, dtype=np.float64)
+    margin = -y * z
+    loss = np.where(margin > 30.0, margin, np.log1p(np.exp(np.minimum(margin, 30.0))))
+    correct = (z * y > 0).astype(np.float64)
+    return np.array([np.sum(loss * m), np.sum(correct * m), np.sum(m)])
+
+
+def _solve_logistic_1d(s0, q, c, iters=200):
+    """Bisection-only root of ln(s/(1−s)) + q·s + c = 0 (oracle solver —
+    deliberately a different algorithm than the kernel's Newton)."""
+    lo, hi = 1e-9, 1.0 - 1e-9
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        f = np.log(mid / (1.0 - mid)) + q * mid + c
+        if f > 0:
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+def bucket_sdca_step_ref(x, y, alpha, nsq, v, scalars):
+    """Plain-python sequential SDCA over the bucket (float64)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64).copy()
+    nsq = np.asarray(nsq, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64).copy()
+    inv_lambda_n, n_eff, sigma, n = [float(s) for s in np.asarray(scalars)]
+    b = x.shape[0]
+    for i in range(b):
+        if nsq[i] <= 0.0:
+            continue
+        xw = float(x[i] @ v) * inv_lambda_n
+        q = nsq[i] * inv_lambda_n * (n / max(n_eff, 1.0))
+        c = y[i] * xw - q * y[i] * alpha[i]
+        s = _solve_logistic_1d(y[i] * alpha[i], q, c)
+        delta = y[i] * s - alpha[i]
+        alpha[i] += delta
+        v += sigma * delta * x[i]
+    return alpha, v

@@ -1,0 +1,194 @@
+"""Layer-1 Pallas kernels for the SDCA training system.
+
+These are the dense bulk-compute hot-spots the rust coordinator offloads to
+AOT-compiled XLA executables:
+
+* :func:`matvec` — tiled margins ``z = X @ w`` (the inner-product engine of
+  loss/gradient evaluation),
+* :func:`logloss_metrics` — fused logistic-loss + accuracy reduction,
+* :func:`bucket_sdca_step` — one *bucket* of exact SDCA coordinate updates
+  (the paper's cache-line bucket, re-thought as a VMEM tile).
+
+Hardware adaptation (DESIGN.md §3): the paper's CPU insight is "coarsen the
+random access granularity to the memory system's native tile". On TPU the
+native tile is the VMEM block: ``BlockSpec`` below expresses the HBM→VMEM
+schedule the paper implemented with cache lines and prefetching.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime executes anywhere. Real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf from the chosen block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Canonical AOT tile shapes (MXU-aligned: multiples of 8 sublanes × 128
+# lanes). The rust runtime pads every dataset tile to these.
+TILE_M = 256  # examples per evaluation tile
+TILE_D = 128  # features per tile
+BUCKET_B = 8  # examples per SDCA bucket (64B line / 8B per α entry)
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o = X_block @ w  (X_block: (bm, D) in VMEM)."""
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def matvec(x: jax.Array, w: jax.Array, block_m: int = TILE_M) -> jax.Array:
+    """Tiled margins ``z = X @ w`` over a (M, D) example tile.
+
+    The grid walks the M dimension in ``block_m`` rows; each step streams
+    one (block_m, D) block HBM→VMEM while ``w`` stays resident — the TPU
+    analogue of the paper's sequential column streaming + model-vector
+    reuse.
+    """
+    m, d = x.shape
+    assert m % block_m == 0, f"M={m} must be a multiple of block_m={block_m}"
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _logloss_kernel(z_ref, y_ref, mask_ref, o_ref):
+    """Fused logistic-loss + correct-count + mask-count reduction."""
+    z = z_ref[...]
+    y = y_ref[...]
+    m = mask_ref[...]
+    margin = -y * z
+    # numerically-stable log1p(exp(margin))
+    loss = jnp.where(margin > 30.0, margin, jnp.log1p(jnp.exp(jnp.minimum(margin, 30.0))))
+    correct = jnp.where(z * y > 0.0, 1.0, 0.0)
+    o_ref[0] = jnp.sum(loss * m)
+    o_ref[1] = jnp.sum(correct * m)
+    o_ref[2] = jnp.sum(m)
+
+
+def logloss_metrics(z: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """``[Σ mask·ℓ(z,y), Σ mask·1[correct], Σ mask]`` for a margin tile.
+
+    ``mask`` zeroes the padding rows the rust runtime adds to fill the last
+    tile of a dataset.
+    """
+    (m,) = z.shape
+    return pl.pallas_call(
+        _logloss_kernel,
+        out_shape=jax.ShapeDtypeStruct((3,), z.dtype),
+        interpret=True,
+    )(z, y, mask)
+
+
+def _newton_logistic(s0, q, c, iters: int = 30):
+    """Safeguarded Newton for φ(s) = ln(s/(1−s)) + q·s + c = 0 on (0,1).
+
+    φ is strictly increasing, so the root is unique; we carry a bisection
+    bracket and fall back to its midpoint whenever the Newton step leaves
+    the bracket. Fixed iteration count (no data-dependent control flow) so
+    the lowering stays a straight-line HLO loop.
+    """
+    eps = 1e-6
+
+    def body(_, carry):
+        s, lo, hi = carry
+        f = jnp.log(s / (1.0 - s)) + q * s + c
+        lo = jnp.where(f > 0.0, lo, s)
+        hi = jnp.where(f > 0.0, s, hi)
+        fp = 1.0 / (s * (1.0 - s)) + q
+        nxt = s - f / fp
+        good = (nxt > lo) & (nxt < hi)
+        nxt = jnp.where(good, nxt, 0.5 * (lo + hi))
+        return nxt, lo, hi
+
+    s, _, _ = jax.lax.fori_loop(0, iters, body, (jnp.clip(s0, eps, 1.0 - eps), eps, 1.0 - eps))
+    return s
+
+
+def _bucket_kernel(x_ref, y_ref, a_ref, nsq_ref, v_ref, scal_ref, a_out, v_out):
+    """Sequential exact SDCA steps over one bucket, entirely in VMEM.
+
+    scal_ref packs ``[inv_lambda_n, n_eff, sigma]`` (see
+    ``solver::dom::worker_round`` on the rust side for the σ′ algebra).
+    """
+    xs = x_ref[...]  # (B, D) — the whole bucket tile lives in VMEM
+    ys = y_ref[...]
+    nsq = nsq_ref[...]
+    inv_lambda_n = scal_ref[0]
+    n_eff = scal_ref[1]
+    sigma = scal_ref[2]
+    b = xs.shape[0]
+
+    def step(i, carry):
+        alpha, v = carry
+        x = jax.lax.dynamic_index_in_dim(xs, i, axis=0, keepdims=False)
+        y = jax.lax.dynamic_index_in_dim(ys, i, axis=0, keepdims=False)
+        a = jax.lax.dynamic_index_in_dim(alpha, i, axis=0, keepdims=False)
+        ns = jax.lax.dynamic_index_in_dim(nsq, i, axis=0, keepdims=False)
+        xw = jnp.dot(x, v) * inv_lambda_n
+        # q = ‖x‖²/(λ·n_eff) = ‖x‖²·inv_lambda_n·(n/n_eff)
+        q = ns * inv_lambda_n * (scal_ref[3] / jnp.maximum(n_eff, 1.0))
+        c = y * xw - q * y * a
+        s = _newton_logistic(y * a, q, c)
+        delta = jnp.where(ns > 0.0, y * s - a, 0.0)
+        alpha = jax.lax.dynamic_update_index_in_dim(alpha, a + delta, i, axis=0)
+        v = v + sigma * delta * x
+        return alpha, v
+
+    alpha0 = a_ref[...]
+    v0 = v_ref[...]
+    alpha1, v1 = jax.lax.fori_loop(0, b, step, (alpha0, v0))
+    a_out[...] = alpha1
+    v_out[...] = v1
+
+
+def bucket_sdca_step(
+    x: jax.Array,
+    y: jax.Array,
+    alpha: jax.Array,
+    nsq: jax.Array,
+    v: jax.Array,
+    scalars: jax.Array,
+):
+    """One bucket of exact logistic-SDCA coordinate updates.
+
+    Args:
+      x: (B, D) bucket of dense examples.
+      y: (B,) labels in {−1, +1}.
+      alpha: (B,) current dual coordinates of the bucket.
+      nsq: (B,) cached ‖x_j‖².
+      v: (D,) the worker's replica of the shared vector (σ′-scaled view).
+      scalars: (4,) = [inv_lambda_n, n_eff, sigma, n] packed run constants.
+
+    Returns:
+      (alpha', v'): updated bucket duals and replica.
+    """
+    b, d = x.shape
+    return pl.pallas_call(
+        _bucket_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ),
+        interpret=True,
+    )(x, y, alpha, nsq, v, scalars)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_estimate(block_m: int = TILE_M, d: int = TILE_D, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one matvec grid step (DESIGN.md §Perf):
+    X block + w + z block, double-buffered X stream."""
+    x_block = block_m * d * dtype_bytes
+    return 2 * x_block + d * dtype_bytes + block_m * dtype_bytes

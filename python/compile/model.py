@@ -1,0 +1,92 @@
+"""Layer-2 JAX compute graphs, composed from the Layer-1 Pallas kernels.
+
+These are the functions the AOT pipeline (:mod:`compile.aot`) lowers to HLO
+text for the rust runtime. Shapes are fixed at lowering time to the
+canonical tiles in :mod:`compile.kernels.sdca_kernels`; the rust side pads
+and composes tiles (see ``rust/src/runtime``).
+
+Python in this package runs at *build time only* — nothing here is imported
+on the training path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sdca_kernels as k
+
+
+def eval_tile(x, y, mask, w):
+    """Loss/accuracy partials of one (TILE_M, TILE_D) example tile.
+
+    Returns a 3-vector ``[loss_sum, correct, count]`` — the rust runtime
+    accumulates these across example tiles. Feature-tiled datasets
+    (d > TILE_D) instead use :func:`matvec_tile` per feature tile, sum the
+    partial margins in rust, and finish with :func:`loss_tile`.
+    """
+    z = k.matvec(x, w)
+    return (k.logloss_metrics(z, y, mask),)
+
+
+def matvec_tile(x, w):
+    """Partial margins of one (TILE_M, TILE_D) tile: ``z += X·w_tile``."""
+    return (k.matvec(x, w),)
+
+
+def loss_tile(z, y, mask):
+    """Finish the reduction for pre-computed margins."""
+    return (k.logloss_metrics(z, y, mask),)
+
+
+def grad_tile(x, y, mask, w):
+    """Logistic-loss gradient partials of one tile (L-BFGS/SAG baselines).
+
+    Returns ``(grad_partial[TILE_D], loss_sum)`` where
+    ``grad_partial = Xᵀ(−y·σ(−y·z)·mask)`` — the *unregularized,
+    unnormalized* loss gradient; rust adds ``λw`` and divides by ``n``
+    after accumulating tiles.
+    """
+    z = k.matvec(x, w)
+    s = jax.nn.sigmoid(-y * z)  # = 1/(1+e^{yz})
+    coeff = -y * s * mask
+    grad = x.T @ coeff
+    margin = -y * z
+    loss = jnp.where(margin > 30.0, margin, jnp.log1p(jnp.exp(jnp.minimum(margin, 30.0))))
+    return grad, jnp.sum(loss * mask)
+
+
+def bucket_step(x, y, alpha, nsq, v, scalars):
+    """One SDCA bucket update (kernel passthrough, see ``bucket_sdca_step``)."""
+    return k.bucket_sdca_step(x, y, alpha, nsq, v, scalars)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: artifact name → (function, example-argument factory). Everything the AOT
+#: pipeline ships to the rust runtime is declared here.
+ARTIFACTS = {
+    "eval_tile": (
+        eval_tile,
+        lambda: (_f32(k.TILE_M, k.TILE_D), _f32(k.TILE_M), _f32(k.TILE_M), _f32(k.TILE_D)),
+    ),
+    "matvec_tile": (matvec_tile, lambda: (_f32(k.TILE_M, k.TILE_D), _f32(k.TILE_D))),
+    "loss_tile": (loss_tile, lambda: (_f32(k.TILE_M), _f32(k.TILE_M), _f32(k.TILE_M))),
+    "grad_tile": (
+        grad_tile,
+        lambda: (_f32(k.TILE_M, k.TILE_D), _f32(k.TILE_M), _f32(k.TILE_M), _f32(k.TILE_D)),
+    ),
+    "bucket_step": (
+        bucket_step,
+        lambda: (
+            _f32(k.BUCKET_B, k.TILE_D),
+            _f32(k.BUCKET_B),
+            _f32(k.BUCKET_B),
+            _f32(k.BUCKET_B),
+            _f32(k.TILE_D),
+            _f32(4),
+        ),
+    ),
+}

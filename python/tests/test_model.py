@@ -1,0 +1,81 @@
+"""Layer-2 model graph tests: shapes, composition and gradient math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import sdca_kernels as k
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tile(seed, m=k.TILE_M, d=k.TILE_D):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(np.float32) / np.sqrt(d)
+    y = np.where(rng.random(m) < 0.5, -1.0, 1.0).astype(np.float32)
+    mask = np.ones(m, np.float32)
+    w = rng.standard_normal(d).astype(np.float32) * 0.3
+    return x, y, mask, w
+
+
+def test_eval_tile_matches_direct():
+    x, y, mask, w = _tile(0)
+    (got,) = model.eval_tile(*(jnp.asarray(a) for a in (x, y, mask, w)))
+    z = x @ w
+    loss = np.log1p(np.exp(-(y * z))).sum()
+    correct = float(((z * y) > 0).sum())
+    np.testing.assert_allclose(np.asarray(got), [loss, correct, float(len(y))], rtol=1e-3)
+
+
+def test_matvec_plus_loss_composes_to_eval():
+    """Feature-tiled path (matvec per tile + loss_tile) must equal the fused
+    eval_tile — this is the composition the rust runtime performs for
+    d > TILE_D datasets."""
+    x, y, mask, w = _tile(1)
+    half = k.TILE_D // 2
+    (z1,) = model.matvec_tile(jnp.asarray(np.pad(x[:, :half], ((0, 0), (0, half)))), jnp.asarray(np.pad(w[:half], (0, half))))
+    (z2,) = model.matvec_tile(jnp.asarray(np.pad(x[:, half:], ((0, 0), (0, half)))), jnp.asarray(np.pad(w[half:], (0, half))))
+    (split,) = model.loss_tile(z1 + z2, jnp.asarray(y), jnp.asarray(mask))
+    (fused,) = model.eval_tile(*(jnp.asarray(a) for a in (x, y, mask, w)))
+    np.testing.assert_allclose(np.asarray(split), np.asarray(fused), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_tile_matches_autodiff(seed):
+    x, y, mask, w = _tile(seed, m=k.TILE_M)
+
+    def loss_fn(w_):
+        z = jnp.asarray(x) @ w_
+        return jnp.sum(jnp.log1p(jnp.exp(-jnp.asarray(y) * z)) * jnp.asarray(mask))
+
+    want = jax.grad(loss_fn)(jnp.asarray(w))
+    got, loss = model.grad_tile(*(jnp.asarray(a) for a in (x, y, mask, w)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(loss), float(loss_fn(jnp.asarray(w))), rtol=1e-4)
+
+
+def test_grad_tile_masked_rows_contribute_zero():
+    x, y, mask, w = _tile(3)
+    mask2 = mask.copy()
+    mask2[10:] = 0.0
+    g_full, _ = model.grad_tile(*(jnp.asarray(a) for a in (x, y, mask2, w)))
+    g_manual, _ = model.grad_tile(
+        jnp.asarray(np.concatenate([x[:10], np.zeros_like(x[10:])])),
+        jnp.asarray(y),
+        jnp.asarray(mask2),
+        jnp.asarray(w),
+    )
+    np.testing.assert_allclose(np.asarray(g_full), np.asarray(g_manual), atol=1e-4)
+
+
+def test_artifact_registry_shapes_lower():
+    """Every registered artifact must trace at its example shapes."""
+    for name, (fn, example) in model.ARTIFACTS.items():
+        out = jax.eval_shape(fn, *example())
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves, f"{name} produced no outputs"
+        for leaf in leaves:
+            assert all(dim > 0 for dim in leaf.shape) or leaf.shape == (), name

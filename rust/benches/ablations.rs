@@ -1,0 +1,101 @@
+//! Design-choice ablations (DESIGN.md §9): the knobs this implementation
+//! adds around the paper's algorithm, each swept independently on the
+//! dense synthetic workload with measured epochs + native wall-clock.
+//!
+//! * σ′ policy (Safe / Adaptive / Fixed) — the replica-merge aggression;
+//! * merges per epoch — replica freshness vs merge traffic;
+//! * bucket size — cache-line batching vs sampling randomness;
+//! * convergence criterion — relative model change vs duality gap.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::metrics::Table;
+use parlin::solver::{seq, BucketPolicy, SigmaPolicy, SolverConfig};
+use parlin::util::Timer;
+use parlin::vthread;
+
+fn main() {
+    let ds = synthetic::dense_classification(20_000, 100, 42);
+    let obj = Objective::Logistic {
+        lambda: 1.0 / ds.n() as f64,
+    };
+    let base = SolverConfig::new(obj).with_tol(1e-4).with_max_epochs(400);
+
+    println!("== ablation: σ′ policy (T = 16 virtual workers) ==");
+    let mut t = Table::new(&["policy", "epochs", "gap", "wall_s(host)"]);
+    for (name, sigma) in [
+        ("Safe (σ′=K)", SigmaPolicy::Safe),
+        ("Adaptive", SigmaPolicy::Adaptive),
+        ("Fixed(K/2)", SigmaPolicy::Fixed(8.0)),
+        ("Fixed(1) unsafe", SigmaPolicy::Fixed(1.0)),
+    ] {
+        let mut cfg = base.clone().with_threads(16);
+        cfg.sigma = sigma;
+        let timer = Timer::start();
+        let out = vthread::train_domesticated_sim(&ds, &cfg);
+        t.row(&[
+            name.into(),
+            if out.converged {
+                out.epochs_run.to_string()
+            } else {
+                format!("FAIL({})", out.epochs_run)
+            },
+            format!("{:.1e}", out.final_gap),
+            format!("{:.2}", timer.elapsed_s()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== ablation: merges per epoch (T = 16, adaptive σ′) ==");
+    let mut t = Table::new(&["merges", "epochs", "gap"]);
+    for merges in [1usize, 2, 4, 8, 16] {
+        let mut cfg = base.clone().with_threads(16);
+        cfg.merges_per_epoch = merges;
+        let out = vthread::train_domesticated_sim(&ds, &cfg);
+        t.row(&[
+            merges.to_string(),
+            out.epochs_run.to_string(),
+            format!("{:.1e}", out.final_gap),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== ablation: bucket size (sequential, native wall-clock) ==");
+    let mut t = Table::new(&["bucket", "epochs", "wall_s", "epoch_ms"]);
+    for bucket in [1usize, 4, 8, 16, 64, 256] {
+        let cfg = base.clone().with_bucket(BucketPolicy::Fixed(bucket));
+        let out = seq::train_sequential(&ds, &cfg);
+        t.row(&[
+            bucket.to_string(),
+            out.epochs_run.to_string(),
+            format!("{:.3}", out.record.total_wall_s),
+            format!("{:.2}", out.record.epoch_wall_mean() * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(large buckets trade per-epoch speed against sampling randomness — the paper's §3 trade-off)");
+
+    println!("\n== ablation: stopping rule ==");
+    let mut t = Table::new(&["rule", "epochs", "final gap"]);
+    for (name, tol, gap_tol) in [
+        ("rel-change 1e-3 (paper)", 1e-3, None),
+        ("rel-change 1e-5", 1e-5, None),
+        ("gap 1e-6", 0.0, Some(1e-6)),
+    ] {
+        let mut cfg = base.clone().with_tol(tol);
+        cfg.gap_tol = gap_tol;
+        cfg.gap_check_every = 1;
+        cfg.max_epochs = 100;
+        let out = seq::train_sequential(&ds, &cfg);
+        t.row(&[
+            name.into(),
+            out.epochs_run.to_string(),
+            format!("{:.1e}", out.final_gap),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,22 @@
+//! End-to-end benches: regenerate every paper figure in quick mode and
+//! time each harness. One bench target per table/figure of the paper's
+//! evaluation (`cargo bench --bench fig_benches`); the full-resolution run
+//! is `parlin figures --all`.
+
+use parlin::figures::{run_figure, FigOpts};
+use parlin::util::Timer;
+
+fn main() {
+    let mut opts = FigOpts::quick();
+    opts.out_dir = std::path::PathBuf::from("artifacts/figures-quick");
+    println!("== figure regeneration benches (quick mode) ==");
+    let mut total = 0.0;
+    for fig in ["1", "2", "3", "4", "5", "6"] {
+        let t = Timer::start();
+        run_figure(fig, &opts).unwrap_or_else(|e| panic!("figure {fig} failed: {e:#}"));
+        let s = t.elapsed_s();
+        total += s;
+        println!("\n>>> figure {fig}: {s:.2}s\n{}", "=".repeat(60));
+    }
+    println!("all figures regenerated in {total:.1}s (quick mode)");
+}

@@ -1,0 +1,143 @@
+//! Hot-path microbenchmarks (custom harness — the offline toolchain has no
+//! criterion). Covers every inner loop the paper's optimizations target:
+//! dense/sparse coordinate steps, bucketed vs unbucketed epochs, the
+//! serial shuffle, replica merge, and the PJRT dispatch overhead.
+//!
+//! ```bash
+//! cargo bench --bench hot_paths
+//! ```
+//!
+//! Output format: `name  median  p10  p90  [derived throughput]`.
+
+use parlin::data::{synthetic, DataMatrix};
+use parlin::glm::{ModelState, Objective};
+use parlin::solver::seq::run_bucket;
+use parlin::solver::{BucketPolicy, SolverConfig};
+use parlin::util::timer::bench_fn;
+use parlin::util::{percentile, Rng};
+
+fn report(name: &str, samples: &[f64], work_items: f64, unit: &str) {
+    let med = percentile(samples, 50.0);
+    let p10 = percentile(samples, 10.0);
+    let p90 = percentile(samples, 90.0);
+    println!(
+        "{name:<42} {:>9.3} ms  [{:>8.3}, {:>8.3}]  {:>10.1} M{unit}/s",
+        med * 1e3,
+        p10 * 1e3,
+        p90 * 1e3,
+        work_items / med / 1e6
+    );
+}
+
+fn main() {
+    println!("== parlin hot-path microbenchmarks ==\n");
+
+    // ---- dense coordinate epoch (the paper's core loop) -------------
+    let dense = synthetic::dense_classification(20_000, 100, 1);
+    let obj = Objective::Logistic {
+        lambda: 1.0 / dense.n() as f64,
+    };
+    let inv_ln = 1.0 / (obj.lambda() * dense.n() as f64);
+    {
+        let mut st = ModelState::zeros(dense.n(), dense.d());
+        let samples = bench_fn(2, 10, || {
+            run_bucket(
+                &dense,
+                &obj,
+                0..dense.n(),
+                &mut st.alpha,
+                &mut st.v,
+                inv_ln,
+                dense.n(),
+            );
+        });
+        report("dense epoch (20k x 100, logistic)", &samples, dense.x.nnz() as f64, "nnz");
+    }
+
+    // ---- sparse coordinate epoch -------------------------------------
+    let sparse = synthetic::sparse_classification(50_000, 1_000, 0.01, 2);
+    {
+        let inv_ln = 1.0 / (1e-5 * sparse.n() as f64);
+        let obj_s = Objective::Logistic { lambda: 1e-5 };
+        let mut st = ModelState::zeros(sparse.n(), sparse.d());
+        let samples = bench_fn(2, 10, || {
+            run_bucket(
+                &sparse,
+                &obj_s,
+                0..sparse.n(),
+                &mut st.alpha,
+                &mut st.v,
+                inv_ln,
+                sparse.n(),
+            );
+        });
+        report("sparse epoch (50k x 1k @1%)", &samples, sparse.x.nnz() as f64, "nnz");
+    }
+
+    // ---- full solver epochs: bucketed vs not --------------------------
+    for (label, policy) in [
+        ("solver epoch, buckets OFF", BucketPolicy::Off),
+        ("solver epoch, buckets 8", BucketPolicy::Fixed(8)),
+    ] {
+        let cfg = SolverConfig::new(obj)
+            .with_tol(0.0)
+            .with_max_epochs(3)
+            .with_bucket(policy);
+        let samples = bench_fn(1, 5, || {
+            parlin::solver::seq::train_sequential(&dense, &cfg).epochs_run
+        });
+        report(label, &samples, 3.0 * dense.x.nnz() as f64, "nnz");
+    }
+
+    // ---- shuffle (the serial Fig 2a bottleneck) -----------------------
+    {
+        let mut rng = Rng::new(3);
+        let mut idx: Vec<u32> = (0..1_000_000u32).collect();
+        let samples = bench_fn(2, 10, || {
+            rng.shuffle(&mut idx);
+        });
+        report("shuffle 1M indices (Fisher-Yates)", &samples, 1e6, "swap");
+    }
+
+    // ---- replica merge (domesticated sync point) ----------------------
+    {
+        let d = 100_000;
+        let deltas: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 * 0.1; d]).collect();
+        let mut v = vec![0.0f64; d];
+        let samples = bench_fn(2, 20, || {
+            for dv in &deltas {
+                parlin::util::axpy(1.0, dv, &mut v);
+            }
+        });
+        report("merge 8 replicas of d=100k", &samples, 8.0 * d as f64, "elem");
+    }
+
+    // ---- dot kernel ----------------------------------------------------
+    {
+        let mut rng = Rng::new(4);
+        let a: Vec<f64> = (0..4096).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f64> = (0..4096).map(|_| rng.next_gaussian()).collect();
+        let samples = bench_fn(100, 200, || parlin::util::dot(&a, &b));
+        report("dot 4096", &samples, 4096.0, "mul");
+    }
+
+    // ---- PJRT dispatch overhead (runtime hot path) ---------------------
+    match parlin::runtime::ArtifactRuntime::load_default() {
+        Ok(rt) => {
+            let art = rt.get("loss_tile").expect("loss_tile artifact");
+            let z = vec![0.5f32; 256];
+            let y = vec![1.0f32; 256];
+            let m = vec![1.0f32; 256];
+            let samples = bench_fn(5, 50, || art.run(&[&z, &y, &m]).unwrap());
+            report("PJRT dispatch (loss_tile 256)", &samples, 256.0, "elem");
+
+            let ds100 = synthetic::dense_classification(4_096, 100, 5);
+            let idx: Vec<usize> = (0..ds100.n()).collect();
+            let ev = parlin::runtime::TiledEvaluator::new(&rt, &ds100, &idx).unwrap();
+            let w = vec![0.1f64; 100];
+            let samples = bench_fn(2, 20, || ev.eval(&w).unwrap());
+            report("HLO tiled eval (4096 x 100)", &samples, (4096 * 100) as f64, "nnz");
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+}

@@ -1,0 +1,109 @@
+//! Cyclic dual coordinate descent — the algorithm class behind
+//! scikit-learn's `liblinear` backend (Hsieh et al. 2008 for L2-SVM, Yu et
+//! al. 2011 for logistic).
+//!
+//! Same exact 1-D dual solves as `solver::seq`, but with liblinear's
+//! *system-oblivious* loop structure, which is exactly what the paper
+//! contrasts against: cyclic order with a single random shuffle per outer
+//! iteration over **all** example indices (no buckets, no cache-line
+//! batching), primal vector maintained directly, stopping on the maximal
+//! projected-gradient-style movement within a pass.
+
+use super::{BaselineConfig, BaselineOutput};
+use crate::data::{DataMatrix, Dataset};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::util::{Rng, Timer};
+
+pub fn train_dual_cd<M: DataMatrix>(ds: &Dataset<M>, cfg: &BaselineConfig) -> BaselineOutput {
+    let n = ds.n();
+    let d = ds.d();
+    let lambda = cfg.obj.lambda();
+    let inv_lambda_n = 1.0 / (lambda * n as f64);
+
+    let mut alpha = vec![0.0f64; n];
+    let mut v = vec![0.0f64; d];
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(cfg.seed);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        rng.shuffle(&mut perm);
+        let mut max_step: f64 = 0.0;
+        for &jj in &perm {
+            let j = jj as usize;
+            let xw = ds.x.dot_col(j, &v) * inv_lambda_n;
+            let delta = cfg.obj.delta(alpha[j], xw, ds.norm_sq(j), ds.y[j], n);
+            if delta != 0.0 {
+                alpha[j] += delta;
+                ds.x.axpy_col(j, delta, &mut v);
+                max_step = max_step.max(delta.abs());
+            }
+        }
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: max_step,
+            gap: None,
+            primal: None,
+        });
+        // liblinear-style: stop when no coordinate moved appreciably
+        if max_step < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+    let w: Vec<f64> = v.iter().map(|&vi| vi * inv_lambda_n).collect();
+    let final_primal = crate::glm::primal_value(ds, &cfg.obj, &w);
+    BaselineOutput {
+        w,
+        record: RunRecord {
+            solver: "dual-cd(liblinear)".into(),
+            threads: 1,
+            epochs,
+            converged,
+            diverged: false,
+            total_wall_s: total.elapsed_s(),
+        },
+        converged,
+        final_primal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::glm::Objective;
+
+    #[test]
+    fn converges_logistic() {
+        let ds = synthetic::dense_classification(300, 10, 1);
+        let obj = Objective::Logistic { lambda: 1e-2 };
+        let out = train_dual_cd(&ds, &BaselineConfig::new(obj).with_tol(1e-8));
+        assert!(out.converged);
+        let lb = super::super::lbfgs::train_lbfgs(&ds, &BaselineConfig::new(obj).with_tol(1e-12));
+        assert!((out.final_primal - lb.final_primal).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_hinge_svm() {
+        // liblinear's home turf: L2-regularized SVM
+        let ds = synthetic::dense_classification(300, 10, 2);
+        let obj = Objective::Hinge { lambda: 1e-2 };
+        let out = train_dual_cd(&ds, &BaselineConfig::new(obj).with_tol(1e-8).with_max_epochs(2000));
+        assert!(out.converged);
+        let idx: Vec<usize> = (0..300).collect();
+        assert!(crate::glm::accuracy(&ds, &out.w, &idx) > 0.85);
+    }
+
+    #[test]
+    fn sparse_converges() {
+        let ds = synthetic::sparse_classification(400, 120, 0.05, 3);
+        let obj = Objective::Logistic { lambda: 1.0 / 400.0 };
+        let out = train_dual_cd(&ds, &BaselineConfig::new(obj).with_tol(1e-6).with_max_epochs(1000));
+        assert!(out.converged);
+    }
+}

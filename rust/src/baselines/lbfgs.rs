@@ -1,0 +1,202 @@
+//! Limited-memory BFGS with Armijo backtracking — the algorithm class of
+//! scikit-learn's `lbfgs` solver (its only multi-threaded one; the
+//! BLAS-level parallelism does not change the iteration count, which is
+//! what this implementation reproduces).
+
+use super::{BaselineConfig, BaselineOutput};
+use crate::data::{DataMatrix, Dataset};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::util::{dot, Timer};
+use std::collections::VecDeque;
+
+/// History depth (scikit-learn default is 10).
+const MEMORY: usize = 10;
+
+/// Full-batch primal objective and gradient.
+fn objective_grad<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &BaselineConfig,
+    w: &[f64],
+) -> (f64, Vec<f64>) {
+    let n = ds.n();
+    let lambda = cfg.obj.lambda();
+    let mut grad = vec![0.0; ds.d()];
+    let mut loss = 0.0;
+    for j in 0..n {
+        let z = ds.x.dot_col(j, w);
+        loss += cfg.obj.primal_loss(z, ds.y[j]);
+        let g = cfg.obj.primal_grad(z, ds.y[j]);
+        if g != 0.0 {
+            ds.x.axpy_col(j, g / n as f64, &mut grad);
+        }
+    }
+    for (gi, wi) in grad.iter_mut().zip(w) {
+        *gi += lambda * wi;
+    }
+    (loss / n as f64 + 0.5 * lambda * crate::util::norm_sq(w), grad)
+}
+
+/// Two-loop recursion: `r = H_k · g` from the (s, y) history.
+fn two_loop(history: &VecDeque<(Vec<f64>, Vec<f64>)>, g: &[f64]) -> Vec<f64> {
+    let mut q = g.to_vec();
+    let mut alphas = Vec::with_capacity(history.len());
+    for (s, y) in history.iter().rev() {
+        let rho = 1.0 / dot(y, s);
+        let a = rho * dot(s, &q);
+        for (qi, yi) in q.iter_mut().zip(y) {
+            *qi -= a * yi;
+        }
+        alphas.push((a, rho));
+    }
+    // initial Hessian scaling γ = sᵀy/yᵀy of the most recent pair
+    if let Some((s, y)) = history.back() {
+        let gamma = dot(s, y) / dot(y, y).max(1e-300);
+        for qi in q.iter_mut() {
+            *qi *= gamma;
+        }
+    }
+    for ((s, y), (a, rho)) in history.iter().zip(alphas.into_iter().rev()) {
+        let b = rho * dot(y, &q);
+        for (qi, si) in q.iter_mut().zip(s) {
+            *qi += (a - b) * si;
+        }
+    }
+    q
+}
+
+pub fn train_lbfgs<M: DataMatrix>(ds: &Dataset<M>, cfg: &BaselineConfig) -> BaselineOutput {
+    let d = ds.d();
+    let mut w = vec![0.0; d];
+    let (mut f, mut g) = objective_grad(ds, cfg, &w);
+    let mut history: VecDeque<(Vec<f64>, Vec<f64>)> = VecDeque::with_capacity(MEMORY);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        // search direction
+        let mut p = two_loop(&history, &g);
+        for pi in p.iter_mut() {
+            *pi = -*pi;
+        }
+        let mut gp = dot(&g, &p);
+        if gp >= 0.0 {
+            // not a descent direction (e.g. empty/stale history): steepest
+            p = g.iter().map(|&gi| -gi).collect();
+            gp = dot(&g, &p);
+        }
+        // Armijo backtracking
+        let mut step = 1.0;
+        let c1 = 1e-4;
+        let mut w_new;
+        let mut f_new;
+        let mut g_new;
+        loop {
+            w_new = w.iter().zip(&p).map(|(wi, pi)| wi + step * pi).collect::<Vec<_>>();
+            let (fv, gv) = objective_grad(ds, cfg, &w_new);
+            f_new = fv;
+            g_new = gv;
+            if f_new <= f + c1 * step * gp || step < 1e-12 {
+                break;
+            }
+            step *= 0.5;
+        }
+        // curvature pair
+        let s: Vec<f64> = w_new.iter().zip(&w).map(|(a, b)| a - b).collect();
+        let yv: Vec<f64> = g_new.iter().zip(&g).map(|(a, b)| a - b).collect();
+        if dot(&s, &yv) > 1e-12 {
+            if history.len() == MEMORY {
+                history.pop_front();
+            }
+            history.push_back((s, yv));
+        }
+        let rel_impr = (f - f_new).abs() / f.abs().max(1e-12);
+        let rel_change = crate::util::rel_change(&w_new, &w);
+        w = w_new;
+        g = g_new;
+        f = f_new;
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change,
+            gap: None,
+            primal: Some(f),
+        });
+        let gnorm = crate::util::norm_sq(&g).sqrt();
+        if rel_impr < cfg.tol || gnorm < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+    BaselineOutput {
+        w,
+        record: RunRecord {
+            solver: "lbfgs".into(),
+            threads: 1,
+            epochs,
+            converged,
+            diverged: false,
+            total_wall_s: total.elapsed_s(),
+        },
+        converged,
+        final_primal: f,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::glm::Objective;
+
+    #[test]
+    fn converges_on_logistic() {
+        let ds = synthetic::dense_classification(400, 15, 1);
+        let cfg = BaselineConfig::new(Objective::Logistic { lambda: 1e-2 }).with_tol(1e-10);
+        let out = train_lbfgs(&ds, &cfg);
+        assert!(out.converged);
+        // stationarity
+        let (_, g) = objective_grad(&ds, &cfg, &out.w);
+        assert!(crate::util::norm_sq(&g).sqrt() < 1e-5);
+    }
+
+    #[test]
+    fn matches_sdca_optimum() {
+        let ds = synthetic::dense_classification(300, 10, 2);
+        let obj = Objective::Logistic { lambda: 1e-2 };
+        let lb = train_lbfgs(&ds, &BaselineConfig::new(obj).with_tol(1e-12));
+        let sdca = crate::solver::seq::train_sequential(
+            &ds,
+            &crate::solver::SolverConfig::new(obj)
+                .with_tol(1e-9)
+                .with_max_epochs(2000),
+        );
+        let dist = crate::util::rel_change(&lb.w, &sdca.weights(&obj));
+        assert!(dist < 1e-3, "lbfgs vs sdca: {dist}");
+    }
+
+    #[test]
+    fn works_on_ridge_and_sparse() {
+        let ds = synthetic::sparse_classification(300, 80, 0.1, 3);
+        let cfg = BaselineConfig::new(Objective::Logistic { lambda: 1e-2 });
+        let out = train_lbfgs(&ds, &cfg);
+        assert!(out.converged);
+
+        let dsr = synthetic::dense_regression(200, 8, 0.1, 4);
+        let cfgr = BaselineConfig::new(Objective::Ridge { lambda: 0.1 });
+        let outr = train_lbfgs(&dsr, &cfgr);
+        assert!(outr.converged);
+    }
+
+    #[test]
+    fn objective_monotone_nonincreasing() {
+        let ds = synthetic::dense_classification(200, 12, 5);
+        let cfg = BaselineConfig::new(Objective::Logistic { lambda: 1e-3 }).with_max_epochs(30);
+        let out = train_lbfgs(&ds, &cfg);
+        let primals: Vec<f64> = out.record.epochs.iter().filter_map(|e| e.primal).collect();
+        for pair in primals.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-12, "objective increased: {pair:?}");
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Comparator solvers for the Fig. 6 study.
+//!
+//! The paper benchmarks Snap ML against scikit-learn (`liblinear`,
+//! `lbfgs`, `sag`) and H2O's `auto` solver. We reimplement each *algorithm
+//! class* from scratch on the same data path, so the comparison measures
+//! algorithms rather than framework plumbing:
+//!
+//! | paper comparator        | module        | algorithm |
+//! |-------------------------|---------------|-----------|
+//! | scikit-learn liblinear  | [`dual_cd`]   | cyclic dual coordinate descent |
+//! | scikit-learn lbfgs      | [`lbfgs`]     | limited-memory BFGS + Armijo   |
+//! | scikit-learn sag        | [`sag`]       | stochastic average gradient    |
+//! | H2O auto                | [`irlsm`]     | IRLSM (Newton / weighted LS), falling back to L-BFGS for wide data — H2O's documented policy |
+//!
+//! All solve the same primal `min (1/n)Σℓ + (λ/2)‖w‖²` as `solver::`, so
+//! duality-gap/test-loss numbers are directly comparable.
+
+pub mod dual_cd;
+pub mod irlsm;
+pub mod lbfgs;
+pub mod sag;
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::Objective;
+use crate::metrics::RunRecord;
+
+/// Result of a baseline (primal) solver run.
+pub struct BaselineOutput {
+    /// Learned primal weights.
+    pub w: Vec<f64>,
+    pub record: RunRecord,
+    pub converged: bool,
+    /// Final primal objective value.
+    pub final_primal: f64,
+}
+
+/// Common stopping configuration for the baselines.
+#[derive(Clone, Debug)]
+pub struct BaselineConfig {
+    pub obj: Objective,
+    pub max_epochs: usize,
+    /// Stop when the primal objective improves by less than `tol`
+    /// relatively between passes (scikit-learn-style criterion).
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl BaselineConfig {
+    pub fn new(obj: Objective) -> Self {
+        BaselineConfig {
+            obj,
+            max_epochs: 500,
+            tol: 1e-6,
+            seed: 42,
+        }
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_max_epochs(mut self, e: usize) -> Self {
+        self.max_epochs = e;
+        self
+    }
+}
+
+/// H2O's `auto` policy for GLMs: IRLSM when the problem is narrow enough
+/// for the normal equations, L-BFGS for wide data.
+pub fn h2o_auto<M: DataMatrix>(ds: &Dataset<M>, cfg: &BaselineConfig) -> BaselineOutput {
+    const IRLSM_MAX_D: usize = 600; // H2O switches around O(500) predictors
+    if ds.d() <= IRLSM_MAX_D {
+        irlsm::train_irlsm(ds, cfg)
+    } else {
+        let mut out = lbfgs::train_lbfgs(ds, cfg);
+        out.record.solver = format!("h2o-auto[{}]", out.record.solver);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn h2o_auto_picks_by_width() {
+        let narrow = synthetic::dense_classification(200, 10, 1);
+        let cfg = BaselineConfig::new(Objective::Logistic { lambda: 0.01 }).with_max_epochs(50);
+        let out = h2o_auto(&narrow, &cfg);
+        assert!(out.record.solver.contains("irlsm"), "{}", out.record.solver);
+        let wide = synthetic::dense_classification(50, 700, 2);
+        let out = h2o_auto(&wide, &cfg);
+        assert!(
+            out.record.solver.contains("h2o-auto[lbfgs"),
+            "{}",
+            out.record.solver
+        );
+    }
+}

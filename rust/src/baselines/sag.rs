@@ -1,0 +1,144 @@
+//! Stochastic Average Gradient — the algorithm class of scikit-learn's
+//! `sag` solver (Schmidt, Le Roux & Bach 2017, as used for
+//! `LogisticRegression(solver="sag")`).
+//!
+//! SAG keeps the most recent loss-gradient *scalar* `g_j = ℓ′(⟨x_j, w⟩)`
+//! per example and steps along the average of the remembered gradients:
+//! `w ← w(1 − ηλ) − η·(Σ_j g_j x_j)/n`, with the sum maintained
+//! incrementally. Step size follows scikit-learn:
+//! `η = 1 / (L_max + λ)` with `L_max = ¼ max_j ‖x_j‖²` for logistic
+//! (`max ‖x_j‖²` for squared loss).
+
+use super::{BaselineConfig, BaselineOutput};
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::Objective;
+use crate::metrics::{EpochStats, RunRecord};
+use crate::util::{Rng, Timer};
+
+pub fn train_sag<M: DataMatrix>(ds: &Dataset<M>, cfg: &BaselineConfig) -> BaselineOutput {
+    let n = ds.n();
+    let d = ds.d();
+    let lambda = cfg.obj.lambda();
+    let lip_const = match cfg.obj {
+        Objective::Logistic { .. } => 0.25,
+        Objective::Ridge { .. } => 1.0,
+        Objective::Hinge { .. } => 1.0, // subgradient heuristic
+    };
+    let l_max = (0..n).map(|j| ds.norm_sq(j)).fold(0.0f64, f64::max) * lip_const;
+    let eta = 1.0 / (l_max + lambda).max(1e-12);
+
+    let mut w = vec![0.0f64; d];
+    let mut g_mem = vec![0.0f64; n]; // remembered loss-derivative scalars
+    let mut g_sum = vec![0.0f64; d]; // Σ g_j·x_j over seen examples
+    let mut seen = vec![false; n];
+    let mut n_seen = 0usize;
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(cfg.seed);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    let mut prev_w = vec![0.0f64; d];
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        rng.shuffle(&mut perm);
+        for &jj in &perm {
+            let j = jj as usize;
+            let z = ds.x.dot_col(j, &w);
+            let g_new = cfg.obj.primal_grad(z, ds.y[j]);
+            let g_old = g_mem[j];
+            if !seen[j] {
+                seen[j] = true;
+                n_seen += 1;
+            }
+            if g_new != g_old {
+                ds.x.axpy_col(j, g_new - g_old, &mut g_sum);
+                g_mem[j] = g_new;
+            }
+            // w ← w(1 − ηλ) − (η/m)·g_sum   (m = examples seen so far)
+            let shrink = 1.0 - eta * lambda;
+            let scale = eta / n_seen as f64;
+            for (wi, gi) in w.iter_mut().zip(&g_sum) {
+                *wi = *wi * shrink - scale * gi;
+            }
+        }
+        let rel_change = crate::util::rel_change(&w, &prev_w);
+        prev_w.copy_from_slice(&w);
+        let primal = crate::glm::primal_value(ds, &cfg.obj, &w);
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change,
+            gap: None,
+            primal: Some(primal),
+        });
+        if rel_change < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+    let final_primal = crate::glm::primal_value(ds, &cfg.obj, &w);
+    BaselineOutput {
+        w,
+        record: RunRecord {
+            solver: "sag".into(),
+            threads: 1,
+            epochs,
+            converged,
+            diverged: false,
+            total_wall_s: total.elapsed_s(),
+        },
+        converged,
+        final_primal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn converges_to_sdca_optimum() {
+        let ds = synthetic::dense_classification(400, 10, 1);
+        let obj = Objective::Logistic { lambda: 1e-2 };
+        let sag = train_sag(&ds, &BaselineConfig::new(obj).with_tol(1e-8).with_max_epochs(2000));
+        assert!(sag.converged);
+        let sdca = crate::solver::seq::train_sequential(
+            &ds,
+            &crate::solver::SolverConfig::new(obj)
+                .with_tol(1e-9)
+                .with_max_epochs(2000),
+        );
+        let dist = crate::util::rel_change(&sag.w, &sdca.weights(&obj));
+        assert!(dist < 5e-3, "sag vs sdca: {dist}");
+    }
+
+    #[test]
+    fn sparse_data_converges() {
+        let ds = synthetic::sparse_classification(500, 100, 0.05, 2);
+        let obj = Objective::Logistic { lambda: 1.0 / 500.0 };
+        let out = train_sag(&ds, &BaselineConfig::new(obj).with_tol(1e-6).with_max_epochs(3000));
+        assert!(out.converged);
+        // reaches a reasonable objective (close to lbfgs's)
+        let lb = super::super::lbfgs::train_lbfgs(&ds, &BaselineConfig::new(obj).with_tol(1e-12));
+        assert!(out.final_primal < lb.final_primal + 1e-3);
+    }
+
+    #[test]
+    fn ridge_converges() {
+        let ds = synthetic::dense_regression(300, 6, 0.05, 3);
+        let obj = Objective::Ridge { lambda: 0.1 };
+        let out = train_sag(&ds, &BaselineConfig::new(obj).with_tol(1e-9).with_max_epochs(3000));
+        assert!(out.converged);
+    }
+
+    #[test]
+    fn objective_eventually_decreases() {
+        let ds = synthetic::dense_classification(300, 8, 4);
+        let obj = Objective::Logistic { lambda: 1e-2 };
+        let out = train_sag(&ds, &BaselineConfig::new(obj).with_max_epochs(50).with_tol(0.0));
+        let primals: Vec<f64> = out.record.epochs.iter().filter_map(|e| e.primal).collect();
+        assert!(primals.last().unwrap() < &primals[0]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Column-major dense matrix: example `j` occupies the contiguous slice
+//! `data[j·d .. (j+1)·d]`, so one SDCA step streams exactly one column —
+//! the access pattern the paper's prefetching argument relies on.
+
+use super::DataMatrix;
+use crate::util;
+
+#[derive(Clone, Debug)]
+pub struct DenseMatrix {
+    d: usize,
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Build from raw column-major storage (`data.len() == d·n`).
+    pub fn new(d: usize, n: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), d * n, "dense payload must be d·n");
+        DenseMatrix { d, n, data }
+    }
+
+    /// Build from explicit column slices (test helper).
+    pub fn from_columns(d: usize, cols: &[&[f64]]) -> Self {
+        let mut data = Vec::with_capacity(d * cols.len());
+        for c in cols {
+            assert_eq!(c.len(), d);
+            data.extend_from_slice(c);
+        }
+        DenseMatrix {
+            d,
+            n: cols.len(),
+            data,
+        }
+    }
+
+    /// Zero matrix with shape `(d, n)`.
+    pub fn zeros(d: usize, n: usize) -> Self {
+        DenseMatrix {
+            d,
+            n,
+            data: vec![0.0; d * n],
+        }
+    }
+
+    /// Example `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.d..(j + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Raw payload (runtime tiling uses this to feed PJRT buffers).
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Hint the hardware prefetcher at the column range `j_lo..j_hi`
+    /// (the *next* bucket while the current one is being processed —
+    /// §3's "CPU prefetching efficiency" made explicit). No-op on
+    /// non-x86 targets.
+    #[inline]
+    fn prefetch_cols_impl(&self, j_lo: usize, j_hi: usize) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let lo = j_lo * self.d;
+            let hi = (j_hi * self.d).min(self.data.len());
+            let bytes = &self.data[lo..hi];
+            let mut p = bytes.as_ptr() as *const i8;
+            let end = unsafe { p.add(bytes.len() * 8) };
+            while p < end {
+                unsafe {
+                    std::arch::x86_64::_mm_prefetch(p, std::arch::x86_64::_MM_HINT_T0);
+                    p = p.add(64);
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (j_lo, j_hi);
+        }
+    }
+
+    /// Copy the selected examples into a new matrix (train/test splits).
+    pub fn subset(&self, idx: &[usize]) -> DenseMatrix {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &j in idx {
+            data.extend_from_slice(self.col(j));
+        }
+        DenseMatrix::new(self.d, idx.len(), data)
+    }
+
+    /// Gather a row-major `(rows.len(), d)` tile of the selected examples —
+    /// the shape the AOT matvec artifact consumes.
+    pub fn gather_rows_major(&self, rows: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), rows.len() * self.d);
+        for (r, &j) in rows.iter().enumerate() {
+            out[r * self.d..(r + 1) * self.d].copy_from_slice(self.col(j));
+        }
+    }
+}
+
+impl DataMatrix for DenseMatrix {
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    fn nnz(&self) -> usize {
+        self.d * self.n
+    }
+
+    #[inline]
+    fn nnz_col(&self, _j: usize) -> usize {
+        self.d
+    }
+
+    #[inline]
+    fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
+        util::dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]) {
+        util::axpy(scale, self.col(j), v);
+    }
+
+    #[inline]
+    fn norm_sq_col(&self, j: usize) -> f64 {
+        util::norm_sq(self.col(j))
+    }
+
+    fn write_col_dense(&self, j: usize, out: &mut [f64]) {
+        out[..self.d].copy_from_slice(self.col(j));
+        for x in &mut out[self.d..] {
+            *x = 0.0;
+        }
+    }
+
+    #[inline]
+    fn prefetch_cols(&self, j_lo: usize, j_hi: usize) {
+        self.prefetch_cols_impl(j_lo, j_hi);
+    }
+
+    fn for_each_col_index(&self, _j: usize, mut f: impl FnMut(usize)) {
+        for i in 0..self.d {
+            f(i);
+        }
+    }
+
+    fn for_each_col_entry(&self, j: usize, mut f: impl FnMut(usize, f64)) {
+        for (i, &x) in self.col(j).iter().enumerate() {
+            f(i, x);
+        }
+    }
+
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64 {
+        let col = self.col(j);
+        let mut s = 0.0;
+        for (x, vi) in col.iter().zip(v.iter()) {
+            s += x * vi.load();
+        }
+        s
+    }
+
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]) {
+        let col = self.col(j);
+        for (x, vi) in col.iter().zip(v.iter()) {
+            vi.add_wild(scale * x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseMatrix {
+        DenseMatrix::from_columns(3, &[&[1.0, 2.0, 3.0], &[0.0, -1.0, 0.5]])
+    }
+
+    #[test]
+    fn shape_and_cols() {
+        let m = sample();
+        assert_eq!((m.d(), m.n(), m.nnz()), (3, 2, 6));
+        assert_eq!(m.col(1), &[0.0, -1.0, 0.5]);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let m = sample();
+        let v = [1.0, 1.0, 2.0];
+        assert!((m.dot_col(0, &v) - 9.0).abs() < 1e-12);
+        let mut w = [0.0; 3];
+        m.axpy_col(1, 2.0, &mut w);
+        assert_eq!(w, [0.0, -2.0, 1.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = sample();
+        assert!((m.norm_sq_col(0) - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_tile() {
+        let m = sample();
+        let mut out = vec![0.0; 6];
+        m.gather_rows_major(&[1, 0], &mut out);
+        assert_eq!(out, vec![0.0, -1.0, 0.5, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn write_col_dense_pads() {
+        let m = sample();
+        let mut out = vec![9.0; 5];
+        m.write_col_dense(0, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_len() {
+        let _ = DenseMatrix::new(3, 2, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Dataset I/O: LIBSVM text format (what criteo-kaggle / HIGGS / epsilon
+//! are distributed as) and a fast binary cache so repeated experiment runs
+//! skip text parsing (the paper excludes load time from training time; we
+//! keep it cheap anyway).
+
+use super::{CscMatrix, Dataset, DenseMatrix};
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Parse a LIBSVM-format text file into a sparse dataset.
+///
+/// * labels: `+1/-1`, `0/1` (mapped to `±1`) or real values;
+/// * indices: 1-based (LIBSVM convention) or 0-based — auto-detected from
+///   the minimum index seen;
+/// * `d_hint`: optional feature-count override (use when train/test splits
+///   must agree on dimensionality).
+pub fn load_libsvm(path: &Path, d_hint: Option<usize>) -> Result<Dataset<CscMatrix>> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::with_capacity(1 << 20, f);
+    let mut examples: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_idx = 0u32;
+    let mut min_idx = u32::MAX;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("bad label at line {}", lineno + 1))?;
+        let mut ex = Vec::new();
+        for p in parts {
+            let (i, v) = p
+                .split_once(':')
+                .with_context(|| format!("bad feature '{}' at line {}", p, lineno + 1))?;
+            let i: u32 = i.parse().with_context(|| format!("bad index at line {}", lineno + 1))?;
+            let v: f64 = v.parse().with_context(|| format!("bad value at line {}", lineno + 1))?;
+            max_idx = max_idx.max(i);
+            min_idx = min_idx.min(i);
+            ex.push((i, v));
+        }
+        examples.push(ex);
+        y.push(label);
+    }
+    if examples.is_empty() {
+        bail!("{}: empty dataset", path.display());
+    }
+    // 1-based (libsvm convention) unless a 0 index appears.
+    let offset = if min_idx == 0 { 0 } else { 1 };
+    let d_seen = (max_idx + 1 - offset) as usize;
+    let d = d_hint.unwrap_or(d_seen).max(d_seen);
+    for ex in &mut examples {
+        for e in ex.iter_mut() {
+            e.0 -= offset;
+        }
+        ex.sort_unstable_by_key(|&(i, _)| i);
+    }
+    let y = normalize_binary_labels(y);
+    Ok(Dataset::new(CscMatrix::from_examples(d, &examples), y))
+}
+
+/// Map `{0,1}` labels to `{-1,+1}`; leave `±1` or regression targets alone.
+fn normalize_binary_labels(y: Vec<f64>) -> Vec<f64> {
+    let zero_one = y.iter().all(|&v| v == 0.0 || v == 1.0) && y.iter().any(|&v| v == 0.0);
+    if zero_one {
+        y.into_iter().map(|v| if v == 0.0 { -1.0 } else { 1.0 }).collect()
+    } else {
+        y
+    }
+}
+
+/// Densify a sparse dataset (for dense-path experiments on datasets that
+/// are logically dense but distributed as LIBSVM text, e.g. epsilon).
+pub fn to_dense(ds: &Dataset<CscMatrix>) -> Dataset<DenseMatrix> {
+    use super::DataMatrix;
+    let (d, n) = (ds.d(), ds.n());
+    let mut data = vec![0.0f64; d * n];
+    for j in 0..n {
+        ds.x.write_col_dense(j, &mut data[j * d..(j + 1) * d]);
+    }
+    Dataset::new(DenseMatrix::new(d, n, data), ds.y.clone())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"PARLIN01";
+
+/// Write the binary cache: `magic | d | n | nnz | col_ptr | idx | val | y`.
+pub fn save_binary(ds: &Dataset<CscMatrix>, path: &Path) -> Result<()> {
+    use super::DataMatrix;
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    let (d, n, nnz) = (ds.d() as u64, ds.n() as u64, ds.x.nnz() as u64);
+    for v in [d, n, nnz] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for j in 0..ds.n() {
+        let (idx, val) = ds.x.col(j);
+        w.write_all(&(idx.len() as u32).to_le_bytes())?;
+        for &i in idx {
+            w.write_all(&i.to_le_bytes())?;
+        }
+        for &v in val {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    for &label in &ds.y {
+        w.write_all(&label.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary cache written by [`save_binary`].
+pub fn load_binary(path: &Path) -> Result<Dataset<CscMatrix>> {
+    let mut r = BufReader::with_capacity(1 << 20, File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("{}: not a parlin binary dataset", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let d = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    let mut idx = Vec::with_capacity(nnz);
+    let mut val = Vec::with_capacity(nnz);
+    col_ptr.push(0usize);
+    let mut u32buf = [0u8; 4];
+    let mut f64buf = [0u8; 8];
+    for _ in 0..n {
+        r.read_exact(&mut u32buf)?;
+        let len = u32::from_le_bytes(u32buf) as usize;
+        for _ in 0..len {
+            r.read_exact(&mut u32buf)?;
+            idx.push(u32::from_le_bytes(u32buf));
+        }
+        for _ in 0..len {
+            r.read_exact(&mut f64buf)?;
+            val.push(f64::from_le_bytes(f64buf));
+        }
+        col_ptr.push(idx.len());
+    }
+    if idx.len() != nnz {
+        bail!("{}: truncated payload", path.display());
+    }
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.read_exact(&mut f64buf)?;
+        y.push(f64::from_le_bytes(f64buf));
+    }
+    Ok(Dataset::new(CscMatrix::new(d, n, col_ptr, idx, val), y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataMatrix;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "parlin_test_{}_{}.libsvm",
+            std::process::id(),
+            content.len()
+        ));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_one_based_libsvm() {
+        let p = write_tmp("+1 1:0.5 3:2.0\n-1 2:1.0\n");
+        let ds = load_libsvm(&p, None).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 3));
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        let (idx, val) = ds.x.col(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[0.5, 2.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn parses_zero_based_and_zero_one_labels() {
+        let p = write_tmp("1 0:1.0\n0 1:1.0\n");
+        let ds = load_libsvm(&p, None).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.d(), 2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn d_hint_expands() {
+        let p = write_tmp("+1 1:1.0\n");
+        let ds = load_libsvm(&p, Some(10)).unwrap();
+        assert_eq!(ds.d(), 10);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = write_tmp("+1 nonsense\n");
+        assert!(load_libsvm(&p, None).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let ds = crate::data::synthetic::sparse_classification(100, 50, 0.1, 7);
+        let p = std::env::temp_dir().join(format!("parlin_bin_{}.bin", std::process::id()));
+        save_binary(&ds, &p).unwrap();
+        let ds2 = load_binary(&p).unwrap();
+        assert_eq!(ds.n(), ds2.n());
+        assert_eq!(ds.d(), ds2.d());
+        assert_eq!(ds.y, ds2.y);
+        for j in 0..ds.n() {
+            assert_eq!(ds.x.col(j), ds2.x.col(j));
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn densify_matches() {
+        let ds = crate::data::synthetic::sparse_classification(20, 10, 0.3, 8);
+        let dd = to_dense(&ds);
+        for j in 0..ds.n() {
+            let v: Vec<f64> = (0..10).map(|i| if i == 3 { 1.0 } else { 0.0 }).collect();
+            assert!((ds.x.dot_col(j, &v) - dd.x.dot_col(j, &v)).abs() < 1e-12);
+        }
+    }
+}

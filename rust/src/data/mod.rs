@@ -1,0 +1,225 @@
+//! Training-data substrate.
+//!
+//! Following the paper (Algorithm 1), the data matrix is stored
+//! **example-major**: `A = [x_1, …, x_n] ∈ R^{d×n}`, i.e. each training
+//! example is one contiguous column. SDCA touches one example per step, so
+//! example-contiguity is what makes the inner products stream.
+//!
+//! Two concrete layouts are provided:
+//! * [`dense::DenseMatrix`] — column-major dense (higgs / epsilon style),
+//! * [`sparse::CscMatrix`] — compressed sparse column (criteo style).
+//!
+//! Solvers are generic over [`DataMatrix`] and get monomorphized per layout
+//! (no dynamic dispatch in the coordinate loop). [`AnyDataset`] is the
+//! type-erased wrapper used by the CLI and figure harnesses.
+
+pub mod dense;
+pub mod loader;
+pub mod sparse;
+pub mod synthetic;
+
+pub use dense::DenseMatrix;
+pub use sparse::CscMatrix;
+
+/// Column access interface shared by dense and sparse layouts.
+///
+/// `Sync` is required: the multi-threaded solvers share the (read-only)
+/// matrix across threads — the paper's NUMA design explicitly relies on the
+/// dataset being read-only so it never generates coherence traffic.
+pub trait DataMatrix: Sync {
+    /// Number of examples (columns).
+    fn n(&self) -> usize;
+    /// Number of features (rows).
+    fn d(&self) -> usize;
+    /// Total stored non-zeros.
+    fn nnz(&self) -> usize;
+    /// Non-zeros in example `j`.
+    fn nnz_col(&self, j: usize) -> usize;
+    /// `⟨x_j, v⟩` where `v` has length `d`.
+    fn dot_col(&self, j: usize, v: &[f64]) -> f64;
+    /// `v += scale · x_j`.
+    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]);
+    /// `‖x_j‖²`.
+    fn norm_sq_col(&self, j: usize) -> f64;
+    /// Densify example `j` into a length-`d` buffer (runtime tiling path).
+    fn write_col_dense(&self, j: usize, out: &mut [f64]);
+    /// Visit the feature indices of example `j`.
+    fn for_each_col_index(&self, j: usize, f: impl FnMut(usize))
+    where
+        Self: Sized;
+    /// Visit the `(index, value)` entries of example `j`.
+    fn for_each_col_entry(&self, j: usize, f: impl FnMut(usize, f64))
+    where
+        Self: Sized;
+    /// `⟨x_j, v⟩` against an atomically-shared vector (wild solver reads).
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64;
+    /// `v += scale·x_j` with *unsynchronized* per-element RMWs — the wild
+    /// solver's `ADD(v_i, δ·A_ij)`; concurrent callers may lose updates.
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]);
+    /// Hint that examples `j_lo..j_hi` will be read next (software
+    /// prefetch for the bucketed random-order walk). Default: no-op.
+    #[inline]
+    fn prefetch_cols(&self, j_lo: usize, j_hi: usize) {
+        let _ = (j_lo, j_hi);
+    }
+}
+
+/// A labelled dataset: matrix + targets + cached per-example squared norms.
+///
+/// Labels are `±1` for classification objectives and real-valued for ridge
+/// regression; the objective decides the interpretation.
+#[derive(Clone)]
+pub struct Dataset<M: DataMatrix> {
+    pub x: M,
+    pub y: Vec<f64>,
+    norms_sq: Vec<f64>,
+}
+
+impl<M: DataMatrix> Dataset<M> {
+    pub fn new(x: M, y: Vec<f64>) -> Self {
+        assert_eq!(x.n(), y.len(), "label count must match example count");
+        let norms_sq = (0..x.n()).map(|j| x.norm_sq_col(j)).collect();
+        Dataset { x, y, norms_sq }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.n()
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.x.d()
+    }
+
+    /// Cached `‖x_j‖²` — used in every coordinate update, so it is computed
+    /// once at load time rather than per step.
+    #[inline]
+    pub fn norm_sq(&self, j: usize) -> f64 {
+        self.norms_sq[j]
+    }
+
+    /// Bytes of matrix payload — feeds the cost model's streaming term.
+    pub fn payload_bytes(&self) -> usize {
+        // dense: 8B per value; sparse: 8B value + 4B index.
+        if self.x.nnz() == self.n() * self.d() {
+            self.x.nnz() * 8
+        } else {
+            self.x.nnz() * 12
+        }
+    }
+}
+
+/// Type-erased dataset for the CLI / figure harness boundary.
+pub enum AnyDataset {
+    Dense(Dataset<DenseMatrix>),
+    Sparse(Dataset<CscMatrix>),
+}
+
+impl AnyDataset {
+    pub fn n(&self) -> usize {
+        match self {
+            AnyDataset::Dense(ds) => ds.n(),
+            AnyDataset::Sparse(ds) => ds.n(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        match self {
+            AnyDataset::Dense(ds) => ds.d(),
+            AnyDataset::Sparse(ds) => ds.d(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            AnyDataset::Dense(ds) => ds.x.nnz(),
+            AnyDataset::Sparse(ds) => ds.x.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, AnyDataset::Sparse(_))
+    }
+}
+
+impl Dataset<DenseMatrix> {
+    /// Materialize the selected examples as a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset<DenseMatrix> {
+        Dataset::new(self.x.subset(idx), idx.iter().map(|&j| self.y[j]).collect())
+    }
+}
+
+impl Dataset<CscMatrix> {
+    /// Materialize the selected examples as a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset<CscMatrix> {
+        Dataset::new(self.x.subset(idx), idx.iter().map(|&j| self.y[j]).collect())
+    }
+}
+
+impl AnyDataset {
+    /// Deterministic train/test split: the examples are i.i.d. by
+    /// construction, so an index split is a valid held-out set.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (AnyDataset, AnyDataset) {
+        let (tr, te) = split_indices(self.n(), test_frac, seed);
+        match self {
+            AnyDataset::Dense(ds) => (
+                AnyDataset::Dense(ds.subset(&tr)),
+                AnyDataset::Dense(ds.subset(&te)),
+            ),
+            AnyDataset::Sparse(ds) => (
+                AnyDataset::Sparse(ds.subset(&tr)),
+                AnyDataset::Sparse(ds.subset(&te)),
+            ),
+        }
+    }
+}
+
+/// Deterministic train/test split by hashing indices (keeps both halves
+/// reproducible without materializing a permutation of the data).
+pub fn split_indices(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test = idx[..n_test].to_vec();
+    let train = idx[n_test..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_caches_norms() {
+        let m = DenseMatrix::from_columns(2, &[&[3.0, 4.0], &[1.0, 0.0]]);
+        let ds = Dataset::new(m, vec![1.0, -1.0]);
+        assert!((ds.norm_sq(0) - 25.0).abs() < 1e-12);
+        assert!((ds.norm_sq(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dataset_rejects_label_mismatch() {
+        let m = DenseMatrix::from_columns(2, &[&[1.0, 2.0]]);
+        let _ = Dataset::new(m, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (tr, te) = split_indices(100, 0.2, 7);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        let mut all: Vec<usize> = tr.iter().chain(te.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let (a, _) = split_indices(50, 0.1, 3);
+        let (b, _) = split_indices(50, 0.1, 3);
+        assert_eq!(a, b);
+    }
+}

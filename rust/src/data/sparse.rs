@@ -1,0 +1,224 @@
+//! Compressed-sparse-column matrix (examples are columns, criteo-style).
+//!
+//! Feature indices are `u32` (the paper's datasets stay under 2³² features)
+//! which halves index bandwidth vs `usize` — per-epoch time on sparse data
+//! is dominated by streaming `(index, value)` pairs.
+
+use super::DataMatrix;
+
+#[derive(Clone, Debug)]
+pub struct CscMatrix {
+    d: usize,
+    n: usize,
+    /// `col_ptr[j]..col_ptr[j+1]` bounds example `j`'s entries.
+    col_ptr: Vec<usize>,
+    idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl CscMatrix {
+    pub fn new(d: usize, n: usize, col_ptr: Vec<usize>, idx: Vec<u32>, val: Vec<f64>) -> Self {
+        assert_eq!(col_ptr.len(), n + 1);
+        assert_eq!(*col_ptr.last().unwrap(), idx.len());
+        assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.iter().all(|&i| (i as usize) < d));
+        CscMatrix {
+            d,
+            n,
+            col_ptr,
+            idx,
+            val,
+        }
+    }
+
+    /// Build from per-example `(feature, value)` lists.
+    pub fn from_examples(d: usize, examples: &[Vec<(u32, f64)>]) -> Self {
+        let n = examples.len();
+        let nnz: usize = examples.iter().map(|e| e.len()).sum();
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for ex in examples {
+            for &(i, v) in ex {
+                assert!((i as usize) < d, "feature index {i} out of range (d={d})");
+                idx.push(i);
+                val.push(v);
+            }
+            col_ptr.push(idx.len());
+        }
+        CscMatrix {
+            d,
+            n,
+            col_ptr,
+            idx,
+            val,
+        }
+    }
+
+    /// `(indices, values)` of example `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        (&self.idx[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Copy the selected examples into a new matrix (train/test splits).
+    pub fn subset(&self, idx: &[usize]) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(idx.len() + 1);
+        let mut new_idx = Vec::new();
+        let mut new_val = Vec::new();
+        col_ptr.push(0);
+        for &j in idx {
+            let (ci, cv) = self.col(j);
+            new_idx.extend_from_slice(ci);
+            new_val.extend_from_slice(cv);
+            col_ptr.push(new_idx.len());
+        }
+        CscMatrix::new(self.d, idx.len(), col_ptr, new_idx, new_val)
+    }
+
+    /// Average non-zeros per example.
+    pub fn avg_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.n as f64
+    }
+}
+
+impl DataMatrix for CscMatrix {
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    #[inline]
+    fn nnz_col(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    #[inline]
+    fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut s = 0.0;
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            s += x * v[i as usize];
+        }
+        s
+    }
+
+    #[inline]
+    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]) {
+        let (idx, val) = self.col(j);
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            v[i as usize] += scale * x;
+        }
+    }
+
+    #[inline]
+    fn norm_sq_col(&self, j: usize) -> f64 {
+        let (_, val) = self.col(j);
+        val.iter().map(|x| x * x).sum()
+    }
+
+    fn write_col_dense(&self, j: usize, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = 0.0;
+        }
+        let (idx, val) = self.col(j);
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            out[i as usize] = x;
+        }
+    }
+
+    fn for_each_col_index(&self, j: usize, mut f: impl FnMut(usize)) {
+        let (idx, _) = self.col(j);
+        for &i in idx {
+            f(i as usize);
+        }
+    }
+
+    fn for_each_col_entry(&self, j: usize, mut f: impl FnMut(usize, f64)) {
+        let (idx, val) = self.col(j);
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            f(i as usize, x);
+        }
+    }
+
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut s = 0.0;
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            s += x * v[i as usize].load();
+        }
+        s
+    }
+
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]) {
+        let (idx, val) = self.col(j);
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            v[i as usize].add_wild(scale * x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // d=4, two examples: x0 = (0:1.0, 2:2.0), x1 = (1:-1.0, 3:0.5)
+        CscMatrix::from_examples(4, &[vec![(0, 1.0), (2, 2.0)], vec![(1, -1.0), (3, 0.5)]])
+    }
+
+    #[test]
+    fn shape() {
+        let m = sample();
+        assert_eq!((m.d(), m.n(), m.nnz()), (4, 2, 4));
+        assert_eq!(m.nnz_col(0), 2);
+        assert!((m.avg_nnz() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let m = sample();
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((m.dot_col(0, &v) - 7.0).abs() < 1e-12);
+        assert!((m.dot_col(1, &v) - 0.0).abs() < 1e-12);
+        let mut w = [0.0; 4];
+        m.axpy_col(1, 2.0, &mut w);
+        assert_eq!(w, [0.0, -2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn norms_and_densify() {
+        let m = sample();
+        assert!((m.norm_sq_col(0) - 5.0).abs() < 1e-12);
+        let mut out = vec![7.0; 4];
+        m.write_col_dense(1, &mut out);
+        assert_eq!(out, vec![0.0, -1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_feature() {
+        let _ = CscMatrix::from_examples(2, &[vec![(5, 1.0)]]);
+    }
+
+    #[test]
+    fn empty_columns_ok() {
+        let m = CscMatrix::from_examples(3, &[vec![], vec![(1, 2.0)], vec![]]);
+        assert_eq!(m.nnz_col(0), 0);
+        assert_eq!(m.dot_col(0, &[1.0, 1.0, 1.0]), 0.0);
+        assert_eq!(m.norm_sq_col(2), 0.0);
+    }
+}

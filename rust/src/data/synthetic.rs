@@ -1,0 +1,265 @@
+//! Synthetic dataset generators.
+//!
+//! Two roles:
+//! 1. the paper's own synthetic workloads (§2, Fig. 1/2): a dense
+//!    `100k × 100` dataset and a sparse `100k × 1k` dataset with uniform 1%
+//!    sparsity;
+//! 2. stand-ins for the evaluation datasets we cannot ship (criteo-kaggle
+//!    45 GB, HIGGS 11M examples, epsilon 400k×2k) with the *statistics the
+//!    paper's effects depend on* matched — dimensionality, sparsity,
+//!    feature-popularity skew, label balance — at tractable scale
+//!    (documented per experiment in EXPERIMENTS.md).
+
+use super::{CscMatrix, Dataset, DenseMatrix};
+use crate::util::Rng;
+
+/// Linearly-separable-ish dense classification data: `x ~ N(0, I)`,
+/// `y = sign(⟨w*, x⟩ + 0.1·noise)`. The paper's dense synthetic dataset is
+/// `dense_classification(100_000, 100, seed)`.
+pub fn dense_classification(n: usize, d: usize, seed: u64) -> Dataset<DenseMatrix> {
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut data = vec![0.0f64; d * n];
+    let mut y = Vec::with_capacity(n);
+    for j in 0..n {
+        let col = &mut data[j * d..(j + 1) * d];
+        let mut z = 0.0;
+        for (k, x) in col.iter_mut().enumerate() {
+            *x = rng.next_gaussian() / (d as f64).sqrt();
+            z += *x * w_star[k];
+        }
+        let noisy = z + 0.1 * rng.next_gaussian();
+        y.push(if noisy >= 0.0 { 1.0 } else { -1.0 });
+    }
+    Dataset::new(DenseMatrix::new(d, n, data), y)
+}
+
+/// Uniform-sparsity classification data (the paper's sparse synthetic
+/// dataset is `sparse_classification(100_000, 1000, 0.01, seed)`): each
+/// example draws `round(density·d)` features uniformly at random — no skew,
+/// which is what makes "wild" updates nearly collision-free (Fig. 1b).
+pub fn sparse_classification(n: usize, d: usize, density: f64, seed: u64) -> Dataset<CscMatrix> {
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let nnz_per = ((density * d as f64).round() as usize).max(1);
+    let scale = 1.0 / (nnz_per as f64).sqrt();
+    let mut examples = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let feats = rng.sample_indices(d, nnz_per);
+        let mut ex: Vec<(u32, f64)> = Vec::with_capacity(nnz_per);
+        let mut z = 0.0;
+        for f in feats {
+            let v = rng.next_gaussian() * scale;
+            z += v * w_star[f];
+            ex.push((f as u32, v));
+        }
+        ex.sort_unstable_by_key(|&(i, _)| i);
+        examples.push(ex);
+        y.push(if z + 0.1 * rng.next_gaussian() >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        });
+    }
+    Dataset::new(CscMatrix::from_examples(d, &examples), y)
+}
+
+/// HIGGS stand-in: 28 dense physics features — a mix of unit-Gaussian
+/// "low-level" features and heavier-tailed "high-level" ones, weakly
+/// separable (HIGGS test error plateaus ~36% for linear models).
+pub fn higgs_like(n: usize, seed: u64) -> Dataset<DenseMatrix> {
+    let d = 28;
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut data = vec![0.0f64; d * n];
+    let mut y = Vec::with_capacity(n);
+    for j in 0..n {
+        let col = &mut data[j * d..(j + 1) * d];
+        let mut z = 0.0;
+        for (k, x) in col.iter_mut().enumerate() {
+            let g = rng.next_gaussian();
+            // last 7 "high-level" features: log-normal-ish heavy tails
+            *x = if k >= 21 { (0.5 * g).exp() - 1.0 } else { g };
+            z += *x * w_star[k];
+        }
+        // strong label noise => weak separability, like real HIGGS
+        let noisy = z / (d as f64).sqrt() + 1.5 * rng.next_gaussian();
+        y.push(if noisy >= 0.0 { 1.0 } else { -1.0 });
+    }
+    Dataset::new(DenseMatrix::new(d, n, data), y)
+}
+
+/// epsilon stand-in: 2000 dense features, every example normalized to unit
+/// L2 norm (the PASCAL epsilon dataset ships pre-normalized).
+pub fn epsilon_like(n: usize, seed: u64) -> Dataset<DenseMatrix> {
+    let d = 2000;
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut data = vec![0.0f64; d * n];
+    let mut y = Vec::with_capacity(n);
+    for j in 0..n {
+        let col = &mut data[j * d..(j + 1) * d];
+        let mut norm_sq = 0.0;
+        let mut z = 0.0;
+        for (k, x) in col.iter_mut().enumerate() {
+            *x = rng.next_gaussian();
+            norm_sq += *x * *x;
+            z += *x * w_star[k];
+        }
+        let norm = norm_sq.sqrt().max(1e-12);
+        for x in col.iter_mut() {
+            *x /= norm;
+        }
+        y.push(if z / norm + 0.05 * rng.next_gaussian() >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        });
+    }
+    Dataset::new(DenseMatrix::new(d, n, data), y)
+}
+
+/// criteo-kaggle stand-in: 13 numeric features (indices 0..13, log-normal,
+/// always present) + 26 categorical features one-hot hashed into the
+/// remaining space with a Zipf popularity distribution — ~39 non-zeros per
+/// example, heavy feature-popularity skew. The skew is the property that
+/// makes wild updates collide on hot cache lines (§2).
+pub fn criteo_like(n: usize, d: usize, seed: u64) -> Dataset<CscMatrix> {
+    assert!(d > 64, "criteo-like needs room for hashed categoricals");
+    let mut rng = Rng::new(seed);
+    let n_numeric = 13usize;
+    let n_cat = 26usize;
+    let cat_space = d - n_numeric;
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.3).collect();
+    let mut examples = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    // Zipf sampler over the categorical space via inverse-CDF on a
+    // truncated power law (alpha ≈ 1.1, like hashed-categorical traffic).
+    let alpha = 1.1f64;
+    let zipf = |u: f64| -> usize {
+        // inverse CDF of p(k) ∝ k^-alpha over [1, cat_space]
+        let k_max = cat_space as f64;
+        let exp = 1.0 - alpha;
+        let c = (k_max.powf(exp) - 1.0) / exp;
+        let k = (1.0 + c * u * exp).powf(1.0 / exp);
+        (k as usize).min(cat_space - 1)
+    };
+    for _ in 0..n {
+        let mut ex: Vec<(u32, f64)> = Vec::with_capacity(n_numeric + n_cat);
+        let mut z = 0.0;
+        for k in 0..n_numeric {
+            let v = (0.8 * rng.next_gaussian()).exp() - 1.0;
+            z += v * w_star[k];
+            ex.push((k as u32, v));
+        }
+        for c in 0..n_cat {
+            // each categorical field hashes into its own slice of the space
+            let field_off = n_numeric + (c * cat_space / n_cat);
+            let field_sz = cat_space / n_cat;
+            let f = field_off + zipf(rng.next_f64()) % field_sz;
+            z += w_star[f];
+            ex.push((f as u32, 1.0));
+        }
+        ex.sort_unstable_by_key(|&(i, _)| i);
+        ex.dedup_by_key(|&mut (i, _)| i);
+        examples.push(ex);
+        // CTR-like imbalance: ~25% positive
+        let p = 1.0 / (1.0 + (-(z - 1.0)).exp());
+        y.push(if rng.next_f64() < p { 1.0 } else { -1.0 });
+    }
+    Dataset::new(CscMatrix::from_examples(d, &examples), y)
+}
+
+/// Dense ridge-regression data: `y = ⟨w*, x⟩ + σ·noise`.
+pub fn dense_regression(n: usize, d: usize, noise: f64, seed: u64) -> Dataset<DenseMatrix> {
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut data = vec![0.0f64; d * n];
+    let mut y = Vec::with_capacity(n);
+    for j in 0..n {
+        let col = &mut data[j * d..(j + 1) * d];
+        let mut z = 0.0;
+        for (k, x) in col.iter_mut().enumerate() {
+            *x = rng.next_gaussian() / (d as f64).sqrt();
+            z += *x * w_star[k];
+        }
+        y.push(z + noise * rng.next_gaussian());
+    }
+    Dataset::new(DenseMatrix::new(d, n, data), y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_shapes_and_labels() {
+        let ds = dense_classification(200, 10, 1);
+        assert_eq!((ds.n(), ds.d()), (200, 10));
+        assert!(ds.y.iter().all(|&y| y == 1.0 || y == -1.0));
+        let pos = ds.y.iter().filter(|&&y| y > 0.0).count();
+        assert!(pos > 40 && pos < 160, "labels should be roughly balanced");
+    }
+
+    #[test]
+    fn sparse_density_matches() {
+        let ds = sparse_classification(500, 100, 0.05, 2);
+        let expect = 5.0;
+        assert!((ds.x.avg_nnz() - expect).abs() < 1e-9);
+        assert_eq!(ds.d(), 100);
+    }
+
+    #[test]
+    fn criteo_like_statistics() {
+        let ds = criteo_like(500, 10_000, 3);
+        // 13 numeric + up to 26 categorical (dedup can only remove a few)
+        assert!(ds.x.avg_nnz() > 35.0 && ds.x.avg_nnz() <= 39.0);
+        // label imbalance: positives should be a minority but present
+        let pos = ds.y.iter().filter(|&&y| y > 0.0).count();
+        assert!(pos > 25 && pos < 350, "pos={pos}");
+        // skew: most-popular categorical feature should dominate uniform share
+        let mut counts = vec![0usize; ds.d()];
+        for j in 0..ds.n() {
+            let (idx, _) = ds.x.col(j);
+            for &i in idx {
+                counts[i as usize] += 1;
+            }
+        }
+        let max_cat = counts[13..].iter().max().copied().unwrap();
+        // uniform over a field would give ~500/(9987/26) ≈ 1.3
+        assert!(max_cat > 20, "expected popularity skew, max_cat={max_cat}");
+    }
+
+    #[test]
+    fn epsilon_like_unit_norm() {
+        let ds = epsilon_like(20, 4);
+        for j in 0..ds.n() {
+            assert!((ds.norm_sq(j) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn higgs_like_shape() {
+        let ds = higgs_like(100, 5);
+        assert_eq!(ds.d(), 28);
+    }
+
+    #[test]
+    fn regression_recoverable() {
+        // noiseless targets should be exactly linear in x
+        let ds = dense_regression(50, 5, 0.0, 6);
+        // fit via normal equations on the tiny system to confirm consistency
+        // (just sanity: targets correlate strongly with features)
+        let var_y: f64 = ds.y.iter().map(|y| y * y).sum::<f64>() / 50.0;
+        assert!(var_y > 0.01);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = dense_classification(50, 8, 9);
+        let b = dense_classification(50, 8, 9);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.raw(), b.x.raw());
+    }
+}

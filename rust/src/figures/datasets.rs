@@ -1,0 +1,138 @@
+//! Evaluation datasets for the figure harnesses.
+//!
+//! The paper evaluates on criteo-kaggle (45 GB), HIGGS (11M × 28) and
+//! epsilon (400k × 2k), plus two synthetic sets (§2). We cannot ship the
+//! real corpora; these generators produce stand-ins with the statistics
+//! the measured effects depend on (DESIGN.md §4), at a scale that runs in
+//! seconds per figure. `paper_workload()` returns the *full-size* shape so
+//! the cost model charges paper-scale per-epoch time while epochs come
+//! from the scaled run.
+
+use crate::data::{synthetic, AnyDataset};
+use crate::simcost::Workload;
+
+/// Which evaluation dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DsKind {
+    /// §2 dense synthetic: 100k × 100.
+    DenseSynth,
+    /// §2 sparse synthetic: 100k × 1k @ 1%.
+    SparseSynth,
+    /// HIGGS stand-in (11M × 28 dense in the paper).
+    HiggsLike,
+    /// epsilon stand-in (400k × 2000 dense, unit-norm rows).
+    EpsilonLike,
+    /// criteo-kaggle stand-in (~45M × 1M sparse, ~39 nnz/row).
+    CriteoLike,
+}
+
+impl DsKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DsKind::DenseSynth => "dense-synth",
+            DsKind::SparseSynth => "sparse-synth",
+            DsKind::HiggsLike => "higgs-like",
+            DsKind::EpsilonLike => "epsilon-like",
+            DsKind::CriteoLike => "criteo-like",
+        }
+    }
+
+    /// The three paper evaluation datasets (Fig. 3–6).
+    pub fn eval_trio() -> [DsKind; 3] {
+        [DsKind::CriteoLike, DsKind::HiggsLike, DsKind::EpsilonLike]
+    }
+
+    /// Build the scaled stand-in (`quick` halves sizes again for CI).
+    pub fn make(&self, quick: bool, seed: u64) -> AnyDataset {
+        let s = |full: usize, q: usize| if quick { q } else { full };
+        match self {
+            DsKind::DenseSynth => AnyDataset::Dense(synthetic::dense_classification(
+                s(40_000, 6_000),
+                100,
+                seed,
+            )),
+            DsKind::SparseSynth => AnyDataset::Sparse(synthetic::sparse_classification(
+                s(40_000, 6_000),
+                1_000,
+                0.01,
+                seed,
+            )),
+            DsKind::HiggsLike => {
+                AnyDataset::Dense(synthetic::higgs_like(s(60_000, 8_000), seed))
+            }
+            DsKind::EpsilonLike => {
+                AnyDataset::Dense(synthetic::epsilon_like(s(6_000, 1_500), seed))
+            }
+            DsKind::CriteoLike => AnyDataset::Sparse(synthetic::criteo_like(
+                s(60_000, 8_000),
+                s(50_000, 10_000),
+                seed,
+            )),
+        }
+    }
+
+    /// Full paper-scale workload shape (feeds the cost model so per-epoch
+    /// seconds correspond to the paper's testbed runs).
+    pub fn paper_workload(&self) -> Workload {
+        match self {
+            DsKind::DenseSynth => Workload {
+                n: 100_000,
+                d: 100,
+                nnz: 10_000_000,
+                dense: true,
+            },
+            DsKind::SparseSynth => Workload {
+                n: 100_000,
+                d: 1_000,
+                nnz: 1_000_000,
+                dense: false,
+            },
+            DsKind::HiggsLike => Workload {
+                n: 11_000_000,
+                d: 28,
+                nnz: 11_000_000 * 28,
+                dense: true,
+            },
+            DsKind::EpsilonLike => Workload {
+                n: 400_000,
+                d: 2_000,
+                nnz: 400_000 * 2_000,
+                dense: true,
+            },
+            DsKind::CriteoLike => Workload {
+                n: 45_000_000,
+                d: 1_000_000,
+                nnz: 45_000_000 * 39,
+                dense: false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_build_quick() {
+        for kind in [
+            DsKind::DenseSynth,
+            DsKind::SparseSynth,
+            DsKind::HiggsLike,
+            DsKind::EpsilonLike,
+            DsKind::CriteoLike,
+        ] {
+            let ds = kind.make(true, 1);
+            assert!(ds.n() > 0, "{}", kind.name());
+            let w = kind.paper_workload();
+            assert!(w.nnz >= w.n, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn sparse_kinds_are_sparse() {
+        assert!(DsKind::CriteoLike.make(true, 2).is_sparse());
+        assert!(DsKind::SparseSynth.make(true, 2).is_sparse());
+        assert!(!DsKind::HiggsLike.make(true, 2).is_sparse());
+    }
+}

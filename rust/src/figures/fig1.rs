@@ -1,0 +1,92 @@
+//! Figure 1 — training time of the **wild** multi-threaded solver on the
+//! two §2 synthetic datasets, on one vs four NUMA nodes of the Xeon.
+//!
+//! Reproduction targets: (a) dense — barely scales on one node, collapses
+//! (or diverges, red in the paper) across nodes; (b) sparse — scales well
+//! on one node, deteriorates across nodes.
+
+use super::{run_wild, DsKind, FigOpts, SweepPoint};
+use crate::metrics::Table;
+use crate::simcost::{epoch_seconds, xeon4, CostOpts, SolverKind};
+use crate::sysinfo::Topology;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 1: wild solver, 1 vs 4 numa nodes (xeon4) ===");
+    let mut csv = String::from("dataset,nodes,threads,epochs,converged,diverged,epoch_s,total_s\n");
+    for kind in [DsKind::DenseSynth, DsKind::SparseSynth] {
+        let ds = kind.make(opts.quick, opts.seed);
+        let w = kind.paper_workload();
+        for nodes in [1usize, 4] {
+            let mut machine = xeon4();
+            if nodes == 1 {
+                // the paper pins the solver to a single node
+                machine.topology = Topology::flat(8);
+            }
+            let grid: Vec<usize> = opts
+                .thread_grid(&machine)
+                .into_iter()
+                .filter(|&t| t <= machine.topology.total_cores())
+                .collect();
+            let mut table = Table::new(&["threads", "epochs", "epoch_s", "total_s", "speedup"]);
+            let mut base_total = None;
+            for &t in &grid {
+                let mut pt: SweepPoint = run_wild(&ds, &machine, t, opts.seed, 1.0);
+                pt.epoch_s = epoch_seconds(&machine, &w, SolverKind::Wild, &CostOpts::new(t));
+                let total = pt.total_s();
+                if t == 1 {
+                    base_total = Some(total);
+                }
+                let speedup = base_total
+                    .map(|b| if pt.correct { b / total } else { f64::NAN })
+                    .unwrap_or(f64::NAN);
+                table.row(&[
+                    t.to_string(),
+                    pt.verdict(),
+                    format!("{:.4}", pt.epoch_s),
+                    if pt.correct {
+                        format!("{total:.2}")
+                    } else {
+                        "-".into()
+                    },
+                    if speedup.is_nan() {
+                        "-".into()
+                    } else {
+                        format!("{speedup:.2}x")
+                    },
+                ]);
+                let _ = writeln!(
+                    csv,
+                    "{},{},{},{},{},{},{:.6},{:.4}",
+                    kind.name(),
+                    nodes,
+                    t,
+                    pt.epochs,
+                    pt.converged,
+                    pt.diverged,
+                    pt.epoch_s,
+                    total
+                );
+            }
+            println!("\n[{} | {} node(s)]", kind.name(), nodes);
+            print!("{}", table.render());
+        }
+    }
+    opts.write_csv("fig1_wild_scaling.csv", &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig1_test");
+        run(&opts).unwrap();
+        assert!(opts.out_dir.join("fig1_wild_scaling.csv").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

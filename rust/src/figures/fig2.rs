@@ -1,0 +1,104 @@
+//! Figure 2 — (a) where the wild solver's scalability goes: per-epoch
+//! speedup of the original algorithm vs variants with shared updates
+//! disabled and with shuffling disabled; (b) the CoCoA partitioning
+//! trade-off: epochs and time to converge vs number of partitions
+//! (1 per thread) under *static* partitioning.
+
+use super::{fig_config, with_ds, DsKind, FigOpts};
+use crate::metrics::Table;
+use crate::simcost::{epoch_time, xeon4, CostOpts, SolverKind};
+use crate::solver::Partitioning;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    fig2a(opts)?;
+    fig2b(opts)
+}
+
+/// (a): per-epoch scaling decomposition on the dense synthetic dataset.
+/// "no shared updates" removes the coherence term; "no shuffle" removes
+/// the serial shuffle term — exactly the ablations the paper plots.
+fn fig2a(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 2a: wild per-epoch scalability ablations (dense, xeon4) ===");
+    let machine = xeon4();
+    let w = DsKind::DenseSynth.paper_workload();
+    let mut csv = String::from("threads,original_s,no_shared_s,no_shuffle_s,neither_s\n");
+    let mut table = Table::new(&[
+        "threads",
+        "original",
+        "-shared",
+        "-shuffle",
+        "-both",
+        "speedup(-both)",
+    ]);
+    let t1_base = {
+        let b = epoch_time(&machine, &w, SolverKind::Wild, &CostOpts::new(1));
+        b.total()
+    };
+    for &t in &opts.thread_grid(&machine) {
+        let o = CostOpts::new(t);
+        let full = epoch_time(&machine, &w, SolverKind::Wild, &o);
+        let no_shared = full.total() - full.shared;
+        let no_shuffle = full.total() - full.shuffle;
+        let neither = full.total() - full.shared - full.shuffle;
+        table.row(&[
+            t.to_string(),
+            format!("{:.4}", full.total()),
+            format!("{no_shared:.4}"),
+            format!("{no_shuffle:.4}"),
+            format!("{neither:.4}"),
+            format!("{:.1}x", t1_base / neither),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{t},{:.6},{no_shared:.6},{no_shuffle:.6},{neither:.6}",
+            full.total()
+        );
+    }
+    print!("{}", table.render());
+    opts.write_csv("fig2a_ablation.csv", &csv)
+}
+
+/// (b): static (CoCoA) partitions vs epochs & time on the dense dataset.
+fn fig2b(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 2b: CoCoA partitions (static, 1/thread) — dense synth ===");
+    let machine = xeon4();
+    let ds = DsKind::DenseSynth.make(opts.quick, opts.seed);
+    let w = DsKind::DenseSynth.paper_workload();
+    let mut csv = String::from("partitions,epochs,epoch_s,total_s\n");
+    let mut table = Table::new(&["partitions", "epochs", "epoch_s", "total_s"]);
+    for &k in &opts.thread_grid(&machine) {
+        let cfg = fig_config(&ds, k, 1, opts.seed, 1.0).with_partition(Partitioning::Static);
+        let out = with_ds!(&ds, d => crate::vthread::train_domesticated_sim(d, &cfg));
+        let mut o = CostOpts::new(k);
+        o.numa_aware = true;
+        let es = epoch_time(&machine, &w, SolverKind::Domesticated(Partitioning::Static), &o).total();
+        let total = out.epochs_run as f64 * es;
+        table.row(&[
+            k.to_string(),
+            out.epochs_run.to_string(),
+            format!("{es:.4}"),
+            format!("{total:.2}"),
+        ]);
+        let _ = writeln!(csv, "{k},{},{es:.6},{total:.4}", out.epochs_run);
+    }
+    print!("{}", table.render());
+    println!("(epochs grow with partitions — the degradation dynamic partitioning removes)");
+    opts.write_csv("fig2b_cocoa_partitions.csv", &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig2_test");
+        run(&opts).unwrap();
+        assert!(opts.out_dir.join("fig2a_ablation.csv").exists());
+        assert!(opts.out_dir.join("fig2b_cocoa_partitions.csv").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,116 @@
+//! Figure 3 — time-to-convergence vs thread count: "wild" vs the
+//! "domesticated" solver (this paper), on the three evaluation datasets ×
+//! both machines. Also prints the paper's headline comparison: speedup of
+//! domesticated over the best *converging* wild configuration.
+
+use super::{bucket_for, run_snap, run_wild, DsKind, FigOpts, SweepPoint};
+use crate::metrics::Table;
+use crate::simcost::{epoch_seconds, paper_machines, CostOpts, SolverKind};
+use crate::solver::Partitioning;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 3: time to convergence, wild vs domesticated ===");
+    let mut csv =
+        String::from("machine,dataset,solver,threads,epochs,converged,diverged,epoch_s,total_s\n");
+    let mut speedups = Vec::new();
+    for machine in paper_machines() {
+        for kind in DsKind::eval_trio() {
+            let ds = kind.make(opts.quick, opts.seed);
+            let w = kind.paper_workload();
+            let bucket = bucket_for(kind, &machine);
+            let grid = opts.thread_grid(&machine);
+            let mut table = Table::new(&[
+                "threads", "wild-ep", "wild-s", "dom-ep", "dom-s", "dom/wild",
+            ]);
+            let mut best_wild: Option<f64> = None;
+            let mut best_dom: Option<f64> = None;
+            for &t in &grid {
+                let mut wild: SweepPoint = run_wild(&ds, &machine, t, opts.seed, 10.0);
+                wild.epoch_s = epoch_seconds(&machine, &w, SolverKind::Wild, &CostOpts::new(t));
+                let mut dom: SweepPoint =
+                    run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+                let mut o = CostOpts::new(t);
+                o.bucket_size = bucket;
+                o.numa_aware = true;
+                dom.epoch_s = epoch_seconds(
+                    &machine,
+                    &w,
+                    SolverKind::Numa(Partitioning::Dynamic),
+                    &o,
+                );
+                // paper: compare against the best wild config "that
+                // converges to a similar test loss" — i.e. correct ones
+                if wild.correct {
+                    let tt = wild.total_s();
+                    best_wild = Some(best_wild.map_or(tt, |b: f64| b.min(tt)));
+                }
+                if dom.correct {
+                    let tt = dom.total_s();
+                    best_dom = Some(best_dom.map_or(tt, |b: f64| b.min(tt)));
+                }
+                let ratio = if wild.correct && dom.correct {
+                    format!("{:.1}x", wild.total_s() / dom.total_s())
+                } else {
+                    "-".into()
+                };
+                table.row(&[
+                    t.to_string(),
+                    wild.verdict(),
+                    if wild.converged {
+                        format!("{:.2}", wild.total_s())
+                    } else {
+                        "-".into()
+                    },
+                    dom.verdict(),
+                    format!("{:.2}", dom.total_s()),
+                    ratio,
+                ]);
+                for (name, pt) in [("wild", &wild), ("dom", &dom)] {
+                    let _ = writeln!(
+                        csv,
+                        "{},{},{name},{t},{},{},{},{:.6},{:.4}",
+                        machine.name,
+                        kind.name(),
+                        pt.epochs,
+                        pt.converged,
+                        pt.diverged,
+                        pt.epoch_s,
+                        pt.total_s()
+                    );
+                }
+            }
+            println!("\n[{} | {}] (bucket={bucket})", machine.name, kind.name());
+            print!("{}", table.render());
+            if let (Some(bw), Some(bd)) = (best_wild, best_dom) {
+                let s = bw / bd;
+                println!("headline: best-wild {bw:.2}s / best-dom {bd:.2}s = ×{s:.1}");
+                speedups.push(s);
+            } else if best_dom.is_some() {
+                println!("headline: wild never converged — domesticated wins outright");
+            }
+        }
+    }
+    if !speedups.is_empty() {
+        println!(
+            "\nAverage convergence speedup over best wild (geomean): ×{:.1} (paper: ×5.1 avg, ×12 max)",
+            crate::util::geomean(&speedups)
+        );
+    }
+    opts.write_csv("fig3_time_to_convergence.csv", &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig3_test");
+        run(&opts).unwrap();
+        assert!(opts.out_dir.join("fig3_time_to_convergence.csv").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

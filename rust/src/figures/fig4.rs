@@ -1,0 +1,82 @@
+//! Figure 4 — strong scalability of the domesticated implementation
+//! w.r.t. *time per epoch* (speedup over the sequential version), per
+//! dataset and machine. Pure epoch-cost comparison — convergence plays no
+//! role here, matching the paper's metric.
+
+use super::{bucket_for, DsKind, FigOpts};
+use crate::metrics::Table;
+use crate::simcost::{epoch_time, paper_machines, CostOpts, SolverKind};
+use crate::solver::Partitioning;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 4: strong scaling of per-epoch time (domesticated) ===");
+    let mut csv = String::from("machine,dataset,threads,epoch_s,speedup\n");
+    for machine in paper_machines() {
+        for kind in DsKind::eval_trio() {
+            let w = kind.paper_workload();
+            let bucket = bucket_for(kind, &machine);
+            let mut o1 = CostOpts::new(1);
+            o1.bucket_size = bucket;
+            o1.numa_aware = true;
+            let t1 = epoch_time(&machine, &w, SolverKind::Sequential, &o1).total();
+            let mut table = Table::new(&["threads", "epoch_s", "speedup", "ideal"]);
+            for &t in &opts.thread_grid(&machine) {
+                let mut o = CostOpts::new(t);
+                o.bucket_size = bucket;
+                o.numa_aware = true;
+                let kind_sim = if t <= machine.topology.cores_per_node[0] {
+                    SolverKind::Domesticated(Partitioning::Dynamic)
+                } else {
+                    SolverKind::Numa(Partitioning::Dynamic)
+                };
+                let es = epoch_time(&machine, &w, kind_sim, &o).total();
+                let speedup = t1 / es;
+                table.row(&[
+                    t.to_string(),
+                    format!("{es:.4}"),
+                    format!("{speedup:.1}x"),
+                    format!("{t}x"),
+                ]);
+                let _ = writeln!(csv, "{},{},{t},{es:.6},{speedup:.3}", machine.name, kind.name());
+            }
+            println!("\n[{} | {}]", machine.name, kind.name());
+            print!("{}", table.render());
+        }
+    }
+    opts.write_csv("fig4_strong_scaling.csv", &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig4_test");
+        run(&opts).unwrap();
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+
+    #[test]
+    fn scaling_is_mostly_monotone() {
+        // per-epoch time should not increase with threads for the
+        // numa-aware solver (the property Fig 4 plots)
+        let m = crate::simcost::xeon4();
+        let w = DsKind::CriteoLike.paper_workload();
+        let mut prev = f64::INFINITY;
+        for t in [1usize, 2, 4, 8, 16, 32] {
+            let mut o = CostOpts::new(t);
+            o.bucket_size = 8;
+            o.numa_aware = true;
+            let es = epoch_time(&m, &w, SolverKind::Numa(Partitioning::Dynamic), &o).total();
+            assert!(
+                es <= prev * 1.05,
+                "epoch time rose at T={t}: {prev} -> {es}"
+            );
+            prev = es;
+        }
+    }
+}

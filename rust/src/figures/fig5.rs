@@ -1,0 +1,209 @@
+//! Figure 5 — ablations of the three proposed optimizations on the 4-node
+//! Xeon (solid lines = time, dashed = epochs in the paper; we print both):
+//!
+//! * (a) static vs **dynamic** partitioning,
+//! * (b) buckets on vs off,
+//! * (c) NUMA-aware hierarchy vs flat threading.
+
+use super::{bucket_for, fig_config, run_snap, with_ds, DsKind, FigOpts};
+use crate::metrics::Table;
+use crate::simcost::{epoch_seconds, xeon4, CostOpts, SolverKind};
+use crate::solver::Partitioning;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    fig5a(opts)?;
+    fig5b(opts)?;
+    fig5c(opts)
+}
+
+/// (a) static vs dynamic partitioning: epochs measured, time = epochs ×
+/// modeled epoch (identical epoch cost up to the shuffle term).
+fn fig5a(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 5a: static vs dynamic partitioning (xeon4) ===");
+    let machine = xeon4();
+    let mut csv = String::from("dataset,threads,scheme,epochs,total_s\n");
+    let mut improvements = Vec::new();
+    for kind in [DsKind::CriteoLike, DsKind::EpsilonLike, DsKind::HiggsLike] {
+        let ds = kind.make(opts.quick, opts.seed);
+        let w = kind.paper_workload();
+        let bucket = bucket_for(kind, &machine);
+        let mut table = Table::new(&[
+            "threads", "static-ep", "static-s", "dynamic-ep", "dynamic-s", "gain",
+        ]);
+        for &t in &opts.thread_grid(&machine) {
+            if t < 2 {
+                continue;
+            }
+            let mut results = Vec::new();
+            for scheme in [Partitioning::Static, Partitioning::Dynamic] {
+                let mut pt = run_snap(&ds, &machine, t, scheme, bucket, opts.seed, 10.0);
+                let mut o = CostOpts::new(t);
+                o.bucket_size = bucket;
+                o.numa_aware = true;
+                pt.epoch_s = epoch_seconds(&machine, &w, SolverKind::Numa(scheme), &o);
+                let _ = writeln!(
+                    csv,
+                    "{},{t},{scheme:?},{},{:.4}",
+                    kind.name(),
+                    pt.epochs,
+                    pt.total_s()
+                );
+                results.push(pt);
+            }
+            let (st, dy) = (results[0], results[1]);
+            let gain = 1.0 - dy.total_s() / st.total_s();
+            if st.converged && dy.converged {
+                improvements.push(gain);
+            }
+            table.row(&[
+                t.to_string(),
+                st.verdict(),
+                format!("{:.2}", st.total_s()),
+                dy.verdict(),
+                format!("{:.2}", dy.total_s()),
+                format!("{:.0}%", gain * 100.0),
+            ]);
+        }
+        println!("\n[{}]", kind.name());
+        print!("{}", table.render());
+    }
+    println!(
+        "mean training-time gain from dynamic partitioning: {:.0}% (paper: 49% criteo, 67% epsilon, ~0% higgs)",
+        crate::util::mean(&improvements) * 100.0
+    );
+    opts.write_csv("fig5a_partitioning.csv", &csv)
+}
+
+/// (b) bucket optimization on/off: epochs measured with/without buckets,
+/// epoch time modeled with/without the cache-line batching.
+fn fig5b(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 5b: bucket optimization (xeon4) ===");
+    let machine = xeon4();
+    let mut csv = String::from("dataset,threads,buckets,epochs,total_s\n");
+    for kind in [DsKind::CriteoLike, DsKind::HiggsLike, DsKind::EpsilonLike] {
+        let ds = kind.make(opts.quick, opts.seed);
+        let w = kind.paper_workload();
+        let auto_bucket = bucket_for(kind, &machine);
+        let mut table = Table::new(&["threads", "off-ep", "off-s", "on-ep", "on-s", "speedup"]);
+        for &t in &opts.thread_grid(&machine) {
+            let mut row = Vec::new();
+            let mut totals = Vec::new();
+            for bucket in [1usize, auto_bucket.max(machine.entries_per_line())] {
+                let mut pt = run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+                let mut o = CostOpts::new(t);
+                o.bucket_size = bucket;
+                o.numa_aware = true;
+                let kind_sim = if t == 1 {
+                    SolverKind::Sequential
+                } else {
+                    SolverKind::Numa(Partitioning::Dynamic)
+                };
+                pt.epoch_s = epoch_seconds(&machine, &w, kind_sim, &o);
+                row.push(pt.verdict());
+                row.push(format!("{:.2}", pt.total_s()));
+                totals.push(pt.total_s());
+                let _ = writeln!(
+                    csv,
+                    "{},{t},{bucket},{},{:.4}",
+                    kind.name(),
+                    pt.epochs,
+                    pt.total_s()
+                );
+            }
+            let speedup = totals[0] / totals[1];
+            let mut cells = vec![t.to_string()];
+            cells.extend(row);
+            cells.push(format!("{speedup:.2}x"));
+            table.row(&cells);
+        }
+        let note = if auto_bucket == 1 {
+            " (heuristic would DISABLE buckets: model fits LLC — paper §4 epsilon case)"
+        } else {
+            ""
+        };
+        println!("\n[{}]{}", kind.name(), note);
+        print!("{}", table.render());
+    }
+    opts.write_csv("fig5b_buckets.csv", &csv)
+}
+
+/// (c) NUMA-aware hierarchy vs flat (numa-oblivious) threading.
+fn fig5c(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 5c: numa-aware hierarchy vs flat threading (xeon4) ===");
+    let machine = xeon4();
+    let mut csv = String::from("dataset,threads,numa_aware,epochs,total_s\n");
+    for kind in DsKind::eval_trio() {
+        let ds = kind.make(opts.quick, opts.seed);
+        let w = kind.paper_workload();
+        let bucket = bucket_for(kind, &machine);
+        let mut table = Table::new(&["threads", "flat-ep", "flat-s", "numa-ep", "numa-s", "gain"]);
+        for &t in &opts.thread_grid(&machine) {
+            if t <= machine.topology.cores_per_node[0] {
+                continue; // numa handling only differs beyond one node
+            }
+            // flat: dynamic partitioning across all threads, oblivious
+            // placement (remote streaming, cross-node merges)
+            let cfg = fig_config(&ds, t, bucket, opts.seed, 10.0).with_partition(Partitioning::Dynamic);
+            let flat_out = with_ds!(&ds, d => crate::vthread::train_domesticated_sim(d, &cfg));
+            let mut o_flat = CostOpts::new(t);
+            o_flat.bucket_size = bucket;
+            o_flat.numa_aware = false;
+            let flat_es = epoch_seconds(
+                &machine,
+                &w,
+                SolverKind::Domesticated(Partitioning::Dynamic),
+                &o_flat,
+            );
+            let flat_total = flat_out.epochs_run as f64 * flat_es;
+            // numa-aware hierarchical
+            let mut numa = run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+            let mut o = CostOpts::new(t);
+            o.bucket_size = bucket;
+            o.numa_aware = true;
+            numa.epoch_s = epoch_seconds(&machine, &w, SolverKind::Numa(Partitioning::Dynamic), &o);
+            let gain = 1.0 - numa.total_s() / flat_total;
+            table.row(&[
+                t.to_string(),
+                flat_out.epochs_run.to_string(),
+                format!("{flat_total:.2}"),
+                numa.verdict(),
+                format!("{:.2}", numa.total_s()),
+                format!("{:.0}%", gain * 100.0),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{},{t},false,{},{flat_total:.4}",
+                kind.name(),
+                flat_out.epochs_run
+            );
+            let _ = writeln!(
+                csv,
+                "{},{t},true,{},{:.4}",
+                kind.name(),
+                numa.epochs,
+                numa.total_s()
+            );
+        }
+        println!("\n[{}]", kind.name());
+        print!("{}", table.render());
+    }
+    opts.write_csv("fig5c_numa.csv", &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig5_test");
+        run(&opts).unwrap();
+        for f in ["fig5a_partitioning.csv", "fig5b_buckets.csv", "fig5c_numa.csv"] {
+            assert!(opts.out_dir.join(f).exists(), "{f}");
+        }
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

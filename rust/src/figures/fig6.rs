@@ -1,0 +1,185 @@
+//! Figure 6 — training time vs test loss: our solver (1 thread and max
+//! threads) against the scikit-learn solver classes (liblinear / lbfgs /
+//! sag) and H2O's auto solver, on the three evaluation datasets × both
+//! machines.
+//!
+//! Test loss is **measured** (held-out stand-in set, same generator,
+//! different seed). Training time = measured passes × modeled per-pass
+//! cost on the figure's machine; each baseline's pass cost charges its own
+//! algorithmic extras (L-BFGS line-search evaluations, SAG's dense `w`
+//! update per step, IRLSM's Hessian assembly + Cholesky).
+
+use super::{bucket_for, lambda_for, run_snap, with_ds, DsKind, FigOpts};
+use crate::baselines::{dual_cd, h2o_auto, lbfgs, sag, BaselineConfig};
+use crate::data::AnyDataset;
+use crate::glm::Objective;
+use crate::metrics::Table;
+use crate::simcost::{epoch_seconds, paper_machines, CostOpts, MachineModel, SolverKind, Workload};
+use crate::solver::Partitioning;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Modeled seconds for one full pass of a given baseline at paper scale.
+fn baseline_pass_s(machine: &MachineModel, w: &Workload, which: &str) -> f64 {
+    let compute = |flops: f64| flops / (machine.core_flops() * machine.compute_eff);
+    let stream = w.stream_bytes() / machine.stream_bw;
+    let sweep = compute(2.0 * w.nnz as f64) + stream;
+    match which {
+        // cyclic dual CD: one sweep + random α access (no buckets)
+        "liblinear" => sweep + w.n as f64 * machine.local_line_s * 0.5,
+        // L-BFGS: gradient pass + ~1.5 line-search objective passes
+        "lbfgs" => 2.5 * sweep,
+        // SAG: dense data pays the full `w` update per step (n·d flops +
+        // bytes); sparse data uses scikit-learn's lazy just-in-time
+        // updates, costing only another sweep's worth of work
+        "sag" => {
+            if w.dense {
+                sweep
+                    + compute(2.0 * (w.n * w.d) as f64)
+                    + (w.n * w.d * 8) as f64 / machine.stream_bw
+            } else {
+                2.0 * sweep
+            }
+        }
+        // H2O auto = IRLSM (gradient pass + Hessian assembly nnz·d +
+        // Cholesky d³/3) up to its ~5000-predictor limit — epsilon's 2k
+        // features stay on IRLSM, which is why the paper finds H2O "by far
+        // the slowest" there; criteo's 1M features fall back to L-BFGS
+        // (the paper could not run H2O on criteo at all, footnote 2)
+        "h2o" => {
+            if w.d <= 5_000 {
+                sweep + compute((w.nnz * w.d) as f64) + compute(w.d.pow(3) as f64 / 3.0)
+            } else {
+                2.5 * sweep
+            }
+        }
+        _ => sweep,
+    }
+}
+
+/// Measured test loss of weights `w` on the held-out split.
+fn test_loss_of(test: &AnyDataset, lambda: f64, w: &[f64]) -> f64 {
+    let obj = Objective::Logistic { lambda };
+    with_ds!(test, d => {
+        let idx: Vec<usize> = (0..d.n()).collect();
+        crate::glm::test_loss(d, &obj, w, &idx)
+    })
+}
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    println!("\n=== Figure 6: solver comparison (train time vs test loss) ===");
+    let mut csv = String::from("machine,dataset,solver,passes,modeled_s,test_loss\n");
+    for machine in paper_machines() {
+        let max_t = machine.topology.total_cores();
+        for kind in DsKind::eval_trio() {
+            // hold out 20% of the stand-in as the test set (same
+            // generator draw ⇒ same ground truth, disjoint examples)
+            let (ds, test) = kind.make(opts.quick, opts.seed).split(0.2, opts.seed ^ 0x7e57);
+            let w_shape = kind.paper_workload();
+            let lambda = lambda_for(&ds, 10.0);
+            let bucket = bucket_for(kind, &machine);
+            let bcfg = BaselineConfig::new(Objective::Logistic { lambda })
+                .with_tol(1e-5)
+                .with_max_epochs(if opts.quick { 60 } else { 150 });
+            let mut table = Table::new(&["solver", "passes", "time_s", "test_loss"]);
+            let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+
+            // ---- snap 1T and snap MT (this paper)
+            for (label, threads) in [("snap.ml 1T", 1usize), ("snap.ml MT", max_t)] {
+                let pt = run_snap(&ds, &machine, threads, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+                let mut o = CostOpts::new(threads);
+                o.bucket_size = bucket;
+                o.numa_aware = true;
+                let kind_sim = if threads == 1 {
+                    SolverKind::Sequential
+                } else {
+                    SolverKind::Numa(Partitioning::Dynamic)
+                };
+                let es = epoch_seconds(&machine, &w_shape, kind_sim, &o);
+                // retrain to extract weights (run_snap reports epochs only)
+                let cfg = super::fig_config(&ds, threads, bucket, opts.seed, 10.0)
+                    .with_partition(Partitioning::Dynamic)
+                    .with_tol(1e-3);
+                let out = if threads == 1 {
+                    with_ds!(&ds, d => crate::solver::seq::train_sequential(d, &cfg))
+                } else {
+                    let topo = machine.topology.clone();
+                    with_ds!(&ds, d => crate::vthread::train_numa_sim(d, &cfg, &topo))
+                };
+                let wv = out.weights(&Objective::Logistic { lambda });
+                let tl = test_loss_of(&test, lambda, &wv);
+                rows.push((label.into(), pt.epochs as f64, pt.epochs as f64 * es, tl));
+            }
+
+            // ---- baseline classes
+            let runs: Vec<(&str, &str, crate::baselines::BaselineOutput)> = vec![
+                ("sklearn liblinear", "liblinear", with_ds!(&ds, d => dual_cd::train_dual_cd(d, &bcfg))),
+                ("sklearn lbfgs", "lbfgs", with_ds!(&ds, d => lbfgs::train_lbfgs(d, &bcfg))),
+                ("sklearn sag", "sag", with_ds!(&ds, d => sag::train_sag(d, &bcfg))),
+                ("h2o auto", "h2o", with_ds!(&ds, d => h2o_auto(d, &bcfg))),
+            ];
+            for (label, key, out) in runs {
+                let passes = out.record.epochs_run() as f64;
+                let time = passes * baseline_pass_s(&machine, &w_shape, key);
+                let tl = test_loss_of(&test, lambda, &out.w);
+                rows.push((label.into(), passes, time, tl));
+            }
+
+            let snap_mt_time = rows[1].2;
+            let best_other = rows[2..]
+                .iter()
+                .map(|r| r.2)
+                .fold(f64::INFINITY, f64::min);
+            for (label, passes, time, tl) in &rows {
+                table.row(&[
+                    label.clone(),
+                    format!("{passes:.0}"),
+                    format!("{time:.2}"),
+                    format!("{tl:.4}"),
+                ]);
+                let _ = writeln!(
+                    csv,
+                    "{},{},{label},{passes:.0},{time:.4},{tl:.6}",
+                    machine.name,
+                    kind.name()
+                );
+            }
+            println!("\n[{} | {}]", machine.name, kind.name());
+            print!("{}", table.render());
+            println!(
+                "snap.ml MT vs best alternative: ×{:.1} (paper range ×4.1–×41.7)",
+                best_other / snap_mt_time
+            );
+        }
+    }
+    opts.write_csv("fig6_solver_comparison.csv", &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_pass_costs_ordered_sanely() {
+        let m = crate::simcost::xeon4();
+        let w = DsKind::EpsilonLike.paper_workload();
+        let ll = baseline_pass_s(&m, &w, "liblinear");
+        let lb = baseline_pass_s(&m, &w, "lbfgs");
+        let sg = baseline_pass_s(&m, &w, "sag");
+        let h2 = baseline_pass_s(&m, &w, "h2o");
+        assert!(lb > ll, "lbfgs pass costs more than one sweep");
+        assert!(sg > ll, "sag's dense w update is charged");
+        // epsilon (d=2k): H2O's d³ Cholesky makes it by far the slowest —
+        // the paper's "somewhat extreme" observation
+        assert!(h2 > lb && h2 > sg, "h2o={h2} lbfgs={lb} sag={sg}");
+    }
+
+    #[test]
+    fn fig6_runs_quick() {
+        let mut opts = FigOpts::quick();
+        opts.out_dir = std::env::temp_dir().join("parlin_fig6_test");
+        run(&opts).unwrap();
+        assert!(opts.out_dir.join("fig6_solver_comparison.csv").exists());
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,297 @@
+//! Regeneration harnesses for every figure in the paper's evaluation
+//! (DESIGN.md §6 maps figure → harness → modules).
+//!
+//! Methodology (per DESIGN.md §4/§5): *epochs-to-converge*, convergence
+//! verdicts and test losses are **measured** by really executing each
+//! algorithm (the vthread engine supplies any logical thread count on this
+//! host); *seconds per epoch* on the paper's testbeds come from the
+//! `simcost` machine models at paper-scale workload shapes. Each harness
+//! prints a table mirroring the paper's plot and writes a CSV under
+//! `artifacts/figures/`.
+
+pub mod datasets;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+
+pub use datasets::DsKind;
+
+use crate::data::AnyDataset;
+use crate::glm::Objective;
+use crate::simcost::MachineModel;
+use crate::solver::{BucketPolicy, Partitioning, SolverConfig, Variant};
+use crate::sysinfo::Topology;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Dispatch a generic closure over the concrete dataset type.
+#[macro_export]
+macro_rules! with_ds {
+    ($any:expr, $ds:ident => $body:expr) => {
+        match $any {
+            $crate::data::AnyDataset::Dense($ds) => $body,
+            $crate::data::AnyDataset::Sparse($ds) => $body,
+        }
+    };
+}
+pub use crate::with_ds;
+
+/// Options shared by all figure harnesses.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    /// Smaller datasets / sparser thread grids (CI mode).
+    pub quick: bool,
+    /// Where CSVs land (`artifacts/figures`).
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            quick: false,
+            out_dir: PathBuf::from("artifacts/figures"),
+            seed: 42,
+        }
+    }
+}
+
+impl FigOpts {
+    pub fn quick() -> Self {
+        FigOpts {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    pub(crate) fn write_csv(&self, name: &str, content: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        std::fs::write(&path, content)?;
+        println!("  -> {}", path.display());
+        Ok(())
+    }
+
+    /// Thread sweep matching the paper's x-axes.
+    pub(crate) fn thread_grid(&self, machine: &MachineModel) -> Vec<usize> {
+        let max = machine.topology.total_cores();
+        let full: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 40]
+            .iter()
+            .copied()
+            .filter(|&t| t <= max)
+            .collect();
+        if self.quick {
+            full.into_iter().filter(|&t| t <= 8 || t == max).collect()
+        } else {
+            full
+        }
+    }
+}
+
+/// Relative duality-gap threshold above which a "converged" run is flagged
+/// as an *incorrect solution* (gap / primal > this) — the paper verifies
+/// all implementations reach the same test loss "apart from the wild
+/// implementation which can converge to an incorrect solution when using
+/// many threads" (§4, citing PASSCoDe). On the Fig-1 dense workload this
+/// admits wild at 4–8 threads and rejects 16–32, matching the paper's
+/// choice of "best wild that converges to a similar test loss".
+pub const CORRECTNESS_REL_GAP: f64 = 0.05;
+
+/// Certify a finished run: converged and gap small relative to the primal.
+pub(crate) fn certify(out: &crate::solver::TrainOutput, primal_scale: f64) -> bool {
+    out.converged && out.final_gap < CORRECTNESS_REL_GAP * primal_scale.max(1e-12)
+}
+
+/// Result of one measured training run in a figure sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub threads: usize,
+    pub epochs: usize,
+    pub converged: bool,
+    pub diverged: bool,
+    /// Stopping criterion fired AND the solution is certified by a small
+    /// duality gap (see [`CORRECTNESS_GAP`]).
+    pub correct: bool,
+    /// Modeled seconds per epoch on the figure's machine.
+    pub epoch_s: f64,
+}
+
+impl SweepPoint {
+    pub fn total_s(&self) -> f64 {
+        self.epochs as f64 * self.epoch_s
+    }
+
+    /// The paper marks non-converging points in red; we print `FAIL`, and
+    /// `WRONG` for runs that settled on an incorrect solution.
+    pub fn verdict(&self) -> String {
+        if self.diverged {
+            "DIVERGED".into()
+        } else if !self.converged {
+            "FAIL".into()
+        } else if !self.correct {
+            format!("{} (WRONG)", self.epochs)
+        } else {
+            format!("{}", self.epochs)
+        }
+    }
+}
+
+/// λ = mult/n. SDCA convention is λ = Θ(1/n). Fig. 1/2 replicate the
+/// paper's §2 synthetic experiment at mult = 1; the Fig. 3/5/6 dataset
+/// stand-ins run at mult = 10 so the *reduced-scale* problems keep a
+/// conditioning comparable to the paper's full-size datasets (at 1/n the
+/// small-n stand-ins are an order of magnitude less regularized, which
+/// inflates partitioned-solver epochs beyond the paper's regime — see
+/// EXPERIMENTS.md §Scale).
+pub(crate) fn lambda_for(ds: &AnyDataset, mult: f64) -> f64 {
+    mult / ds.n() as f64
+}
+
+/// Bucket size per the paper's runtime heuristic *evaluated at paper
+/// scale* on the given machine (model vector vs LLC).
+pub(crate) fn bucket_for(kind: DsKind, machine: &MachineModel) -> usize {
+    let w = kind.paper_workload();
+    BucketPolicy::Auto.resolve(w.n, machine.cache_line, machine.llc_bytes)
+}
+
+/// Base solver config for figure runs.
+pub(crate) fn fig_config(
+    ds: &AnyDataset,
+    threads: usize,
+    bucket: usize,
+    seed: u64,
+    lam_mult: f64,
+) -> SolverConfig {
+    SolverConfig::new(Objective::Logistic {
+        lambda: lambda_for(ds, lam_mult),
+    })
+    .with_threads(threads)
+    .with_tol(1e-3)
+    .with_max_epochs(400)
+    .with_bucket(if bucket > 1 {
+        BucketPolicy::Fixed(bucket)
+    } else {
+        BucketPolicy::Off
+    })
+    .with_seed(seed)
+}
+
+/// Measured epochs of the **wild** solver at `threads` logical threads
+/// under `machine`'s collision parameters.
+pub fn run_wild(
+    ds: &AnyDataset,
+    machine: &MachineModel,
+    threads: usize,
+    seed: u64,
+    lam_mult: f64,
+) -> SweepPoint {
+    let params = machine.wild_params(threads);
+    let cfg = fig_config(ds, threads, 1, seed, lam_mult);
+    let out = with_ds!(ds, d => crate::vthread::train_wild_sim(d, &cfg, &params));
+    SweepPoint {
+        threads,
+        epochs: out.epochs_run,
+        converged: out.converged,
+        diverged: out.record.diverged,
+        correct: certify(&out, out.final_primal),
+        epoch_s: 0.0,
+    }
+}
+
+/// Measured epochs of the paper's solver ("snap"): domesticated while the
+/// threads fit one node, hierarchical numa beyond (§3 runtime policy).
+pub fn run_snap(
+    ds: &AnyDataset,
+    machine: &MachineModel,
+    threads: usize,
+    partitioning: Partitioning,
+    bucket: usize,
+    seed: u64,
+    lam_mult: f64,
+) -> SweepPoint {
+    let topo: Topology = machine.topology.clone();
+    let mut cfg = fig_config(ds, threads, bucket, seed, lam_mult).with_partition(partitioning);
+    let node_cores = topo.cores_per_node[topo.data_node];
+    let out = if threads <= 1 {
+        cfg.variant = Variant::Sequential;
+        with_ds!(ds, d => crate::solver::seq::train_sequential(d, &cfg))
+    } else if threads <= node_cores {
+        with_ds!(ds, d => crate::vthread::train_domesticated_sim(d, &cfg))
+    } else {
+        with_ds!(ds, d => crate::vthread::train_numa_sim(d, &cfg, &topo))
+    };
+    SweepPoint {
+        threads,
+        epochs: out.epochs_run,
+        converged: out.converged,
+        diverged: out.record.diverged,
+        correct: certify(&out, out.final_primal),
+        epoch_s: 0.0,
+    }
+}
+
+/// Run one figure (or all) by id.
+pub fn run_figure(id: &str, opts: &FigOpts) -> Result<()> {
+    match id {
+        "1" => fig1::run(opts),
+        "2" | "2a" | "2b" => fig2::run(opts),
+        "3" => fig3::run(opts),
+        "4" => fig4::run(opts),
+        "5" => fig5::run(opts),
+        "6" => fig6::run(opts),
+        "all" => {
+            for f in ["1", "2", "3", "4", "5", "6"] {
+                run_figure(f, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure '{other}' (1, 2, 3, 4, 5, 6, all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_grids_respect_machine() {
+        let opts = FigOpts::default();
+        let g = opts.thread_grid(&crate::simcost::xeon4());
+        assert_eq!(g, vec![1, 2, 4, 8, 16, 32]);
+        let g = opts.thread_grid(&crate::simcost::power9());
+        assert_eq!(g, vec![1, 2, 4, 8, 16, 32, 40]);
+    }
+
+    #[test]
+    fn bucket_heuristic_at_paper_scale() {
+        let xeon = crate::simcost::xeon4();
+        // higgs: 11M examples · 8 B = 88 MB > 16 MiB LLC ⇒ bucket 8
+        assert_eq!(bucket_for(DsKind::HiggsLike, &xeon), 8);
+        // epsilon: 400k · 8B = 3.2 MB < LLC ⇒ no bucketing (paper §4)
+        assert_eq!(bucket_for(DsKind::EpsilonLike, &xeon), 1);
+        // criteo on power9: 128 B lines ⇒ bucket 16
+        assert_eq!(
+            bucket_for(DsKind::CriteoLike, &crate::simcost::power9()),
+            16
+        );
+    }
+
+    #[test]
+    fn run_wild_and_snap_smoke() {
+        let opts = FigOpts::quick();
+        let ds = DsKind::DenseSynth.make(true, opts.seed);
+        let m = crate::simcost::xeon4();
+        let w = run_wild(&ds, &m, 2, 1, 1.0);
+        assert!(w.epochs > 0);
+        let s = run_snap(&ds, &m, 4, Partitioning::Dynamic, 1, 1, 1.0);
+        assert!(s.converged, "snap must converge: {s:?}");
+    }
+
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(run_figure("99", &FigOpts::quick()).is_err());
+    }
+}

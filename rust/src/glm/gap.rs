@@ -1,0 +1,164 @@
+//! Primal/dual objective values, duality gap and test metrics.
+//!
+//! The gap `P(w(α)) − D(α) ≥ 0` certifies solution quality independently of
+//! the solver — we use it to verify that every parallel variant reaches the
+//! same optimum the sequential algorithm does ("without compromising
+//! convergence"), and to detect the wild solver converging to an incorrect
+//! fixed point at high thread counts (paper §4, citing PASSCoDe).
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::{ModelState, Objective};
+
+/// Primal and dual objective values plus their gap.
+#[derive(Clone, Copy, Debug)]
+pub struct GapReport {
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+}
+
+/// `P(w) = (1/n) Σ ℓ_i(⟨x_i, w⟩) + (λ/2)‖w‖²`.
+pub fn primal_value<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, w: &[f64]) -> f64 {
+    let n = ds.n();
+    let mut loss = 0.0;
+    for j in 0..n {
+        loss += obj.primal_loss(ds.x.dot_col(j, w), ds.y[j]);
+    }
+    loss / n as f64 + 0.5 * obj.lambda() * crate::util::norm_sq(w)
+}
+
+/// `D(α) = −(1/n) Σ ℓ*_i(−α_i) − (λ/2)‖v/(λn)‖²`.
+pub fn dual_value<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, st: &ModelState) -> f64 {
+    let n = ds.n();
+    let mut conj = 0.0;
+    for j in 0..n {
+        conj += obj.dual_conjugate(st.alpha[j], ds.y[j]);
+    }
+    let w = st.w(obj);
+    -conj / n as f64 - 0.5 * obj.lambda() * crate::util::norm_sq(&w)
+}
+
+/// Full gap report. `O(nnz)` — called once per convergence check, not in
+/// the coordinate loop.
+pub fn duality_gap<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, st: &ModelState) -> GapReport {
+    let w = st.w(obj);
+    let primal = primal_value(ds, obj, &w);
+    let dual = dual_value(ds, obj, st);
+    GapReport {
+        primal,
+        dual,
+        gap: primal - dual,
+    }
+}
+
+/// Mean primal loss of `w` on the examples `idx` (the paper's "test loss"
+/// axis in Fig. 6 — unregularized mean loss on held-out data).
+pub fn test_loss<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, w: &[f64], idx: &[usize]) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    let mut loss = 0.0;
+    for &j in idx {
+        loss += obj.primal_loss(ds.x.dot_col(j, w), ds.y[j]);
+    }
+    loss / idx.len() as f64
+}
+
+/// Classification accuracy of `w` on the examples `idx`.
+pub fn accuracy<M: DataMatrix>(ds: &Dataset<M>, w: &[f64], idx: &[usize]) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    let correct = idx
+        .iter()
+        .filter(|&&j| ds.x.dot_col(j, w) * ds.y[j] > 0.0)
+        .count();
+    correct as f64 / idx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn gap_nonnegative_at_zero() {
+        let ds = synthetic::dense_classification(100, 10, 1);
+        let obj = Objective::Logistic { lambda: 0.01 };
+        let st = ModelState::zeros(100, 10);
+        let rep = duality_gap(&ds, &obj, &st);
+        assert!(rep.gap >= -1e-12, "gap={}", rep.gap);
+        // at α=0: P = ln2, D = 0
+        assert!((rep.primal - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!(rep.dual.abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_shrinks_under_coordinate_steps() {
+        let ds = synthetic::dense_classification(200, 5, 2);
+        let obj = Objective::Logistic { lambda: 0.1 };
+        let mut st = ModelState::zeros(200, 5);
+        let g0 = duality_gap(&ds, &obj, &st).gap;
+        // one exact pass of sequential coordinate ascent
+        let n = ds.n();
+        let lam_n = obj.lambda() * n as f64;
+        for j in 0..n {
+            let xw = ds.x.dot_col(j, &st.v) / lam_n;
+            let d = obj.delta(st.alpha[j], xw, ds.norm_sq(j), ds.y[j], n);
+            st.alpha[j] += d;
+            ds.x.axpy_col(j, d, &mut st.v);
+        }
+        let g1 = duality_gap(&ds, &obj, &st).gap;
+        assert!(g1 < g0 * 0.5, "gap should at least halve: {g0} -> {g1}");
+        assert!(g1 >= -1e-12);
+    }
+
+    #[test]
+    fn dual_never_exceeds_primal_random_states() {
+        let ds = synthetic::sparse_classification(100, 40, 0.1, 3);
+        let obj = Objective::Hinge { lambda: 0.05 };
+        let mut rng = crate::util::Rng::new(4);
+        for _ in 0..10 {
+            let mut st = ModelState::zeros(100, 40);
+            for j in 0..100 {
+                // dual-feasible hinge point: y·α ∈ [0,1]
+                st.alpha[j] = ds.y[j] * rng.next_f64();
+            }
+            st.rebuild_v(&ds);
+            let rep = duality_gap(&ds, &obj, &st);
+            assert!(rep.gap >= -1e-10, "weak duality violated: {}", rep.gap);
+        }
+    }
+
+    #[test]
+    fn accuracy_and_test_loss() {
+        let ds = synthetic::dense_classification(500, 20, 5);
+        let obj = Objective::Logistic { lambda: 1e-3 };
+        let idx: Vec<usize> = (0..500).collect();
+        let w0 = vec![0.0; 20];
+        assert!((test_loss(&ds, &obj, &w0, &idx) - std::f64::consts::LN_2).abs() < 1e-12);
+        // a trained-ish w should beat chance (labels are ~linear in x)
+        let mut st = ModelState::zeros(500, 20);
+        let n = ds.n();
+        let lam_n = obj.lambda() * n as f64;
+        for _ in 0..3 {
+            for j in 0..n {
+                let xw = ds.x.dot_col(j, &st.v) / lam_n;
+                let d = obj.delta(st.alpha[j], xw, ds.norm_sq(j), ds.y[j], n);
+                st.alpha[j] += d;
+                ds.x.axpy_col(j, d, &mut st.v);
+            }
+        }
+        let w = st.w(&obj);
+        assert!(accuracy(&ds, &w, &idx) > 0.85);
+        assert!(test_loss(&ds, &obj, &w, &idx) < 0.5);
+    }
+
+    #[test]
+    fn empty_index_sets() {
+        let ds = synthetic::dense_classification(10, 4, 6);
+        let obj = Objective::Logistic { lambda: 1.0 };
+        assert_eq!(test_loss(&ds, &obj, &[0.0; 4], &[]), 0.0);
+        assert_eq!(accuracy(&ds, &[0.0; 4], &[]), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Generalized linear models under the SDCA formulation of the paper
+//! (Shalev-Shwartz & Zhang 2013, as implemented in Snap ML).
+//!
+//! Primal problem over `w ∈ R^d`:
+//!
+//! ```text
+//!   min_w  P(w) = (1/n) Σ_i ℓ_i(⟨x_i, w⟩) + (λ/2)‖w‖²
+//! ```
+//!
+//! Dual over `α ∈ R^n`, with the **shared vector** `v = Σ_i α_i x_i` and
+//! `w(α) = v / (λn)`:
+//!
+//! ```text
+//!   max_α  D(α) = -(1/n) Σ_i ℓ*_i(-α_i) - (λ/2)‖v/(λn)‖²
+//! ```
+//!
+//! One SDCA step solves the 1-D problem in coordinate `j` exactly
+//! (Algorithm 1, line 7): closed form for ridge and hinge, a safeguarded
+//! Newton for logistic. `v` is the only cross-coordinate state — it is
+//! precisely the vector whose concurrent update the paper's entire systems
+//! contribution is about.
+
+pub mod gap;
+pub mod model;
+pub mod objectives;
+
+pub use gap::{accuracy, duality_gap, primal_value, test_loss, GapReport};
+pub use model::ModelState;
+pub use objectives::Objective;

@@ -1,0 +1,113 @@
+//! Trainer state: the dual model `α` and the shared vector `v = Σ α_i x_i`.
+//!
+//! `v` is the object at the heart of the paper: every coordinate update
+//! reads it (to get `⟨x_j, w⟩`) and writes it (rank-1 update `v += δ·x_j`).
+//! How it is shared — wildly over one copy, or privately per thread/node
+//! with periodic merges — is exactly what distinguishes the solver variants.
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::Objective;
+
+/// Primal–dual state of an SDCA run.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    /// Dual variables, one per training example.
+    pub alpha: Vec<f64>,
+    /// Shared vector `v = Σ_i α_i x_i` (length `d`).
+    pub v: Vec<f64>,
+}
+
+impl ModelState {
+    /// Cold start: `α = 0 ⇒ v = 0` (a dual-feasible point for all three
+    /// objectives).
+    pub fn zeros(n: usize, d: usize) -> Self {
+        ModelState {
+            alpha: vec![0.0; n],
+            v: vec![0.0; d],
+        }
+    }
+
+    /// Primal iterate `w = v/(λn)`.
+    pub fn w(&self, obj: &Objective) -> Vec<f64> {
+        let scale = 1.0 / (obj.lambda() * self.alpha.len() as f64);
+        self.v.iter().map(|&vi| vi * scale).collect()
+    }
+
+    /// Recompute `v` from scratch (`v = Σ α_i x_i`). Used by the replica
+    /// solvers after merges, and by tests to bound drift of the
+    /// incrementally-maintained `v`.
+    pub fn rebuild_v<M: DataMatrix>(&mut self, ds: &Dataset<M>) {
+        for vi in self.v.iter_mut() {
+            *vi = 0.0;
+        }
+        for (j, &a) in self.alpha.iter().enumerate() {
+            if a != 0.0 {
+                ds.x.axpy_col(j, a, &mut self.v);
+            }
+        }
+    }
+
+    /// Max |v_incremental − v_rebuilt| — drift diagnostic.
+    pub fn v_drift<M: DataMatrix>(&self, ds: &Dataset<M>) -> f64 {
+        let mut fresh = vec![0.0; self.v.len()];
+        for (j, &a) in self.alpha.iter().enumerate() {
+            if a != 0.0 {
+                ds.x.axpy_col(j, a, &mut fresh);
+            }
+        }
+        self.v
+            .iter()
+            .zip(fresh.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Margins `z_j = ⟨x_j, w⟩` for a set of examples (test or train side).
+pub fn margins<M: DataMatrix>(ds: &Dataset<M>, w: &[f64], idx: &[usize]) -> Vec<f64> {
+    idx.iter().map(|&j| ds.x.dot_col(j, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn zeros_is_consistent() {
+        let st = ModelState::zeros(5, 3);
+        assert_eq!(st.alpha, vec![0.0; 5]);
+        assert_eq!(st.v, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn w_scaling() {
+        let obj = Objective::Ridge { lambda: 0.5 };
+        let st = ModelState {
+            alpha: vec![0.0; 4],
+            v: vec![2.0, -4.0],
+        };
+        let w = st.w(&obj);
+        assert_eq!(w, vec![1.0, -2.0]); // v/(0.5·4)
+    }
+
+    #[test]
+    fn rebuild_matches_incremental() {
+        let ds = synthetic::dense_classification(50, 8, 3);
+        let mut st = ModelState::zeros(50, 8);
+        // apply some updates incrementally
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..200 {
+            let j = rng.next_below(50) as usize;
+            let delta = rng.next_gaussian() * 0.1;
+            st.alpha[j] += delta;
+            ds.x.axpy_col(j, delta, &mut st.v);
+        }
+        assert!(st.v_drift(&ds) < 1e-10);
+        let v_inc = st.v.clone();
+        st.rebuild_v(&ds);
+        for (a, b) in v_inc.iter().zip(st.v.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

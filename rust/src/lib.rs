@@ -1,0 +1,47 @@
+//! # parlin — Parallel training of linear models without compromising convergence
+//!
+//! A full-system reproduction of Ioannou, Dünner, Kourtis & Parnell (2018):
+//! system-aware stochastic dual coordinate ascent (SDCA) for generalized
+//! linear models on multi-core, multi-NUMA-node CPUs.
+//!
+//! The library is organized in three layers:
+//!
+//! * **L3 — rust coordinator** (this crate): the paper's contribution — the
+//!   bucketed, dynamically-partitioned, NUMA-hierarchical SDCA trainer, the
+//!   "wild" asynchronous baseline it improves on, the Fig. 6 comparator
+//!   solvers (L-BFGS, SAG, dual CD, IRLSM), a virtual-thread execution
+//!   engine that reproduces parallel convergence behaviour deterministically
+//!   on any core count, and a machine cost model for the paper's testbeds.
+//! * **L2 — JAX model** (`python/compile/model.py`, build time only): dense
+//!   bulk compute (prediction, loss/metric and gradient evaluation) lowered
+//!   AOT to HLO text.
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): the tiled matvec /
+//!   fused loss kernels called by L2, validated against a pure-jnp oracle.
+//!
+//! At run time the rust binary is self-contained: `runtime` loads the HLO
+//! artifacts via PJRT (`xla` crate) — Python is never on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parlin::data::synthetic;
+//! use parlin::glm::Objective;
+//! use parlin::solver::{SolverConfig, train};
+//!
+//! let ds = synthetic::dense_classification(10_000, 100, 42);
+//! let cfg = SolverConfig::new(Objective::Logistic { lambda: 1.0 / ds.n() as f64 });
+//! let out = train(&ds, &cfg);
+//! println!("converged in {} epochs, gap {:.3e}", out.epochs_run, out.final_gap);
+//! ```
+
+pub mod baselines;
+pub mod data;
+pub mod figures;
+pub mod glm;
+pub mod metrics;
+pub mod runtime;
+pub mod simcost;
+pub mod solver;
+pub mod sysinfo;
+pub mod util;
+pub mod vthread;

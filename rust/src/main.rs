@@ -1,0 +1,296 @@
+//! `parlin` — CLI launcher for the training system.
+//!
+//! ```text
+//! parlin train   --dataset <kind|file.libsvm> [--solver auto|seq|wild|dom|numa]
+//!                [--threads N] [--lambda X] [--tol X] [--max-epochs N]
+//!                [--bucket auto|off|K] [--partition dynamic|static]
+//!                [--objective logistic|ridge|hinge] [--seed N] [--csv out.csv]
+//! parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
+//! parlin inspect               # host topology, cache geometry, artifacts
+//! parlin eval    --dataset <kind> --artifacts DIR   # HLO-path evaluation demo
+//! ```
+//!
+//! The argument parser is hand-rolled: the offline toolchain ships only the
+//! `xla` crate closure (no clap).
+
+use anyhow::{anyhow, bail, Context, Result};
+use parlin::data::{loader, AnyDataset};
+use parlin::figures::{run_figure, DsKind, FigOpts};
+use parlin::glm::Objective;
+use parlin::solver::{train, BucketPolicy, Partitioning, SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&parse_flags(&args[1..])?),
+        Some("figures") => cmd_figures(&parse_flags(&args[1..])?),
+        Some("inspect") => cmd_inspect(),
+        Some("eval") => cmd_eval(&parse_flags(&args[1..])?),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "\
+parlin — parallel GLM training (SDCA) without compromising convergence
+
+USAGE:
+  parlin train --dataset <kind|file.libsvm> [options]
+  parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
+  parlin inspect
+  parlin eval --dataset <kind> [--artifacts DIR]
+
+TRAIN OPTIONS:
+  --dataset     dense-synth | sparse-synth | higgs-like | epsilon-like |
+                criteo-like | path to a LIBSVM file
+  --solver      auto | seq | wild | dom | numa        (default auto)
+  --threads     worker threads                        (default 1)
+  --objective   logistic | ridge | hinge              (default logistic)
+  --lambda      L2 regularization                     (default 1/n)
+  --tol         relative-model-change stop            (default 1e-3)
+  --max-epochs  epoch cap                             (default 200)
+  --bucket      auto | off | <size>                   (default auto)
+  --partition   dynamic | static                      (default dynamic)
+  --n / --d     synthetic dataset size overrides
+  --seed        RNG seed                              (default 42)
+  --csv         write the per-epoch log to a CSV file
+";
+
+/// `--key value` flag parser (flags without a value get "true").
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        let has_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+        if has_value {
+            map.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(map)
+}
+
+fn get_parse<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v}: {e}")),
+    }
+}
+
+fn load_dataset(flags: &HashMap<String, String>) -> Result<AnyDataset> {
+    let spec = flags
+        .get("dataset")
+        .ok_or_else(|| anyhow!("--dataset is required"))?;
+    let seed: u64 = get_parse(flags, "seed", 42u64)?;
+    let kind = match spec.as_str() {
+        "dense-synth" => Some(DsKind::DenseSynth),
+        "sparse-synth" => Some(DsKind::SparseSynth),
+        "higgs-like" => Some(DsKind::HiggsLike),
+        "epsilon-like" => Some(DsKind::EpsilonLike),
+        "criteo-like" => Some(DsKind::CriteoLike),
+        _ => None,
+    };
+    if let Some(kind) = kind {
+        // allow --n/--d overrides for the plain synthetic kinds
+        let n_override = get_parse(flags, "n", 0usize)?;
+        if n_override > 0 && kind == DsKind::DenseSynth {
+            let d = get_parse(flags, "d", 100usize)?;
+            return Ok(AnyDataset::Dense(
+                parlin::data::synthetic::dense_classification(n_override, d, seed),
+            ));
+        }
+        return Ok(kind.make(false, seed));
+    }
+    let path = Path::new(spec);
+    if path.exists() {
+        let ds = loader::load_libsvm(path, None)
+            .with_context(|| format!("loading {}", path.display()))?;
+        return Ok(AnyDataset::Sparse(ds));
+    }
+    bail!("unknown dataset '{spec}' (not a kind, not a file)");
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let ds = load_dataset(flags)?;
+    let n = ds.n();
+    let lambda: f64 = get_parse(flags, "lambda", 1.0 / n as f64)?;
+    let obj = match flags
+        .get("objective")
+        .map(String::as_str)
+        .unwrap_or("logistic")
+    {
+        "logistic" => Objective::Logistic { lambda },
+        "ridge" => Objective::Ridge { lambda },
+        "hinge" => Objective::Hinge { lambda },
+        other => bail!("unknown objective '{other}'"),
+    };
+    let variant = match flags.get("solver").map(String::as_str).unwrap_or("auto") {
+        "auto" => Variant::Auto,
+        "seq" => Variant::Sequential,
+        "wild" => Variant::Wild,
+        "dom" => Variant::Domesticated,
+        "numa" => Variant::Numa,
+        other => bail!("unknown solver '{other}'"),
+    };
+    let bucket = match flags.get("bucket").map(String::as_str).unwrap_or("auto") {
+        "auto" => BucketPolicy::Auto,
+        "off" => BucketPolicy::Off,
+        k => BucketPolicy::Fixed(k.parse().map_err(|e| anyhow!("--bucket {k}: {e}"))?),
+    };
+    let partition = match flags
+        .get("partition")
+        .map(String::as_str)
+        .unwrap_or("dynamic")
+    {
+        "dynamic" => Partitioning::Dynamic,
+        "static" => Partitioning::Static,
+        other => bail!("unknown partitioning '{other}'"),
+    };
+    let cfg = SolverConfig::new(obj)
+        .with_variant(variant)
+        .with_threads(get_parse(flags, "threads", 1usize)?)
+        .with_tol(get_parse(flags, "tol", 1e-3f64)?)
+        .with_max_epochs(get_parse(flags, "max-epochs", 200usize)?)
+        .with_bucket(bucket)
+        .with_partition(partition)
+        .with_seed(get_parse(flags, "seed", 42u64)?);
+
+    println!(
+        "training: n={n} d={} nnz={} solver={:?} threads={} λ={lambda:.3e}",
+        ds.d(),
+        ds.nnz(),
+        variant,
+        cfg.threads
+    );
+    let out = parlin::figures::with_ds!(&ds, d => train(d, &cfg));
+    println!(
+        "{}: {} epochs, converged={}, diverged={}, gap={:.3e}, {:.3}s",
+        out.record.solver,
+        out.epochs_run,
+        out.converged,
+        out.record.diverged,
+        out.final_gap,
+        out.record.total_wall_s
+    );
+    for e in out.record.epochs.iter().take(5) {
+        println!(
+            "  epoch {:>3}: rel_change={:.3e} wall={:.4}s",
+            e.epoch, e.rel_change, e.wall_s
+        );
+    }
+    if out.record.epochs.len() > 5 {
+        println!("  … ({} more epochs)", out.record.epochs.len() - 5);
+    }
+    if let Some(csv) = flags.get("csv") {
+        out.record.write_csv(Path::new(csv))?;
+        println!("per-epoch log -> {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
+    let mut opts = FigOpts::default();
+    if flags.contains_key("quick") {
+        opts.quick = true;
+    }
+    if let Some(dir) = flags.get("out") {
+        opts.out_dir = PathBuf::from(dir);
+    }
+    opts.seed = get_parse(flags, "seed", 42u64)?;
+    let id = flags
+        .get("fig")
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let id = if flags.contains_key("all") {
+        "all".to_string()
+    } else {
+        id
+    };
+    run_figure(&id, &opts)
+}
+
+fn cmd_inspect() -> Result<()> {
+    let topo = Topology::detect();
+    println!(
+        "host topology : {} node(s), cores/node {:?}",
+        topo.num_nodes(),
+        topo.cores_per_node
+    );
+    println!("cache line    : {} B", parlin::sysinfo::cache_line_size());
+    println!("LLC           : {} MiB", parlin::sysinfo::llc_size() >> 20);
+    println!(
+        "bucket policy : size {} for a 1M-example model",
+        BucketPolicy::Auto.resolve_host(1_000_000)
+    );
+    match parlin::runtime::ArtifactRuntime::load_default() {
+        Ok(rt) => {
+            println!("artifacts     : {:?} in {}", rt.names(), rt.dir().display());
+            rt.validate_tiles()?;
+            println!("tile check    : OK (TILE_M=256, TILE_D=128, BUCKET_B=8)");
+        }
+        Err(e) => println!("artifacts     : not loaded ({e})"),
+    }
+    for m in parlin::simcost::paper_machines() {
+        println!(
+            "machine model : {} — {} nodes × {} cores @ {} GHz, line {} B",
+            m.name,
+            m.topology.num_nodes(),
+            m.topology.cores_per_node[0],
+            m.ghz,
+            m.cache_line
+        );
+    }
+    Ok(())
+}
+
+/// Demonstrate the AOT evaluation path: load artifacts, tile a dataset,
+/// evaluate loss/accuracy of a trained model through PJRT.
+fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
+    let ds = load_dataset(flags)?;
+    let AnyDataset::Dense(ds) = ds else {
+        bail!("eval demo needs a dense dataset kind");
+    };
+    let dir = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let rt = parlin::runtime::ArtifactRuntime::load(&dir)?;
+    let lambda = 1.0 / ds.n() as f64;
+    let cfg = SolverConfig::new(Objective::Logistic { lambda }).with_tol(1e-4);
+    let out = train(&ds, &cfg);
+    let w = out.weights(&Objective::Logistic { lambda });
+    let idx: Vec<usize> = (0..ds.n()).collect();
+    let ev = parlin::runtime::TiledEvaluator::new(&rt, &ds, &idx)?;
+    let m = ev.eval(&w)?;
+    println!(
+        "HLO eval: n={} loss={:.5} acc={:.4} (trained {} epochs, gap {:.2e})",
+        m.count, m.mean_loss, m.accuracy, out.epochs_run, out.final_gap
+    );
+    Ok(())
+}

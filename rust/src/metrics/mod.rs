@@ -1,0 +1,191 @@
+//! Run records: per-epoch statistics, training summaries and CSV output —
+//! the raw material for EXPERIMENTS.md and every figure harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One epoch of a training run.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// Wall-clock seconds spent in this epoch (measured, this host).
+    pub wall_s: f64,
+    /// Relative model change vs the previous epoch (convergence criterion).
+    pub rel_change: f64,
+    /// Duality gap, if it was computed this epoch.
+    pub gap: Option<f64>,
+    /// Training primal objective, if computed.
+    pub primal: Option<f64>,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Solver label ("seq", "wild", "dom-dynamic", …).
+    pub solver: String,
+    pub threads: usize,
+    pub epochs: Vec<EpochStats>,
+    pub converged: bool,
+    /// `true` when the run stopped because the model diverged (wild mode
+    /// at high thread counts — the paper's red markers in Fig. 1a).
+    pub diverged: bool,
+    pub total_wall_s: f64,
+}
+
+impl RunRecord {
+    pub fn epochs_run(&self) -> usize {
+        self.epochs.len()
+    }
+
+    pub fn final_rel_change(&self) -> f64 {
+        self.epochs.last().map(|e| e.rel_change).unwrap_or(f64::NAN)
+    }
+
+    /// Mean per-epoch wall time, skipping the first (warm-up/alloc) epoch
+    /// when there are enough samples.
+    pub fn epoch_wall_mean(&self) -> f64 {
+        if self.epochs.len() > 2 {
+            crate::util::mean(
+                &self.epochs[1..]
+                    .iter()
+                    .map(|e| e.wall_s)
+                    .collect::<Vec<_>>(),
+            )
+        } else {
+            crate::util::mean(&self.epochs.iter().map(|e| e.wall_s).collect::<Vec<_>>())
+        }
+    }
+
+    /// Render as CSV (`epoch,wall_s,rel_change,gap,primal`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,wall_s,rel_change,gap,primal\n");
+        for e in &self.epochs {
+            let _ = writeln!(
+                s,
+                "{},{:.6e},{:.6e},{},{}",
+                e.epoch,
+                e.wall_s,
+                e.rel_change,
+                e.gap.map(|g| format!("{g:.6e}")).unwrap_or_default(),
+                e.primal.map(|p| format!("{p:.6e}")).unwrap_or_default(),
+            );
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Fixed-width table printer for the figure harnesses (`println!`-style
+/// output that mirrors the paper's tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> RunRecord {
+        RunRecord {
+            solver: "seq".into(),
+            threads: 1,
+            epochs: vec![
+                EpochStats {
+                    epoch: 1,
+                    wall_s: 0.5,
+                    rel_change: 0.8,
+                    gap: Some(0.1),
+                    primal: None,
+                },
+                EpochStats {
+                    epoch: 2,
+                    wall_s: 0.4,
+                    rel_change: 0.01,
+                    gap: None,
+                    primal: Some(0.3),
+                },
+            ],
+            converged: true,
+            diverged: false,
+            total_wall_s: 0.9,
+        }
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let r = record();
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("1,"));
+        assert!(csv.contains("1.000000e-1"));
+    }
+
+    #[test]
+    fn epoch_mean_skips_warmup_when_long() {
+        let mut r = record();
+        r.epochs.push(EpochStats {
+            epoch: 3,
+            wall_s: 0.4,
+            rel_change: 0.001,
+            gap: None,
+            primal: None,
+        });
+        assert!((r.epoch_wall_mean() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["threads", "time"]);
+        t.row(&["1".into(), "10.5".into()]);
+        t.row(&["32".into(), "0.9".into()]);
+        let s = t.render();
+        assert!(s.contains("threads"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

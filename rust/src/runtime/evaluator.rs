@@ -1,0 +1,185 @@
+//! Tiled evaluator: full-dataset loss / accuracy / gradient through the
+//! AOT artifacts.
+//!
+//! The artifacts are compiled for a fixed `(TILE_M, TILE_D)` tile. The
+//! evaluator decomposes an arbitrary `(n, d)` dense dataset:
+//!
+//! * example dimension: ceil(n / TILE_M) tiles, last one zero-padded with a
+//!   `mask` that removes the padding from every reduction;
+//! * feature dimension: for `d ≤ TILE_D` the fused `eval_tile`/`grad_tile`
+//!   artifacts run directly; for `d > TILE_D` the margins are accumulated
+//!   with `matvec_tile` per feature tile and finished with `loss_tile`
+//!   (margin additivity: `z = Σ_t X[:, t·128:(t+1)·128] · w_tile`).
+//!
+//! Example tiles are gathered and padded **once** at construction — the
+//! per-call work is only the `w` buffers and the PJRT executions.
+
+use super::{Artifact, ArtifactRuntime, TILE_D, TILE_M};
+use crate::data::{Dataset, DenseMatrix};
+use anyhow::Result;
+
+/// Metrics accumulated over all tiles.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalMetrics {
+    /// Mean loss over the (unmasked) examples.
+    pub mean_loss: f64,
+    /// Classification accuracy.
+    pub accuracy: f64,
+    /// Number of examples evaluated.
+    pub count: usize,
+}
+
+/// Pre-tiled view of a dense dataset's selected examples.
+pub struct TiledEvaluator<'rt> {
+    rt: &'rt ArtifactRuntime,
+    /// Row-major f32 tiles: each `TILE_M × (feat_tiles · TILE_D)`, laid out
+    /// as `feat_tiles` contiguous `TILE_M × TILE_D` blocks.
+    x_tiles: Vec<Vec<f32>>,
+    y_tiles: Vec<Vec<f32>>,
+    mask_tiles: Vec<Vec<f32>>,
+    d: usize,
+    feat_tiles: usize,
+    count: usize,
+}
+
+impl<'rt> TiledEvaluator<'rt> {
+    /// Gather + pad the examples `idx` of a dense dataset into tiles.
+    pub fn new(rt: &'rt ArtifactRuntime, ds: &Dataset<DenseMatrix>, idx: &[usize]) -> Result<Self> {
+        rt.validate_tiles()?;
+        let d = ds.d();
+        let feat_tiles = d.div_ceil(TILE_D).max(1);
+        let n_tiles = idx.len().div_ceil(TILE_M).max(1);
+        let mut x_tiles = Vec::with_capacity(n_tiles);
+        let mut y_tiles = Vec::with_capacity(n_tiles);
+        let mut mask_tiles = Vec::with_capacity(n_tiles);
+        for t in 0..n_tiles {
+            let rows = &idx[t * TILE_M..((t + 1) * TILE_M).min(idx.len())];
+            // feature-tile-major layout: block ft holds the TILE_D-wide
+            // slice of every row (zero-padded), each a ready PJRT buffer.
+            let mut x = vec![0.0f32; feat_tiles * TILE_M * TILE_D];
+            let mut y = vec![0.0f32; TILE_M];
+            let mut mask = vec![0.0f32; TILE_M];
+            for (r, &j) in rows.iter().enumerate() {
+                let col = ds.x.col(j);
+                for ft in 0..feat_tiles {
+                    let base = ft * TILE_M * TILE_D + r * TILE_D;
+                    let lo = ft * TILE_D;
+                    let hi = ((ft + 1) * TILE_D).min(d);
+                    for (k, &value) in col[lo..hi].iter().enumerate() {
+                        x[base + k] = value as f32;
+                    }
+                }
+                y[r] = ds.y[j] as f32;
+                mask[r] = 1.0;
+            }
+            x_tiles.push(x);
+            y_tiles.push(y);
+            mask_tiles.push(mask);
+        }
+        Ok(TiledEvaluator {
+            rt,
+            x_tiles,
+            y_tiles,
+            mask_tiles,
+            d,
+            feat_tiles,
+            count: idx.len(),
+        })
+    }
+
+    fn w_tiles(&self, w: &[f64]) -> Vec<Vec<f32>> {
+        (0..self.feat_tiles)
+            .map(|ft| {
+                let mut buf = vec![0.0f32; TILE_D];
+                let lo = ft * TILE_D;
+                let hi = ((ft + 1) * TILE_D).min(self.d);
+                for (k, &value) in w[lo..hi].iter().enumerate() {
+                    buf[k] = value as f32;
+                }
+                buf
+            })
+            .collect()
+    }
+
+    fn x_block<'a>(&'a self, tile: usize, ft: usize) -> &'a [f32] {
+        let base = ft * TILE_M * TILE_D;
+        &self.x_tiles[tile][base..base + TILE_M * TILE_D]
+    }
+
+    /// Logistic loss + accuracy of `w` over the tiled examples.
+    pub fn eval(&self, w: &[f64]) -> Result<EvalMetrics> {
+        assert_eq!(w.len(), self.d);
+        let w_tiles = self.w_tiles(w);
+        let (mut loss, mut correct, mut count) = (0.0f64, 0.0f64, 0.0f64);
+        if self.feat_tiles == 1 {
+            let eval: &Artifact = self.rt.get("eval_tile")?;
+            for t in 0..self.x_tiles.len() {
+                let out = eval.run(&[
+                    self.x_block(t, 0),
+                    &self.y_tiles[t],
+                    &self.mask_tiles[t],
+                    &w_tiles[0],
+                ])?;
+                loss += out[0][0] as f64;
+                correct += out[0][1] as f64;
+                count += out[0][2] as f64;
+            }
+        } else {
+            let matvec = self.rt.get("matvec_tile")?;
+            let loss_art = self.rt.get("loss_tile")?;
+            for t in 0..self.x_tiles.len() {
+                let mut z = vec![0.0f32; TILE_M];
+                for (ft, w_tile) in w_tiles.iter().enumerate() {
+                    let out = matvec.run(&[self.x_block(t, ft), w_tile])?;
+                    for (zi, p) in z.iter_mut().zip(&out[0]) {
+                        *zi += p;
+                    }
+                }
+                let out = loss_art.run(&[&z, &self.y_tiles[t], &self.mask_tiles[t]])?;
+                loss += out[0][0] as f64;
+                correct += out[0][1] as f64;
+                count += out[0][2] as f64;
+            }
+        }
+        Ok(EvalMetrics {
+            mean_loss: if count > 0.0 { loss / count } else { 0.0 },
+            accuracy: if count > 0.0 { correct / count } else { 0.0 },
+            count: count as usize,
+        })
+    }
+
+    /// Full logistic gradient `∇P(w) = (1/n)Σ ∇ℓ + λw` over the tiled
+    /// examples (for the HLO-backed L-BFGS baseline), plus the mean loss.
+    pub fn grad(&self, w: &[f64], lambda: f64) -> Result<(Vec<f64>, f64)> {
+        assert_eq!(w.len(), self.d);
+        assert_eq!(
+            self.feat_tiles, 1,
+            "grad path is compiled for d ≤ TILE_D (use the rust-native baseline beyond)"
+        );
+        let w_tiles = self.w_tiles(w);
+        let grad_art = self.rt.get("grad_tile")?;
+        let mut g = vec![0.0f64; self.d];
+        let mut loss = 0.0f64;
+        for t in 0..self.x_tiles.len() {
+            let out = grad_art.run(&[
+                self.x_block(t, 0),
+                &self.y_tiles[t],
+                &self.mask_tiles[t],
+                &w_tiles[0],
+            ])?;
+            for (gi, p) in g.iter_mut().zip(&out[0]) {
+                *gi += *p as f64;
+            }
+            loss += out[1][0] as f64;
+        }
+        let n = self.count.max(1) as f64;
+        for (gi, wi) in g.iter_mut().zip(w) {
+            *gi = *gi / n + lambda * wi;
+        }
+        Ok((g, loss / n))
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}

@@ -1,0 +1,132 @@
+//! SDCA trainer whose inner bucket update executes the AOT `bucket_step`
+//! artifact — the end-to-end composition proof for the three-layer stack:
+//! rust coordinator (epochs, shuffling, convergence) → L2 JAX graph →
+//! L1 Pallas kernel, all through one compiled HLO executable.
+//!
+//! This path is compiled for dense data with `d ≤ TILE_D` (the paper's
+//! synthetic dense workload, 100 features, fits with padding) and exists
+//! to *validate the stack*, not to beat the native hot loop: each bucket
+//! costs a PJRT dispatch, which is exactly the kind of per-coordinate
+//! overhead the paper's CPU-native design avoids. `examples/e2e_train.rs`
+//! runs it on the paper's Fig. 1 workload and logs the loss curve.
+
+use super::{ArtifactRuntime, BUCKET_B, TILE_D};
+use crate::data::{Dataset, DenseMatrix};
+use crate::glm::{ModelState, Objective};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::{ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::util::{Rng, Timer};
+use anyhow::{bail, Result};
+
+/// Train logistic regression with the HLO-backed bucket kernel.
+pub fn train_hlo_bucketed(
+    rt: &ArtifactRuntime,
+    ds: &Dataset<DenseMatrix>,
+    cfg: &SolverConfig,
+) -> Result<TrainOutput> {
+    let n = ds.n();
+    let d = ds.d();
+    if d > TILE_D {
+        bail!("bucket_step artifact is compiled for d ≤ {TILE_D} (got {d})");
+    }
+    if !matches!(cfg.obj, Objective::Logistic { .. }) {
+        bail!("bucket_step artifact implements the logistic objective");
+    }
+    rt.validate_tiles()?;
+    let bucket_art = rt.get("bucket_step")?;
+    let lambda = cfg.obj.lambda();
+    let inv_lambda_n = 1.0 / (lambda * n as f64);
+
+    // pre-pack every bucket's X tile (B × TILE_D, zero-padded), labels and
+    // norms once; α and v flow through f32 buffers per call
+    let n_buckets = n.div_ceil(BUCKET_B);
+    let mut x_bufs = Vec::with_capacity(n_buckets);
+    let mut y_bufs = Vec::with_capacity(n_buckets);
+    let mut nsq_bufs = Vec::with_capacity(n_buckets);
+    for b in 0..n_buckets {
+        let lo = b * BUCKET_B;
+        let hi = ((b + 1) * BUCKET_B).min(n);
+        let mut x = vec![0.0f32; BUCKET_B * TILE_D];
+        let mut y = vec![1.0f32; BUCKET_B]; // label of padded rows is inert (nsq=0)
+        let mut nsq = vec![0.0f32; BUCKET_B];
+        for (r, j) in (lo..hi).enumerate() {
+            for (k, &value) in ds.x.col(j).iter().enumerate() {
+                x[r * TILE_D + k] = value as f32;
+            }
+            y[r] = ds.y[j] as f32;
+            nsq[r] = ds.norm_sq(j) as f32;
+        }
+        x_bufs.push(x);
+        y_bufs.push(y);
+        nsq_bufs.push(nsq);
+    }
+    let scalars: Vec<f32> = vec![
+        inv_lambda_n as f32,
+        n as f32, // n_eff = n (single worker ⇒ σ′ = 1)
+        1.0,
+        n as f32,
+    ];
+
+    let mut alpha = vec![0.0f64; n];
+    let mut v32 = vec![0.0f32; TILE_D];
+    let mut ids: Vec<u32> = (0..n_buckets as u32).collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        rng.shuffle(&mut ids);
+        for &b in &ids {
+            let b = b as usize;
+            let lo = b * BUCKET_B;
+            let hi = ((b + 1) * BUCKET_B).min(n);
+            let mut a_buf = vec![0.0f32; BUCKET_B];
+            for (r, j) in (lo..hi).enumerate() {
+                a_buf[r] = alpha[j] as f32;
+            }
+            let out = bucket_art.run(&[
+                &x_bufs[b],
+                &y_bufs[b],
+                &a_buf,
+                &nsq_bufs[b],
+                &v32,
+                &scalars,
+            ])?;
+            for (r, j) in (lo..hi).enumerate() {
+                alpha[j] = out[0][r] as f64;
+            }
+            v32.copy_from_slice(&out[1]);
+        }
+        let rel = mon.observe(&alpha);
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap: None,
+            primal: None,
+        });
+        if mon.converged() {
+            converged = true;
+            break;
+        }
+    }
+
+    // exact f64 model from the learned duals
+    let mut st = ModelState {
+        alpha,
+        v: vec![0.0; d],
+    };
+    st.rebuild_v(ds);
+    let record = RunRecord {
+        solver: "hlo-bucket".into(),
+        threads: 1,
+        epochs,
+        converged,
+        diverged: false,
+        total_wall_s: total.elapsed_s(),
+    };
+    Ok(TrainOutput::assemble(ds, &cfg.obj, st, record))
+}

@@ -1,0 +1,334 @@
+//! Parser for `artifacts/manifest.json` written by `python/compile/aot.py`.
+//!
+//! The manifest records every artifact's input/output shapes + dtypes so
+//! the runtime can validate buffers before handing them to PJRT. The
+//! offline toolchain carries no serde, so this is a minimal recursive-
+//! descent JSON reader specialized to (but validating of) the manifest's
+//! actual schema.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Shape+dtype of one tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's interface.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ArtifactSpec {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// name → spec for every artifact in the manifest.
+pub type Manifest = BTreeMap<String, ArtifactSpec>;
+
+pub fn parse_manifest(text: &str) -> Result<Manifest> {
+    let v = Json::parse(text)?;
+    let obj = v.as_object().ok_or_else(|| anyhow!("manifest root must be an object"))?;
+    let mut out = Manifest::new();
+    for (name, spec) in obj {
+        let spec_obj = spec
+            .as_object()
+            .ok_or_else(|| anyhow!("artifact {name} must be an object"))?;
+        let mut art = ArtifactSpec::default();
+        for (key, target) in [("inputs", &mut art.inputs), ("outputs", &mut art.outputs)] {
+            let arr = spec_obj
+                .get(key)
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("artifact {name} missing '{key}' array"))?;
+            for t in arr {
+                let t = t.as_object().ok_or_else(|| anyhow!("{name}.{key}: bad tensor"))?;
+                let shape = t
+                    .get("shape")
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| anyhow!("{name}.{key}: missing shape"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_f64()
+                            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                            .map(|x| x as usize)
+                            .ok_or_else(|| anyhow!("{name}.{key}: bad dim"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}.{key}: missing dtype"))?
+                    .to_string();
+                target.push(TensorSpec { shape, dtype });
+            }
+        }
+        out.insert(name.clone(), art);
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ JSON
+
+/// Minimal JSON value (enough for the manifest schema).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let bytes = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&Vec<Json>> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'{') => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    _ => bail!("object key must be a string (byte {pos})"),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    bail!("expected ':' at byte {pos}");
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                m.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut a = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(a));
+            }
+            loop {
+                a.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(a));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => bail!("unterminated string"),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'r') => s.push('\r'),
+                            Some(b'u') => {
+                                let hex = b
+                                    .get(*pos + 1..*pos + 5)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                                let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                                *pos += 4;
+                            }
+                            other => bail!("bad escape {:?}", other),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        // manifest content is ASCII-ish; pass UTF-8 through
+                        let start = *pos;
+                        let width = utf8_width(c);
+                        let chunk = b
+                            .get(start..start + width)
+                            .ok_or_else(|| anyhow!("truncated utf8"))?;
+                        s.push_str(std::str::from_utf8(chunk)?);
+                        *pos += width;
+                    }
+                }
+            }
+        }
+        Some(b't') => {
+            expect(b, pos, b"true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') => {
+            expect(b, pos, b"false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') => {
+            expect(b, pos, b"null")?;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let txt = std::str::from_utf8(&b[start..*pos])?;
+            Ok(Json::Num(txt.parse::<f64>().map_err(|_| anyhow!("bad number '{txt}'"))?))
+        }
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &[u8]) -> Result<()> {
+    if b.get(*pos..*pos + lit.len()) == Some(lit) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected {:?} at byte {pos}", std::str::from_utf8(lit));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_schema() {
+        let text = r#"{
+          "eval_tile": {
+            "inputs": [{"shape": [256, 128], "dtype": "float32"},
+                       {"shape": [256], "dtype": "float32"}],
+            "outputs": [{"shape": [3], "dtype": "float32"}]
+          }
+        }"#;
+        let m = parse_manifest(text).unwrap();
+        let spec = &m["eval_tile"];
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].shape, vec![256, 128]);
+        assert_eq!(spec.inputs[0].element_count(), 256 * 128);
+        assert_eq!(spec.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_manifest("{").is_err());
+        assert!(parse_manifest(r#"{"a": }"#).is_err());
+        assert!(parse_manifest(r#"[1,2]"#).is_err()); // root must be object
+        assert!(Json::parse(r#"{"a":1} trailing"#).is_err());
+    }
+
+    #[test]
+    fn json_scalars() {
+        assert_eq!(Json::parse("3.5").unwrap(), Json::Num(3.5));
+        assert_eq!(Json::parse("-2e3").unwrap(), Json::Num(-2000.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(
+            Json::parse(r#""a\nbA""#).unwrap(),
+            Json::Str("a\nbA".into())
+        );
+    }
+
+    #[test]
+    fn json_nesting() {
+        let v = Json::parse(r#"{"a": [1, {"b": []}], "c": ""}"#).unwrap();
+        let o = v.as_object().unwrap();
+        assert_eq!(o["a"].as_array().unwrap().len(), 2);
+        assert_eq!(o["c"].as_str().unwrap(), "");
+    }
+
+    #[test]
+    fn scalar_spec_element_count() {
+        let t = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(t.element_count(), 1);
+    }
+}

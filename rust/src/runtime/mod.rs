@@ -1,0 +1,185 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from the rust
+//! training path — Python never runs at training time.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (shapes/dtypes).
+//! * [`ArtifactRuntime`] — PJRT CPU client + one compiled executable per
+//!   artifact, compiled once at startup, shape-checked against the
+//!   manifest on every call.
+//! * [`evaluator`] — the tiled evaluator composing fixed-shape artifacts
+//!   over arbitrary datasets (loss/accuracy/gradient of any `(n, d)`).
+//! * [`hlo_trainer`] — SDCA trainer whose bucket update runs through the
+//!   `bucket_step` artifact (the end-to-end L1→L3 composition demo).
+
+pub mod evaluator;
+pub mod hlo_trainer;
+pub mod manifest;
+
+pub use evaluator::TiledEvaluator;
+pub use manifest::{parse_manifest, ArtifactSpec, Manifest, TensorSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Canonical AOT tile shapes — must match
+/// `python/compile/kernels/sdca_kernels.py` (validated against the
+/// manifest at load time).
+pub const TILE_M: usize = 256;
+pub const TILE_D: usize = 128;
+pub const BUCKET_B: usize = 8;
+
+/// A loaded-and-compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with f32 input buffers (shape-checked against the
+    /// manifest); returns the decomposed output tuple as f32 vectors.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if buf.len() != spec.element_count() {
+                bail!(
+                    "{}: input length {} != manifest element count {} (shape {:?})",
+                    self.name,
+                    buf.len(),
+                    spec.element_count(),
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(if dims.len() <= 1 {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .with_context(|| format!("{}: reshape to {:?}", self.name, spec.shape))?
+            });
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("{}: execute", self.name))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// The runtime: a PJRT CPU client plus every compiled artifact.
+pub struct ArtifactRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling each
+    /// HLO text module on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in manifest {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("{name}: parse HLO text: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("{name}: compile: {e:?}"))?;
+            artifacts.insert(name.clone(), Artifact { name, spec, exe });
+        }
+        Ok(ArtifactRuntime {
+            client,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory (the Makefile's
+    /// output location).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({:?})", self.names()))
+    }
+
+    /// Sanity check: the canonical tile constants baked into the rust
+    /// evaluator must agree with what the python side compiled.
+    pub fn validate_tiles(&self) -> Result<()> {
+        let eval = self.get("eval_tile")?;
+        let shape = &eval.spec.inputs[0].shape;
+        if shape != &[TILE_M, TILE_D] {
+            bail!(
+                "eval_tile compiled for {shape:?}, runtime expects [{TILE_M}, {TILE_D}] — \
+                 rebuild artifacts"
+            );
+        }
+        let bucket = self.get("bucket_step")?;
+        if bucket.spec.inputs[0].shape != [BUCKET_B, TILE_D] {
+            bail!(
+                "bucket_step shape mismatch: {:?}",
+                bucket.spec.inputs[0].shape
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests against real artifacts live in
+    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = match ArtifactRuntime::load(Path::new("/nonexistent/dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

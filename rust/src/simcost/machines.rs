@@ -1,0 +1,167 @@
+//! Machine models of the paper's two testbeds (§4):
+//!
+//! * a 4-node Intel Xeon E5-4620 (8 physical cores/node, 2.2 GHz, AVX,
+//!   64 B lines, 16 MiB LLC/socket, QPI interconnect),
+//! * a 2-node IBM POWER9 (3.8 GHz, VSX, 128 B lines, large L3, high
+//!   memory bandwidth — the paper repeatedly attributes the 2-node
+//!   machine's better "wild" behaviour to it).
+//!
+//! Parameters are public microarchitecture figures, not measurements of
+//! the authors' boxes; the cost model's goal is the *shape* of the paper's
+//! curves (who wins, where scaling knees sit), per DESIGN.md §4/§5.
+
+use crate::sysinfo::Topology;
+
+/// Cost-model description of a multi-socket CPU machine.
+#[derive(Clone, Debug)]
+pub struct MachineModel {
+    pub name: &'static str,
+    pub topology: Topology,
+    /// Core clock in GHz (paper pins the frequency).
+    pub ghz: f64,
+    /// f64 SIMD lanes per core.
+    pub simd_f64_lanes: f64,
+    /// Fused multiply-add available?
+    pub fma: bool,
+    /// Fraction of SIMD peak the streaming inner-product loop achieves.
+    pub compute_eff: f64,
+    /// Cache line size in bytes.
+    pub cache_line: usize,
+    /// Last-level cache per node, bytes.
+    pub llc_bytes: usize,
+    /// Streaming bandwidth per node, bytes/s (shared by its cores).
+    pub stream_bw: f64,
+    /// Cross-node streaming bandwidth, bytes/s (interconnect).
+    pub remote_bw: f64,
+    /// Latency to fetch a line that is LLC/memory-local, seconds.
+    pub local_line_s: f64,
+    /// Latency to fetch/invalidate a line held by a remote node, seconds.
+    pub remote_line_s: f64,
+    /// Pairwise probability that two unsynchronized same-element RMWs
+    /// collide when the threads share a node / sit on different nodes
+    /// (feeds `vthread::WildSimParams`).
+    pub p_collide_local: f64,
+    pub p_collide_remote: f64,
+}
+
+impl MachineModel {
+    /// Peak f64 FLOP/s of one core.
+    pub fn core_flops(&self) -> f64 {
+        self.ghz * 1e9 * self.simd_f64_lanes * if self.fma { 2.0 } else { 1.0 }
+    }
+
+    /// α-entries per cache line (the bucket size the paper derives).
+    pub fn entries_per_line(&self) -> usize {
+        self.cache_line / std::mem::size_of::<f64>()
+    }
+
+    /// Collision parameters for the wild convergence simulator.
+    pub fn wild_params(&self, _threads: usize) -> crate::vthread::WildSimParams {
+        crate::vthread::WildSimParams {
+            p_collide_local: self.p_collide_local,
+            p_collide_remote: self.p_collide_remote,
+            topology: self.topology.clone(),
+        }
+    }
+}
+
+/// The paper's 4-node Xeon E5-4620 ("x86", 2.2 GHz, 32 cores total).
+pub fn xeon4() -> MachineModel {
+    MachineModel {
+        name: "xeon4",
+        topology: Topology::uniform(4, 8),
+        ghz: 2.2,
+        simd_f64_lanes: 4.0, // AVX
+        fma: false,          // Sandy Bridge EP: no FMA3
+        compute_eff: 0.55,
+        cache_line: 64,
+        llc_bytes: 16 << 20,
+        stream_bw: 38e9,
+        remote_bw: 12e9, // QPI per link, effective
+        local_line_s: 80e-9,
+        remote_line_s: 300e-9,
+        // intra-node RMWs are serialized by MESI ownership — losses are
+        // effectively a cross-node phenomenon (deep coherence windows)
+        p_collide_local: 0.0,
+        p_collide_remote: 0.06,
+    }
+}
+
+/// The paper's 2-node POWER9 (3.8 GHz, SMT off; 2 × 20 cores).
+pub fn power9() -> MachineModel {
+    MachineModel {
+        name: "power9",
+        topology: Topology::uniform(2, 20),
+        ghz: 3.8,
+        simd_f64_lanes: 2.0, // VSX
+        fma: true,
+        compute_eff: 0.6,
+        cache_line: 128,
+        llc_bytes: 100 << 20, // 10 MiB L3 per core pair, huge effective LLC
+        stream_bw: 110e9,     // the "increased memory bandwidth" the paper cites
+        remote_bw: 60e9,      // SMP X-bus
+        local_line_s: 60e-9,
+        remote_line_s: 180e-9,
+        p_collide_local: 0.0,
+        p_collide_remote: 0.04, // stronger X-bus than QPI
+    }
+}
+
+/// Both paper testbeds (the order figures iterate in).
+pub fn paper_machines() -> Vec<MachineModel> {
+    vec![xeon4(), power9()]
+}
+
+/// A machine model for *this* host (used when the user wants measured-vs-
+/// modeled comparisons locally).
+pub fn host() -> MachineModel {
+    let topo = Topology::detect();
+    MachineModel {
+        name: "host",
+        topology: topo,
+        ghz: 2.5,
+        simd_f64_lanes: 4.0,
+        fma: true,
+        compute_eff: 0.5,
+        cache_line: crate::sysinfo::cache_line_size(),
+        llc_bytes: crate::sysinfo::llc_size(),
+        stream_bw: 20e9,
+        remote_bw: 20e9,
+        local_line_s: 90e-9,
+        remote_line_s: 90e-9,
+        p_collide_local: 0.0,
+        p_collide_remote: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_specs() {
+        let x = xeon4();
+        assert_eq!(x.topology.num_nodes(), 4);
+        assert_eq!(x.topology.total_cores(), 32);
+        assert_eq!(x.entries_per_line(), 8);
+        let p = power9();
+        assert_eq!(p.topology.num_nodes(), 2);
+        assert_eq!(p.entries_per_line(), 16);
+        assert!(p.stream_bw > x.stream_bw, "paper: P9 has more bandwidth");
+    }
+
+    #[test]
+    fn peak_flops_sane() {
+        // E5-4620 AVX: 2.2e9 · 4 = 8.8 GFLOP/s/core
+        assert!((xeon4().core_flops() - 8.8e9).abs() < 1e6);
+        // P9 VSX FMA: 3.8e9 · 2 · 2 = 15.2
+        assert!((power9().core_flops() - 15.2e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn host_detects() {
+        let h = host();
+        assert!(h.topology.total_cores() >= 1);
+        assert!(h.llc_bytes > 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Machine cost model — the substitute for the paper's physical testbeds
+//! (DESIGN.md §4/§5).
+//!
+//! `epochs-to-converge` in every figure comes from *really executing* the
+//! algorithms (`solver::`, `vthread::`); this module supplies the other
+//! factor, per-epoch wall-clock on the paper's machines:
+//!
+//! ```text
+//!   time_to_convergence(solver, T, machine) =
+//!       epochs(solver, T)              // measured, exact
+//!     × epoch_time(solver, T, machine) // modeled here
+//! ```
+
+pub mod machines;
+pub mod model;
+
+pub use machines::{host, paper_machines, power9, xeon4, MachineModel};
+pub use model::{epoch_seconds, epoch_time, CostOpts, SolverKind, TimeBreakdown, Workload};

@@ -1,0 +1,115 @@
+//! Stopping rules shared by every solver variant.
+//!
+//! Primary criterion (the paper's): relative change of the learned model
+//! between consecutive epochs below `tol`. Secondary: optional duality-gap
+//! threshold. Divergence detection: the wild solver at high thread counts
+//! can drive the dual variables to garbage (paper Fig. 1a red entries) —
+//! we flag a run as diverged when `α` leaves the dual domain by a large
+//! margin or the model norm explodes.
+
+use crate::glm::Objective;
+
+/// Tracks the previous-epoch model and evaluates stopping conditions.
+pub struct ConvergenceMonitor {
+    prev_alpha: Vec<f64>,
+    tol: f64,
+    divergence_factor: f64,
+    initial_scale: Option<f64>,
+    pub last_rel_change: f64,
+}
+
+impl ConvergenceMonitor {
+    pub fn new(n: usize, tol: f64, divergence_factor: f64) -> Self {
+        ConvergenceMonitor {
+            prev_alpha: vec![0.0; n],
+            tol,
+            divergence_factor,
+            initial_scale: None,
+            last_rel_change: f64::INFINITY,
+        }
+    }
+
+    /// Feed the end-of-epoch model; returns the relative change.
+    pub fn observe(&mut self, alpha: &[f64]) -> f64 {
+        let rc = crate::util::rel_change(alpha, &self.prev_alpha);
+        self.prev_alpha.copy_from_slice(alpha);
+        self.last_rel_change = rc;
+        let norm = crate::util::norm_sq(alpha).sqrt();
+        if self.initial_scale.is_none() && norm > 0.0 {
+            self.initial_scale = Some(norm.max(1.0));
+        }
+        rc
+    }
+
+    /// Converged under the paper's criterion?
+    pub fn converged(&self) -> bool {
+        self.last_rel_change < self.tol
+    }
+
+    /// Diverged? (model norm exploded relative to its first-epoch scale, or
+    /// went non-finite.)
+    pub fn diverged(&self, alpha: &[f64]) -> bool {
+        let norm = crate::util::norm_sq(alpha).sqrt();
+        if !norm.is_finite() {
+            return true;
+        }
+        match self.initial_scale {
+            Some(s) => norm > s * self.divergence_factor,
+            None => false,
+        }
+    }
+
+    /// Dual-domain sanity for constrained objectives: fraction of
+    /// coordinates outside `y·α ∈ [0,1]` (should be exactly 0 for any
+    /// correct solver; wild lost updates can violate it).
+    pub fn domain_violation(obj: &Objective, alpha: &[f64], y: &[f64]) -> f64 {
+        match obj {
+            Objective::Ridge { .. } => 0.0,
+            _ => {
+                let bad = alpha
+                    .iter()
+                    .zip(y.iter())
+                    .filter(|(&a, &yy)| {
+                        let s = a * yy;
+                        !(-1e-9..=1.0 + 1e-9).contains(&s)
+                    })
+                    .count();
+                bad as f64 / alpha.len().max(1) as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_convergence() {
+        let mut m = ConvergenceMonitor::new(3, 1e-3, 1e3);
+        m.observe(&[1.0, 1.0, 1.0]);
+        assert!(!m.converged()); // first epoch: change from zero is 100%
+        m.observe(&[1.0, 1.0, 1.0 + 1e-6]);
+        assert!(m.converged());
+    }
+
+    #[test]
+    fn detects_divergence() {
+        let mut m = ConvergenceMonitor::new(2, 1e-3, 10.0);
+        m.observe(&[1.0, 0.0]);
+        assert!(!m.diverged(&[1.0, 0.0]));
+        assert!(m.diverged(&[100.0, 0.0]));
+        assert!(m.diverged(&[f64::NAN, 0.0]));
+    }
+
+    #[test]
+    fn domain_violation_counts() {
+        let obj = Objective::Logistic { lambda: 1.0 };
+        let y = [1.0, 1.0, -1.0, -1.0];
+        let alpha = [0.5, 1.5, -0.5, 0.5]; // 2nd (s=1.5) and 4th (s=-0.5) bad
+        let v = ConvergenceMonitor::domain_violation(&obj, &alpha, &y);
+        assert!((v - 0.5).abs() < 1e-12);
+        let ridge = Objective::Ridge { lambda: 1.0 };
+        assert_eq!(ConvergenceMonitor::domain_violation(&ridge, &alpha, &y), 0.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! The "domesticated" multi-threaded trainer (§3, "Multi-threaded
+//! Implementation"): data parallelism with per-thread replicas of the
+//! shared vector instead of wild shared writes.
+//!
+//! Per epoch:
+//! 1. partition the (buckets of) examples across `T` workers — statically
+//!    (CoCoA-style, the Fig. 5a baseline) or **dynamically**, the paper's
+//!    novel scheme: re-shuffle the global bucket permutation and re-deal it
+//!    every epoch;
+//! 2. every worker clones the global `v` into a private replica and runs
+//!    exact SDCA steps on its own coordinates against that replica, using
+//!    the CoCoA-safe local curvature (`n_eff = n/T`, i.e. σ′ = T);
+//! 3. at each of `merges_per_epoch` barriers the workers' replica deltas
+//!    are reduced into the global `v` (exact, since `α` updates are
+//!    disjoint) and fresh replicas are taken.
+//!
+//! Convergence is checked on the merged model exactly as in the sequential
+//! solver, so "epochs to converge" is directly comparable across variants.
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::{ModelState, Objective};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::exec::Executor;
+use crate::solver::seq::sdca_delta;
+use crate::solver::{Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
+use crate::solver::partition::Partitioner;
+use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+use crate::util::{Rng, Timer};
+
+/// Production entry point: real OS threads.
+pub fn train_domesticated<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
+    train_domesticated_exec(ds, cfg, Executor::Threads)
+}
+
+/// One worker's share of an epoch round: exact SDCA steps on its own
+/// coordinates against a private replica, under the CoCoA+ σ′-scaled local
+/// subproblem (σ′ = K, updates *added* at merges — the provably-safe
+/// aggregation for K data-parallel workers).
+///
+/// The replica tracks `u = v_global + σ′·A·Δα_local`: each step reads its
+/// margin from `u` and solves the 1-D problem with curvature
+/// `σ′·‖x‖²/(λn)` (passed as `n_eff = n/σ′`), so the worker is exactly
+/// conservative enough that the *sum* of all workers' deltas cannot
+/// overshoot. Returns `A·Δα_local = (u − v_global)/σ′`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn worker_round<M: DataMatrix>(
+    ds: &Dataset<M>,
+    obj: &Objective,
+    buckets: &Buckets,
+    my_buckets: &[u32],
+    alpha: &[AtomicF64],
+    v_global: &[f64],
+    inv_lambda_n: f64,
+    n_eff: usize,
+    sigma: f64,
+) -> Vec<f64> {
+    let mut u = v_global.to_vec();
+    for &b in my_buckets {
+        for j in buckets.range(b as usize) {
+            let a = alpha[j].load();
+            let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+            if delta != 0.0 {
+                alpha[j].store(a + delta);
+                ds.x.axpy_col(j, sigma * delta, &mut u);
+            }
+        }
+    }
+    // return A·Δα = (u − v_global)/σ′
+    for (l, g) in u.iter_mut().zip(v_global.iter()) {
+        *l = (*l - g) / sigma;
+    }
+    u
+}
+
+/// Core implementation, parameterized over the execution strategy (see
+/// [`Executor`] — `Sequential` reproduces the identical model on one core).
+pub fn train_domesticated_exec<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &SolverConfig,
+    exec: Executor,
+) -> TrainOutput {
+    let n = ds.n();
+    let t_workers = cfg.threads.max(1);
+    let obj = cfg.obj;
+    let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+    // CoCoA+ local subproblem scaling σ′ (see SigmaPolicy): the 1-D
+    // solver sees curvature scaled by σ′, i.e. n_eff = n/σ′.
+    let sigma_max = t_workers as f64;
+    let mut sigma = match cfg.sigma {
+        crate::solver::SigmaPolicy::Safe => sigma_max,
+        crate::solver::SigmaPolicy::Adaptive => (sigma_max / 4.0).max(1.0),
+        crate::solver::SigmaPolicy::Fixed(s) => s.max(1.0),
+    };
+    let adaptive = matches!(cfg.sigma, crate::solver::SigmaPolicy::Adaptive);
+    // ratcheting floor: every backtrack proves the current σ′ was too
+    // aggressive, so relaxation never goes below the last unstable point
+    // again — reverts are finite (≤ log₂K) and the tail is stable
+    let mut sigma_floor = 1.0f64;
+
+    let bucket_size = cfg.bucket.resolve_host(n);
+    let buckets = Buckets::new(n, bucket_size);
+    let mut partitioner = Partitioner::new(cfg.partition, buckets.count(), t_workers);
+    let rounds = cfg.resolve_merges(ds);
+
+    let alpha: Vec<AtomicF64> = atomic_vec(n);
+    let mut v_global = vec![0.0f64; ds.d()];
+    let mut rng = Rng::new(cfg.seed);
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    // dual value of the merged model — the adaptive-σ backtracking signal
+    // (D(0) = 0 for all three objectives at the cold start)
+    let mut prev_dual = 0.0f64;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        // snapshot for possible backtracking
+        let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
+        let n_eff = ((n as f64 / sigma).round() as usize).max(1);
+        let assignment = partitioner.assign(&mut rng);
+        for round in 0..rounds {
+            // each worker takes the `round`-th segment of its epoch list
+            let jobs: Vec<_> = (0..t_workers)
+                .map(|tid| {
+                    let list = &assignment.per_worker[tid];
+                    let seg = segment(list, round, rounds);
+                    let (ds, obj, buckets, alpha, v_ref) =
+                        (&*ds, &obj, &buckets, &alpha[..], &v_global[..]);
+                    move || {
+                        worker_round(
+                            ds, obj, buckets, seg, alpha, v_ref, inv_lambda_n, n_eff, sigma,
+                        )
+                    }
+                })
+                .collect();
+            let deltas = exec.run(jobs);
+            for dv in &deltas {
+                crate::util::axpy(1.0, dv, &mut v_global);
+            }
+        }
+        let mut reverted = false;
+        if adaptive {
+            let st = ModelState {
+                alpha: snapshot(&alpha),
+                v: v_global.clone(),
+            };
+            let dual = crate::glm::gap::dual_value(ds, &obj, &st);
+            if dual + 1e-12 * dual.abs().max(1.0) < prev_dual && sigma < sigma_max {
+                // merged step overshot: revert the epoch, damp harder
+                let (a_snap, v_snap) = snap_state.unwrap();
+                for (slot, val) in alpha.iter().zip(&a_snap) {
+                    slot.store(*val);
+                }
+                v_global = v_snap;
+                sigma_floor = (sigma * 2.0).min(sigma_max);
+                sigma = sigma_floor;
+                reverted = true;
+            } else {
+                prev_dual = dual;
+                // progress was safe: relax toward the unscaled subproblem
+                sigma = (sigma / 1.15).max(sigma_floor);
+            }
+        }
+        let a_snap = snapshot(&alpha);
+        // a reverted epoch made no (accepted) progress — it must not trip
+        // the relative-change convergence test
+        let rel = if reverted {
+            f64::INFINITY
+        } else {
+            mon.observe(&a_snap)
+        };
+        let gap = if cfg.gap_tol.is_some() && epoch % cfg.gap_check_every == 0 {
+            let st = ModelState {
+                alpha: a_snap.clone(),
+                v: v_global.clone(),
+            };
+            Some(crate::glm::duality_gap(ds, &obj, &st).gap)
+        } else {
+            None
+        };
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap,
+            primal: None,
+        });
+        if mon.converged() || gap.map(|g| g < cfg.gap_tol.unwrap()).unwrap_or(false) {
+            converged = true;
+            break;
+        }
+    }
+
+    let st = ModelState {
+        alpha: snapshot(&alpha),
+        v: v_global,
+    };
+    let record = RunRecord {
+        solver: format!(
+            "dom-{}(bucket={bucket_size})",
+            match cfg.partition {
+                Partitioning::Static => "static",
+                Partitioning::Dynamic => "dynamic",
+            }
+        ),
+        threads: t_workers,
+        epochs,
+        converged,
+        diverged: false,
+        total_wall_s: total.elapsed_s(),
+    };
+    TrainOutput::assemble(ds, &obj, st, record)
+}
+
+/// `round`-th of `rounds` near-equal segments of a worker's bucket list.
+pub(crate) fn segment(list: &[u32], round: usize, rounds: usize) -> &[u32] {
+    let n = list.len();
+    let base = n / rounds;
+    let extra = n % rounds;
+    let lo = round * base + round.min(extra);
+    let len = base + usize::from(round < extra);
+    &list[lo..lo + len]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::Variant;
+
+    fn cfg(lambda: f64, threads: usize) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic { lambda })
+            .with_variant(Variant::Domesticated)
+            .with_threads(threads)
+            .with_tol(1e-5)
+            .with_max_epochs(500)
+    }
+
+    #[test]
+    fn segments_partition_list() {
+        let list: Vec<u32> = (0..10).collect();
+        let mut all = Vec::new();
+        for r in 0..3 {
+            all.extend_from_slice(segment(&list, r, 3));
+        }
+        assert_eq!(all, list);
+    }
+
+    #[test]
+    fn converges_multithreaded_dense() {
+        let ds = synthetic::dense_classification(500, 20, 1);
+        let out = train_domesticated(&ds, &cfg(1.0 / 500.0, 4));
+        assert!(out.converged, "epochs={}", out.epochs_run);
+        assert!(out.final_gap < 1e-3, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn converges_multithreaded_sparse() {
+        let ds = synthetic::sparse_classification(600, 150, 0.05, 2);
+        let out = train_domesticated(&ds, &cfg(1.0 / 600.0, 8));
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3);
+    }
+
+    #[test]
+    fn threads_and_sequential_executor_identical() {
+        let ds = synthetic::dense_classification(300, 12, 3);
+        let c = cfg(1e-3, 4).with_max_epochs(20).with_tol(0.0);
+        let a = train_domesticated_exec(&ds, &c, Executor::Threads);
+        let b = train_domesticated_exec(&ds, &c, Executor::Sequential);
+        assert_eq!(a.state.alpha, b.state.alpha, "executors must be bitwise identical");
+        assert_eq!(a.state.v, b.state.v);
+    }
+
+    #[test]
+    fn static_needs_more_epochs_than_dynamic() {
+        // the paper's Fig 5a effect, at small scale
+        let ds = synthetic::dense_classification(2000, 30, 4);
+        let base = cfg(1.0 / 2000.0, 8).with_tol(1e-4);
+        let dynamic = train_domesticated(&ds, &base.clone().with_partition(Partitioning::Dynamic));
+        let statik = train_domesticated(&ds, &base.with_partition(Partitioning::Static));
+        assert!(dynamic.converged && statik.converged);
+        assert!(
+            dynamic.epochs_run <= statik.epochs_run,
+            "dynamic {} vs static {}",
+            dynamic.epochs_run,
+            statik.epochs_run
+        );
+    }
+
+    #[test]
+    fn v_consistent_after_merges() {
+        let ds = synthetic::dense_classification(200, 10, 5);
+        let mut c = cfg(0.01, 3);
+        c.merges_per_epoch = 4;
+        let out = train_domesticated(&ds, &c);
+        assert!(out.state.v_drift(&ds) < 1e-8, "drift={}", out.state.v_drift(&ds));
+    }
+
+    #[test]
+    fn same_quality_as_sequential() {
+        let ds = synthetic::dense_classification(400, 15, 6);
+        let obj = Objective::Logistic { lambda: 1e-3 };
+        let seq = crate::solver::seq::train_sequential(
+            &ds,
+            &SolverConfig::new(obj).with_tol(1e-7).with_max_epochs(1000),
+        );
+        let dom = train_domesticated(&ds, &cfg(1e-3, 4).with_tol(1e-7).with_max_epochs(1000));
+        let dist = crate::util::rel_change(&seq.weights(&obj), &dom.weights(&obj));
+        assert!(dist < 5e-3, "solutions differ: {dist}");
+    }
+}

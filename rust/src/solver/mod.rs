@@ -1,0 +1,273 @@
+//! The paper's training system: bucketed, dynamically-partitioned,
+//! NUMA-hierarchical SDCA — plus the "wild" asynchronous baseline it is
+//! measured against.
+//!
+//! Variant map (paper § → module):
+//!
+//! | paper                                  | module        |
+//! |----------------------------------------|---------------|
+//! | Algorithm 1, "wild" multi-threaded     | [`wild`]      |
+//! | §3 single-threaded + buckets           | [`seq`]       |
+//! | §3 multi-threaded, replicas + dynamic  | [`dom`]       |
+//! | §3 numa-level hierarchical             | [`numa`]      |
+//!
+//! All variants share [`SolverConfig`] and produce a [`TrainOutput`] with a
+//! per-epoch [`metrics::RunRecord`], so the figure harnesses can sweep them
+//! uniformly. Convergence-vs-thread-count studies on arbitrary simulated
+//! thread counts run through [`crate::vthread`].
+
+pub mod bucket;
+pub mod convergence;
+pub mod dom;
+pub mod exec;
+pub mod numa;
+pub mod partition;
+pub mod seq;
+pub mod wild;
+
+pub use bucket::{BucketPolicy, Buckets};
+pub use convergence::ConvergenceMonitor;
+pub use partition::Partitioning;
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::{GapReport, ModelState, Objective};
+use crate::metrics::RunRecord;
+use crate::sysinfo::Topology;
+
+/// Which trainer implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Single-threaded SDCA (optionally bucketed) — §3 "Single-Threaded".
+    Sequential,
+    /// Asynchronous shared-vector baseline — Algorithm 1.
+    Wild,
+    /// Per-thread replicas with static/dynamic partitioning — §3
+    /// "Multi-threaded" ("domesticated" in the paper's terms).
+    Domesticated,
+    /// Hierarchical NUMA solver — §3 "Numa-level optimizations".
+    Numa,
+    /// Pick per the paper's runtime policy: sequential for 1 thread,
+    /// domesticated within one node, numa across nodes.
+    Auto,
+}
+
+/// How aggressively the replica solvers scale their local subproblem
+/// (the CoCoA+ σ′ parameter).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SigmaPolicy {
+    /// σ′ = K (number of workers): provably safe, conservative — local
+    /// steps are damped K-fold, inflating epochs at high worker counts.
+    Safe,
+    /// Start from σ′ = max(1, K/4) and adapt per epoch with dual-value
+    /// backtracking: revert + double σ′ when the merged dual got worse,
+    /// gently relax σ′ toward 1 while epochs keep improving. Recovers the
+    /// near-sequential epoch counts the paper reports for dynamic
+    /// partitioning, while keeping the Safe fallback as the ceiling.
+    Adaptive,
+    /// Fixed override (expert knob; σ′ < safe can diverge).
+    Fixed(f64),
+}
+
+/// Everything a training run needs besides the data.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub obj: Objective,
+    pub variant: Variant,
+    pub threads: usize,
+    pub max_epochs: usize,
+    /// Convergence threshold on the relative model change per epoch.
+    pub tol: f64,
+    /// Optional duality-gap stop (checked every `gap_check_every` epochs).
+    pub gap_tol: Option<f64>,
+    pub gap_check_every: usize,
+    pub seed: u64,
+    pub bucket: BucketPolicy,
+    pub partition: Partitioning,
+    /// Replica merges per epoch for the domesticated solver (the paper
+    /// synchronizes "periodically"; more merges = fresher replicas but
+    /// `T·d` doubles of traffic each). `0` = auto: as many merges (≤8) as
+    /// keep replica traffic under ~5% of the dataset streaming volume.
+    pub merges_per_epoch: usize,
+    /// σ′ policy for the replica solvers (see [`SigmaPolicy`]).
+    pub sigma: SigmaPolicy,
+    /// NUMA topology override (default: detect host).
+    pub topology: Option<Topology>,
+    /// Abort when the primal objective exceeds this multiple of its initial
+    /// value (divergence detection for the wild solver).
+    pub divergence_factor: f64,
+}
+
+impl SolverConfig {
+    pub fn new(obj: Objective) -> Self {
+        SolverConfig {
+            obj,
+            variant: Variant::Auto,
+            threads: 1,
+            max_epochs: 200,
+            tol: 1e-3,
+            gap_tol: None,
+            gap_check_every: 5,
+            seed: 42,
+            bucket: BucketPolicy::Auto,
+            partition: Partitioning::Dynamic,
+            merges_per_epoch: 0, // auto
+            sigma: SigmaPolicy::Adaptive,
+            topology: None,
+            divergence_factor: 1e3,
+        }
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_max_epochs(mut self, e: usize) -> Self {
+        self.max_epochs = e;
+        self
+    }
+
+    pub fn with_bucket(mut self, b: BucketPolicy) -> Self {
+        self.bucket = b;
+        self
+    }
+
+    pub fn with_partition(mut self, p: Partitioning) -> Self {
+        self.partition = p;
+        self
+    }
+
+    pub fn with_topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    /// Resolve `merges_per_epoch = 0` (auto) for a dataset: as many merge
+    /// rounds (capped at 8) as keep the replica merge traffic
+    /// (`T·2·d·8 B` per merge) below ~5% of the per-epoch dataset
+    /// streaming volume.
+    pub fn resolve_merges<M: DataMatrix>(&self, ds: &Dataset<M>) -> usize {
+        if self.merges_per_epoch > 0 {
+            return self.merges_per_epoch;
+        }
+        let stream = ds.payload_bytes() as f64;
+        let per_merge = (self.threads.max(1) * 2 * ds.d() * 8) as f64;
+        ((0.05 * stream / per_merge) as usize).clamp(1, 8)
+    }
+
+    /// Resolve `Auto` into a concrete variant given a topology, following
+    /// §3: sequential for one thread; domesticated while the threads fit on
+    /// one node; numa-hierarchical otherwise.
+    pub fn resolve_variant(&self, topo: &Topology) -> Variant {
+        match self.variant {
+            Variant::Auto => {
+                if self.threads <= 1 {
+                    Variant::Sequential
+                } else if self.threads <= topo.cores_per_node[topo.data_node] {
+                    Variant::Domesticated
+                } else {
+                    Variant::Numa
+                }
+            }
+            v => v,
+        }
+    }
+}
+
+/// Result of a training run: final state + run record.
+pub struct TrainOutput {
+    pub state: ModelState,
+    pub record: RunRecord,
+    pub epochs_run: usize,
+    pub converged: bool,
+    pub final_gap: f64,
+    /// Primal objective at the final model (scale reference for the gap).
+    pub final_primal: f64,
+}
+
+impl TrainOutput {
+    pub(crate) fn assemble<M: DataMatrix>(
+        ds: &Dataset<M>,
+        obj: &Objective,
+        state: ModelState,
+        record: RunRecord,
+    ) -> Self {
+        let GapReport { gap, primal, .. } = crate::glm::duality_gap(ds, obj, &state);
+        TrainOutput {
+            epochs_run: record.epochs_run(),
+            converged: record.converged,
+            final_gap: gap,
+            final_primal: primal,
+            state,
+            record,
+        }
+    }
+
+    /// Primal weight vector of the trained model.
+    pub fn weights(&self, obj: &Objective) -> Vec<f64> {
+        self.state.w(obj)
+    }
+}
+
+/// Train with the configured variant (the library's front door).
+pub fn train<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
+    let topo = cfg
+        .topology
+        .clone()
+        .unwrap_or_else(Topology::detect);
+    match cfg.resolve_variant(&topo) {
+        Variant::Sequential => seq::train_sequential(ds, cfg),
+        Variant::Wild => wild::train_wild(ds, cfg),
+        Variant::Domesticated => dom::train_domesticated(ds, cfg),
+        Variant::Numa => numa::train_numa(ds, cfg, &topo),
+        Variant::Auto => unreachable!("resolve_variant never returns Auto"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn auto_resolution_follows_paper_policy() {
+        let topo = Topology::uniform(4, 8);
+        let cfg = SolverConfig::new(Objective::Logistic { lambda: 0.01 });
+        assert_eq!(cfg.resolve_variant(&topo), Variant::Sequential);
+        assert_eq!(
+            cfg.clone().with_threads(4).resolve_variant(&topo),
+            Variant::Domesticated
+        );
+        assert_eq!(
+            cfg.clone().with_threads(16).resolve_variant(&topo),
+            Variant::Numa
+        );
+    }
+
+    #[test]
+    fn front_door_trains() {
+        let ds = synthetic::dense_classification(300, 10, 1);
+        let cfg = SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / 300.0,
+        })
+        .with_tol(1e-4);
+        let out = train(&ds, &cfg);
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-2, "gap={}", out.final_gap);
+    }
+}

@@ -1,0 +1,333 @@
+//! NUMA-hierarchical trainer (§3, "Numa-level optimizations").
+//!
+//! The paper treats each NUMA node as a distributed worker:
+//!
+//! * the requested threads are placed on the *minimum* number of nodes
+//!   whose physical cores can hold them, always including the node where
+//!   the dataset lives ([`Topology::place_threads`]);
+//! * (buckets of) examples are **statically** partitioned across nodes —
+//!   like CoCoA across machines — so a node only ever touches its own
+//!   model coordinates (`α` is node-local);
+//! * inside every node the paper's **dynamic** re-partitioning runs among
+//!   that node's threads each epoch;
+//! * each node keeps a private replica of the shared vector, intra-node
+//!   merged every round, and the node replicas are reduced into the global
+//!   `v` once per epoch (the cross-node allreduce the cost model charges
+//!   at `t_reduce`).
+//!
+//! The training dataset itself is never replicated: it is read-only and
+//! causes no coherence traffic (§3).
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::ModelState;
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::exec::Executor;
+use crate::solver::partition::Partitioner;
+use crate::solver::seq::sdca_delta;
+use crate::solver::{Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::sysinfo::Topology;
+use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+use crate::util::{Rng, Timer};
+
+/// Production entry point (real threads).
+pub fn train_numa<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig, topo: &Topology) -> TrainOutput {
+    train_numa_exec(ds, cfg, topo, Executor::Threads)
+}
+
+/// Static split of the bucket space across active nodes, proportional to
+/// each node's thread share (a node with more threads gets more buckets).
+fn node_bucket_ranges(num_buckets: usize, placement: &[usize]) -> Vec<std::ops::Range<u32>> {
+    let total_threads: usize = placement.iter().sum();
+    let mut ranges = Vec::with_capacity(placement.len());
+    let mut next = 0usize;
+    let mut assigned = 0usize;
+    let active: usize = placement.iter().filter(|&&p| p > 0).count();
+    let mut seen_active = 0usize;
+    for &p in placement {
+        if p == 0 {
+            ranges.push(next as u32..next as u32);
+            continue;
+        }
+        seen_active += 1;
+        let share = if seen_active == active {
+            num_buckets - assigned // last active node takes the remainder
+        } else {
+            num_buckets * p / total_threads
+        };
+        ranges.push(next as u32..(next + share) as u32);
+        next += share;
+        assigned += share;
+    }
+    ranges
+}
+
+pub fn train_numa_exec<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &SolverConfig,
+    topo: &Topology,
+    exec: Executor,
+) -> TrainOutput {
+    let n = ds.n();
+    let obj = cfg.obj;
+    let threads = cfg.threads.max(1);
+    let placement = topo.place_threads(threads);
+    let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+    // flat CoCoA+ σ′ across the hierarchy (safe ceiling: K = all workers);
+    // Adaptive backtracks on the merged dual exactly like solver::dom
+    let sigma_max = threads as f64;
+    let mut sigma = match cfg.sigma {
+        crate::solver::SigmaPolicy::Safe => sigma_max,
+        crate::solver::SigmaPolicy::Adaptive => (sigma_max / 4.0).max(1.0),
+        crate::solver::SigmaPolicy::Fixed(s) => s.max(1.0),
+    };
+    let adaptive = matches!(cfg.sigma, crate::solver::SigmaPolicy::Adaptive);
+    // ratcheting relaxation floor — see solver::dom
+    let mut sigma_floor = 1.0f64;
+
+    let bucket_size = cfg.bucket.resolve_host(n);
+    let buckets = Buckets::new(n, bucket_size);
+    let node_ranges = node_bucket_ranges(buckets.count(), &placement);
+
+    // per-node dynamic partitioners over the node's own bucket range
+    let mut node_parts: Vec<Option<Partitioner>> = placement
+        .iter()
+        .zip(&node_ranges)
+        .map(|(&p, r)| {
+            (p > 0).then(|| Partitioner::new(cfg.partition, (r.end - r.start) as usize, p))
+        })
+        .collect();
+
+    let alpha: Vec<AtomicF64> = atomic_vec(n);
+    let mut v_global = vec![0.0f64; ds.d()];
+    // per-node replicas of the shared vector
+    let mut v_nodes: Vec<Vec<f64>> = placement
+        .iter()
+        .map(|&p| if p > 0 { v_global.clone() } else { Vec::new() })
+        .collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    // The paper's hierarchy synchronizes replicas at epoch granularity:
+    // "Each node holds its own replica of the shared vector, which is
+    // reduced across nodes at the end of each epoch" (§3). Intra-epoch
+    // merges interact badly with the flat σ′ scaling (the per-round
+    // replica reset discards the σ′-amplified self-view that lets a local
+    // pass make coordinated progress), so the hierarchical solver pins
+    // one round per epoch; `merges_per_epoch` applies to `dom` only.
+    let rounds = 1usize;
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    let mut prev_dual = 0.0f64; // D(0) = 0 at the cold start
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
+        let n_eff = ((n as f64 / sigma).round() as usize).max(1);
+        // per-node epoch assignments (bucket ids relative to node range)
+        let assignments: Vec<Option<crate::solver::partition::EpochAssignment>> = node_parts
+            .iter_mut()
+            .map(|p| p.as_mut().map(|p| p.assign(&mut rng)))
+            .collect();
+        for round in 0..rounds {
+            // run every (node, thread) worker; workers read their node's
+            // replica and return the replica delta
+            let mut jobs = Vec::new();
+            let mut job_node = Vec::new();
+            for (k, asg) in assignments.iter().enumerate() {
+                let Some(asg) = asg else { continue };
+                let range_lo = node_ranges[k].start;
+                for tl in &asg.per_worker {
+                    let seg = super::dom::segment(tl, round, rounds);
+                    let (ds, obj, buckets, alpha, v_ref) =
+                        (&*ds, &obj, &buckets, &alpha[..], &v_nodes[k][..]);
+                    jobs.push(move || {
+                        // σ′-scaled replica: u = v_node + σ′·A·Δα_local
+                        // (see solver::dom::worker_round for the algebra)
+                        let mut u = v_ref.to_vec();
+                        for &b in seg {
+                            let global_b = (range_lo + b) as usize;
+                            for j in buckets.range(global_b) {
+                                let a = alpha[j].load();
+                                let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+                                if delta != 0.0 {
+                                    alpha[j].store(a + delta);
+                                    ds.x.axpy_col(j, sigma * delta, &mut u);
+                                }
+                            }
+                        }
+                        for (l, g) in u.iter_mut().zip(v_ref.iter()) {
+                            *l = (*l - g) / sigma;
+                        }
+                        u
+                    });
+                    job_node.push(k);
+                }
+            }
+            let deltas = exec.run(jobs);
+            // intra-node merge: each node's replica absorbs its own
+            // threads' deltas (cross-node reduce happens once per epoch)
+            for (dv, &k) in deltas.iter().zip(&job_node) {
+                crate::util::axpy(1.0, dv, &mut v_nodes[k]);
+            }
+        }
+        // cross-node allreduce: v_global += Σ_k (v_nodes[k] − v_global);
+        // then every node refreshes its replica from the reduced vector.
+        let mut merged = v_global.clone();
+        for (k, vn) in v_nodes.iter().enumerate() {
+            if placement[k] == 0 {
+                continue;
+            }
+            for (m, (nv, g)) in merged.iter_mut().zip(vn.iter().zip(v_global.iter())) {
+                *m += nv - g;
+            }
+        }
+        v_global = merged;
+        let mut reverted = false;
+        if adaptive {
+            let st = ModelState {
+                alpha: snapshot(&alpha),
+                v: v_global.clone(),
+            };
+            let dual = crate::glm::gap::dual_value(ds, &obj, &st);
+            if dual + 1e-12 * dual.abs().max(1.0) < prev_dual && sigma < sigma_max {
+                let (a_snap, v_snap) = snap_state.unwrap();
+                for (slot, val) in alpha.iter().zip(&a_snap) {
+                    slot.store(*val);
+                }
+                v_global = v_snap;
+                sigma_floor = (sigma * 2.0).min(sigma_max);
+                sigma = sigma_floor;
+                reverted = true;
+            } else {
+                prev_dual = dual;
+                sigma = (sigma / 1.15).max(sigma_floor);
+            }
+        }
+        for (k, vn) in v_nodes.iter_mut().enumerate() {
+            if placement[k] > 0 {
+                vn.copy_from_slice(&v_global);
+            }
+        }
+
+        let a_snap = snapshot(&alpha);
+        // reverted epochs made no accepted progress: skip the
+        // convergence check (see solver::dom)
+        let rel = if reverted {
+            f64::INFINITY
+        } else {
+            mon.observe(&a_snap)
+        };
+        let gap = if cfg.gap_tol.is_some() && epoch % cfg.gap_check_every == 0 {
+            let st = ModelState {
+                alpha: a_snap.clone(),
+                v: v_global.clone(),
+            };
+            Some(crate::glm::duality_gap(ds, &obj, &st).gap)
+        } else {
+            None
+        };
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap,
+            primal: None,
+        });
+        if mon.converged() || gap.map(|g| g < cfg.gap_tol.unwrap()).unwrap_or(false) {
+            converged = true;
+            break;
+        }
+    }
+
+    let st = ModelState {
+        alpha: snapshot(&alpha),
+        v: v_global,
+    };
+    let active = placement.iter().filter(|&&p| p > 0).count();
+    let record = RunRecord {
+        solver: format!("numa({active}n,bucket={bucket_size})"),
+        threads,
+        epochs,
+        converged,
+        diverged: false,
+        total_wall_s: total.elapsed_s(),
+    };
+    TrainOutput::assemble(ds, &obj, st, record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::Objective;
+    use crate::data::synthetic;
+    use crate::solver::Variant;
+
+    fn cfg(lambda: f64, threads: usize) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic { lambda })
+            .with_variant(Variant::Numa)
+            .with_threads(threads)
+            .with_tol(1e-5)
+            .with_max_epochs(600)
+    }
+
+    #[test]
+    fn node_ranges_partition() {
+        let r = node_bucket_ranges(100, &[4, 4, 0, 2]);
+        assert_eq!(r[0], 0..40);
+        assert_eq!(r[1], 40..80);
+        assert_eq!(r[2].len(), 0);
+        assert_eq!(r[3], 80..100);
+    }
+
+    #[test]
+    fn converges_across_nodes() {
+        let ds = synthetic::dense_classification(600, 20, 1);
+        let topo = Topology::uniform(4, 2);
+        let out = train_numa(&ds, &cfg(1.0 / 600.0, 8), &topo);
+        assert!(out.converged, "epochs={}", out.epochs_run);
+        assert!(out.final_gap < 1e-3, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn single_node_matches_domesticated_policy() {
+        // 2 threads on a 1-node topology: still correct
+        let ds = synthetic::sparse_classification(400, 100, 0.05, 2);
+        let topo = Topology::flat(4);
+        let out = train_numa(&ds, &cfg(1.0 / 400.0, 2), &topo);
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-2);
+    }
+
+    #[test]
+    fn executors_identical() {
+        let ds = synthetic::dense_classification(300, 10, 3);
+        let topo = Topology::uniform(2, 2);
+        let c = cfg(1e-3, 4).with_max_epochs(15).with_tol(0.0);
+        let a = train_numa_exec(&ds, &c, &topo, Executor::Threads);
+        let b = train_numa_exec(&ds, &c, &topo, Executor::Sequential);
+        assert_eq!(a.state.alpha, b.state.alpha);
+        assert_eq!(a.state.v, b.state.v);
+    }
+
+    #[test]
+    fn v_consistency() {
+        let ds = synthetic::dense_classification(250, 8, 4);
+        let topo = Topology::uniform(2, 3);
+        let out = train_numa(&ds, &cfg(0.01, 6), &topo);
+        assert!(out.state.v_drift(&ds) < 1e-8);
+    }
+
+    #[test]
+    fn same_solution_as_sequential() {
+        let ds = synthetic::dense_classification(500, 15, 5);
+        let obj = Objective::Logistic { lambda: 1e-3 };
+        let topo = Topology::uniform(4, 2);
+        let seq = crate::solver::seq::train_sequential(
+            &ds,
+            &SolverConfig::new(obj).with_tol(1e-7).with_max_epochs(1000),
+        );
+        let numa = train_numa(&ds, &cfg(1e-3, 8).with_tol(1e-7).with_max_epochs(1500), &topo);
+        let dist = crate::util::rel_change(&seq.weights(&obj), &numa.weights(&obj));
+        assert!(dist < 5e-3, "solutions differ: {dist}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Bucket-to-worker partitioning — the heart of the paper's §3
+//! "Multi-threaded Implementation".
+//!
+//! * **Static**: buckets are split into contiguous chunks once; each worker
+//!   reshuffles *within* its own chunk every epoch. This is the CoCoA
+//!   default and what a distributed system must do (moving data is
+//!   expensive) — and it measurably inflates epochs-to-converge (Fig. 2b,
+//!   Fig. 5a).
+//! * **Dynamic** (the paper's novel scheme): shuffle *all* buckets globally
+//!   every epoch and deal them out to workers round-robin, so each worker
+//!   sees a fresh random subset each epoch. Free in shared memory because
+//!   only indices move, never data.
+
+use crate::util::Rng;
+
+/// Partitioning scheme for the replica-based solvers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioning {
+    Static,
+    Dynamic,
+}
+
+/// Assignment of bucket ids to `workers` for one epoch.
+#[derive(Clone, Debug)]
+pub struct EpochAssignment {
+    /// `per_worker[t]` = bucket ids worker `t` processes, in order.
+    pub per_worker: Vec<Vec<u32>>,
+}
+
+impl EpochAssignment {
+    pub fn total(&self) -> usize {
+        self.per_worker.iter().map(|w| w.len()).sum()
+    }
+}
+
+/// Epoch-by-epoch partitioner over `num_buckets` buckets and `workers`
+/// workers. Holds the static chunks (computed once) and the scratch
+/// permutation reused across epochs to avoid per-epoch allocation.
+pub struct Partitioner {
+    scheme: Partitioning,
+    workers: usize,
+    /// Static chunk of each worker (contiguous ranges), fixed at creation.
+    static_chunks: Vec<Vec<u32>>,
+    /// Scratch permutation for the dynamic scheme.
+    perm: Vec<u32>,
+}
+
+impl Partitioner {
+    pub fn new(scheme: Partitioning, num_buckets: usize, workers: usize) -> Self {
+        assert!(workers >= 1);
+        // contiguous near-equal chunks, like a distributed loader would
+        let base = num_buckets / workers;
+        let extra = num_buckets % workers;
+        let mut static_chunks = Vec::with_capacity(workers);
+        let mut next = 0u32;
+        for t in 0..workers {
+            let len = base + usize::from(t < extra);
+            static_chunks.push((next..next + len as u32).collect());
+            next += len as u32;
+        }
+        Partitioner {
+            scheme,
+            workers,
+            static_chunks,
+            perm: (0..num_buckets as u32).collect(),
+        }
+    }
+
+    /// Produce this epoch's assignment. `rng` advances every epoch so
+    /// consecutive epochs see different permutations.
+    pub fn assign(&mut self, rng: &mut Rng) -> EpochAssignment {
+        match self.scheme {
+            Partitioning::Static => {
+                // shuffle order *within* each worker's fixed chunk
+                let mut per_worker = self.static_chunks.clone();
+                for chunk in per_worker.iter_mut() {
+                    rng.shuffle(chunk);
+                }
+                EpochAssignment { per_worker }
+            }
+            Partitioning::Dynamic => {
+                rng.shuffle(&mut self.perm);
+                // deal contiguous slices of the fresh global permutation —
+                // equal work per worker, fully re-randomized membership
+                let n = self.perm.len();
+                let base = n / self.workers;
+                let extra = n % self.workers;
+                let mut per_worker = Vec::with_capacity(self.workers);
+                let mut off = 0;
+                for t in 0..self.workers {
+                    let len = base + usize::from(t < extra);
+                    per_worker.push(self.perm[off..off + len].to_vec());
+                    off += len;
+                }
+                EpochAssignment { per_worker }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_partition(a: &EpochAssignment, num_buckets: usize) {
+        let mut seen = vec![false; num_buckets];
+        for w in &a.per_worker {
+            for &b in w {
+                assert!(!seen[b as usize], "bucket {b} assigned twice");
+                seen[b as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some bucket unassigned");
+    }
+
+    #[test]
+    fn static_is_partition_and_membership_fixed() {
+        let mut p = Partitioner::new(Partitioning::Static, 100, 4);
+        let mut rng = Rng::new(1);
+        let a1 = p.assign(&mut rng);
+        let a2 = p.assign(&mut rng);
+        is_partition(&a1, 100);
+        is_partition(&a2, 100);
+        for t in 0..4 {
+            let mut m1 = a1.per_worker[t].clone();
+            let mut m2 = a2.per_worker[t].clone();
+            m1.sort_unstable();
+            m2.sort_unstable();
+            assert_eq!(m1, m2, "static membership must not move across epochs");
+            assert_ne!(
+                a1.per_worker[t], a2.per_worker[t],
+                "order must reshuffle within the chunk"
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_is_partition_and_membership_moves() {
+        let mut p = Partitioner::new(Partitioning::Dynamic, 100, 4);
+        let mut rng = Rng::new(2);
+        let a1 = p.assign(&mut rng);
+        let a2 = p.assign(&mut rng);
+        is_partition(&a1, 100);
+        is_partition(&a2, 100);
+        // membership should differ between epochs for at least one worker
+        let moved = (0..4).any(|t| {
+            let mut m1 = a1.per_worker[t].clone();
+            let mut m2 = a2.per_worker[t].clone();
+            m1.sort_unstable();
+            m2.sort_unstable();
+            m1 != m2
+        });
+        assert!(moved, "dynamic partitioning must re-deal buckets");
+    }
+
+    #[test]
+    fn balanced_loads() {
+        for scheme in [Partitioning::Static, Partitioning::Dynamic] {
+            let mut p = Partitioner::new(scheme, 103, 4);
+            let mut rng = Rng::new(3);
+            let a = p.assign(&mut rng);
+            let sizes: Vec<usize> = a.per_worker.iter().map(|w| w.len()).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), 103);
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_shuffle() {
+        let mut p = Partitioner::new(Partitioning::Dynamic, 10, 1);
+        let mut rng = Rng::new(4);
+        let a = p.assign(&mut rng);
+        assert_eq!(a.per_worker.len(), 1);
+        is_partition(&a, 10);
+    }
+
+    #[test]
+    fn more_workers_than_buckets() {
+        let mut p = Partitioner::new(Partitioning::Dynamic, 3, 8);
+        let mut rng = Rng::new(5);
+        let a = p.assign(&mut rng);
+        is_partition(&a, 3);
+        assert_eq!(a.per_worker.iter().filter(|w| !w.is_empty()).count(), 3);
+    }
+}

@@ -1,0 +1,223 @@
+//! Sequential SDCA with the bucket optimization — the paper's §3
+//! single-threaded trainer and the building block every parallel variant
+//! reuses for its per-worker inner loop.
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::{ModelState, Objective};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::{Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::util::{Rng, Timer};
+
+/// One exact SDCA coordinate step on example `j` against the vector `v`
+/// (shared, replica or node-local — the caller decides).
+///
+/// `n_eff` is the example count used for the curvature of the local
+/// subproblem: the global `n` for the sequential/wild solvers, and the
+/// CoCoA-safe `n/K` for `K`-way replica solvers (σ′ = K scaling).
+/// Returns `δ`; the caller owns applying `α_j += δ` and `v += δ·x_j`.
+#[inline]
+pub fn sdca_delta<M: DataMatrix>(
+    ds: &Dataset<M>,
+    obj: &Objective,
+    j: usize,
+    alpha_j: f64,
+    v: &[f64],
+    inv_lambda_n: f64,
+    n_eff: usize,
+) -> f64 {
+    let xw = ds.x.dot_col(j, v) * inv_lambda_n;
+    obj.delta(alpha_j, xw, ds.norm_sq(j), ds.y[j], n_eff)
+}
+
+/// Run one bucket of consecutive coordinates in-place against (`alpha`,
+/// `v`). Shared by the sequential, domesticated and NUMA inner loops.
+#[inline]
+pub fn run_bucket<M: DataMatrix>(
+    ds: &Dataset<M>,
+    obj: &Objective,
+    range: std::ops::Range<usize>,
+    alpha: &mut [f64],
+    v: &mut [f64],
+    inv_lambda_n: f64,
+    n_eff: usize,
+) {
+    for j in range {
+        let delta = sdca_delta(ds, obj, j, alpha[j], v, inv_lambda_n, n_eff);
+        if delta != 0.0 {
+            alpha[j] += delta;
+            ds.x.axpy_col(j, delta, v);
+        }
+    }
+}
+
+/// §3 single-threaded trainer: shuffled bucket order, exact coordinate
+/// steps, convergence on relative model change (+ optional gap check).
+pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
+    let n = ds.n();
+    let obj = cfg.obj;
+    let bucket_size = cfg.bucket.resolve_host(n);
+    let buckets = Buckets::new(n, bucket_size);
+    let mut ids = buckets.ids();
+    let mut rng = Rng::new(cfg.seed);
+    let mut st = ModelState::zeros(n, ds.d());
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        rng.shuffle(&mut ids);
+        for (i, &b) in ids.iter().enumerate() {
+            // overlap the next bucket's memory fetch with this bucket's
+            // compute (§3: bucketing makes prefetching effective; the
+            // shuffled *bucket* order still defeats the hardware stream
+            // detector, so we hint it explicitly)
+            if let Some(&nb) = ids.get(i + 1) {
+                let r = buckets.range(nb as usize);
+                ds.x.prefetch_cols(r.start, r.end);
+            }
+            run_bucket(
+                ds,
+                &obj,
+                buckets.range(b as usize),
+                &mut st.alpha,
+                &mut st.v,
+                inv_lambda_n,
+                n,
+            );
+        }
+        let rel = mon.observe(&st.alpha);
+        let gap = if cfg.gap_tol.is_some() && epoch % cfg.gap_check_every == 0 {
+            Some(crate::glm::duality_gap(ds, &obj, &st).gap)
+        } else {
+            None
+        };
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap,
+            primal: None,
+        });
+        if mon.converged() || gap.map(|g| g < cfg.gap_tol.unwrap()).unwrap_or(false) {
+            converged = true;
+            break;
+        }
+    }
+    let record = RunRecord {
+        solver: format!("seq(bucket={bucket_size})"),
+        threads: 1,
+        epochs,
+        converged,
+        diverged: false,
+        total_wall_s: total.elapsed_s(),
+    };
+    TrainOutput::assemble(ds, &obj, st, record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::BucketPolicy;
+
+    fn cfg(lambda: f64) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic { lambda })
+            .with_tol(1e-5)
+            .with_max_epochs(300)
+    }
+
+    #[test]
+    fn converges_to_small_gap_dense() {
+        let ds = synthetic::dense_classification(400, 20, 1);
+        let out = train_sequential(&ds, &cfg(1.0 / 400.0));
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn converges_sparse() {
+        let ds = synthetic::sparse_classification(500, 100, 0.05, 2);
+        let out = train_sequential(&ds, &cfg(1.0 / 500.0));
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3);
+    }
+
+    #[test]
+    fn ridge_matches_normal_equations() {
+        // tiny ridge problem solvable in closed form:
+        // w* = (X Xᵀ/n + λ I)⁻¹ X y / n  for our P(w) = 1/(2n)Σ(xᵀw−y)² + λ/2‖w‖²
+        let ds = synthetic::dense_regression(200, 3, 0.05, 3);
+        let obj = Objective::Ridge { lambda: 0.1 };
+        let c = SolverConfig::new(obj).with_tol(1e-10).with_max_epochs(2000);
+        let out = train_sequential(&ds, &c);
+        let w = out.weights(&obj);
+        // gradient of primal at w* must vanish:
+        // (1/n)Σ(xᵀw−y)x + λw = 0
+        let n = ds.n();
+        let mut grad = vec![0.0; 3];
+        for j in 0..n {
+            let r = ds.x.dot_col(j, &w) - ds.y[j];
+            ds.x.axpy_col(j, r / n as f64, &mut grad);
+        }
+        for (g, wi) in grad.iter_mut().zip(&w) {
+            *g += 0.1 * wi;
+        }
+        let gnorm = crate::util::norm_sq(&grad).sqrt();
+        assert!(gnorm < 1e-4, "stationarity violated: |grad|={gnorm}");
+    }
+
+    #[test]
+    fn hinge_converges() {
+        let ds = synthetic::dense_classification(300, 10, 4);
+        let obj = Objective::Hinge { lambda: 1.0 / 300.0 };
+        let out = train_sequential(&ds, &SolverConfig::new(obj).with_tol(1e-6).with_max_epochs(500));
+        assert!(out.final_gap < 1e-2, "gap={}", out.final_gap);
+        let idx: Vec<usize> = (0..300).collect();
+        let acc = crate::glm::accuracy(&ds, &out.weights(&obj), &idx);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn bucketed_and_unbucketed_reach_same_solution() {
+        let ds = synthetic::dense_classification(600, 15, 5);
+        let obj = Objective::Logistic { lambda: 1e-3 };
+        let base = SolverConfig::new(obj).with_tol(1e-8).with_max_epochs(500);
+        let a = train_sequential(&ds, &base.clone().with_bucket(BucketPolicy::Off));
+        let b = train_sequential(&ds, &base.with_bucket(BucketPolicy::Fixed(8)));
+        let wa = a.weights(&obj);
+        let wb = b.weights(&obj);
+        let dist = crate::util::rel_change(&wa, &wb);
+        assert!(dist < 1e-3, "solutions differ: {dist}");
+    }
+
+    #[test]
+    fn v_consistency_after_training() {
+        let ds = synthetic::sparse_classification(200, 50, 0.1, 6);
+        let out = train_sequential(&ds, &cfg(0.01));
+        assert!(out.state.v_drift(&ds) < 1e-8);
+    }
+
+    #[test]
+    fn respects_max_epochs() {
+        let ds = synthetic::dense_classification(100, 10, 7);
+        let c = cfg(1e-4).with_max_epochs(3).with_tol(1e-15);
+        let out = train_sequential(&ds, &c);
+        assert_eq!(out.epochs_run, 3);
+        assert!(!out.converged);
+    }
+
+    #[test]
+    fn gap_stop_triggers() {
+        let ds = synthetic::dense_classification(200, 10, 8);
+        let mut c = cfg(1.0 / 200.0).with_tol(1e-30); // never trips rel-change
+        c.gap_tol = Some(1e-3);
+        c.gap_check_every = 1;
+        c.max_epochs = 500;
+        let out = train_sequential(&ds, &c);
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3);
+    }
+}

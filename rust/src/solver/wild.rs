@@ -1,0 +1,165 @@
+//! Algorithm 1 — the "wild" asynchronous multi-threaded SDCA baseline.
+//!
+//! Every epoch the shuffled coordinates are divided among the threads; each
+//! thread reads the *single shared* vector `v` and writes its rank-1
+//! updates back without any synchronization ("opportunistically, in a wild
+//! fashion"). No two threads touch the same `α_j`, but `v` is racy: reads
+//! are stale, and concurrent read-modify-writes can lose updates. That is
+//! the behaviour whose convergence/efficiency collapse on dense data and
+//! multiple NUMA nodes motivates the whole paper (§2, Fig. 1).
+//!
+//! Implementation notes: the race is expressed through [`AtomicF64`] with
+//! relaxed separate load/store (defined behaviour, same lost-update
+//! semantics). Physical thread counts above the host's cores timeslice;
+//! convergence-vs-thread-count studies on this 1-core box use the
+//! deterministic lockstep engine in [`crate::vthread`] instead.
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::ModelState;
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::{ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+use crate::util::{Rng, Timer};
+
+pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
+    let n = ds.n();
+    let t_threads = cfg.threads.max(1);
+    let obj = cfg.obj;
+    let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+
+    let alpha: Vec<AtomicF64> = atomic_vec(n);
+    let v: Vec<AtomicF64> = atomic_vec(ds.d());
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    let mut diverged = false;
+    for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        // Sequential shuffle — deliberately so; its serial cost is one of
+        // the scalability bottlenecks the paper measures (Fig. 2a).
+        rng.shuffle(&mut perm);
+        let chunk = n.div_ceil(t_threads);
+        std::thread::scope(|s| {
+            for tid in 0..t_threads {
+                let lo = tid * chunk;
+                let hi = ((tid + 1) * chunk).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                let my = &perm[lo..hi];
+                let alpha = &alpha;
+                let v = &v;
+                let ds = &ds;
+                let obj = &obj;
+                s.spawn(move || {
+                    for &jj in my {
+                        let j = jj as usize;
+                        // READ current (possibly stale/racing) state
+                        let a = alpha[j].load();
+                        let xw = ds.x.dot_col_atomic(j, v) * inv_lambda_n;
+                        let delta = obj.delta(a, xw, ds.norm_sq(j), ds.y[j], n);
+                        if delta != 0.0 {
+                            // WRITE α_j (exclusive), ADD to v (wild)
+                            alpha[j].store(a + delta);
+                            ds.x.axpy_col_wild(j, delta, v);
+                        }
+                    }
+                });
+            }
+        });
+        let a_snap = snapshot(&alpha);
+        let rel = mon.observe(&a_snap);
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap: None,
+            primal: None,
+        });
+        if mon.diverged(&a_snap) {
+            diverged = true;
+            break;
+        }
+        if mon.converged() {
+            converged = true;
+            break;
+        }
+    }
+
+    // The returned model is w(α): rebuild v exactly from α — the racy
+    // in-training v may have drifted (lost updates), which is precisely why
+    // wild can settle on an incorrect solution.
+    let mut st = ModelState {
+        alpha: snapshot(&alpha),
+        v: vec![0.0; ds.d()],
+    };
+    st.rebuild_v(ds);
+    let record = RunRecord {
+        solver: "wild".into(),
+        threads: t_threads,
+        epochs,
+        converged,
+        diverged,
+        total_wall_s: total.elapsed_s(),
+    };
+    TrainOutput::assemble(ds, &obj, st, record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::Objective;
+    use crate::data::synthetic;
+    use crate::solver::Variant;
+
+    fn cfg(lambda: f64, threads: usize) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic { lambda })
+            .with_variant(Variant::Wild)
+            .with_threads(threads)
+            .with_tol(1e-5)
+            .with_max_epochs(300)
+    }
+
+    #[test]
+    fn single_thread_matches_sequential_quality() {
+        let ds = synthetic::dense_classification(400, 20, 1);
+        let out = train_wild(&ds, &cfg(1.0 / 400.0, 1));
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn two_threads_converge_sparse() {
+        // sparse + low thread count: the regime where wild works (Fig 1b)
+        let ds = synthetic::sparse_classification(600, 200, 0.02, 2);
+        let out = train_wild(&ds, &cfg(1.0 / 600.0, 2));
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-2, "gap={}", out.final_gap);
+        assert!(!out.record.diverged);
+    }
+
+    #[test]
+    fn returned_v_is_consistent_with_alpha() {
+        let ds = synthetic::dense_classification(200, 10, 3);
+        let out = train_wild(&ds, &cfg(0.01, 2));
+        assert!(out.state.v_drift(&ds) < 1e-9);
+    }
+
+    #[test]
+    fn dual_domain_preserved() {
+        // α updates are exclusive per coordinate, so even wild runs keep
+        // y·α ∈ [0,1] for logistic
+        let ds = synthetic::dense_classification(300, 10, 4);
+        let out = train_wild(&ds, &cfg(1e-3, 4));
+        let viol = ConvergenceMonitor::domain_violation(
+            &Objective::Logistic { lambda: 1e-3 },
+            &out.state.alpha,
+            &ds.y,
+        );
+        assert_eq!(viol, 0.0);
+    }
+}

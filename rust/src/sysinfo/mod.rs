@@ -1,0 +1,294 @@
+//! System discovery — the runtime knobs the paper reads from the OS:
+//!
+//! * cache-line size (`sysfs coherency_line_size`) → bucket size,
+//! * last-level-cache size → the "does the model vector fit in LLC?"
+//!   heuristic that gates the bucket optimization,
+//! * NUMA topology (`/sys/devices/system/node/*`) → the hierarchical
+//!   solver's node/thread placement (the paper uses libnuma + `move_pages`;
+//!   we read the same sysfs the library reads).
+//!
+//! Every probe has a deterministic fallback, and [`Topology`] is a plain
+//! value type so tests and the cost model can inject the paper's testbeds
+//! (4-node Xeon, 2-node POWER9) regardless of the host.
+
+use std::fs;
+use std::path::Path;
+
+/// Cache-line size in bytes (fallback: 64).
+pub fn cache_line_size() -> usize {
+    read_usize(Path::new(
+        "/sys/devices/system/cpu/cpu0/cache/index0/coherency_line_size",
+    ))
+    .unwrap_or(64)
+}
+
+/// Last-level cache size in bytes. Scans `cpu0/cache/index*` for the
+/// highest level unified/data cache (fallback: 16 MiB).
+pub fn llc_size() -> usize {
+    let base = Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut best: Option<(usize, usize)> = None; // (level, bytes)
+    if let Ok(entries) = fs::read_dir(base) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if !p
+                .file_name()
+                .map(|f| f.to_string_lossy().starts_with("index"))
+                .unwrap_or(false)
+            {
+                continue;
+            }
+            let ty = fs::read_to_string(p.join("type")).unwrap_or_default();
+            let ty = ty.trim();
+            if ty != "Unified" && ty != "Data" {
+                continue;
+            }
+            let level = read_usize(&p.join("level")).unwrap_or(0);
+            let size = read_size_kb(&p.join("size")).unwrap_or(0);
+            if size > 0 && best.map(|(l, _)| level > l).unwrap_or(true) {
+                best = Some((level, size));
+            }
+        }
+    }
+    best.map(|(_, s)| s).unwrap_or(16 * 1024 * 1024)
+}
+
+fn read_usize(p: &Path) -> Option<usize> {
+    fs::read_to_string(p).ok()?.trim().parse().ok()
+}
+
+/// Parse "20480K"-style sysfs cache sizes into bytes.
+fn read_size_kb(p: &Path) -> Option<usize> {
+    let s = fs::read_to_string(p).ok()?;
+    parse_size(s.trim())
+}
+
+fn parse_size(s: &str) -> Option<usize> {
+    if let Some(v) = s.strip_suffix(['K', 'k']) {
+        Some(v.trim().parse::<usize>().ok()? * 1024)
+    } else if let Some(v) = s.strip_suffix(['M', 'm']) {
+        Some(v.trim().parse::<usize>().ok()? * 1024 * 1024)
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// A machine's NUMA shape as the solvers see it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// `cores[k]` = number of physical cores on node `k`.
+    pub cores_per_node: Vec<usize>,
+    /// NUMA node holding the training dataset (paper: found via
+    /// `move_pages`; we default to 0 and let callers override).
+    pub data_node: usize,
+}
+
+impl Topology {
+    pub fn num_nodes(&self) -> usize {
+        self.cores_per_node.len()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_node.iter().sum()
+    }
+
+    /// Single-node topology with `c` cores.
+    pub fn flat(c: usize) -> Self {
+        Topology {
+            cores_per_node: vec![c],
+            data_node: 0,
+        }
+    }
+
+    /// Uniform multi-node topology.
+    pub fn uniform(nodes: usize, cores_each: usize) -> Self {
+        Topology {
+            cores_per_node: vec![cores_each; nodes],
+            data_node: 0,
+        }
+    }
+
+    /// Discover the host topology from sysfs (fallback: one node with all
+    /// available cores).
+    pub fn detect() -> Self {
+        let node_dir = Path::new("/sys/devices/system/node");
+        let mut cores_per_node = Vec::new();
+        if let Ok(entries) = fs::read_dir(node_dir) {
+            let mut nodes: Vec<usize> = entries
+                .flatten()
+                .filter_map(|e| {
+                    let name = e.file_name().to_string_lossy().into_owned();
+                    name.strip_prefix("node")?.parse::<usize>().ok()
+                })
+                .collect();
+            nodes.sort_unstable();
+            for k in nodes {
+                let cpulist = node_dir.join(format!("node{k}/cpulist"));
+                if let Ok(s) = fs::read_to_string(&cpulist) {
+                    cores_per_node.push(parse_cpulist(s.trim()).len());
+                }
+            }
+        }
+        if cores_per_node.is_empty() || cores_per_node.iter().sum::<usize>() == 0 {
+            let c = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1);
+            return Topology::flat(c);
+        }
+        Topology {
+            cores_per_node,
+            data_node: 0,
+        }
+    }
+
+    /// The paper's thread-placement policy (§3 "Numa-level optimizations"):
+    /// spread `threads` over the *minimum* number of nodes that can hold
+    /// them w.r.t. physical cores, always including the node where the
+    /// dataset lives. Returns `threads_per_node` (0 for unused nodes).
+    pub fn place_threads(&self, threads: usize) -> Vec<usize> {
+        let mut placement = vec![0usize; self.num_nodes()];
+        if threads == 0 {
+            return placement;
+        }
+        // order nodes: data node first, then by core count descending
+        let mut order: Vec<usize> = (0..self.num_nodes()).collect();
+        order.sort_by_key(|&k| {
+            (
+                if k == self.data_node { 0 } else { 1 },
+                usize::MAX - self.cores_per_node[k],
+            )
+        });
+        // pick the minimal prefix of nodes whose cores cover the request
+        let mut chosen = Vec::new();
+        let mut capacity = 0;
+        for &k in &order {
+            chosen.push(k);
+            capacity += self.cores_per_node[k];
+            if capacity >= threads {
+                break;
+            }
+        }
+        // distribute evenly over the chosen nodes (proportional to cores,
+        // never exceeding a node's physical core count when avoidable)
+        let mut left = threads;
+        let chosen_n = chosen.len();
+        for (i, &k) in chosen.iter().enumerate() {
+            let nodes_left = chosen_n - i;
+            let share = left.div_ceil(nodes_left).min(self.cores_per_node[k].max(1));
+            let share = if capacity >= threads {
+                share
+            } else {
+                // oversubscribed request: spill proportionally
+                left.div_ceil(nodes_left)
+            };
+            placement[k] = share.min(left);
+            left -= placement[k];
+        }
+        // any residue (oversubscription) piles onto the data node
+        placement[self.data_node] += left;
+        placement
+    }
+}
+
+/// Parse a sysfs cpulist like `0-3,8,10-11` into CPU ids.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.parse::<usize>(), b.parse::<usize>()) {
+                out.extend(a..=b);
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_line_reasonable() {
+        let c = cache_line_size();
+        assert!(c == 32 || c == 64 || c == 128 || c == 256, "line={c}");
+    }
+
+    #[test]
+    fn llc_reasonable() {
+        let s = llc_size();
+        assert!(s >= 256 * 1024, "llc={s}");
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("64"), Some(64));
+        assert_eq!(parse_size("20480K"), Some(20480 * 1024));
+        assert_eq!(parse_size("16M"), Some(16 * 1024 * 1024));
+        assert_eq!(parse_size("junk"), None);
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4-5"), vec![0, 2, 4, 5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn detect_has_cores() {
+        let t = Topology::detect();
+        assert!(t.total_cores() >= 1);
+        assert!(t.num_nodes() >= 1);
+    }
+
+    #[test]
+    fn placement_single_node_fits() {
+        // 4-node Xeon, 8 cores each; 4 threads fit on the data node
+        let t = Topology::uniform(4, 8);
+        let p = t.place_threads(4);
+        assert_eq!(p, vec![4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn placement_spills_to_min_nodes() {
+        let t = Topology::uniform(4, 8);
+        let p = t.place_threads(16);
+        assert_eq!(p.iter().sum::<usize>(), 16);
+        assert_eq!(p.iter().filter(|&&x| x > 0).count(), 2, "{p:?}");
+        assert!(p[0] > 0, "data node must be used: {p:?}");
+    }
+
+    #[test]
+    fn placement_includes_data_node() {
+        let mut t = Topology::uniform(4, 8);
+        t.data_node = 2;
+        let p = t.place_threads(8);
+        assert_eq!(p.iter().sum::<usize>(), 8);
+        assert!(p[2] > 0, "{p:?}");
+    }
+
+    #[test]
+    fn placement_all_cores() {
+        let t = Topology::uniform(2, 20); // POWER9
+        let p = t.place_threads(40);
+        assert_eq!(p, vec![20, 20]);
+    }
+
+    #[test]
+    fn placement_oversubscribed() {
+        let t = Topology::uniform(2, 4);
+        let p = t.place_threads(12);
+        assert_eq!(p.iter().sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn placement_zero() {
+        let t = Topology::uniform(2, 4);
+        assert_eq!(t.place_threads(0), vec![0, 0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! `AtomicF64` — f64 over `AtomicU64` bit-casts.
+//!
+//! The "wild" solver (Algorithm 1) updates the shared vector with plain
+//! unsynchronized read-modify-writes. In rust a genuine data race is UB, so
+//! we express the same *semantics* with relaxed atomics:
+//!
+//! * [`AtomicF64::add_wild`] — `store(load() + x)` as two independent
+//!   relaxed operations. Concurrent `add_wild`s can lose updates exactly
+//!   like the paper's unsynchronized `ADD(v_i, δ·A_ij)` — this is the
+//!   faithful "wild" primitive, with defined behaviour.
+//! * [`AtomicF64::fetch_add`] — CAS loop, never loses updates; used as the
+//!   "locked/atomic" comparison point in ablations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Unsynchronized read-modify-write: concurrent callers may lose
+    /// updates (the paper's "opportunistic, wild" shared-vector update).
+    #[inline]
+    pub fn add_wild(&self, x: f64) {
+        self.store(self.load() + x);
+    }
+
+    /// Lock-free exact accumulate (CAS loop).
+    #[inline]
+    pub fn fetch_add(&self, x: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + x).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// Allocate a zeroed atomic vector.
+pub fn atomic_vec(n: usize) -> Vec<AtomicF64> {
+    (0..n).map(|_| AtomicF64::new(0.0)).collect()
+}
+
+/// Snapshot an atomic vector into plain f64s.
+pub fn snapshot(v: &[AtomicF64]) -> Vec<f64> {
+    v.iter().map(|x| x.load()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(-2.25);
+        assert_eq!(a.load(), -2.25);
+    }
+
+    #[test]
+    fn adds() {
+        let a = AtomicF64::new(1.0);
+        a.add_wild(2.0);
+        a.fetch_add(3.0);
+        assert_eq!(a.load(), 6.0);
+    }
+
+    #[test]
+    fn fetch_add_exact_under_contention() {
+        let a = AtomicF64::new(0.0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        a.fetch_add(1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(), 4000.0);
+    }
+
+    #[test]
+    fn snapshot_copies() {
+        let v = atomic_vec(3);
+        v[1].store(7.0);
+        assert_eq!(snapshot(&v), vec![0.0, 7.0, 0.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Small dense linear algebra for the IRLSM baseline: symmetric
+//! positive-definite solves via Cholesky (the normal-equations step of
+//! iteratively reweighted least squares).
+
+use anyhow::{bail, Result};
+
+/// Dense symmetric matrix stored row-major (`d × d`).
+pub struct SymMatrix {
+    pub d: usize,
+    pub a: Vec<f64>,
+}
+
+impl SymMatrix {
+    pub fn zeros(d: usize) -> Self {
+        SymMatrix {
+            d,
+            a: vec![0.0; d * d],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.d + j] += v;
+    }
+
+    /// Rank-1 update `A += c · x xᵀ` (both triangles).
+    pub fn rank1(&mut self, c: f64, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        for i in 0..self.d {
+            let cxi = c * x[i];
+            if cxi == 0.0 {
+                continue;
+            }
+            let row = &mut self.a[i * self.d..(i + 1) * self.d];
+            for (aij, &xj) in row.iter_mut().zip(x.iter()) {
+                *aij += cxi * xj;
+            }
+        }
+    }
+
+    /// Add `c` to the diagonal (ridge term).
+    pub fn add_diag(&mut self, c: f64) {
+        for i in 0..self.d {
+            self.a[i * self.d + i] += c;
+        }
+    }
+
+    /// In-place Cholesky factorization `A = L Lᵀ` (lower triangle).
+    /// Fails when the matrix is not (numerically) positive definite.
+    pub fn cholesky(&mut self) -> Result<()> {
+        let d = self.d;
+        for j in 0..d {
+            let mut diag = self.at(j, j);
+            for k in 0..j {
+                let ljk = self.at(j, k);
+                diag -= ljk * ljk;
+            }
+            if diag <= 0.0 || !diag.is_finite() {
+                bail!("matrix not positive definite at pivot {j} ({diag})");
+            }
+            let ljj = diag.sqrt();
+            self.a[j * d + j] = ljj;
+            for i in (j + 1)..d {
+                let mut s = self.at(i, j);
+                for k in 0..j {
+                    s -= self.at(i, k) * self.at(j, k);
+                }
+                self.a[i * d + j] = s / ljj;
+            }
+        }
+        // zero the (stale) upper triangle for cleanliness
+        for i in 0..d {
+            for j in (i + 1)..d {
+                self.a[i * d + j] = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Solve `A x = b` given the Cholesky factor computed by
+    /// [`Self::cholesky`] (forward then backward substitution).
+    pub fn solve_cholesky(&self, b: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        debug_assert_eq!(b.len(), d);
+        // L y = b
+        let mut y = vec![0.0; d];
+        for i in 0..d {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.at(i, k) * y[k];
+            }
+            y[i] = s / self.at(i, i);
+        }
+        // Lᵀ x = y
+        let mut x = vec![0.0; d];
+        for i in (0..d).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..d {
+                s -= self.at(k, i) * x[k];
+            }
+            x[i] = s / self.at(i, i);
+        }
+        x
+    }
+}
+
+/// Convenience: solve the SPD system `A x = b`, consuming `A`.
+pub fn spd_solve(mut a: SymMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    a.cholesky()?;
+    Ok(a.solve_cholesky(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let mut a = SymMatrix::zeros(3);
+        a.add_diag(1.0);
+        let x = spd_solve(a, &[1.0, 2.0, 3.0]).unwrap();
+        for (xi, want) in x.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((xi - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solves_random_spd() {
+        // A = B Bᵀ + I is SPD; check residual ‖Ax − b‖
+        let d = 8;
+        let mut rng = crate::util::Rng::new(3);
+        let mut a = SymMatrix::zeros(d);
+        for _ in 0..d {
+            let col: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+            a.rank1(1.0, &col);
+        }
+        a.add_diag(1.0);
+        let a_copy = a.a.clone();
+        let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let x = spd_solve(a, &b).unwrap();
+        for i in 0..d {
+            let mut ax = 0.0;
+            for j in 0..d {
+                ax += a_copy[i * d + j] * x[j];
+            }
+            assert!((ax - b[i]).abs() < 1e-9, "row {i}: {ax} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = SymMatrix::zeros(2);
+        a.add_at(0, 0, 1.0);
+        a.add_at(1, 1, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn rank1_symmetry() {
+        let mut a = SymMatrix::zeros(3);
+        a.rank1(2.0, &[1.0, 2.0, 0.5]);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(a.at(i, j), a.at(j, i));
+            }
+        }
+        assert!((a.at(0, 1) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,111 @@
+//! Small shared utilities: a fast deterministic PRNG, shuffling, timing and
+//! numeric helpers used across the solvers, benches and tests.
+//!
+//! Everything here is dependency-free and deterministic so that every
+//! experiment in `EXPERIMENTS.md` is exactly reproducible from a seed.
+
+pub mod atomic;
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use atomic::AtomicF64;
+pub use rng::Rng;
+pub use stats::{geomean, mean, percentile, stddev};
+pub use timer::Timer;
+
+/// Dot product of two equal-length slices.
+///
+/// Written as four independent accumulator chains so LLVM can vectorize and
+/// keep the FMA pipeline full — this is the innermost hot loop of the dense
+/// SDCA coordinate update (see `solver::seq`).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x` (axpy), the shared-vector update of the SDCA step.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Relative L2 change `‖a − b‖ / max(‖a‖, eps)` — the paper's convergence
+/// criterion ("relative change in the learned model from one epoch to the
+/// next").
+pub fn rel_change(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        num += (x - y) * (x - y);
+        den += x * x;
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..131).map(|i| (i as f64) * 0.5 - 3.0).collect();
+        let b: Vec<f64> = (0..131).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_handles_short_and_empty() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn rel_change_zero_for_identical() {
+        let a = [1.0, -2.0, 3.0];
+        assert_eq!(rel_change(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_change_scales() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 0.0];
+        assert!((rel_change(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,73 @@
+//! Wall-clock timing with named sections, used by the metrics layer and the
+//! bench harness (we avoid external bench crates; the offline toolchain only
+//! carries the `xla` closure).
+
+use std::time::Instant;
+
+/// A simple monotonic stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since `start()`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds since `start()`.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Run `f` repeatedly: `warmup` throwaway iterations, then `iters` timed
+/// ones; returns per-iteration seconds. The measurement loop consumes the
+/// return value through `std::hint::black_box` so the work is not dead-code
+/// eliminated.
+pub fn bench_fn<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        samples.push(t.elapsed_s());
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn bench_fn_counts() {
+        let samples = bench_fn(2, 5, || 1 + 1);
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+}

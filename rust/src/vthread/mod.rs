@@ -1,0 +1,344 @@
+//! Virtual-thread execution engine.
+//!
+//! This host may have fewer cores than the paper's testbeds (up to 32), but
+//! *epochs-to-converge* — the algorithmic half of every figure — depends
+//! only on update semantics and interleaving, not on physical parallelism.
+//! This module executes `T` logical threads deterministically on one core:
+//!
+//! * **Replica solvers** (`dom`, `numa`): workers are independent between
+//!   merge barriers, so the sequential executor in [`crate::solver::exec`]
+//!   already reproduces the threaded run bit-for-bit; the wrappers here
+//!   just select it.
+//! * **Wild solver**: racy by construction, so we model it with a lockstep
+//!   round schedule: in each round every live vthread computes its update
+//!   from the round-start shared vector (concurrent stale reads), then the
+//!   writes are applied subject to a *lost-update* model — when several
+//!   vthreads RMW the same `v` element in one round, each non-final
+//!   writer's delta survives only with probability `1 − p`, where `p` is
+//!   the pairwise collision probability of unsynchronized RMWs
+//!   (machine-dependent: larger across NUMA nodes, see
+//!   [`WildSimParams`]). Sparse data rarely collides (Fig. 1b); dense data
+//!   collides on every element (Fig. 1a).
+
+use crate::data::{DataMatrix, Dataset};
+use crate::glm::ModelState;
+use crate::metrics::{EpochStats, RunRecord};
+use crate::solver::exec::Executor;
+use crate::solver::{ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::sysinfo::Topology;
+use crate::util::{Rng, Timer};
+
+/// Collision model for simulated wild execution.
+#[derive(Clone, Debug)]
+pub struct WildSimParams {
+    /// Probability that two unsynchronized RMWs of the same element by
+    /// threads on the *same* NUMA node interleave (lost update).
+    pub p_collide_local: f64,
+    /// Same, for threads on *different* NUMA nodes — far larger because the
+    /// RMW window stretches over a cross-node cache-line transfer.
+    pub p_collide_remote: f64,
+    /// Topology used to decide which vthread pairs are remote.
+    pub topology: Topology,
+}
+
+impl WildSimParams {
+    /// Single-node machine defaults: MESI ownership serializes same-node
+    /// RMWs, so element-level losses are effectively zero — wild on one
+    /// node suffers only stale reads (the Fig. 1b "works fine" regime).
+    pub fn single_node(threads: usize) -> Self {
+        WildSimParams {
+            p_collide_local: 0.0,
+            p_collide_remote: 0.0,
+            topology: Topology::flat(threads),
+        }
+    }
+
+    /// Multi-node machine: unsynchronized RMWs straddling a cross-node
+    /// line transfer can lose updates (the Fig. 1a failure regime).
+    pub fn multi_node(topology: Topology) -> Self {
+        WildSimParams {
+            p_collide_local: 0.0,
+            p_collide_remote: 0.06,
+            topology,
+        }
+    }
+
+    /// Node id of vthread `t` under this topology's thread placement.
+    fn node_of(&self, placement: &[usize], t: usize) -> usize {
+        let mut acc = 0;
+        for (k, &p) in placement.iter().enumerate() {
+            acc += p;
+            if t < acc {
+                return k;
+            }
+        }
+        placement.len().saturating_sub(1)
+    }
+}
+
+/// Simulate Algorithm 1 ("wild") with `cfg.threads` logical threads.
+///
+/// Epoch counts and the converged/diverged verdicts are the reproduction
+/// targets; wall-clock comes from `simcost`, not from this function.
+pub fn train_wild_sim<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &SolverConfig,
+    params: &WildSimParams,
+) -> TrainOutput {
+    let n = ds.n();
+    let d = ds.d();
+    let t_threads = cfg.threads.max(1);
+    let obj = cfg.obj;
+    let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+    let placement = params.topology.place_threads(t_threads);
+
+    let mut alpha = vec![0.0f64; n];
+    let mut v = vec![0.0f64; d];
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut coin = Rng::new(cfg.seed ^ 0x5eed_c011_1de5);
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+
+    // scratch: per-round writer bookkeeping over v elements
+    let mut last_writer: Vec<u32> = vec![u32::MAX; d];
+    let mut round_stamp: Vec<u32> = vec![u32::MAX; d];
+    let mut stamp: u32 = 0;
+
+    let total = Timer::start();
+    let mut epochs = Vec::new();
+    let mut converged = false;
+    let mut diverged = false;
+    'outer: for epoch in 1..=cfg.max_epochs {
+        let t = Timer::start();
+        rng.shuffle(&mut perm);
+        let chunk = n.div_ceil(t_threads);
+        let rounds = chunk;
+        // deltas computed this round: (thread, coordinate j, δ)
+        let mut round_updates: Vec<(usize, usize, f64)> = Vec::with_capacity(t_threads);
+        for r in 0..rounds {
+            round_updates.clear();
+            // 1) concurrent reads: every vthread computes its δ from the
+            //    round-start state of v
+            for tid in 0..t_threads {
+                let idx = tid * chunk + r;
+                if idx >= ((tid + 1) * chunk).min(n) {
+                    continue;
+                }
+                let j = perm[idx] as usize;
+                let xw = ds.x.dot_col(j, &v) * inv_lambda_n;
+                let delta = obj.delta(alpha[j], xw, ds.norm_sq(j), ds.y[j], n);
+                if delta != 0.0 {
+                    round_updates.push((tid, j, delta));
+                }
+            }
+            // 2) writes: α is exclusive; v suffers lost updates on
+            //    same-element same-round RMWs. We sweep writers in thread
+            //    order; a non-final writer loses its contribution to an
+            //    element with probability p(pair) against the *next* writer
+            //    of that element (last writer always survives).
+            stamp = stamp.wrapping_add(1);
+            if round_updates.len() == 1 {
+                let (_, j, delta) = round_updates[0];
+                alpha[j] += delta;
+                ds.x.axpy_col(j, delta, &mut v);
+            } else {
+                // mark, per element, which thread writes it last this round
+                for &(tid, j, _) in &round_updates {
+                    mark_last_writer(ds, j, tid as u32, stamp, &mut last_writer, &mut round_stamp);
+                }
+                for &(tid, j, delta) in &round_updates {
+                    alpha[j] += delta;
+                    apply_wild_axpy(
+                        ds,
+                        j,
+                        delta,
+                        tid as u32,
+                        stamp,
+                        &last_writer,
+                        &round_stamp,
+                        params,
+                        &placement,
+                        &mut coin,
+                        &mut v,
+                    );
+                }
+            }
+        }
+        let rel = mon.observe(&alpha);
+        epochs.push(EpochStats {
+            epoch,
+            wall_s: t.elapsed_s(),
+            rel_change: rel,
+            gap: None,
+            primal: None,
+        });
+        if mon.diverged(&alpha) {
+            diverged = true;
+            break 'outer;
+        }
+        if mon.converged() {
+            converged = true;
+            break 'outer;
+        }
+    }
+
+    let mut st = ModelState { alpha, v };
+    st.rebuild_v(ds); // the usable model is w(α), as in the real wild solver
+    let record = RunRecord {
+        solver: format!("wild-sim(T={t_threads})"),
+        threads: t_threads,
+        epochs,
+        converged,
+        diverged,
+        total_wall_s: total.elapsed_s(),
+    };
+    TrainOutput::assemble(ds, &obj, st, record)
+}
+
+/// Record `tid` as (currently) the last writer of every element of col `j`.
+fn mark_last_writer<M: DataMatrix>(
+    ds: &Dataset<M>,
+    j: usize,
+    tid: u32,
+    stamp: u32,
+    last_writer: &mut [u32],
+    round_stamp: &mut [u32],
+) {
+    ds.x.for_each_col_index(j, |i| {
+        last_writer[i] = tid; // sweep order = thread order ⇒ final value is last writer
+        round_stamp[i] = stamp;
+    });
+}
+
+/// Apply `v += δ·x_j` for vthread `tid`, dropping per-element contributions
+/// that lose a same-round RMW race.
+#[allow(clippy::too_many_arguments)]
+fn apply_wild_axpy<M: DataMatrix>(
+    ds: &Dataset<M>,
+    j: usize,
+    delta: f64,
+    tid: u32,
+    stamp: u32,
+    last_writer: &[u32],
+    round_stamp: &[u32],
+    params: &WildSimParams,
+    placement: &[usize],
+    coin: &mut Rng,
+    v: &mut [f64],
+) {
+    let my_node = params.node_of(placement, tid as usize);
+    ds.x.for_each_col_entry(j, |i, x| {
+        debug_assert_eq!(round_stamp[i], stamp);
+        let last = last_writer[i];
+        if last != tid {
+            // someone writes this element after us this round — we may lose
+            let their_node = params.node_of(placement, last as usize);
+            let p = if their_node == my_node {
+                params.p_collide_local
+            } else {
+                params.p_collide_remote
+            };
+            if coin.next_f64() < p {
+                return; // our RMW was overwritten: delta lost
+            }
+        }
+        v[i] += delta * x;
+    });
+}
+
+/// Convergence-faithful simulated runs of the replica solvers: identical
+/// model trajectory to real threads (see `solver::exec`), any `T`.
+pub fn train_domesticated_sim<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
+    crate::solver::dom::train_domesticated_exec(ds, cfg, Executor::Sequential)
+}
+
+/// Simulated NUMA-hierarchical run (see [`train_domesticated_sim`]).
+pub fn train_numa_sim<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &SolverConfig,
+    topo: &Topology,
+) -> TrainOutput {
+    crate::solver::numa::train_numa_exec(ds, cfg, topo, Executor::Sequential)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::Objective;
+    use crate::data::synthetic;
+    use crate::solver::Variant;
+
+    fn cfg(lambda: f64, threads: usize) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic { lambda })
+            .with_variant(Variant::Wild)
+            .with_threads(threads)
+            .with_tol(1e-4)
+            .with_max_epochs(200)
+    }
+
+    #[test]
+    fn one_vthread_is_exact_sdca() {
+        let ds = synthetic::dense_classification(300, 10, 1);
+        let p = WildSimParams::single_node(1);
+        let out = train_wild_sim(&ds, &cfg(1.0 / 300.0, 1), &p);
+        assert!(out.converged);
+        assert!(out.final_gap < 1e-3, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn sparse_scales_in_epochs() {
+        // uniform sparse data: almost no collisions → epoch count barely
+        // grows with T (the Fig 1b premise)
+        let ds = synthetic::sparse_classification(1000, 500, 0.01, 2);
+        let p1 = WildSimParams::single_node(1);
+        let e1 = train_wild_sim(&ds, &cfg(1.0 / 1000.0, 1), &p1).epochs_run;
+        let p8 = WildSimParams::single_node(8);
+        let e8 = train_wild_sim(&ds, &cfg(1.0 / 1000.0, 8), &p8).epochs_run;
+        assert!(e8 <= e1 * 3, "sparse wild should not blow up: {e1} -> {e8}");
+    }
+
+    #[test]
+    fn dense_multinode_degrades() {
+        // dense data on a 4-node topology at high T: epochs blow up or the
+        // run fails to converge (the Fig 1a regime)
+        let ds = synthetic::dense_classification(800, 60, 3);
+        let c1 = cfg(1.0 / 800.0, 1);
+        let base = train_wild_sim(&ds, &c1, &WildSimParams::single_node(1));
+        assert!(base.converged);
+        let topo = Topology::uniform(4, 4);
+        let c16 = cfg(1.0 / 800.0, 16);
+        let hot = train_wild_sim(&ds, &c16, &WildSimParams::multi_node(topo));
+        let degraded = !hot.converged
+            || hot.record.diverged
+            || hot.epochs_run > base.epochs_run * 2
+            || hot.final_gap > base.final_gap * 10.0;
+        assert!(
+            degraded,
+            "expected wild degradation: base {} epochs (gap {:.1e}), 16T {} epochs (gap {:.1e})",
+            base.epochs_run, base.final_gap, hot.epochs_run, hot.final_gap
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synthetic::dense_classification(200, 10, 4);
+        let p = WildSimParams::single_node(4);
+        let a = train_wild_sim(&ds, &cfg(0.01, 4), &p);
+        let b = train_wild_sim(&ds, &cfg(0.01, 4), &p);
+        assert_eq!(a.state.alpha, b.state.alpha);
+        assert_eq!(a.epochs_run, b.epochs_run);
+    }
+
+    #[test]
+    fn sim_wrappers_converge() {
+        let ds = synthetic::dense_classification(300, 10, 5);
+        let c = SolverConfig::new(Objective::Logistic { lambda: 1e-3 })
+            .with_threads(8)
+            .with_tol(1e-5);
+        let out = train_domesticated_sim(&ds, &c);
+        assert!(out.converged);
+        let topo = Topology::uniform(4, 2);
+        let out2 = train_numa_sim(&ds, &c, &topo);
+        assert!(out2.converged);
+    }
+}

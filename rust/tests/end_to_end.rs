@@ -1,0 +1,187 @@
+//! End-to-end system tests: CLI-level flows, figure regeneration, loader
+//! round-trips and the full train→evaluate pipeline at small scale.
+
+use parlin::data::{loader, split_indices, synthetic, AnyDataset};
+use parlin::figures::{run_figure, DsKind, FigOpts};
+use parlin::glm::{accuracy, test_loss, Objective};
+use parlin::solver::{train, SolverConfig, Variant};
+use parlin::with_ds;
+
+/// Train on a split, evaluate held-out metrics — the basic user workflow.
+#[test]
+fn train_test_split_workflow() {
+    let ds = synthetic::dense_classification(2000, 30, 1);
+    let (train_idx, test_idx) = split_indices(ds.n(), 0.25, 2);
+    // train on the training half via a filtered copy
+    let cols: Vec<Vec<f64>> = train_idx.iter().map(|&j| ds.x.col(j).to_vec()).collect();
+    let col_refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+    let sub = parlin::data::Dataset::new(
+        parlin::data::DenseMatrix::from_columns(30, &col_refs),
+        train_idx.iter().map(|&j| ds.y[j]).collect(),
+    );
+    let obj = Objective::Logistic { lambda: 1.0 / sub.n() as f64 };
+    let out = train(&sub, &SolverConfig::new(obj).with_threads(2).with_tol(1e-5));
+    assert!(out.converged);
+    let w = out.weights(&obj);
+    let acc = accuracy(&ds, &w, &test_idx);
+    assert!(acc > 0.85, "held-out accuracy {acc}");
+    let tl = test_loss(&ds, &obj, &w, &test_idx);
+    assert!(tl < 0.45, "held-out loss {tl}");
+}
+
+/// Every dataset kind trains end-to-end through the Auto variant.
+#[test]
+fn every_dataset_kind_trains() {
+    for kind in [
+        DsKind::DenseSynth,
+        DsKind::SparseSynth,
+        DsKind::HiggsLike,
+        DsKind::EpsilonLike,
+        DsKind::CriteoLike,
+    ] {
+        let ds = kind.make(true, 3);
+        let cfg = SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / ds.n() as f64,
+        })
+        .with_threads(2)
+        .with_tol(1e-3)
+        .with_max_epochs(100);
+        let out = with_ds!(&ds, d => train(d, &cfg));
+        assert!(out.converged, "{} did not converge", kind.name());
+        assert!(out.final_gap.abs() < 1.0, "{} gap {}", kind.name(), out.final_gap);
+    }
+}
+
+/// LIBSVM round-trip: write → load → train.
+#[test]
+fn libsvm_load_and_train() {
+    let dir = std::env::temp_dir().join(format!("parlin_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("toy.libsvm");
+    let mut content = String::new();
+    let src = synthetic::sparse_classification(300, 50, 0.1, 4);
+    for j in 0..src.n() {
+        let (idx, val) = src.x.col(j);
+        content.push_str(if src.y[j] > 0.0 { "+1" } else { "-1" });
+        for (i, v) in idx.iter().zip(val) {
+            content.push_str(&format!(" {}:{}", i + 1, v));
+        }
+        content.push('\n');
+    }
+    std::fs::write(&path, content).unwrap();
+    let ds = loader::load_libsvm(&path, None).unwrap();
+    assert_eq!(ds.n(), 300);
+    let out = train(
+        &ds,
+        &SolverConfig::new(Objective::Logistic { lambda: 1.0 / 300.0 }).with_tol(1e-4),
+    );
+    assert!(out.converged);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Figure pipeline: `figures --all --quick` regenerates every CSV.
+#[test]
+fn all_figures_regenerate() {
+    let mut opts = FigOpts::quick();
+    opts.out_dir = std::env::temp_dir().join(format!("parlin_figs_{}", std::process::id()));
+    run_figure("all", &opts).unwrap();
+    for f in [
+        "fig1_wild_scaling.csv",
+        "fig2a_ablation.csv",
+        "fig2b_cocoa_partitions.csv",
+        "fig3_time_to_convergence.csv",
+        "fig4_strong_scaling.csv",
+        "fig5a_partitioning.csv",
+        "fig5b_buckets.csv",
+        "fig5c_numa.csv",
+        "fig6_solver_comparison.csv",
+    ] {
+        assert!(opts.out_dir.join(f).exists(), "missing {f}");
+        let content = std::fs::read_to_string(opts.out_dir.join(f)).unwrap();
+        assert!(content.lines().count() > 2, "{f} nearly empty");
+    }
+    std::fs::remove_dir_all(&opts.out_dir).ok();
+}
+
+/// Reproduction headline: the Fig-3 wild-vs-dom comparison must show the
+/// paper's qualitative result on the dense workload — domesticated at high
+/// thread counts converges while wild degrades or loses.
+#[test]
+fn headline_dom_beats_wild_at_scale() {
+    let machine = parlin::simcost::xeon4();
+    // full-size stand-in (40k × 100): the wild lost-update drift is a
+    // cumulative effect — at the quick scale it stays under the
+    // correctness threshold, exactly like the paper's effects grow with
+    // dataset size
+    let ds: AnyDataset = DsKind::DenseSynth.make(false, 5);
+    let wild32 = parlin::figures::run_wild(&ds, &machine, 32, 5, 1.0);
+    let dom32 = parlin::figures::run_snap(
+        &ds,
+        &machine,
+        32,
+        parlin::solver::Partitioning::Dynamic,
+        8,
+        5,
+        1.0,
+    );
+    assert!(dom32.converged, "domesticated must converge at 32T");
+    // quick-mode dataset is only ~6k examples, so 32 partitions sit at an
+    // extreme partition/data ratio — allow a generous CoCoA factor; at
+    // paper scale (100k examples) the ratio is ~2-3× (see Fig 2b harness)
+    let dom_degradation_free = dom32.epochs <= 8 * {
+        let seq = parlin::figures::run_snap(
+            &ds,
+            &machine,
+            1,
+            parlin::solver::Partitioning::Dynamic,
+            8,
+            5,
+            1.0,
+        );
+        seq.epochs
+    };
+    assert!(dom_degradation_free, "dom epochs blew up: {}", dom32.epochs);
+    // wild at 32T on dense must fail, diverge, blow up in epochs, or —
+    // the PASSCoDe failure mode the paper cites — settle on an incorrect
+    // solution (flagged by the duality-gap certificate)
+    let wild_hurt = !wild32.converged
+        || wild32.diverged
+        || !wild32.correct
+        || wild32.epochs > 2 * dom32.epochs;
+    assert!(
+        wild_hurt,
+        "expected wild to degrade at 32T on dense (wild {} ep, correct={}, dom {} ep)",
+        wild32.epochs, wild32.correct, dom32.epochs
+    );
+}
+
+/// The e2e example's assertion, in test form at reduced scale: full-stack
+/// train + HLO-artifact evaluation reach gap < 1e-3 (requires artifacts).
+#[test]
+fn reduced_e2e_with_artifacts() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = parlin::runtime::ArtifactRuntime::load(&dir).unwrap();
+    let ds = synthetic::dense_classification(3000, 100, 6);
+    let obj = Objective::Logistic { lambda: 1.0 / 3000.0 };
+    let cfg = SolverConfig::new(obj)
+        .with_variant(Variant::Domesticated)
+        .with_threads(4)
+        .with_tol(1e-5);
+    let out = train(&ds, &cfg);
+    assert!(out.final_gap < 1e-3, "gap {}", out.final_gap);
+    let idx: Vec<usize> = (0..ds.n()).collect();
+    let ev = parlin::runtime::TiledEvaluator::new(&rt, &ds, &idx).unwrap();
+    let w = out.weights(&obj);
+    let hlo = ev.eval(&w).unwrap();
+    let native = test_loss(&ds, &obj, &w, &idx);
+    assert!(
+        (hlo.mean_loss - native).abs() < 1e-3 * native.max(1.0),
+        "hlo {} vs native {}",
+        hlo.mean_loss,
+        native
+    );
+}

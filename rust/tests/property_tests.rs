@@ -1,0 +1,276 @@
+//! Property-based tests over randomized inputs (deterministic seeds; the
+//! offline toolchain carries no proptest, so generation uses the crate's
+//! own PRNG — failures print the seed for replay).
+
+use parlin::data::{synthetic, CscMatrix, DataMatrix, Dataset, DenseMatrix};
+use parlin::glm::Objective;
+use parlin::runtime::manifest::Json;
+use parlin::util::Rng;
+
+/// Build a dense matrix and its exact sparse representation.
+fn paired_matrices(rng: &mut Rng, d: usize, n: usize) -> (DenseMatrix, CscMatrix) {
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut examples: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut col = vec![0.0f64; d];
+        let mut ex = Vec::new();
+        for (i, slot) in col.iter_mut().enumerate() {
+            if rng.next_f64() < 0.4 {
+                let v = rng.next_gaussian();
+                *slot = v;
+                ex.push((i as u32, v));
+            }
+        }
+        cols.push(col);
+        examples.push(ex);
+    }
+    let col_refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+    (
+        DenseMatrix::from_columns(d, &col_refs),
+        CscMatrix::from_examples(d, &examples),
+    )
+}
+
+/// Dense and CSC representations of the same data agree on every
+/// DataMatrix operation.
+#[test]
+fn prop_dense_sparse_representation_equivalence() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let d = 3 + rng.next_below(20) as usize;
+        let n = 1 + rng.next_below(30) as usize;
+        let (dense, sparse) = paired_matrices(&mut rng, d, n);
+        let v: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        for j in 0..n {
+            assert!(
+                (dense.dot_col(j, &v) - sparse.dot_col(j, &v)).abs() < 1e-10,
+                "seed {seed}: dot mismatch at col {j}"
+            );
+            assert!(
+                (dense.norm_sq_col(j) - sparse.norm_sq_col(j)).abs() < 1e-10,
+                "seed {seed}: norm mismatch"
+            );
+            let mut a = vec![0.0; d];
+            let mut b = vec![0.0; d];
+            dense.axpy_col(j, 1.7, &mut a);
+            sparse.axpy_col(j, 1.7, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12, "seed {seed}: axpy mismatch");
+            }
+            let mut da = vec![0.0; d];
+            let mut db = vec![0.0; d];
+            dense.write_col_dense(j, &mut da);
+            sparse.write_col_dense(j, &mut db);
+            assert_eq!(da, db, "seed {seed}: densify mismatch");
+        }
+    }
+}
+
+/// Training on dense vs CSC representations of the *same data* yields the
+/// same model (the solver is layout-agnostic).
+#[test]
+fn prop_solver_layout_invariance() {
+    for seed in [3u64, 17, 99] {
+        let mut rng = Rng::new(seed);
+        let d = 5 + rng.next_below(10) as usize;
+        let n = 80 + rng.next_below(120) as usize;
+        let (dense, sparse) = paired_matrices(&mut rng, d, n);
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let obj = Objective::Logistic { lambda: 0.05 };
+        let cfg = parlin::solver::SolverConfig::new(obj)
+            .with_tol(1e-8)
+            .with_max_epochs(500)
+            .with_seed(seed);
+        let a = parlin::solver::seq::train_sequential(&Dataset::new(dense, y.clone()), &cfg);
+        let b = parlin::solver::seq::train_sequential(&Dataset::new(sparse, y), &cfg);
+        let dist = parlin::util::rel_change(&a.weights(&obj), &b.weights(&obj));
+        assert!(dist < 1e-6, "seed {seed}: layouts disagree by {dist}");
+    }
+}
+
+/// The 1-D dual solvers always return a domain-feasible, subproblem-
+/// optimal step (randomized version of the unit test, all objectives).
+#[test]
+fn prop_coordinate_step_feasible_and_optimal() {
+    let objs = [
+        Objective::Logistic { lambda: 0.08 },
+        Objective::Ridge { lambda: 0.08 },
+        Objective::Hinge { lambda: 0.08 },
+    ];
+    let mut rng = Rng::new(2024);
+    for trial in 0..400 {
+        let obj = objs[(trial % 3) as usize];
+        let y = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+        let s0 = rng.next_f64() * 0.98 + 0.01;
+        let alpha = match obj {
+            Objective::Ridge { .. } => rng.next_gaussian(),
+            _ => y * s0,
+        };
+        let xw = rng.next_gaussian() * 3.0;
+        let nsq = rng.next_f64() * 5.0 + 1e-3;
+        let n = 1 + rng.next_below(50) as usize;
+        let delta = obj.delta(alpha, xw, nsq, y, n);
+        assert!(delta.is_finite(), "trial {trial}: non-finite step");
+        let conj = obj.dual_conjugate(alpha + delta, y);
+        assert!(
+            conj.is_finite(),
+            "trial {trial} ({obj:?}): stepped out of the dual domain"
+        );
+    }
+}
+
+/// Gap certificates: for random feasible dual points, weak duality holds
+/// (P ≥ D) on random datasets — all objectives.
+#[test]
+fn prop_weak_duality() {
+    let mut rng = Rng::new(7);
+    for trial in 0..30 {
+        let n = 30 + rng.next_below(100) as usize;
+        let d = 3 + rng.next_below(15) as usize;
+        let ds = synthetic::dense_classification(n, d, 1000 + trial);
+        for obj in [
+            Objective::Logistic { lambda: 0.1 },
+            Objective::Hinge { lambda: 0.1 },
+            Objective::Ridge { lambda: 0.1 },
+        ] {
+            let mut st = parlin::glm::ModelState::zeros(n, d);
+            for j in 0..n {
+                st.alpha[j] = match obj {
+                    Objective::Ridge { .. } => rng.next_gaussian(),
+                    _ => ds.y[j] * rng.next_f64(),
+                };
+            }
+            st.rebuild_v(&ds);
+            let rep = parlin::glm::duality_gap(&ds, &obj, &st);
+            assert!(
+                rep.gap >= -1e-9,
+                "trial {trial} {obj:?}: weak duality violated ({})",
+                rep.gap
+            );
+        }
+    }
+}
+
+/// The JSON parser round-trips arbitrary manifest-shaped documents and
+/// never panics on mutated input.
+#[test]
+fn prop_json_parser_robustness() {
+    let mut rng = Rng::new(11);
+    let base = r#"{"a":{"inputs":[{"shape":[2,3],"dtype":"float32"}],"outputs":[{"shape":[1],"dtype":"float32"}]},"b":[1,2.5,-3e2,true,false,null,"s"]}"#;
+    assert!(Json::parse(base).is_ok());
+    for _ in 0..500 {
+        // random single-byte mutations must never panic (Err is fine)
+        let mut bytes = base.as_bytes().to_vec();
+        let pos = rng.next_below(bytes.len() as u64) as usize;
+        bytes[pos] = (rng.next_below(94) + 32) as u8;
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must not panic
+        }
+        // random truncations must never panic
+        let cut = rng.next_below(base.len() as u64) as usize;
+        let _ = Json::parse(&base[..cut]);
+    }
+}
+
+/// Bucket index spaces cover exactly, for arbitrary (n, size).
+#[test]
+fn prop_bucket_coverage() {
+    let mut rng = Rng::new(13);
+    for _ in 0..200 {
+        let n = 1 + rng.next_below(5000) as usize;
+        let size = 1 + rng.next_below(64) as usize;
+        let b = parlin::solver::Buckets::new(n, size);
+        let mut count = 0usize;
+        let mut last_end = 0usize;
+        for id in 0..b.count() {
+            let r = b.range(id);
+            assert_eq!(r.start, last_end, "gap before bucket {id}");
+            assert!(r.end <= n);
+            count += r.len();
+            last_end = r.end;
+        }
+        assert_eq!(count, n, "n={n} size={size}");
+        assert_eq!(last_end, n);
+    }
+}
+
+/// Thread placement is total, respects the data node, and uses the
+/// minimal node count, for arbitrary topologies.
+#[test]
+fn prop_thread_placement() {
+    let mut rng = Rng::new(17);
+    for _ in 0..300 {
+        let nodes = 1 + rng.next_below(6) as usize;
+        let cores = 1 + rng.next_below(16) as usize;
+        let mut topo = parlin::sysinfo::Topology::uniform(nodes, cores);
+        topo.data_node = rng.next_below(nodes as u64) as usize;
+        let threads = 1 + rng.next_below((nodes * cores * 2) as u64) as usize;
+        let p = topo.place_threads(threads);
+        assert_eq!(p.iter().sum::<usize>(), threads, "placement must be total");
+        assert!(p[topo.data_node] > 0, "data node must participate");
+        // minimality: the used node count cannot exceed ceil(threads/cores)
+        let used = p.iter().filter(|&&x| x > 0).count();
+        let min_nodes = threads.div_ceil(cores).min(nodes);
+        assert!(
+            used <= min_nodes.max(1),
+            "used {used} nodes for {threads} threads ({cores} cores/node)"
+        );
+    }
+}
+
+/// LIBSVM writer/loader round-trip on random sparse datasets.
+#[test]
+fn prop_libsvm_roundtrip() {
+    for seed in 0..5u64 {
+        let ds = synthetic::sparse_classification(60, 30, 0.2, seed);
+        let dir = std::env::temp_dir().join(format!("parlin_prop_{}_{seed}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.libsvm");
+        let mut out = String::new();
+        for j in 0..ds.n() {
+            let (idx, val) = ds.x.col(j);
+            out.push_str(if ds.y[j] > 0.0 { "+1" } else { "-1" });
+            for (i, v) in idx.iter().zip(val) {
+                out.push_str(&format!(" {}:{:.17}", i + 1, v));
+            }
+            out.push('\n');
+        }
+        std::fs::write(&path, out).unwrap();
+        let back = parlin::data::loader::load_libsvm(&path, Some(30)).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.d(), 30);
+        for j in 0..ds.n() {
+            let (ia, va) = ds.x.col(j);
+            let (ib, vb) = back.x.col(j);
+            assert_eq!(ia, ib, "seed {seed} col {j}");
+            for (a, b) in va.iter().zip(vb) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Subset extraction preserves per-example content (dense + sparse).
+#[test]
+fn prop_subset_preserves_examples() {
+    let mut rng = Rng::new(23);
+    for seed in 0..10u64 {
+        let ds = synthetic::sparse_classification(100, 40, 0.15, seed);
+        let idx = rng.sample_indices(100, 37);
+        let sub = ds.subset(&idx);
+        for (new_j, &old_j) in idx.iter().enumerate() {
+            assert_eq!(sub.x.col(new_j), ds.x.col(old_j));
+            assert_eq!(sub.y[new_j], ds.y[old_j]);
+            assert_eq!(sub.norm_sq(new_j), ds.norm_sq(old_j));
+        }
+        let dd = synthetic::dense_classification(80, 12, seed);
+        let idx2 = rng.sample_indices(80, 20);
+        let sub2 = dd.subset(&idx2);
+        for (new_j, &old_j) in idx2.iter().enumerate() {
+            assert_eq!(sub2.x.col(new_j), dd.x.col(old_j));
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts must agree
+//! with the rust-native f64 implementations on real data, and the
+//! HLO-backed trainer must reach the same solution as the native solver.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! `make test` always builds artifacts first).
+
+use parlin::data::{synthetic, Dataset, DenseMatrix};
+use parlin::glm::{self, Objective};
+use parlin::runtime::{ArtifactRuntime, TiledEvaluator};
+use parlin::solver::{train, SolverConfig, Variant};
+use std::path::Path;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRuntime::load(&dir).expect("load artifacts"))
+}
+
+fn full_idx(ds: &Dataset<DenseMatrix>) -> Vec<usize> {
+    (0..ds.n()).collect()
+}
+
+#[test]
+fn artifacts_present_and_tile_shapes_valid() {
+    let Some(rt) = runtime() else { return };
+    rt.validate_tiles().unwrap();
+    for name in ["eval_tile", "matvec_tile", "loss_tile", "grad_tile", "bucket_step"] {
+        assert!(rt.get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn eval_tile_matches_native_small_d() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::dense_classification(700, 100, 1); // d=100 ≤ 128
+    let idx = full_idx(&ds);
+    let ev = TiledEvaluator::new(&rt, &ds, &idx).unwrap();
+    let obj = Objective::Logistic { lambda: 1e-3 };
+    let mut rng = parlin::util::Rng::new(2);
+    let w: Vec<f64> = (0..100).map(|_| rng.next_gaussian() * 0.3).collect();
+    let got = ev.eval(&w).unwrap();
+    let want_loss = glm::test_loss(&ds, &obj, &w, &idx);
+    let want_acc = glm::accuracy(&ds, &w, &idx);
+    assert_eq!(got.count, 700);
+    assert!(
+        (got.mean_loss - want_loss).abs() < 1e-4 * want_loss.max(1.0),
+        "loss: hlo={} native={}",
+        got.mean_loss,
+        want_loss
+    );
+    assert!((got.accuracy - want_acc).abs() < 1e-9, "acc mismatch");
+}
+
+#[test]
+fn feature_tiled_path_matches_native_large_d() {
+    let Some(rt) = runtime() else { return };
+    // d=300 > 128 forces the matvec+loss composition over 3 feature tiles
+    let ds = synthetic::dense_classification(300, 300, 3);
+    let idx = full_idx(&ds);
+    let ev = TiledEvaluator::new(&rt, &ds, &idx).unwrap();
+    let obj = Objective::Logistic { lambda: 1e-3 };
+    let mut rng = parlin::util::Rng::new(4);
+    let w: Vec<f64> = (0..300).map(|_| rng.next_gaussian() * 0.2).collect();
+    let got = ev.eval(&w).unwrap();
+    let want = glm::test_loss(&ds, &obj, &w, &idx);
+    assert!(
+        (got.mean_loss - want).abs() < 5e-4 * want.max(1.0),
+        "hlo={} native={}",
+        got.mean_loss,
+        want
+    );
+}
+
+#[test]
+fn grad_tile_matches_finite_difference() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::dense_classification(512, 64, 5);
+    let idx = full_idx(&ds);
+    let ev = TiledEvaluator::new(&rt, &ds, &idx).unwrap();
+    let lambda = 0.01;
+    let obj = Objective::Logistic { lambda };
+    let mut rng = parlin::util::Rng::new(6);
+    let w: Vec<f64> = (0..64).map(|_| rng.next_gaussian() * 0.2).collect();
+    let (g, _) = ev.grad(&w, lambda).unwrap();
+    // compare a few coordinates against central differences of the native
+    // primal objective (f32 artifacts ⇒ loose-ish tolerance)
+    for k in [0usize, 13, 63] {
+        let h = 1e-4;
+        let mut wp = w.clone();
+        wp[k] += h;
+        let mut wm = w.clone();
+        wm[k] -= h;
+        let fp = glm::primal_value(&ds, &obj, &wp);
+        let fm = glm::primal_value(&ds, &obj, &wm);
+        let fd = (fp - fm) / (2.0 * h);
+        assert!(
+            (g[k] - fd).abs() < 1e-3 * fd.abs().max(1.0),
+            "coord {k}: hlo={} fd={}",
+            g[k],
+            fd
+        );
+    }
+}
+
+#[test]
+fn eval_handles_padding_tile() {
+    let Some(rt) = runtime() else { return };
+    // 300 examples = 1 full tile + 44-row padded tile
+    let ds = synthetic::dense_classification(300, 50, 7);
+    let idx = full_idx(&ds);
+    let ev = TiledEvaluator::new(&rt, &ds, &idx).unwrap();
+    let w = vec![0.0; 50];
+    let got = ev.eval(&w).unwrap();
+    assert_eq!(got.count, 300);
+    // at w=0: loss = ln2 exactly, accuracy = 0 (margin 0 counts incorrect)
+    assert!((got.mean_loss - std::f64::consts::LN_2).abs() < 1e-6);
+    assert!(got.accuracy.abs() < 1e-12);
+}
+
+#[test]
+fn hlo_bucket_trainer_matches_native_solution() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::dense_classification(600, 100, 8);
+    let obj = Objective::Logistic { lambda: 1.0 / 600.0 };
+    let cfg = SolverConfig::new(obj).with_tol(1e-5).with_max_epochs(200);
+    let hlo = parlin::runtime::hlo_trainer::train_hlo_bucketed(&rt, &ds, &cfg).unwrap();
+    assert!(hlo.converged, "hlo trainer did not converge");
+    assert!(hlo.final_gap < 1e-2, "gap={}", hlo.final_gap);
+    let native = train(&ds, &cfg.clone().with_variant(Variant::Sequential));
+    let dist = parlin::util::rel_change(&native.weights(&obj), &hlo.weights(&obj));
+    assert!(dist < 5e-2, "hlo vs native weights differ: {dist}");
+}
+
+#[test]
+fn hlo_trainer_rejects_oversized_d() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::dense_classification(64, 200, 9);
+    let cfg = SolverConfig::new(Objective::Logistic { lambda: 0.01 });
+    let err = match parlin::runtime::hlo_trainer::train_hlo_bucketed(&rt, &ds, &cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("expected d-limit error"),
+    };
+    assert!(format!("{err}").contains("d ≤"), "{err}");
+}

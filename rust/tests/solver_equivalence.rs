@@ -1,0 +1,240 @@
+//! Cross-solver equivalence and convergence-quality guarantees — the
+//! repo-level statement of the paper's title: every parallel variant must
+//! reach the *same solution quality* as the sequential algorithm.
+
+use parlin::data::{synthetic, DataMatrix};
+use parlin::glm::{duality_gap, Objective};
+use parlin::solver::exec::Executor;
+use parlin::solver::{
+    dom, numa, seq, wild, BucketPolicy, Partitioning, SolverConfig, Variant,
+};
+use parlin::sysinfo::Topology;
+use parlin::vthread;
+
+fn logistic(n: usize) -> Objective {
+    Objective::Logistic { lambda: 1.0 / n as f64 }
+}
+
+/// All solver variants converge to (near-)identical primal solutions.
+#[test]
+fn all_variants_reach_same_optimum_dense() {
+    let ds = synthetic::dense_classification(800, 25, 11);
+    let obj = logistic(800);
+    let tol_cfg = SolverConfig::new(obj).with_tol(1e-7).with_max_epochs(2000);
+    let topo = Topology::uniform(4, 2);
+
+    let w_seq = seq::train_sequential(&ds, &tol_cfg).weights(&obj);
+    let runs: Vec<(&str, Vec<f64>)> = vec![
+        (
+            "wild-1T",
+            wild::train_wild(&ds, &tol_cfg.clone().with_variant(Variant::Wild)).weights(&obj),
+        ),
+        (
+            "dom-dyn-4T",
+            dom::train_domesticated(&ds, &tol_cfg.clone().with_threads(4)).weights(&obj),
+        ),
+        (
+            "dom-static-4T",
+            dom::train_domesticated(
+                &ds,
+                &tol_cfg
+                    .clone()
+                    .with_threads(4)
+                    .with_partition(Partitioning::Static),
+            )
+            .weights(&obj),
+        ),
+        (
+            "numa-8T",
+            numa::train_numa(&ds, &tol_cfg.clone().with_threads(8), &topo).weights(&obj),
+        ),
+    ];
+    for (name, w) in runs {
+        let dist = parlin::util::rel_change(&w_seq, &w);
+        assert!(dist < 1e-2, "{name} deviates from sequential by {dist}");
+    }
+}
+
+#[test]
+fn all_variants_reach_same_optimum_sparse() {
+    let ds = synthetic::sparse_classification(1000, 300, 0.03, 12);
+    let obj = logistic(1000);
+    let cfg = SolverConfig::new(obj).with_tol(1e-7).with_max_epochs(2000);
+    let topo = Topology::uniform(2, 4);
+    let w_seq = seq::train_sequential(&ds, &cfg).weights(&obj);
+    let w_dom = dom::train_domesticated(&ds, &cfg.clone().with_threads(8)).weights(&obj);
+    let w_numa = numa::train_numa(&ds, &cfg.clone().with_threads(8), &topo).weights(&obj);
+    assert!(parlin::util::rel_change(&w_seq, &w_dom) < 1e-2);
+    assert!(parlin::util::rel_change(&w_seq, &w_numa) < 1e-2);
+}
+
+/// Real threads and the sequential executor produce bitwise-identical
+/// trajectories (the basis for the vthread substitution, DESIGN.md §4).
+#[test]
+fn threaded_and_virtual_execution_identical() {
+    let ds = synthetic::dense_classification(400, 16, 13);
+    let obj = logistic(400);
+    let topo = Topology::uniform(2, 4);
+    for threads in [2usize, 4, 8] {
+        let cfg = SolverConfig::new(obj)
+            .with_threads(threads)
+            .with_tol(0.0)
+            .with_max_epochs(12);
+        let real = dom::train_domesticated_exec(&ds, &cfg, Executor::Threads);
+        let sim = dom::train_domesticated_exec(&ds, &cfg, Executor::Sequential);
+        assert_eq!(real.state.alpha, sim.state.alpha, "dom T={threads}");
+        let real_n = numa::train_numa_exec(&ds, &cfg, &topo, Executor::Threads);
+        let sim_n = numa::train_numa_exec(&ds, &cfg, &topo, Executor::Sequential);
+        assert_eq!(real_n.state.alpha, sim_n.state.alpha, "numa T={threads}");
+    }
+}
+
+/// The paper's Fig 2b/5a effect: static partitioning needs at least as
+/// many epochs as dynamic, across thread counts.
+#[test]
+fn dynamic_partitioning_dominates_static_in_epochs() {
+    let ds = synthetic::dense_classification(3000, 40, 14);
+    let obj = logistic(3000);
+    let mut worse = 0;
+    let mut cases = 0;
+    for threads in [4usize, 8, 16] {
+        let base = SolverConfig::new(obj)
+            .with_threads(threads)
+            .with_tol(1e-4)
+            .with_max_epochs(800);
+        let dy = vthread::train_domesticated_sim(
+            &ds,
+            &base.clone().with_partition(Partitioning::Dynamic),
+        );
+        let st = vthread::train_domesticated_sim(
+            &ds,
+            &base.clone().with_partition(Partitioning::Static),
+        );
+        assert!(dy.converged && st.converged);
+        cases += 1;
+        if st.epochs_run >= dy.epochs_run {
+            worse += 1;
+        }
+    }
+    assert!(
+        worse >= cases - 1,
+        "static should need >= epochs in (almost) all cases: {worse}/{cases}"
+    );
+}
+
+/// Bucketing must not change the reachable solution quality (only the
+/// constant factors) — trained models agree across bucket sizes.
+#[test]
+fn bucket_sizes_do_not_change_solution() {
+    let ds = synthetic::dense_classification(600, 20, 15);
+    let obj = logistic(600);
+    let mut ws = Vec::new();
+    for bucket in [BucketPolicy::Off, BucketPolicy::Fixed(8), BucketPolicy::Fixed(16)] {
+        let cfg = SolverConfig::new(obj)
+            .with_tol(1e-8)
+            .with_max_epochs(2000)
+            .with_bucket(bucket);
+        ws.push(seq::train_sequential(&ds, &cfg).weights(&obj));
+    }
+    for w in &ws[1..] {
+        assert!(parlin::util::rel_change(&ws[0], w) < 1e-3);
+    }
+}
+
+/// Wild-sim convergence degradation is monotone-ish in the collision
+/// probability (sanity of the lost-update model).
+#[test]
+fn wild_sim_degrades_with_collision_probability() {
+    let ds = synthetic::dense_classification(1500, 80, 16);
+    let obj = logistic(1500);
+    let cfg = SolverConfig::new(obj)
+        .with_variant(Variant::Wild)
+        .with_threads(16)
+        .with_tol(1e-4)
+        .with_max_epochs(150);
+    let mk = |p: f64| vthread::WildSimParams {
+        p_collide_local: p,
+        p_collide_remote: p,
+        topology: Topology::flat(16),
+    };
+    let clean = vthread::train_wild_sim(&ds, &cfg, &mk(0.0));
+    let dirty = vthread::train_wild_sim(&ds, &cfg, &mk(0.4));
+    let clean_gap = clean.final_gap.max(1e-12);
+    let dirty_gap = dirty.final_gap.max(1e-12);
+    assert!(
+        !dirty.converged || dirty.epochs_run > clean.epochs_run || dirty_gap > clean_gap,
+        "collisions should hurt: clean ({} ep, gap {clean_gap:.1e}) vs dirty ({} ep, gap {dirty_gap:.1e})",
+        clean.epochs_run,
+        dirty.epochs_run
+    );
+}
+
+/// Gap certificates: converged runs have small duality gap; the gap is
+/// non-negative for every solver's final state.
+#[test]
+fn gap_certificates_hold() {
+    let ds = synthetic::sparse_classification(500, 100, 0.05, 17);
+    let obj = logistic(500);
+    let topo = Topology::uniform(2, 2);
+    let cfg = SolverConfig::new(obj).with_tol(1e-6).with_max_epochs(1500);
+    for (name, out) in [
+        ("seq", seq::train_sequential(&ds, &cfg)),
+        ("dom", dom::train_domesticated(&ds, &cfg.clone().with_threads(4))),
+        ("numa", numa::train_numa(&ds, &cfg.clone().with_threads(4), &topo)),
+    ] {
+        let rep = duality_gap(&ds, &obj, &out.state);
+        assert!(rep.gap >= -1e-10, "{name}: negative gap {}", rep.gap);
+        assert!(rep.gap < 1e-3, "{name}: loose gap {}", rep.gap);
+        assert!(out.state.v_drift(&ds) < 1e-8, "{name}: v drift");
+    }
+}
+
+/// Hinge and ridge objectives train correctly through the parallel path.
+#[test]
+fn parallel_solvers_handle_all_objectives() {
+    let ds = synthetic::dense_classification(400, 12, 18);
+    for obj in [
+        Objective::Hinge { lambda: 1.0 / 400.0 },
+        Objective::Ridge { lambda: 0.05 },
+    ] {
+        let cfg = SolverConfig::new(obj)
+            .with_threads(4)
+            .with_tol(1e-6)
+            .with_max_epochs(2000);
+        let out = dom::train_domesticated(&ds, &cfg);
+        let rep = duality_gap(&ds, &obj, &out.state);
+        assert!(rep.gap < 1e-2, "{obj:?}: gap {}", rep.gap);
+    }
+}
+
+/// Property-style sweep: random small problems, every variant converges
+/// to a valid dual point with tight gap (20 random configs).
+#[test]
+fn random_problem_sweep() {
+    let mut rng = parlin::util::Rng::new(99);
+    for trial in 0..20 {
+        let n = 100 + rng.next_below(300) as usize;
+        let d = 5 + rng.next_below(30) as usize;
+        let threads = 1 + rng.next_below(8) as usize;
+        let ds = synthetic::dense_classification(n, d, 1000 + trial);
+        let obj = logistic(n);
+        let cfg = SolverConfig::new(obj)
+            .with_threads(threads)
+            .with_tol(1e-6)
+            .with_max_epochs(3000)
+            .with_seed(trial);
+        let out = dom::train_domesticated(&ds, &cfg);
+        assert!(
+            out.converged,
+            "trial {trial} (n={n}, d={d}, T={threads}) failed to converge"
+        );
+        let rep = duality_gap(&ds, &obj, &out.state);
+        assert!(rep.gap < 1e-2, "trial {trial}: gap {}", rep.gap);
+        // dual feasibility: y·α ∈ [0,1]
+        for (a, y) in out.state.alpha.iter().zip(&ds.y) {
+            let s = a * y;
+            assert!((-1e-9..=1.0 + 1e-9).contains(&s), "trial {trial}: α out of domain");
+        }
+        let _ = ds.x.nnz();
+    }
+}
