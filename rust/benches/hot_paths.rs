@@ -112,6 +112,69 @@ fn main() {
         report("merge 8 replicas of d=100k", &samples, 8.0 * d as f64, "elem");
     }
 
+    // ---- executor dispatch overhead (pool vs spawn-per-round) ---------
+    // The replica solvers dispatch one batch of jobs per merge round —
+    // up to 8 rounds/epoch × hundreds of epochs. This bench isolates
+    // that dispatch cost: many small merge-round-shaped batches, with
+    // the persistent WorkerPool against spawn/join-per-batch Threads.
+    {
+        use parlin::solver::exec::Executor;
+        use parlin::solver::pool::WorkerPool;
+        use parlin::sysinfo::Topology;
+
+        fn round_work(tid: usize) -> f64 {
+            // a small worker-round-sized job (~μs of compute)
+            let mut s = 0.0f64;
+            for i in 0..2_000usize {
+                s += ((tid * 2_000 + i) as f64).sqrt();
+            }
+            s
+        }
+
+        const WORKERS: usize = 4;
+        const ROUNDS: usize = 200;
+
+        fn dispatch_bench(exec: &parlin::solver::exec::Executor) -> Vec<f64> {
+            parlin::util::timer::bench_fn(1, 7, || {
+                let mut acc = 0.0f64;
+                for _ in 0..ROUNDS {
+                    let jobs: Vec<_> = (0..WORKERS).map(|t| move || round_work(t)).collect();
+                    acc += exec.run(jobs).into_iter().sum::<f64>();
+                }
+                acc
+            })
+        }
+
+        let workers = WORKERS;
+        let rounds = ROUNDS;
+        let threads_exec = Executor::Threads;
+        let s_threads = dispatch_bench(&threads_exec);
+        report(
+            "dispatch 200 rounds x 4 jobs (Threads)",
+            &s_threads,
+            (rounds * workers) as f64,
+            "job",
+        );
+
+        let pool_exec = Executor::Pool(WorkerPool::new(workers, &Topology::flat(workers)));
+        let s_pool = dispatch_bench(&pool_exec);
+        report(
+            "dispatch 200 rounds x 4 jobs (Pool)",
+            &s_pool,
+            (rounds * workers) as f64,
+            "job",
+        );
+
+        let med_threads = percentile(&s_threads, 50.0);
+        let med_pool = percentile(&s_pool, 50.0);
+        println!(
+            "    pool/threads dispatch ratio: {:.3} (< 1.0 means the resident pool wins; \
+             spawn/join cost avoided per round: {:.1} us)",
+            med_pool / med_threads,
+            (med_threads - med_pool) / rounds as f64 * 1e6
+        );
+    }
+
     // ---- dot kernel ----------------------------------------------------
     {
         let mut rng = Rng::new(4);

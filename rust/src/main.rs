@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
-use parlin::solver::{train, BucketPolicy, Partitioning, SolverConfig, Variant};
+use parlin::solver::{train, BucketPolicy, ExecPolicy, Partitioning, SolverConfig, Variant};
 use parlin::sysinfo::Topology;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -64,6 +64,7 @@ TRAIN OPTIONS:
   --max-epochs  epoch cap                             (default 200)
   --bucket      auto | off | <size>                   (default auto)
   --partition   dynamic | static                      (default dynamic)
+  --exec        pool | threads | seq                  (default pool)
   --n / --d     synthetic dataset size overrides
   --seed        RNG seed                              (default 42)
   --csv         write the per-epoch log to a CSV file
@@ -172,6 +173,12 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         "static" => Partitioning::Static,
         other => bail!("unknown partitioning '{other}'"),
     };
+    let exec = match flags.get("exec").map(String::as_str).unwrap_or("pool") {
+        "pool" => ExecPolicy::Pool,
+        "threads" => ExecPolicy::Threads,
+        "seq" | "sequential" => ExecPolicy::Sequential,
+        other => bail!("unknown executor '{other}'"),
+    };
     let cfg = SolverConfig::new(obj)
         .with_variant(variant)
         .with_threads(get_parse(flags, "threads", 1usize)?)
@@ -179,6 +186,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         .with_max_epochs(get_parse(flags, "max-epochs", 200usize)?)
         .with_bucket(bucket)
         .with_partition(partition)
+        .with_exec(exec)
         .with_seed(get_parse(flags, "seed", 42u64)?);
 
     println!(

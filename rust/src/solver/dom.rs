@@ -27,9 +27,17 @@ use crate::solver::partition::Partitioner;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
 use crate::util::{Rng, Timer};
 
-/// Production entry point: real OS threads.
+/// Production entry point: workers come from the configured
+/// [`ExecPolicy`](crate::solver::ExecPolicy) — by default a persistent
+/// NUMA-aware [`WorkerPool`](crate::solver::WorkerPool) created here,
+/// once, and reused for every merge round of the run.
 pub fn train_domesticated<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
-    train_domesticated_exec(ds, cfg, Executor::Threads)
+    let topo = cfg
+        .topology
+        .clone()
+        .unwrap_or_else(crate::sysinfo::Topology::detect);
+    let exec = cfg.build_executor(&topo);
+    train_domesticated_exec(ds, cfg, &exec)
 }
 
 /// One worker's share of an epoch round: exact SDCA steps on its own
@@ -77,7 +85,7 @@ pub(crate) fn worker_round<M: DataMatrix>(
 pub fn train_domesticated_exec<M: DataMatrix>(
     ds: &Dataset<M>,
     cfg: &SolverConfig,
-    exec: Executor,
+    exec: &Executor,
 ) -> TrainOutput {
     let n = ds.n();
     let t_workers = cfg.threads.max(1);
@@ -267,8 +275,8 @@ mod tests {
     fn threads_and_sequential_executor_identical() {
         let ds = synthetic::dense_classification(300, 12, 3);
         let c = cfg(1e-3, 4).with_max_epochs(20).with_tol(0.0);
-        let a = train_domesticated_exec(&ds, &c, Executor::Threads);
-        let b = train_domesticated_exec(&ds, &c, Executor::Sequential);
+        let a = train_domesticated_exec(&ds, &c, &Executor::Threads);
+        let b = train_domesticated_exec(&ds, &c, &Executor::Sequential);
         assert_eq!(a.state.alpha, b.state.alpha, "executors must be bitwise identical");
         assert_eq!(a.state.v, b.state.v);
     }

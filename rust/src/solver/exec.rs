@@ -2,20 +2,49 @@
 //!
 //! The replica-based solvers (`dom`, `numa`) are *deterministic* given the
 //! epoch assignments: workers only touch disjoint `α` coordinates and
-//! private `v` replicas between merge points. That means running the worker
-//! closures on real threads or sequentially on one core produces bit-wise
-//! identical models — which is how this repo reproduces the paper's
-//! convergence results (epoch counts) for 8–32 "threads" on any host (see
-//! DESIGN.md §4 substitutions). `Threads` is the production path; the
-//! equivalence is asserted in `rust/tests/solver_equivalence.rs`.
+//! private `v` replicas between merge points, and the caller reduces the
+//! returned deltas in job order. That means running the worker closures on
+//! real threads, on the persistent worker pool, or sequentially on one
+//! core produces bit-wise identical models — which is how this repo
+//! reproduces the paper's convergence results (epoch counts) for 8–32
+//! "threads" on any host (see DESIGN.md §4 substitutions).
+//!
+//! Three interchangeable executors:
+//!
+//! * [`Executor::Pool`] — the production path: persistent NUMA-aware
+//!   workers (see [`WorkerPool`]) created once per `train()` call, so the
+//!   per-merge-round dispatch is a queue push instead of an OS thread
+//!   spawn/join.
+//! * [`Executor::Threads`] — spawn-per-batch via `std::thread::scope`;
+//!   kept as the zero-state reference implementation the pool is tested
+//!   against.
+//! * [`Executor::Sequential`] — in order on the calling thread
+//!   (virtual-thread mode; the basis of `crate::vthread`).
+//!
+//! The three-way bit-wise equivalence is asserted in
+//! `rust/tests/solver_equivalence.rs` and `rust/tests/pool_equivalence.rs`.
+
+use crate::solver::pool::WorkerPool;
+use crate::sysinfo::Topology;
 
 /// How to run a batch of independent worker jobs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Executor {
-    /// One OS thread per job (`std::thread::scope`).
+    /// One OS thread per job per batch (`std::thread::scope`).
     Threads,
     /// Run jobs in order on the calling thread (virtual-thread mode).
     Sequential,
+    /// Dispatch onto a resident [`WorkerPool`].
+    Pool(WorkerPool),
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Executor::Threads => write!(f, "Threads"),
+            Executor::Sequential => write!(f, "Sequential"),
+            Executor::Pool(p) => write!(f, "Pool({} workers)", p.workers()),
+        }
+    }
 }
 
 impl Executor {
@@ -34,6 +63,48 @@ impl Executor {
                     .map(|h| h.join().expect("worker panicked"))
                     .collect()
             }),
+            Executor::Pool(pool) => pool.run(jobs),
+        }
+    }
+
+    /// Run NUMA-node-tagged jobs. `Pool` routes every job to a worker
+    /// resident on the tagged node (the hierarchical solver's per-node
+    /// bucket queues); `Threads` and `Sequential` ignore the tags. All
+    /// executors return results in job order, so the tag is a placement
+    /// hint only and never affects the trained model.
+    pub fn run_tagged<R, F>(&self, jobs: Vec<(usize, F)>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        match self {
+            Executor::Pool(pool) => pool.run_tagged(jobs),
+            other => other.run(jobs.into_iter().map(|(_, f)| f).collect()),
+        }
+    }
+}
+
+/// Which executor a `train()` call should build — the plain-data knob
+/// carried by [`SolverConfig`](crate::solver::SolverConfig). Resolved
+/// into a concrete [`Executor`] (spawning the pool's resident workers for
+/// [`ExecPolicy::Pool`]) exactly once per training run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// Persistent NUMA-aware worker pool (default production path).
+    Pool,
+    /// Fresh OS threads per merge round (the pre-pool behaviour).
+    Threads,
+    /// Single-core in-order execution (deterministic vthread mode).
+    Sequential,
+}
+
+impl ExecPolicy {
+    /// Build the executor for a run of `threads` workers on `topo`.
+    pub fn build(&self, threads: usize, topo: &Topology) -> Executor {
+        match self {
+            ExecPolicy::Sequential => Executor::Sequential,
+            ExecPolicy::Threads => Executor::Threads,
+            ExecPolicy::Pool => Executor::Pool(WorkerPool::new(threads, topo)),
         }
     }
 }
@@ -42,26 +113,61 @@ impl Executor {
 mod tests {
     use super::*;
 
+    fn executors() -> Vec<Executor> {
+        vec![
+            Executor::Sequential,
+            Executor::Threads,
+            Executor::Pool(WorkerPool::new(4, &Topology::flat(4))),
+        ]
+    }
+
     #[test]
-    fn both_executors_preserve_order() {
-        for exec in [Executor::Sequential, Executor::Threads] {
+    fn all_executors_preserve_order() {
+        for exec in executors() {
             let jobs: Vec<_> = (0..8).map(|i| move || i * 10).collect();
             assert_eq!(exec.run(jobs), vec![0, 10, 20, 30, 40, 50, 60, 70]);
         }
     }
 
     #[test]
+    fn tagged_run_preserves_order_everywhere() {
+        for exec in executors() {
+            let jobs: Vec<(usize, _)> = (0..6usize).map(|i| (i % 2, move || i as u64)).collect();
+            assert_eq!(exec.run_tagged(jobs), vec![0, 1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
     fn threads_actually_run_concurrent_jobs() {
         use std::sync::atomic::{AtomicUsize, Ordering};
-        let counter = AtomicUsize::new(0);
-        let jobs: Vec<_> = (0..4)
-            .map(|_| {
-                let c = &counter;
-                move || c.fetch_add(1, Ordering::SeqCst)
-            })
-            .collect();
-        let mut got = Executor::Threads.run(jobs);
-        got.sort_unstable();
-        assert_eq!(got, vec![0, 1, 2, 3]);
+        for exec in [
+            Executor::Threads,
+            Executor::Pool(WorkerPool::new(4, &Topology::flat(4))),
+        ] {
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..4)
+                .map(|_| {
+                    let c = &counter;
+                    move || c.fetch_add(1, Ordering::SeqCst)
+                })
+                .collect();
+            let mut got = exec.run(jobs);
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn policy_builds_matching_executor() {
+        let topo = Topology::uniform(2, 2);
+        assert!(matches!(
+            ExecPolicy::Sequential.build(4, &topo),
+            Executor::Sequential
+        ));
+        assert!(matches!(ExecPolicy::Threads.build(4, &topo), Executor::Threads));
+        match ExecPolicy::Pool.build(4, &topo) {
+            Executor::Pool(p) => assert_eq!(p.workers(), 4),
+            other => panic!("expected pool, got {other:?}"),
+        }
     }
 }

@@ -22,12 +22,15 @@ pub mod dom;
 pub mod exec;
 pub mod numa;
 pub mod partition;
+pub mod pool;
 pub mod seq;
 pub mod wild;
 
 pub use bucket::{BucketPolicy, Buckets};
 pub use convergence::ConvergenceMonitor;
+pub use exec::{ExecPolicy, Executor};
 pub use partition::Partitioning;
+pub use pool::WorkerPool;
 
 use crate::data::{DataMatrix, Dataset};
 use crate::glm::{GapReport, ModelState, Objective};
@@ -90,6 +93,11 @@ pub struct SolverConfig {
     pub merges_per_epoch: usize,
     /// σ′ policy for the replica solvers (see [`SigmaPolicy`]).
     pub sigma: SigmaPolicy,
+    /// How worker jobs are executed (see [`ExecPolicy`]): the persistent
+    /// NUMA-aware pool by default; `Threads` for spawn-per-round;
+    /// `Sequential` for deterministic single-core runs. All three produce
+    /// bit-wise identical models.
+    pub exec: ExecPolicy,
     /// NUMA topology override (default: detect host).
     pub topology: Option<Topology>,
     /// Abort when the primal objective exceeds this multiple of its initial
@@ -112,6 +120,7 @@ impl SolverConfig {
             partition: Partitioning::Dynamic,
             merges_per_epoch: 0, // auto
             sigma: SigmaPolicy::Adaptive,
+            exec: ExecPolicy::Pool,
             topology: None,
             divergence_factor: 1e3,
         }
@@ -155,6 +164,19 @@ impl SolverConfig {
     pub fn with_topology(mut self, t: Topology) -> Self {
         self.topology = Some(t);
         self
+    }
+
+    pub fn with_exec(mut self, e: ExecPolicy) -> Self {
+        self.exec = e;
+        self
+    }
+
+    /// Build this run's executor (resolving [`ExecPolicy::Pool`] into a
+    /// freshly spawned resident [`WorkerPool`] on `topo`). Called once per
+    /// `train_*` entry point so the pool's workers persist across every
+    /// epoch and merge round of the run.
+    pub fn build_executor(&self, topo: &Topology) -> Executor {
+        self.exec.build(self.threads.max(1), topo)
     }
 
     /// Resolve `merges_per_epoch = 0` (auto) for a dataset: as many merge
@@ -230,11 +252,16 @@ pub fn train<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput 
         .topology
         .clone()
         .unwrap_or_else(Topology::detect);
-    match cfg.resolve_variant(&topo) {
-        Variant::Sequential => seq::train_sequential(ds, cfg),
-        Variant::Wild => wild::train_wild(ds, cfg),
-        Variant::Domesticated => dom::train_domesticated(ds, cfg),
-        Variant::Numa => numa::train_numa(ds, cfg, &topo),
+    let variant = cfg.resolve_variant(&topo);
+    // Pin the resolved topology so the per-variant entry points (which
+    // also resolve it when called directly) never re-probe sysfs.
+    let mut cfg = cfg.clone();
+    cfg.topology = Some(topo.clone());
+    match variant {
+        Variant::Sequential => seq::train_sequential(ds, &cfg),
+        Variant::Wild => wild::train_wild(ds, &cfg),
+        Variant::Domesticated => dom::train_domesticated(ds, &cfg),
+        Variant::Numa => numa::train_numa(ds, &cfg, &topo),
         Variant::Auto => unreachable!("resolve_variant never returns Auto"),
     }
 }

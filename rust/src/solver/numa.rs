@@ -29,9 +29,14 @@ use crate::sysinfo::Topology;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
 use crate::util::{Rng, Timer};
 
-/// Production entry point (real threads).
+/// Production entry point: workers come from the configured
+/// [`ExecPolicy`](crate::solver::ExecPolicy) — by default a persistent
+/// worker pool laid out on `topo`, created once here; its per-node bucket
+/// queues then receive every node's merge-round jobs via
+/// [`Executor::run_tagged`].
 pub fn train_numa<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig, topo: &Topology) -> TrainOutput {
-    train_numa_exec(ds, cfg, topo, Executor::Threads)
+    let exec = cfg.build_executor(topo);
+    train_numa_exec(ds, cfg, topo, &exec)
 }
 
 /// Static split of the bucket space across active nodes, proportional to
@@ -65,7 +70,7 @@ pub fn train_numa_exec<M: DataMatrix>(
     ds: &Dataset<M>,
     cfg: &SolverConfig,
     topo: &Topology,
-    exec: Executor,
+    exec: &Executor,
 ) -> TrainOutput {
     let n = ds.n();
     let obj = cfg.obj;
@@ -130,7 +135,10 @@ pub fn train_numa_exec<M: DataMatrix>(
             .collect();
         for round in 0..rounds {
             // run every (node, thread) worker; workers read their node's
-            // replica and return the replica delta
+            // replica and return the replica delta. Jobs are tagged with
+            // their node so the pool executor queues each one on a worker
+            // resident on that node (per-node bucket queues); the tag is
+            // ignored by the other executors and never affects results.
             let mut jobs = Vec::new();
             let mut job_node = Vec::new();
             for (k, asg) in assignments.iter().enumerate() {
@@ -140,7 +148,7 @@ pub fn train_numa_exec<M: DataMatrix>(
                     let seg = super::dom::segment(tl, round, rounds);
                     let (ds, obj, buckets, alpha, v_ref) =
                         (&*ds, &obj, &buckets, &alpha[..], &v_nodes[k][..]);
-                    jobs.push(move || {
+                    jobs.push((k, move || {
                         // σ′-scaled replica: u = v_node + σ′·A·Δα_local
                         // (see solver::dom::worker_round for the algebra)
                         let mut u = v_ref.to_vec();
@@ -159,11 +167,11 @@ pub fn train_numa_exec<M: DataMatrix>(
                             *l = (*l - g) / sigma;
                         }
                         u
-                    });
+                    }));
                     job_node.push(k);
                 }
             }
-            let deltas = exec.run(jobs);
+            let deltas = exec.run_tagged(jobs);
             // intra-node merge: each node's replica absorbs its own
             // threads' deltas (cross-node reduce happens once per epoch)
             for (dv, &k) in deltas.iter().zip(&job_node) {
@@ -303,8 +311,8 @@ mod tests {
         let ds = synthetic::dense_classification(300, 10, 3);
         let topo = Topology::uniform(2, 2);
         let c = cfg(1e-3, 4).with_max_epochs(15).with_tol(0.0);
-        let a = train_numa_exec(&ds, &c, &topo, Executor::Threads);
-        let b = train_numa_exec(&ds, &c, &topo, Executor::Sequential);
+        let a = train_numa_exec(&ds, &c, &topo, &Executor::Threads);
+        let b = train_numa_exec(&ds, &c, &topo, &Executor::Sequential);
         assert_eq!(a.state.alpha, b.state.alpha);
         assert_eq!(a.state.v, b.state.v);
     }

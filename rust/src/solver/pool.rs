@@ -1,0 +1,449 @@
+//! Persistent NUMA-aware worker pool — the resident execution runtime
+//! behind [`Executor::Pool`](crate::solver::exec::Executor).
+//!
+//! ## Why a pool
+//!
+//! The replica solvers (`dom`, `numa`) dispatch one batch of worker jobs
+//! per merge round — with up to 8 merges/epoch and hundreds of epochs, a
+//! spawn-per-round executor pays thousands of OS thread spawn/join cycles
+//! per `train()` call. SySCD-style systems avoid that with workers that
+//! are created once and stay resident for the whole run. [`WorkerPool`]
+//! does the same: `threads` long-lived workers, created once per
+//! `train()` call, each owning a private job queue, fed per round over
+//! reusable channels and torn down only when the pool is dropped.
+//!
+//! ## NUMA organization
+//!
+//! Workers are laid out by the paper's placement policy
+//! ([`Topology::place_threads`]): the pool asks the topology how many
+//! workers belong on each node and tags every worker with its node id.
+//! [`WorkerPool::run_tagged`] routes node-tagged jobs to workers of that
+//! node (round-robin within the node's bucket queue), which is what keeps
+//! the hierarchical `numa` solver's per-node work on the node that owns
+//! the corresponding replica and bucket range. Thread→core pinning itself
+//! is not performed: `std` exposes no affinity API and the container
+//! forbids new dependencies, so the grouping is structural (queue-per-
+//! worker, worker-per-node) — the dispatch-overhead win does not depend
+//! on pinning, and a `libc`/`hwloc`-backed pin can be slotted into
+//! `worker_main` later without changing any caller.
+//!
+//! ## Determinism argument
+//!
+//! The pool is bit-wise interchangeable with [`Executor::Threads`] and
+//! [`Executor::Sequential`] for the replica solvers because:
+//!
+//! 1. every job a solver submits between two merge points reads only
+//!    snapshot state (`v` at the round start) plus `α` coordinates that
+//!    no other in-flight job touches — job outputs are a pure function of
+//!    the epoch assignment, independent of *where* or *when* the job runs;
+//! 2. [`WorkerPool::run`]/[`run_tagged`](WorkerPool::run_tagged) return
+//!    results **in job order**, and the solvers reduce deltas in that
+//!    order, so the floating-point merge order is identical across
+//!    executors.
+//!
+//! `rust/tests/pool_equivalence.rs` locks this in by asserting bit-wise
+//! equal `α`/`v` trajectories across all three executors.
+//!
+//! ## Safety
+//!
+//! Jobs borrow solver state (`&Dataset`, `&[AtomicF64]`, replica slices),
+//! so they are not `'static`. Like the classic scoped-thread-pool idiom,
+//! dispatch transmutes the job's lifetime away and **blocks until every
+//! job of the batch has completed** before returning — the borrows are
+//! live for the whole time any worker can touch them. A panicking job is
+//! caught on the worker (keeping the worker alive and the completion
+//! latch counted) and re-raised as a panic on the submitting thread.
+
+use crate::sysinfo::Topology;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased job as stored on a worker queue.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// SAFETY: the transmute only erases the borrow lifetime of the closure's
+/// captures. Soundness is restored by `run_routed`, which does not return
+/// until every submitted job has run to completion (or panicked) — the
+/// captures therefore outlive all worker-side use.
+unsafe fn erase_lifetime<'a>(f: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(f)
+}
+
+/// One worker's bucket queue: jobs in submission order + a closed flag.
+struct JobQueue {
+    state: Mutex<(VecDeque<Job>, bool)>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        JobQueue {
+            state: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut g = self.state.lock().unwrap();
+        g.0.push_back(job);
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.1 = true;
+        self.ready.notify_all();
+    }
+
+    /// Block until a job is available; `None` once closed and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = g.0.pop_front() {
+                return Some(job);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+}
+
+/// Countdown latch for one dispatch batch.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+}
+
+/// Raw slot pointer that may cross a thread boundary (each job writes a
+/// distinct slot; see `run_routed`).
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+/// Persistent worker pool with one job queue per worker, workers grouped
+/// per NUMA node (see the module docs).
+pub struct WorkerPool {
+    queues: Vec<Arc<JobQueue>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Node id of each worker (aligned with `queues`).
+    node_of: Vec<usize>,
+    /// Worker ids grouped per node: `node_workers[k]` = workers on node k.
+    node_workers: Vec<Vec<usize>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` resident workers laid out on `topo` by the paper's
+    /// thread-placement policy (data node first, minimal node count).
+    pub fn new(threads: usize, topo: &Topology) -> Self {
+        let threads = threads.max(1);
+        let placement = topo.place_threads(threads);
+        let mut queues = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        let mut node_of = Vec::with_capacity(threads);
+        let mut node_workers = vec![Vec::new(); placement.len()];
+        let mut wid = 0usize;
+        for (node, &count) in placement.iter().enumerate() {
+            for _ in 0..count {
+                let queue = Arc::new(JobQueue::new());
+                let worker_queue = Arc::clone(&queue);
+                let handle = std::thread::Builder::new()
+                    .name(format!("parlin-pool-n{node}-w{wid}"))
+                    .spawn(move || worker_main(worker_queue))
+                    .expect("spawn pool worker");
+                queues.push(queue);
+                handles.push(handle);
+                node_of.push(node);
+                node_workers[node].push(wid);
+                wid += 1;
+            }
+        }
+        WorkerPool {
+            queues,
+            handles,
+            node_of,
+            node_workers,
+        }
+    }
+
+    /// Number of resident workers.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// NUMA node a worker is assigned to.
+    pub fn node_of_worker(&self, worker: usize) -> usize {
+        self.node_of[worker]
+    }
+
+    /// Workers per node, aligned with the construction topology.
+    pub fn workers_per_node(&self) -> Vec<usize> {
+        self.node_workers.iter().map(|w| w.len()).collect()
+    }
+
+    /// Run all jobs to completion, returning results in job order.
+    /// Job `i` goes to worker `i % workers` — with one job per worker
+    /// (the solvers' merge-round shape) every worker gets exactly one.
+    pub fn run<R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        let routes: Vec<usize> = (0..jobs.len()).map(|i| i % self.workers()).collect();
+        self.run_routed(jobs, &routes)
+    }
+
+    /// Run node-tagged jobs: each job is queued on a worker of the tagged
+    /// node (round-robin within that node's workers); tags naming a node
+    /// with no workers fall back to the whole pool. Results are returned
+    /// in job order.
+    pub fn run_tagged<R, F>(&self, jobs: Vec<(usize, F)>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        let mut rr_node = vec![0usize; self.node_workers.len()];
+        let mut rr_any = 0usize;
+        let mut routes = Vec::with_capacity(jobs.len());
+        let mut fns = Vec::with_capacity(jobs.len());
+        for (node, f) in jobs {
+            let worker = match self.node_workers.get(node) {
+                Some(ws) if !ws.is_empty() => {
+                    let w = ws[rr_node[node] % ws.len()];
+                    rr_node[node] += 1;
+                    w
+                }
+                _ => {
+                    let w = rr_any % self.workers();
+                    rr_any += 1;
+                    w
+                }
+            };
+            routes.push(worker);
+            fns.push(f);
+        }
+        self.run_routed(fns, &routes)
+    }
+
+    fn run_routed<R, F>(&self, jobs: Vec<F>, routes: &[usize]) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        let count = jobs.len();
+        if count == 0 {
+            return Vec::new();
+        }
+        let mut results: Vec<Option<R>> = Vec::with_capacity(count);
+        results.resize_with(count, || None);
+        let latch = Latch::new(count);
+        let slots = SendPtr(results.as_mut_ptr());
+        for (i, (job, &worker)) in jobs.into_iter().zip(routes.iter()).enumerate() {
+            let latch_ref = &latch;
+            let thunk = move || {
+                match catch_unwind(AssertUnwindSafe(job)) {
+                    // SAFETY: slot i is written by exactly this job, and
+                    // `results` stays alive and unmoved until the latch
+                    // below confirms every job finished.
+                    Ok(r) => unsafe { *slots.0.add(i) = Some(r) },
+                    Err(_) => latch_ref.panicked.store(true, Ordering::SeqCst),
+                }
+                latch_ref.count_down();
+            };
+            let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(thunk);
+            self.queues[worker].push(unsafe { erase_lifetime(boxed) });
+        }
+        latch.wait();
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("a WorkerPool job panicked");
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("completed job left no result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for queue in &self.queues {
+            queue.close();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_main(queue: Arc<JobQueue>) {
+    while let Some(job) = queue.pop() {
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_in_job_order() {
+        let pool = WorkerPool::new(3, &Topology::flat(3));
+        let jobs: Vec<_> = (0..10).map(|i| move || i * 7).collect();
+        assert_eq!(pool.run(jobs), (0..10).map(|i| i * 7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_run_concurrently_on_distinct_workers() {
+        use std::sync::Barrier;
+        let pool = WorkerPool::new(4, &Topology::flat(4));
+        let barrier = Barrier::new(4);
+        // all four jobs must be in flight at once to pass the barrier
+        let jobs: Vec<_> = (0..4)
+            .map(|i| {
+                let b = &barrier;
+                move || {
+                    b.wait();
+                    i
+                }
+            })
+            .collect();
+        let mut got = pool.run(jobs);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn borrows_non_static_state() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        let data = vec![1.0f64; 64];
+        let sums = pool.run(
+            (0..2)
+                .map(|_| {
+                    let d = &data;
+                    move || d.iter().sum::<f64>()
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(sums, vec![64.0, 64.0]);
+        drop(data);
+    }
+
+    #[test]
+    fn numa_layout_follows_placement() {
+        let topo = Topology::uniform(2, 4);
+        let pool = WorkerPool::new(6, &topo);
+        assert_eq!(pool.workers(), 6);
+        assert_eq!(pool.workers_per_node(), topo.place_threads(6));
+        let nodes: Vec<usize> = (0..6).map(|w| pool.node_of_worker(w)).collect();
+        let on0 = nodes.iter().filter(|&&n| n == 0).count();
+        assert_eq!(on0, topo.place_threads(6)[0]);
+    }
+
+    #[test]
+    fn tagged_jobs_land_on_their_node() {
+        let topo = Topology::uniform(2, 2);
+        let pool = WorkerPool::new(4, &topo);
+        let hits: Vec<(usize, std::thread::ThreadId)> = pool
+            .run_tagged(
+                [(0usize, ()), (1, ()), (0, ()), (1, ())]
+                    .into_iter()
+                    .map(|(node, _)| (node, move || (node, std::thread::current().id())))
+                    .collect(),
+            )
+            .into_iter()
+            .collect();
+        // jobs tagged with different nodes must run on disjoint workers
+        let node0: Vec<_> = hits.iter().filter(|(n, _)| *n == 0).map(|(_, t)| *t).collect();
+        let node1: Vec<_> = hits.iter().filter(|(n, _)| *n == 1).map(|(_, t)| *t).collect();
+        for t0 in &node0 {
+            assert!(!node1.contains(t0), "node-tagged jobs shared a worker");
+        }
+    }
+
+    #[test]
+    fn tag_fallback_when_node_has_no_workers() {
+        // 2 workers fit on node 0 of a 2-node box; tags for node 1 must
+        // still execute (fall back to the whole pool)
+        let topo = Topology::uniform(2, 4);
+        let pool = WorkerPool::new(2, &topo);
+        let five: fn() -> i32 = || 5;
+        let six: fn() -> i32 = || 6;
+        let out = pool.run_tagged(vec![(1usize, five), (7, six)]);
+        assert_eq!(out, vec![5, 6]);
+    }
+
+    #[test]
+    fn reusable_across_many_rounds() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        let counter = AtomicUsize::new(0);
+        for _ in 0..500 {
+            let jobs: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = &counter;
+                    move || c.fetch_add(1, Ordering::Relaxed)
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        let out: Vec<u32> = pool.run(Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send>]);
+        }));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // the worker that caught the panic is still serving jobs
+        let one: fn() -> i32 = || 1;
+        let two: fn() -> i32 = || 2;
+        assert_eq!(pool.run(vec![one, two]), vec![1, 2]);
+    }
+}

@@ -26,6 +26,14 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     let t_threads = cfg.threads.max(1);
     let obj = cfg.obj;
     let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
+    // Persistent workers (or spawn-per-epoch / sequential, per config) —
+    // the racy shared-vector semantics are identical either way because
+    // the races live in the AtomicF64 accesses, not in the dispatcher.
+    let topo = cfg
+        .topology
+        .clone()
+        .unwrap_or_else(crate::sysinfo::Topology::detect);
+    let exec = cfg.build_executor(&topo);
 
     let alpha: Vec<AtomicF64> = atomic_vec(n);
     let v: Vec<AtomicF64> = atomic_vec(ds.d());
@@ -43,34 +51,34 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         // the scalability bottlenecks the paper measures (Fig. 2a).
         rng.shuffle(&mut perm);
         let chunk = n.div_ceil(t_threads);
-        std::thread::scope(|s| {
-            for tid in 0..t_threads {
-                let lo = tid * chunk;
-                let hi = ((tid + 1) * chunk).min(n);
-                if lo >= hi {
-                    continue;
-                }
-                let my = &perm[lo..hi];
-                let alpha = &alpha;
-                let v = &v;
-                let ds = &ds;
-                let obj = &obj;
-                s.spawn(move || {
-                    for &jj in my {
-                        let j = jj as usize;
-                        // READ current (possibly stale/racing) state
-                        let a = alpha[j].load();
-                        let xw = ds.x.dot_col_atomic(j, v) * inv_lambda_n;
-                        let delta = obj.delta(a, xw, ds.norm_sq(j), ds.y[j], n);
-                        if delta != 0.0 {
-                            // WRITE α_j (exclusive), ADD to v (wild)
-                            alpha[j].store(a + delta);
-                            ds.x.axpy_col_wild(j, delta, v);
-                        }
-                    }
-                });
+        let mut jobs = Vec::with_capacity(t_threads);
+        for tid in 0..t_threads {
+            let lo = tid * chunk;
+            let hi = ((tid + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
             }
-        });
+            let my = &perm[lo..hi];
+            let alpha = &alpha;
+            let v = &v;
+            let ds = &ds;
+            let obj = &obj;
+            jobs.push(move || {
+                for &jj in my {
+                    let j = jj as usize;
+                    // READ current (possibly stale/racing) state
+                    let a = alpha[j].load();
+                    let xw = ds.x.dot_col_atomic(j, v) * inv_lambda_n;
+                    let delta = obj.delta(a, xw, ds.norm_sq(j), ds.y[j], n);
+                    if delta != 0.0 {
+                        // WRITE α_j (exclusive), ADD to v (wild)
+                        alpha[j].store(a + delta);
+                        ds.x.axpy_col_wild(j, delta, v);
+                    }
+                }
+            });
+        }
+        exec.run(jobs);
         let a_snap = snapshot(&alpha);
         let rel = mon.observe(&a_snap);
         epochs.push(EpochStats {

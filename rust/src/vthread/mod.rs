@@ -249,7 +249,7 @@ fn apply_wild_axpy<M: DataMatrix>(
 /// Convergence-faithful simulated runs of the replica solvers: identical
 /// model trajectory to real threads (see `solver::exec`), any `T`.
 pub fn train_domesticated_sim<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
-    crate::solver::dom::train_domesticated_exec(ds, cfg, Executor::Sequential)
+    crate::solver::dom::train_domesticated_exec(ds, cfg, &Executor::Sequential)
 }
 
 /// Simulated NUMA-hierarchical run (see [`train_domesticated_sim`]).
@@ -258,7 +258,7 @@ pub fn train_numa_sim<M: DataMatrix>(
     cfg: &SolverConfig,
     topo: &Topology,
 ) -> TrainOutput {
-    crate::solver::numa::train_numa_exec(ds, cfg, topo, Executor::Sequential)
+    crate::solver::numa::train_numa_exec(ds, cfg, topo, &Executor::Sequential)
 }
 
 #[cfg(test)]

@@ -1,0 +1,131 @@
+//! Executor-equivalence guarantees for the persistent worker pool: models
+//! trained under `Pool`, `Threads` and `Sequential` executors must be
+//! **bit-wise identical** for the replica solvers (`dom`, `numa`) — the
+//! pool changes where worker jobs run, never what they compute or the
+//! order their deltas are reduced in. This extends the two-executor
+//! guarantee of `solver_equivalence.rs` to the pool path.
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::solver::exec::Executor;
+use parlin::solver::pool::WorkerPool;
+use parlin::solver::{dom, numa, train, ExecPolicy, SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+
+fn logistic(n: usize) -> Objective {
+    Objective::Logistic { lambda: 1.0 / n as f64 }
+}
+
+/// Fixed-epoch config so trajectories (not just fixed points) must agree.
+fn fixed_epochs(n: usize, threads: usize, epochs: usize) -> SolverConfig {
+    SolverConfig::new(logistic(n))
+        .with_threads(threads)
+        .with_tol(0.0)
+        .with_max_epochs(epochs)
+}
+
+#[test]
+fn dom_pool_threads_sequential_bitwise_identical_dense() {
+    let ds = synthetic::dense_classification(400, 16, 21);
+    for threads in [2usize, 4, 8] {
+        let cfg = fixed_epochs(400, threads, 12);
+        let pool = Executor::Pool(WorkerPool::new(threads, &Topology::flat(threads)));
+        let p = dom::train_domesticated_exec(&ds, &cfg, &pool);
+        let t = dom::train_domesticated_exec(&ds, &cfg, &Executor::Threads);
+        let s = dom::train_domesticated_exec(&ds, &cfg, &Executor::Sequential);
+        assert_eq!(p.state.alpha, t.state.alpha, "dom α pool vs threads, T={threads}");
+        assert_eq!(p.state.alpha, s.state.alpha, "dom α pool vs sequential, T={threads}");
+        assert_eq!(p.state.v, t.state.v, "dom v pool vs threads, T={threads}");
+        assert_eq!(p.state.v, s.state.v, "dom v pool vs sequential, T={threads}");
+    }
+}
+
+#[test]
+fn dom_pool_bitwise_identical_sparse() {
+    let ds = synthetic::sparse_classification(600, 150, 0.05, 22);
+    let cfg = fixed_epochs(600, 4, 10);
+    let pool = Executor::Pool(WorkerPool::new(4, &Topology::flat(4)));
+    let p = dom::train_domesticated_exec(&ds, &cfg, &pool);
+    let s = dom::train_domesticated_exec(&ds, &cfg, &Executor::Sequential);
+    assert_eq!(p.state.alpha, s.state.alpha);
+    assert_eq!(p.state.v, s.state.v);
+}
+
+#[test]
+fn numa_pool_threads_sequential_bitwise_identical() {
+    let ds = synthetic::dense_classification(360, 12, 23);
+    let topo = Topology::uniform(2, 4);
+    for threads in [4usize, 8] {
+        let cfg = fixed_epochs(360, threads, 10);
+        // pool laid out on the *same* topology the solver partitions by,
+        // so node-tagged jobs land on that node's bucket queues
+        let pool = Executor::Pool(WorkerPool::new(threads, &topo));
+        let p = numa::train_numa_exec(&ds, &cfg, &topo, &pool);
+        let t = numa::train_numa_exec(&ds, &cfg, &topo, &Executor::Threads);
+        let s = numa::train_numa_exec(&ds, &cfg, &topo, &Executor::Sequential);
+        assert_eq!(p.state.alpha, t.state.alpha, "numa α pool vs threads, T={threads}");
+        assert_eq!(p.state.alpha, s.state.alpha, "numa α pool vs sequential, T={threads}");
+        assert_eq!(p.state.v, t.state.v, "numa v pool vs threads, T={threads}");
+        assert_eq!(p.state.v, s.state.v, "numa v pool vs sequential, T={threads}");
+    }
+}
+
+/// The front door honours `ExecPolicy`: `train()` under Pool / Threads /
+/// Sequential policies produces identical models for both replica
+/// variants (the config-level version of the executor guarantee).
+#[test]
+fn front_door_exec_policies_identical() {
+    let ds = synthetic::dense_classification(300, 10, 24);
+    let topo = Topology::uniform(2, 2);
+    for variant in [Variant::Domesticated, Variant::Numa] {
+        let base = SolverConfig::new(logistic(300))
+            .with_variant(variant)
+            .with_threads(4)
+            .with_tol(0.0)
+            .with_max_epochs(8)
+            .with_topology(topo.clone());
+        let p = train(&ds, &base.clone().with_exec(ExecPolicy::Pool));
+        let t = train(&ds, &base.clone().with_exec(ExecPolicy::Threads));
+        let s = train(&ds, &base.clone().with_exec(ExecPolicy::Sequential));
+        assert_eq!(p.state.alpha, t.state.alpha, "{variant:?}: pool vs threads");
+        assert_eq!(p.state.alpha, s.state.alpha, "{variant:?}: pool vs sequential");
+        assert_eq!(p.state.v, t.state.v, "{variant:?}: v pool vs threads");
+    }
+}
+
+/// Non-logistic objectives go through the same worker plumbing — keep the
+/// pool bit-exact there too.
+#[test]
+fn pool_identical_across_objectives() {
+    let ds = synthetic::dense_classification(250, 8, 25);
+    for obj in [
+        Objective::Hinge { lambda: 1.0 / 250.0 },
+        Objective::Ridge { lambda: 0.05 },
+    ] {
+        let cfg = SolverConfig::new(obj)
+            .with_threads(3)
+            .with_tol(0.0)
+            .with_max_epochs(6);
+        let pool = Executor::Pool(WorkerPool::new(3, &Topology::flat(3)));
+        let p = dom::train_domesticated_exec(&ds, &cfg, &pool);
+        let s = dom::train_domesticated_exec(&ds, &cfg, &Executor::Sequential);
+        assert_eq!(p.state.alpha, s.state.alpha, "{obj:?}");
+        assert_eq!(p.state.v, s.state.v, "{obj:?}");
+    }
+}
+
+/// One pool serves many consecutive dispatch rounds of one run AND many
+/// runs in sequence (merge rounds reuse queues — nothing is respawned).
+#[test]
+fn one_pool_reused_across_runs_stays_exact() {
+    let ds = synthetic::dense_classification(200, 10, 26);
+    let pool = Executor::Pool(WorkerPool::new(4, &Topology::flat(4)));
+    let mut cfg = fixed_epochs(200, 4, 5);
+    cfg.merges_per_epoch = 4; // 20 dispatch rounds per run over one pool
+    let reference = dom::train_domesticated_exec(&ds, &cfg, &Executor::Sequential);
+    for run in 0..5 {
+        let out = dom::train_domesticated_exec(&ds, &cfg, &pool);
+        assert_eq!(out.state.alpha, reference.state.alpha, "run {run} drifted");
+        assert_eq!(out.state.v, reference.state.v, "run {run} drifted");
+    }
+}

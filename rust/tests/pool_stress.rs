@@ -1,0 +1,121 @@
+//! Pool lifecycle stress: a process that trains many times in a row, with
+//! varying worker counts, must not accumulate OS threads — every
+//! `train()`-scoped pool joins all of its workers on drop. The census
+//! reads the kernel's thread count for this process, so a leak anywhere
+//! in the dispatch path (worker never receiving the close signal, a
+//! queue keeping its thread parked forever, a panicked round orphaning
+//! workers) fails loudly.
+//!
+//! Kept as a single `#[test]` so no sibling test's threads run
+//! concurrently inside this binary and pollute the census.
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::solver::pool::WorkerPool;
+use parlin::solver::{dom, numa, train, SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+
+/// Threads currently owned by this process (Linux: `/proc/self/status`;
+/// elsewhere: 0, which degrades the assertions to leak-monotonicity).
+fn thread_census() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find_map(|l| {
+                l.strip_prefix("Threads:")
+                    .and_then(|v| v.trim().parse::<usize>().ok())
+            })
+        })
+        .unwrap_or(0)
+}
+
+/// Wait (bounded) for the kernel to reap exiting threads before counting.
+fn settled_census(target_max: usize) -> usize {
+    let mut count = thread_census();
+    for _ in 0..200 {
+        if count <= target_max {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        count = thread_census();
+    }
+    count
+}
+
+#[test]
+fn pool_survives_repeated_training_without_leaking_threads() {
+    let ds = synthetic::dense_classification(150, 8, 77);
+    let obj = Objective::Logistic { lambda: 1.0 / 150.0 };
+    let topo = Topology::uniform(2, 4);
+
+    // Warm-up: one run of each shape so lazily-initialized runtime state
+    // (allocator arenas, etc.) is excluded from the baseline.
+    let warm = SolverConfig::new(obj)
+        .with_threads(4)
+        .with_tol(0.0)
+        .with_max_epochs(1);
+    dom::train_domesticated(&ds, &warm);
+    numa::train_numa(&ds, &warm, &topo);
+    let baseline = settled_census(usize::MAX - 1);
+
+    // 1) 110 consecutive train() calls with the worker count changing
+    //    every call (1..=8): each call builds its pool, runs, joins it.
+    for i in 0..110usize {
+        let threads = 1 + (i % 8);
+        let variant = if i % 3 == 0 { Variant::Numa } else { Variant::Domesticated };
+        let cfg = SolverConfig::new(obj)
+            .with_variant(variant)
+            .with_threads(threads)
+            .with_topology(topo.clone())
+            .with_tol(0.0)
+            .with_max_epochs(2);
+        let out = train(&ds, &cfg);
+        assert_eq!(out.epochs_run, 2, "call {i} did not run its epochs");
+    }
+    let after_trains = settled_census(baseline);
+    assert!(
+        after_trains <= baseline,
+        "train() loop leaked threads: baseline={baseline}, after={after_trains}"
+    );
+
+    // 2) Raw pool churn across worker-count changes, with work dispatched
+    //    between every resize.
+    for workers in [1usize, 2, 8, 3, 16, 4, 1, 8] {
+        let pool = WorkerPool::new(workers, &topo);
+        assert_eq!(pool.workers(), workers);
+        let jobs: Vec<_> = (0..workers * 3).map(|k| move || k * k).collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..workers * 3).map(|k| k * k).collect::<Vec<_>>());
+        drop(pool);
+    }
+    let after_churn = settled_census(baseline);
+    assert!(
+        after_churn <= baseline,
+        "pool churn leaked threads: baseline={baseline}, after={after_churn}"
+    );
+
+    // 3) One resident pool hammered with many small rounds (the per-epoch
+    //    merge-round shape) keeps exactly its own workers alive.
+    {
+        let pool = WorkerPool::new(6, &topo);
+        let during_expected = baseline + 6;
+        for round in 0..300usize {
+            let jobs: Vec<_> = (0..6).map(|t| move || t + round).collect();
+            let out = pool.run(jobs);
+            assert_eq!(out[5], 5 + round);
+        }
+        let during = thread_census();
+        // census may be 0 on non-Linux; only check when it's meaningful
+        if during > 0 {
+            assert!(
+                during <= during_expected,
+                "resident pool grew threads mid-run: {during} > {during_expected}"
+            );
+        }
+    }
+    let final_count = settled_census(baseline);
+    assert!(
+        final_count <= baseline,
+        "resident pool leaked on drop: baseline={baseline}, final={final_count}"
+    );
+}

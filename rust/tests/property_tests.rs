@@ -5,6 +5,8 @@
 use parlin::data::{synthetic, CscMatrix, DataMatrix, Dataset, DenseMatrix};
 use parlin::glm::Objective;
 use parlin::runtime::manifest::Json;
+use parlin::solver::partition::{EpochAssignment, Partitioner};
+use parlin::solver::Partitioning;
 use parlin::util::Rng;
 
 /// Build a dense matrix and its exact sparse representation.
@@ -217,6 +219,98 @@ fn prop_thread_placement() {
             used <= min_nodes.max(1),
             "used {used} nodes for {threads} threads ({cores} cores/node)"
         );
+    }
+}
+
+/// Check one epoch assignment is an exact partition of the bucket space:
+/// no bucket dealt twice (disjointness), no bucket dropped (coverage).
+/// `replay` is printed on failure so the case can be re-run exactly.
+fn assert_exact_partition(a: &EpochAssignment, num_buckets: usize, replay: &str) {
+    let mut seen = vec![false; num_buckets];
+    for (worker, list) in a.per_worker.iter().enumerate() {
+        for &b in list {
+            assert!(
+                (b as usize) < num_buckets,
+                "{replay}: worker {worker} got out-of-range bucket {b}"
+            );
+            assert!(
+                !seen[b as usize],
+                "{replay}: bucket {b} dealt to two workers (second: {worker})"
+            );
+            seen[b as usize] = true;
+        }
+    }
+    let missing = seen.iter().filter(|&&s| !s).count();
+    assert_eq!(missing, 0, "{replay}: {missing} bucket(s) never dealt");
+}
+
+/// The paper's dynamic partitioning re-deals the *entire* bucket space
+/// every epoch. Whatever the (randomized) bucket/worker counts and seed,
+/// every epoch's assignment must cover all buckets exactly once across
+/// workers — this is what makes the parallel epoch semantically a full
+/// pass, i.e. the precondition of the executor-equivalence guarantees.
+#[test]
+fn prop_dynamic_partition_disjoint_and_covering() {
+    let mut seed_src = Rng::new(0xD7DA);
+    for trial in 0..60 {
+        let seed = seed_src.next_u64();
+        let mut rng = Rng::new(seed);
+        let num_buckets = 1 + rng.next_below(2500) as usize;
+        let workers = 1 + rng.next_below(33) as usize;
+        let replay = format!(
+            "replay: seed={seed} trial={trial} buckets={num_buckets} workers={workers}"
+        );
+        let mut p = Partitioner::new(Partitioning::Dynamic, num_buckets, workers);
+        for epoch in 0..6 {
+            let a = p.assign(&mut rng);
+            assert_exact_partition(&a, num_buckets, &format!("{replay} epoch={epoch}"));
+            assert_eq!(a.total(), num_buckets, "{replay} epoch={epoch}: total");
+            // the deal must stay balanced: worker loads differ by ≤ 1
+            let sizes: Vec<usize> = a.per_worker.iter().map(|w| w.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{replay} epoch={epoch}: unbalanced {sizes:?}");
+        }
+    }
+}
+
+/// Static partitioning must satisfy the same exact-partition invariant,
+/// with the extra property that membership never moves across epochs
+/// (only the within-chunk order reshuffles).
+#[test]
+fn prop_static_partition_membership_fixed() {
+    let mut seed_src = Rng::new(0x57A71C);
+    for trial in 0..30 {
+        let seed = seed_src.next_u64();
+        let mut rng = Rng::new(seed);
+        let num_buckets = 1 + rng.next_below(1200) as usize;
+        let workers = 1 + rng.next_below(17) as usize;
+        let replay = format!(
+            "replay: seed={seed} trial={trial} buckets={num_buckets} workers={workers}"
+        );
+        let mut p = Partitioner::new(Partitioning::Static, num_buckets, workers);
+        let first = p.assign(&mut rng);
+        assert_exact_partition(&first, num_buckets, &replay);
+        let membership: Vec<Vec<u32>> = first
+            .per_worker
+            .iter()
+            .map(|w| {
+                let mut m = w.clone();
+                m.sort_unstable();
+                m
+            })
+            .collect();
+        for epoch in 1..4 {
+            let a = p.assign(&mut rng);
+            assert_exact_partition(&a, num_buckets, &format!("{replay} epoch={epoch}"));
+            for (t, w) in a.per_worker.iter().enumerate() {
+                let mut m = w.clone();
+                m.sort_unstable();
+                assert_eq!(
+                    m, membership[t],
+                    "{replay} epoch={epoch}: static membership moved for worker {t}"
+                );
+            }
+        }
     }
 }
 

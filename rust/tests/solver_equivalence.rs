@@ -80,11 +80,11 @@ fn threaded_and_virtual_execution_identical() {
             .with_threads(threads)
             .with_tol(0.0)
             .with_max_epochs(12);
-        let real = dom::train_domesticated_exec(&ds, &cfg, Executor::Threads);
-        let sim = dom::train_domesticated_exec(&ds, &cfg, Executor::Sequential);
+        let real = dom::train_domesticated_exec(&ds, &cfg, &Executor::Threads);
+        let sim = dom::train_domesticated_exec(&ds, &cfg, &Executor::Sequential);
         assert_eq!(real.state.alpha, sim.state.alpha, "dom T={threads}");
-        let real_n = numa::train_numa_exec(&ds, &cfg, &topo, Executor::Threads);
-        let sim_n = numa::train_numa_exec(&ds, &cfg, &topo, Executor::Sequential);
+        let real_n = numa::train_numa_exec(&ds, &cfg, &topo, &Executor::Threads);
+        let sim_n = numa::train_numa_exec(&ds, &cfg, &topo, &Executor::Sequential);
         assert_eq!(real_n.state.alpha, sim_n.state.alpha, "numa T={threads}");
     }
 }

@@ -1,0 +1,212 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline toolchain cannot fetch registry crates, so this vendored
+//! implementation provides exactly the subset the repo uses:
+//!
+//! * [`Error`] — a message plus an optional cause chain; `Display` prints
+//!   the top message, alternate `{:#}` prints the full chain.
+//! * [`Result`] — `Result<T, Error>` alias with a defaultable error type.
+//! * [`anyhow!`] / [`bail!`] — formatted error construction / early return.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result` and
+//!   `Option`.
+//! * `impl From<E> for Error` for any `E: std::error::Error + Send + Sync`
+//!   so `?` lifts concrete errors (IO, parse, `xla::Error`, …).
+
+use std::fmt;
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the chain as rendered strings, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The root cause's message (innermost link of the chain).
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(next) = cur.source.as_deref() {
+            cur = next;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated (anyhow's format)
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what keeps the blanket `From` below coherent (exactly as in anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // flatten the std source chain into our message chain
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// `Result` with a defaultable error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` (or to `None`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::from(io_err()).context("open config");
+        assert_eq!(format!("{e}"), "open config");
+        assert_eq!(format!("{e:#}"), "open config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            let x: Result<u32, std::num::ParseIntError> = "zz".parse();
+            let _ = x.with_context(|| format!("parsing {}", "zz"))?;
+            bail!("unreachable {}", 1);
+        }
+        let err = inner().unwrap_err();
+        assert!(format!("{err:#}").starts_with("parsing zz: "));
+        let e2 = anyhow!("plain");
+        assert_eq!(e2.to_string(), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("empty").unwrap_err();
+        assert_eq!(err.to_string(), "empty");
+    }
+}
