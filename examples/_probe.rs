@@ -1,20 +1,40 @@
-use parlin::figures::*;
 use parlin::data::AnyDataset;
-use parlin::vthread::WildSimParams;
+use parlin::figures::*;
 use parlin::sysinfo::Topology;
+use parlin::vthread::WildSimParams;
+
 fn main() {
     let args: Vec<f64> = std::env::args().skip(1).map(|s| s.parse().unwrap()).collect();
     let pr = args[0];
-    for kind in [DsKind::DenseSynth, DsKind::SparseSynth, DsKind::CriteoLike, DsKind::HiggsLike] {
+    for kind in [
+        DsKind::DenseSynth,
+        DsKind::SparseSynth,
+        DsKind::CriteoLike,
+        DsKind::HiggsLike,
+    ] {
         let ds: AnyDataset = kind.make(false, 42);
         for t in [8usize, 16, 32] {
             let topo = Topology::uniform(4, 8);
-            let params = WildSimParams { p_collide_local: 0.0, p_collide_remote: pr, topology: topo };
-            let cfg = parlin::solver::SolverConfig::new(parlin::glm::Objective::Logistic { lambda: 10.0/ds.n() as f64 })
-                .with_threads(t).with_tol(1e-3).with_max_epochs(400).with_seed(42);
+            let params = WildSimParams {
+                p_collide_local: 0.0,
+                p_collide_remote: pr,
+                topology: topo,
+            };
+            let cfg = parlin::solver::SolverConfig::new(parlin::glm::Objective::Logistic {
+                lambda: 10.0 / ds.n() as f64,
+            })
+            .with_threads(t)
+            .with_tol(1e-3)
+            .with_max_epochs(400)
+            .with_seed(42);
             let out = parlin::with_ds!(&ds, d => parlin::vthread::train_wild_sim(d, &cfg, &params));
-            let rel = out.final_gap/out.final_primal.max(1e-12);
-            print!("  T={t}: ep={} rg={:.3}{}", out.epochs_run, rel, if rel<0.05 {""} else {"(WRONG)"});
+            let rel = out.final_gap / out.final_primal.max(1e-12);
+            print!(
+                "  T={t}: ep={} rg={:.3}{}",
+                out.epochs_run,
+                rel,
+                if rel < 0.05 { "" } else { "(WRONG)" }
+            );
         }
         println!("  <- {}", kind.name());
     }

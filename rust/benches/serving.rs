@@ -1,0 +1,74 @@
+//! Closed-loop serving benchmark (custom harness — no criterion in the
+//! offline toolchain): stand up one resident `Session`, replay a synthetic
+//! predict/refit request mix against it, and report per-kind p50/p99
+//! latency, throughput, pool busy-time imbalance, and the warm-vs-cold
+//! refit epoch comparison the subsystem exists for.
+//!
+//! ```bash
+//! cargo bench --bench serving
+//! ```
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::serve::{drive, synthetic_mix, Session};
+use parlin::solver::{SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use parlin::util::Timer;
+
+fn main() {
+    println!("== parlin serving bench (closed loop) ==\n");
+    let (n, d) = (20_000usize, 100usize);
+    let ds = synthetic::dense_classification(n, d, 1);
+    let cfg = SolverConfig::new(Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    })
+    .with_variant(Variant::Domesticated)
+    .with_threads(4)
+    .with_topology(Topology::flat(4))
+    .with_tol(1e-3)
+    .with_max_epochs(200);
+
+    let t = Timer::start();
+    let mut sess = Session::new(ds, cfg);
+    println!(
+        "session ready in {:.3}s (n={n}, d={d}, {} pool workers, gap {:.3e})\n",
+        t.elapsed_s(),
+        sess.workers(),
+        sess.gap().gap
+    );
+
+    // ---- request mix: ~90% predict(512), ~8% refit-rows(64), ~2% λ ----
+    let reqs = synthetic_mix(400, 512, 64, 7);
+    let report = drive(&mut sess, &reqs, 7);
+    print!("{}", report.summary());
+
+    let ps = sess.pool_stats();
+    println!(
+        "\npool: {} jobs over {} workers, busy imbalance {:.2} (max/mean)",
+        ps.total_jobs(),
+        ps.per_worker.len(),
+        ps.imbalance()
+    );
+    for w in &ps.per_worker {
+        println!(
+            "  worker {:>2} (node {}): {:>8} jobs, {:>9.3}s busy",
+            w.worker, w.node, w.jobs, w.busy_s
+        );
+    }
+
+    // ---- the core serving claim: warm refit ≪ cold retrain -------------
+    let fresh = synthetic::dense_classification(n / 20, d, 9); // +5% rows
+    let warm = sess.partial_fit_rows(&fresh);
+    let cold = sess.retrain_same();
+    println!(
+        "\nwarm refit after +5% rows: {:>3} epochs ({:.3}s)\n\
+         cold retrain, same data:   {:>3} epochs ({:.3}s)\n\
+         epoch ratio: {:.2}x (warm start re-enters the solver from the \
+         served model instead of α = 0)",
+        warm.epochs,
+        warm.wall_s,
+        cold.epochs,
+        cold.wall_s,
+        cold.epochs as f64 / warm.epochs.max(1) as f64
+    );
+}

@@ -93,7 +93,10 @@ mod tests {
         // liblinear's home turf: L2-regularized SVM
         let ds = synthetic::dense_classification(300, 10, 2);
         let obj = Objective::Hinge { lambda: 1e-2 };
-        let out = train_dual_cd(&ds, &BaselineConfig::new(obj).with_tol(1e-8).with_max_epochs(2000));
+        let out = train_dual_cd(
+            &ds,
+            &BaselineConfig::new(obj).with_tol(1e-8).with_max_epochs(2000),
+        );
         assert!(out.converged);
         let idx: Vec<usize> = (0..300).collect();
         assert!(crate::glm::accuracy(&ds, &out.w, &idx) > 0.85);
@@ -103,7 +106,10 @@ mod tests {
     fn sparse_converges() {
         let ds = synthetic::sparse_classification(400, 120, 0.05, 3);
         let obj = Objective::Logistic { lambda: 1.0 / 400.0 };
-        let out = train_dual_cd(&ds, &BaselineConfig::new(obj).with_tol(1e-6).with_max_epochs(1000));
+        let out = train_dual_cd(
+            &ds,
+            &BaselineConfig::new(obj).with_tol(1e-6).with_max_epochs(1000),
+        );
         assert!(out.converged);
     }
 }

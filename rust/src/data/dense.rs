@@ -2,7 +2,7 @@
 //! `data[j·d .. (j+1)·d]`, so one SDCA step streams exactly one column —
 //! the access pattern the paper's prefetching argument relies on.
 
-use super::DataMatrix;
+use super::{AppendExamples, DataMatrix};
 use crate::util;
 
 #[derive(Clone, Debug)]
@@ -100,6 +100,14 @@ impl DenseMatrix {
         for (r, &j) in rows.iter().enumerate() {
             out[r * self.d..(r + 1) * self.d].copy_from_slice(self.col(j));
         }
+    }
+}
+
+impl AppendExamples for DenseMatrix {
+    fn append_examples(&mut self, other: &Self) {
+        assert_eq!(self.d, other.d, "feature dimension mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.n += other.n;
     }
 }
 

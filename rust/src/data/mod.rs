@@ -64,6 +64,16 @@ pub trait DataMatrix: Sync {
     }
 }
 
+/// Growable example axis: matrix layouts that can take freshly arrived
+/// examples in place. The serving subsystem ([`crate::serve`]) appends new
+/// rows to a resident dataset and warm-restarts training from the existing
+/// dual state instead of re-loading and re-training from scratch.
+pub trait AppendExamples: DataMatrix + Sized {
+    /// Append `other`'s examples (columns) after this matrix's own; the
+    /// feature dimension must match.
+    fn append_examples(&mut self, other: &Self);
+}
+
 /// A labelled dataset: matrix + targets + cached per-example squared norms.
 ///
 /// Labels are `±1` for classification objectives and real-valued for ridge
@@ -107,6 +117,17 @@ impl<M: DataMatrix> Dataset<M> {
         } else {
             self.x.nnz() * 12
         }
+    }
+}
+
+impl<M: AppendExamples> Dataset<M> {
+    /// Append another dataset's examples in place (labels and cached norms
+    /// included) — the serving-side ingestion path.
+    pub fn append(&mut self, other: &Dataset<M>) {
+        assert_eq!(self.d(), other.d(), "feature dimension mismatch");
+        self.x.append_examples(&other.x);
+        self.y.extend_from_slice(&other.y);
+        self.norms_sq.extend_from_slice(&other.norms_sq);
     }
 }
 
@@ -204,6 +225,41 @@ mod tests {
     fn dataset_rejects_label_mismatch() {
         let m = DenseMatrix::from_columns(2, &[&[1.0, 2.0]]);
         let _ = Dataset::new(m, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn append_dense_examples() {
+        let a = DenseMatrix::from_columns(2, &[&[1.0, 2.0], &[3.0, 4.0]]);
+        let mut dsa = Dataset::new(a, vec![1.0, -1.0]);
+        let b = DenseMatrix::from_columns(2, &[&[5.0, 6.0]]);
+        let dsb = Dataset::new(b, vec![1.0]);
+        dsa.append(&dsb);
+        assert_eq!(dsa.n(), 3);
+        assert_eq!(dsa.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(dsa.x.col(2), &[5.0, 6.0]);
+        assert!((dsa.norm_sq(2) - 61.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn append_sparse_examples() {
+        let a = CscMatrix::from_examples(3, &[vec![(0, 1.0)], vec![(2, 2.0)]]);
+        let mut dsa = Dataset::new(a, vec![1.0, -1.0]);
+        let b = CscMatrix::from_examples(3, &[vec![(1, 3.0), (2, 4.0)]]);
+        let dsb = Dataset::new(b, vec![1.0]);
+        dsa.append(&dsb);
+        assert_eq!((dsa.n(), dsa.x.nnz()), (3, 4));
+        let (idx, val) = dsa.x.col(2);
+        assert_eq!(idx, &[1, 2]);
+        assert_eq!(val, &[3.0, 4.0]);
+        assert!((dsa.norm_sq(2) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn append_rejects_dimension_mismatch() {
+        let mut a = Dataset::new(DenseMatrix::zeros(2, 1), vec![1.0]);
+        let b = Dataset::new(DenseMatrix::zeros(3, 1), vec![1.0]);
+        a.append(&b);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! which halves index bandwidth vs `usize` — per-epoch time on sparse data
 //! is dominated by streaming `(index, value)` pairs.
 
-use super::DataMatrix;
+use super::{AppendExamples, DataMatrix};
 
 #[derive(Clone, Debug)]
 pub struct CscMatrix {
@@ -82,6 +82,18 @@ impl CscMatrix {
     /// Average non-zeros per example.
     pub fn avg_nnz(&self) -> f64 {
         self.nnz() as f64 / self.n as f64
+    }
+}
+
+impl AppendExamples for CscMatrix {
+    fn append_examples(&mut self, other: &Self) {
+        assert_eq!(self.d, other.d, "feature dimension mismatch");
+        let base = *self.col_ptr.last().unwrap();
+        self.col_ptr
+            .extend(other.col_ptr.iter().skip(1).map(|&p| base + p));
+        self.idx.extend_from_slice(&other.idx);
+        self.val.extend_from_slice(&other.val);
+        self.n += other.n;
     }
 }
 

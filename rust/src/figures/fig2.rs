@@ -73,7 +73,8 @@ fn fig2b(opts: &FigOpts) -> Result<()> {
         let out = with_ds!(&ds, d => crate::vthread::train_domesticated_sim(d, &cfg));
         let mut o = CostOpts::new(k);
         o.numa_aware = true;
-        let es = epoch_time(&machine, &w, SolverKind::Domesticated(Partitioning::Static), &o).total();
+        let es =
+            epoch_time(&machine, &w, SolverKind::Domesticated(Partitioning::Static), &o).total();
         let total = out.epochs_run as f64 * es;
         table.row(&[
             k.to_string(),

@@ -91,7 +91,8 @@ fn fig5b(opts: &FigOpts) -> Result<()> {
             let mut row = Vec::new();
             let mut totals = Vec::new();
             for bucket in [1usize, auto_bucket.max(machine.entries_per_line())] {
-                let mut pt = run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+                let mut pt =
+                    run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
                 let mut o = CostOpts::new(t);
                 o.bucket_size = bucket;
                 o.numa_aware = true;
@@ -145,7 +146,8 @@ fn fig5c(opts: &FigOpts) -> Result<()> {
             }
             // flat: dynamic partitioning across all threads, oblivious
             // placement (remote streaming, cross-node merges)
-            let cfg = fig_config(&ds, t, bucket, opts.seed, 10.0).with_partition(Partitioning::Dynamic);
+            let cfg = fig_config(&ds, t, bucket, opts.seed, 10.0)
+                .with_partition(Partitioning::Dynamic);
             let flat_out = with_ds!(&ds, d => crate::vthread::train_domesticated_sim(d, &cfg));
             let mut o_flat = CostOpts::new(t);
             o_flat.bucket_size = bucket;
@@ -158,7 +160,8 @@ fn fig5c(opts: &FigOpts) -> Result<()> {
             );
             let flat_total = flat_out.epochs_run as f64 * flat_es;
             // numa-aware hierarchical
-            let mut numa = run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+            let mut numa =
+                run_snap(&ds, &machine, t, Partitioning::Dynamic, bucket, opts.seed, 10.0);
             let mut o = CostOpts::new(t);
             o.bucket_size = bucket;
             o.numa_aware = true;

@@ -86,7 +86,15 @@ pub fn run(opts: &FigOpts) -> Result<()> {
 
             // ---- snap 1T and snap MT (this paper)
             for (label, threads) in [("snap.ml 1T", 1usize), ("snap.ml MT", max_t)] {
-                let pt = run_snap(&ds, &machine, threads, Partitioning::Dynamic, bucket, opts.seed, 10.0);
+                let pt = run_snap(
+                    &ds,
+                    &machine,
+                    threads,
+                    Partitioning::Dynamic,
+                    bucket,
+                    opts.seed,
+                    10.0,
+                );
                 let mut o = CostOpts::new(threads);
                 o.bucket_size = bucket;
                 o.numa_aware = true;
@@ -113,7 +121,11 @@ pub fn run(opts: &FigOpts) -> Result<()> {
 
             // ---- baseline classes
             let runs: Vec<(&str, &str, crate::baselines::BaselineOutput)> = vec![
-                ("sklearn liblinear", "liblinear", with_ds!(&ds, d => dual_cd::train_dual_cd(d, &bcfg))),
+                (
+                    "sklearn liblinear",
+                    "liblinear",
+                    with_ds!(&ds, d => dual_cd::train_dual_cd(d, &bcfg)),
+                ),
                 ("sklearn lbfgs", "lbfgs", with_ds!(&ds, d => lbfgs::train_lbfgs(d, &bcfg))),
                 ("sklearn sag", "sag", with_ds!(&ds, d => sag::train_sag(d, &bcfg))),
                 ("h2o auto", "h2o", with_ds!(&ds, d => h2o_auto(d, &bcfg))),

@@ -33,6 +33,24 @@ impl ModelState {
         self.v.iter().map(|&vi| vi * scale).collect()
     }
 
+    /// Warm-start seed for a dataset that grew to `n_total` examples: `α`
+    /// is extended with zeros for the appended examples (a dual-feasible
+    /// point — new examples enter exactly as they would at a cold start)
+    /// and `v` is carried over unchanged (`v = Σ α_i x_i` has no term for
+    /// a zero-`α` example).
+    pub fn extended(&self, n_total: usize) -> ModelState {
+        assert!(
+            n_total >= self.alpha.len(),
+            "extended() cannot shrink the example axis"
+        );
+        let mut alpha = self.alpha.clone();
+        alpha.resize(n_total, 0.0);
+        ModelState {
+            alpha,
+            v: self.v.clone(),
+        }
+    }
+
     /// Recompute `v` from scratch (`v = Σ α_i x_i`). Used by the replica
     /// solvers after merges, and by tests to bound drift of the
     /// incrementally-maintained `v`.
@@ -89,6 +107,17 @@ mod tests {
         };
         let w = st.w(&obj);
         assert_eq!(w, vec![1.0, -2.0]); // v/(0.5·4)
+    }
+
+    #[test]
+    fn extended_appends_zero_alphas() {
+        let st = ModelState {
+            alpha: vec![1.0, -2.0],
+            v: vec![0.5, 0.25],
+        };
+        let ext = st.extended(4);
+        assert_eq!(ext.alpha, vec![1.0, -2.0, 0.0, 0.0]);
+        assert_eq!(ext.v, vec![0.5, 0.25]);
     }
 
     #[test]

@@ -23,6 +23,16 @@ impl Objective {
         }
     }
 
+    /// The same loss family with a different regularization strength (the
+    /// serving subsystem's hyperparameter-refit request).
+    pub fn with_lambda(&self, lambda: f64) -> Objective {
+        match self {
+            Objective::Logistic { .. } => Objective::Logistic { lambda },
+            Objective::Ridge { .. } => Objective::Ridge { lambda },
+            Objective::Hinge { .. } => Objective::Hinge { lambda },
+        }
+    }
+
     /// Primal loss `ℓ(z)` at margin/prediction `z` with target `y`.
     #[inline]
     pub fn primal_loss(&self, z: f64, y: f64) -> f64 {
@@ -177,7 +187,15 @@ mod tests {
     /// single-example problem, δ must be a stationary/optimal point of
     /// h(δ) = ℓ*(−(α+δ)) / n + (λ/2)‖w + δ·x/(λn)‖² — we check it by
     /// brute-force sampling of the 1-D objective.
-    fn subproblem_value(obj: &Objective, alpha: f64, delta: f64, xw: f64, nsq: f64, y: f64, n: usize) -> f64 {
+    fn subproblem_value(
+        obj: &Objective,
+        alpha: f64,
+        delta: f64,
+        xw: f64,
+        nsq: f64,
+        y: f64,
+        n: usize,
+    ) -> f64 {
         let lambda = obj.lambda();
         let a = alpha + delta;
         let conj = obj.dual_conjugate(a, y);
@@ -307,5 +325,17 @@ mod tests {
         for obj in OBJS {
             assert_eq!(obj.delta(0.3, 1.0, 0.0, 1.0, 10), 0.0);
         }
+    }
+
+    #[test]
+    fn with_lambda_keeps_loss_family() {
+        assert_eq!(
+            Objective::Hinge { lambda: 0.1 }.with_lambda(0.2),
+            Objective::Hinge { lambda: 0.2 }
+        );
+        assert_eq!(
+            Objective::Logistic { lambda: 1.0 }.with_lambda(0.5).lambda(),
+            0.5
+        );
     }
 }

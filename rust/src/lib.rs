@@ -40,6 +40,7 @@ pub mod figures;
 pub mod glm;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod simcost;
 pub mod solver;
 pub mod sysinfo;

@@ -5,13 +5,16 @@
 //!                [--threads N] [--lambda X] [--tol X] [--max-epochs N]
 //!                [--bucket auto|off|K] [--partition dynamic|static]
 //!                [--objective logistic|ridge|hinge] [--seed N] [--csv out.csv]
+//! parlin serve   --dataset <kind|file.libsvm> [--requests <script|synthetic>]
+//!                [--count N] [--predict-batch N] [--refit-rows N] [train opts]
 //! parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
 //! parlin inspect               # host topology, cache geometry, artifacts
 //! parlin eval    --dataset <kind> --artifacts DIR   # HLO-path evaluation demo
 //! ```
 //!
 //! The argument parser is hand-rolled: the offline toolchain ships only the
-//! `xla` crate closure (no clap).
+//! `xla` crate closure (no clap). Both `--flag value` and `--flag=value`
+//! are accepted.
 
 use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
@@ -33,6 +36,7 @@ fn main() {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&parse_flags(&args[1..])?),
+        Some("serve") => cmd_serve(&parse_flags(&args[1..])?),
         Some("figures") => cmd_figures(&parse_flags(&args[1..])?),
         Some("inspect") => cmd_inspect(),
         Some("eval") => cmd_eval(&parse_flags(&args[1..])?),
@@ -49,9 +53,12 @@ parlin — parallel GLM training (SDCA) without compromising convergence
 
 USAGE:
   parlin train --dataset <kind|file.libsvm> [options]
+  parlin serve --dataset <kind|file.libsvm> [--requests <script|synthetic>] [options]
   parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
   parlin inspect
   parlin eval --dataset <kind> [--artifacts DIR]
+
+Flags accept both `--flag value` and `--flag=value`.
 
 TRAIN OPTIONS:
   --dataset     dense-synth | sparse-synth | higgs-like | epsilon-like |
@@ -68,9 +75,23 @@ TRAIN OPTIONS:
   --n / --d     synthetic dataset size overrides
   --seed        RNG seed                              (default 42)
   --csv         write the per-epoch log to a CSV file
+
+SERVE OPTIONS (plus the train options above):
+  --requests       'synthetic' or a request-script path   (default synthetic)
+                   script lines: predict K | refit-rows K |
+                   refit-lambda X | retrain   (# comments allowed)
+  --count          synthetic request count               (default 200)
+  --predict-batch  examples per synthetic predict        (default 256)
+  --refit-rows     rows per synthetic refit              (default 32)
+  One resident Session (dataset + model + worker pool) answers every
+  request: predicts run as NUMA-sharded parallel margins, refits
+  warm-start from the current model, retrains reuse the same pool.
+  Output: per-kind p50/p99 latency, throughput and per-worker busy time.
 ";
 
-/// `--key value` flag parser (flags without a value get "true").
+/// Flag parser accepting `--key value` and `--key=value` (flags without a
+/// value get "true"). The `=` form is what shells and scripts commonly
+/// emit; it used to be silently mis-parsed as a flag named `key=value`.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut map = HashMap::new();
     let mut i = 0;
@@ -78,6 +99,14 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
         let key = args[i]
             .strip_prefix("--")
             .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        if let Some((k, v)) = key.split_once('=') {
+            if k.is_empty() {
+                bail!("empty flag name in '{}'", args[i]);
+            }
+            map.insert(k.to_string(), v.to_string());
+            i += 1;
+            continue;
+        }
         let has_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
         if has_value {
             map.insert(key.to_string(), args[i + 1].clone());
@@ -137,9 +166,9 @@ fn load_dataset(flags: &HashMap<String, String>) -> Result<AnyDataset> {
     bail!("unknown dataset '{spec}' (not a kind, not a file)");
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
-    let ds = load_dataset(flags)?;
-    let n = ds.n();
+/// Build a [`SolverConfig`] from the shared CLI flags (`train` and
+/// `serve` accept the same solver knobs).
+fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<SolverConfig> {
     let lambda: f64 = get_parse(flags, "lambda", 1.0 / n as f64)?;
     let obj = match flags
         .get("objective")
@@ -179,7 +208,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         "seq" | "sequential" => ExecPolicy::Sequential,
         other => bail!("unknown executor '{other}'"),
     };
-    let cfg = SolverConfig::new(obj)
+    Ok(SolverConfig::new(obj)
         .with_variant(variant)
         .with_threads(get_parse(flags, "threads", 1usize)?)
         .with_tol(get_parse(flags, "tol", 1e-3f64)?)
@@ -187,14 +216,21 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         .with_bucket(bucket)
         .with_partition(partition)
         .with_exec(exec)
-        .with_seed(get_parse(flags, "seed", 42u64)?);
+        .with_seed(get_parse(flags, "seed", 42u64)?))
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let ds = load_dataset(flags)?;
+    let n = ds.n();
+    let cfg = solver_cfg_from_flags(flags, n)?;
 
     println!(
-        "training: n={n} d={} nnz={} solver={:?} threads={} λ={lambda:.3e}",
+        "training: n={n} d={} nnz={} solver={:?} threads={} λ={:.3e}",
         ds.d(),
         ds.nnz(),
-        variant,
-        cfg.threads
+        cfg.variant,
+        cfg.threads,
+        cfg.obj.lambda()
     );
     let out = parlin::figures::with_ds!(&ds, d => train(d, &cfg));
     println!(
@@ -219,6 +255,83 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         out.record.write_csv(Path::new(csv))?;
         println!("per-epoch log -> {csv}");
     }
+    Ok(())
+}
+
+/// Stand up a resident serving session and replay a request stream
+/// against it (closed loop), then print latency and pool-load statistics.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let ds = load_dataset(flags)?;
+    let n = ds.n();
+    let cfg = solver_cfg_from_flags(flags, n)?;
+    let seed = get_parse(flags, "seed", 42u64)?;
+    let reqs = match flags.get("requests").map(String::as_str) {
+        None | Some("synthetic") | Some("true") => parlin::serve::synthetic_mix(
+            get_parse(flags, "count", 200usize)?,
+            get_parse(flags, "predict-batch", 256usize)?,
+            get_parse(flags, "refit-rows", 32usize)?,
+            seed,
+        ),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading request script {path}"))?;
+            parlin::serve::parse_script(&text)?
+        }
+    };
+    println!(
+        "serving: n={n} d={} threads={} requests={}",
+        ds.d(),
+        cfg.threads,
+        reqs.len()
+    );
+    parlin::figures::with_ds!(ds, d => run_serve(d, cfg, &reqs, seed))
+}
+
+fn run_serve<M>(
+    ds: parlin::data::Dataset<M>,
+    cfg: SolverConfig,
+    reqs: &[parlin::serve::Request],
+    seed: u64,
+) -> Result<()>
+where
+    M: parlin::serve::SynthRows,
+{
+    let t = parlin::util::Timer::start();
+    let mut sess = parlin::serve::Session::new(ds, cfg);
+    println!(
+        "session ready in {:.3}s ({} pool workers, initial gap {:.3e})",
+        t.elapsed_s(),
+        sess.workers(),
+        sess.gap().gap
+    );
+    let report = parlin::serve::drive(&mut sess, reqs, seed);
+    print!("{}", report.summary());
+    let ps = sess.pool_stats();
+    println!(
+        "pool: {} workers, {} jobs, busy imbalance {:.2} (max/mean)",
+        ps.per_worker.len(),
+        ps.total_jobs(),
+        ps.imbalance()
+    );
+    for w in &ps.per_worker {
+        println!(
+            "  worker {:>2} (node {}): {:>8} jobs, {:>9.3}s busy",
+            w.worker, w.node, w.jobs, w.busy_s
+        );
+    }
+    let s = sess.stats();
+    println!(
+        "session: {} predicts ({} examples), {} refits ({} epochs), \
+         {} retrains ({} epochs); final n={}, gap {:.3e}",
+        s.predicts,
+        s.predicted_examples,
+        s.refits,
+        report.refit_epochs,
+        s.retrains,
+        report.retrain_epochs,
+        sess.n(),
+        sess.gap().gap
+    );
     Ok(())
 }
 
@@ -301,4 +414,53 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
         m.count, m.mean_loss, m.accuracy, out.epochs_run, out.final_gap
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_space_and_equals_forms_agree() {
+        let a = parse_flags(&args(&["--threads", "4", "--tol", "1e-4", "--quick"])).unwrap();
+        let b = parse_flags(&args(&["--threads=4", "--tol=1e-4", "--quick"])).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.get("threads").map(String::as_str), Some("4"));
+        assert_eq!(a.get("tol").map(String::as_str), Some("1e-4"));
+        assert_eq!(a.get("quick").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn parse_flags_equals_values_keep_equals_and_dashes() {
+        let m = parse_flags(&args(&["--out=a=b", "--lambda=-0.5", "--csv="])).unwrap();
+        assert_eq!(m.get("out").map(String::as_str), Some("a=b"));
+        assert_eq!(m.get("lambda").map(String::as_str), Some("-0.5"));
+        assert_eq!(m.get("csv").map(String::as_str), Some(""));
+    }
+
+    #[test]
+    fn parse_flags_mixed_forms_in_one_command() {
+        let m = parse_flags(&args(&["--dataset=dense-synth", "--threads", "8"])).unwrap();
+        assert_eq!(m.get("dataset").map(String::as_str), Some("dense-synth"));
+        assert_eq!(m.get("threads").map(String::as_str), Some("8"));
+    }
+
+    #[test]
+    fn parse_flags_rejects_bad_input() {
+        assert!(parse_flags(&args(&["positional"])).is_err());
+        assert!(parse_flags(&args(&["--=3"])).is_err());
+    }
+
+    #[test]
+    fn solver_cfg_respects_equals_form_flags() {
+        let flags = parse_flags(&args(&["--threads=4", "--lambda=0.01", "--solver=dom"])).unwrap();
+        let cfg = solver_cfg_from_flags(&flags, 100).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.variant, Variant::Domesticated);
+        assert!((cfg.obj.lambda() - 0.01).abs() < 1e-15);
+    }
 }

@@ -1,0 +1,58 @@
+//! Pool-resident serving: the trained model as a long-lived service.
+//!
+//! The paper builds a training system tuned to the machine (bucketed,
+//! dynamically partitioned, NUMA-hierarchical SDCA); SySCD-style systems
+//! show the same design carrying over to a resident, reusable runtime.
+//! This module is that runtime: a [`Session`] owns
+//!
+//! * one `Arc<`[`WorkerPool`](crate::solver::WorkerPool)`>` — the
+//!   persistent NUMA-aware workers, spawned **once** and reused by every
+//!   request the session ever serves (training dispatch reaches them via
+//!   [`ExecPolicy::Shared`](crate::solver::ExecPolicy)),
+//! * the dataset (appendable in place — `refit-rows` requests grow it),
+//! * the current trained [`ModelState`](crate::glm::ModelState) and its
+//!   cached primal weights.
+//!
+//! Three request kinds run over the pool's bucket queues:
+//!
+//! | request                  | entry point                       | start     |
+//! |--------------------------|-----------------------------------|-----------|
+//! | `predict(batch)`         | [`Session::predict`]              | —         |
+//! | `partial_fit(rows \| λ)` | [`Session::partial_fit_rows`] / [`Session::partial_fit_lambda`] | warm      |
+//! | `retrain(cfg)`           | [`Session::retrain`]              | cold      |
+//!
+//! ## Determinism of sharded predict
+//!
+//! [`Session::predict`] splits a request batch into one contiguous shard
+//! per resident worker and tags shard `s` with worker `s`'s NUMA node, so
+//! each shard's column reads stay on the node that would own those rows
+//! under the hierarchical solver's static example split. The result is
+//! still bit-wise equal to the sequential batch path
+//! ([`glm::model::margins`](crate::glm::model::margins)) because:
+//!
+//! 1. each margin `z_j = ⟨x_j, w⟩` is a pure function of a read-only
+//!    dataset column and the frozen weight vector — predict shards share
+//!    no mutable state, so *where* a shard runs cannot change any value;
+//! 2. shards are disjoint, contiguous sub-slices of the request batch, and
+//!    [`WorkerPool::run_tagged`](crate::solver::WorkerPool::run_tagged)
+//!    returns results **in job order** — concatenating them reproduces the
+//!    batch order exactly, independent of worker count, node layout or
+//!    scheduling.
+//!
+//! `rust/tests/serving.rs` locks this in against `glm::model::margins`.
+//!
+//! ## Warm-start refit
+//!
+//! `partial_fit` re-enters the solver from the session's current state
+//! instead of `α = 0`: appended examples get `α = 0` entries
+//! ([`ModelState::extended`](crate::glm::ModelState::extended)), `v` is
+//! rebuilt exactly from `α`, and the solver's convergence monitor is
+//! seeded with the warm state so an (almost) converged refit stops after
+//! one epoch. The same resident pool executes the refit — no worker is
+//! spawned or torn down on the request path.
+
+pub mod request;
+pub mod session;
+
+pub use request::{drive, parse_script, synthetic_mix, Request, ServeReport, SynthRows};
+pub use session::{RefitReport, Session, SessionStats};

@@ -1,0 +1,276 @@
+//! Serving requests: the wire-level model of `parlin serve` — a parsed
+//! request script or a deterministic synthetic mix — plus the closed-loop
+//! driver that replays requests against a [`Session`] and records
+//! latencies.
+
+use crate::data::{synthetic, AppendExamples, CscMatrix, Dataset, DenseMatrix};
+use crate::serve::session::Session;
+use crate::util::{percentile, Rng, Timer};
+use anyhow::{anyhow, bail, Result};
+
+/// One serving request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Margins for `batch` examples (the driver picks a deterministic
+    /// rotating window over the resident dataset).
+    Predict { batch: usize },
+    /// Append `rows` freshly generated examples and warm-start refit.
+    RefitRows { rows: usize },
+    /// Change the regularization strength and warm-start refit.
+    RefitLambda { lambda: f64 },
+    /// Cold retrain with the session's current configuration.
+    Retrain,
+}
+
+/// Parse a request script: one request per line, `#` comments, blank
+/// lines ignored.
+///
+/// ```text
+/// predict 256        # margins for 256 examples
+/// refit-rows 50      # append 50 rows, warm refit
+/// refit-lambda 1e-3  # change λ, warm refit
+/// retrain            # cold retrain
+/// ```
+pub fn parse_script(text: &str) -> Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let mut parts = line.split_whitespace();
+        let verb = parts.next().unwrap_or("");
+        let arg = parts.next();
+        if parts.next().is_some() {
+            bail!("line {lineno}: too many fields in '{line}'");
+        }
+        let req = match (verb, arg) {
+            ("predict", Some(k)) => Request::Predict {
+                batch: k
+                    .parse()
+                    .map_err(|e| anyhow!("line {lineno}: predict batch '{k}': {e}"))?,
+            },
+            ("refit-rows", Some(k)) => Request::RefitRows {
+                rows: k
+                    .parse()
+                    .map_err(|e| anyhow!("line {lineno}: refit-rows count '{k}': {e}"))?,
+            },
+            ("refit-lambda", Some(l)) => {
+                let lambda: f64 = l
+                    .parse()
+                    .map_err(|e| anyhow!("line {lineno}: refit-lambda value '{l}': {e}"))?;
+                if !lambda.is_finite() || lambda <= 0.0 {
+                    bail!("line {lineno}: refit-lambda must be finite and positive, got '{l}'");
+                }
+                Request::RefitLambda { lambda }
+            }
+            ("retrain", None) => Request::Retrain,
+            _ => bail!(
+                "line {lineno}: unknown request '{line}' \
+                 (expected: predict K | refit-rows K | refit-lambda X | retrain)"
+            ),
+        };
+        out.push(req);
+    }
+    Ok(out)
+}
+
+/// Deterministic synthetic request mix: ~90% predicts, ~8% row refits,
+/// ~2% λ refits — the serving workload of `parlin serve --requests
+/// synthetic` and `benches/serving.rs`.
+pub fn synthetic_mix(
+    count: usize,
+    predict_batch: usize,
+    refit_rows: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let r = rng.next_f64();
+            if r < 0.90 {
+                Request::Predict {
+                    batch: predict_batch,
+                }
+            } else if r < 0.98 {
+                Request::RefitRows { rows: refit_rows }
+            } else {
+                Request::RefitLambda {
+                    lambda: 10f64.powf(-2.0 - 2.0 * rng.next_f64()),
+                }
+            }
+        })
+        .collect()
+}
+
+/// Generate fresh labelled examples shaped like the session's dataset —
+/// the data source behind synthetic `refit-rows` requests.
+pub trait SynthRows: AppendExamples {
+    fn synth_rows(d: usize, avg_nnz: f64, k: usize, seed: u64) -> Dataset<Self>;
+}
+
+impl SynthRows for DenseMatrix {
+    fn synth_rows(d: usize, _avg_nnz: f64, k: usize, seed: u64) -> Dataset<DenseMatrix> {
+        synthetic::dense_classification(k, d, seed)
+    }
+}
+
+impl SynthRows for CscMatrix {
+    fn synth_rows(d: usize, avg_nnz: f64, k: usize, seed: u64) -> Dataset<CscMatrix> {
+        let density = (avg_nnz / d as f64).clamp(1.0 / d as f64, 1.0);
+        synthetic::sparse_classification(k, d, density, seed)
+    }
+}
+
+/// Latency log of one closed-loop run (seconds per request, by kind).
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub predict_s: Vec<f64>,
+    pub refit_s: Vec<f64>,
+    pub retrain_s: Vec<f64>,
+    pub total_wall_s: f64,
+    /// Solver epochs consumed by warm `refit-*` requests.
+    pub refit_epochs: u64,
+    /// Solver epochs consumed by cold `retrain` requests.
+    pub retrain_epochs: u64,
+}
+
+impl ServeReport {
+    pub fn requests(&self) -> usize {
+        self.predict_s.len() + self.refit_s.len() + self.retrain_s.len()
+    }
+
+    /// Human-readable per-kind p50/p99 latency + throughput table.
+    pub fn summary(&self) -> String {
+        fn line(name: &str, xs: &[f64]) -> String {
+            if xs.is_empty() {
+                return format!("  {name:<8} {:>6} reqs\n", 0);
+            }
+            format!(
+                "  {name:<8} {:>6} reqs  p50 {:>9.3} ms  p99 {:>9.3} ms\n",
+                xs.len(),
+                percentile(xs, 50.0) * 1e3,
+                percentile(xs, 99.0) * 1e3
+            )
+        }
+        let mut s = String::new();
+        s.push_str(&line("predict", &self.predict_s));
+        s.push_str(&line("refit", &self.refit_s));
+        s.push_str(&line("retrain", &self.retrain_s));
+        s.push_str(&format!(
+            "  total    {:>6} reqs in {:.3}s  ({:.1} req/s)\n",
+            self.requests(),
+            self.total_wall_s,
+            self.requests() as f64 / self.total_wall_s.max(1e-9)
+        ));
+        s
+    }
+}
+
+/// Replay `reqs` against the session, closed-loop (next request issues
+/// when the previous one completes), recording per-request latency.
+pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -> ServeReport {
+    let mut report = ServeReport::default();
+    let total = Timer::start();
+    let mut cursor = 0usize; // rotating predict window over the dataset
+    let mut row_seed = seed;
+    for req in reqs {
+        match req {
+            Request::Predict { batch } => {
+                let n = sess.n();
+                let idx: Vec<usize> = (0..*batch).map(|k| (cursor + k) % n).collect();
+                cursor = (cursor + batch) % n;
+                let t = Timer::start();
+                let margins = sess.predict(&idx);
+                report.predict_s.push(t.elapsed_s());
+                std::hint::black_box(margins);
+            }
+            Request::RefitRows { rows } => {
+                row_seed = row_seed.wrapping_add(1);
+                let fresh = M::synth_rows(sess.d(), sess.avg_nnz(), (*rows).max(1), row_seed);
+                let t = Timer::start();
+                let r = sess.partial_fit_rows(&fresh);
+                report.refit_s.push(t.elapsed_s());
+                report.refit_epochs += r.epochs as u64;
+            }
+            Request::RefitLambda { lambda } => {
+                let t = Timer::start();
+                let r = sess.partial_fit_lambda(*lambda);
+                report.refit_s.push(t.elapsed_s());
+                report.refit_epochs += r.epochs as u64;
+            }
+            Request::Retrain => {
+                let t = Timer::start();
+                let r = sess.retrain_same();
+                report.retrain_s.push(t.elapsed_s());
+                report.retrain_epochs += r.epochs as u64;
+            }
+        }
+    }
+    report.total_wall_s = total.elapsed_s();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataMatrix;
+
+    #[test]
+    fn script_round_trip() {
+        let script = "\
+# serving trace
+predict 256
+refit-rows 50   # fresh examples
+refit-lambda 1e-3
+
+retrain
+";
+        let reqs = parse_script(script).unwrap();
+        assert_eq!(
+            reqs,
+            vec![
+                Request::Predict { batch: 256 },
+                Request::RefitRows { rows: 50 },
+                Request::RefitLambda { lambda: 1e-3 },
+                Request::Retrain,
+            ]
+        );
+    }
+
+    #[test]
+    fn script_rejects_garbage() {
+        assert!(parse_script("predict").is_err()); // missing batch
+        assert!(parse_script("predict x").is_err()); // bad number
+        assert!(parse_script("retrain 3").is_err()); // stray arg
+        assert!(parse_script("evict 1").is_err()); // unknown verb
+        assert!(parse_script("predict 1 2").is_err()); // too many fields
+        assert!(parse_script("refit-lambda 0").is_err()); // 1/(λn) would blow up
+        assert!(parse_script("refit-lambda -1e-3").is_err());
+        assert!(parse_script("refit-lambda NaN").is_err());
+        assert!(parse_script("refit-lambda inf").is_err());
+    }
+
+    #[test]
+    fn synthetic_mix_is_deterministic_and_mostly_predicts() {
+        let a = synthetic_mix(500, 128, 16, 9);
+        let b = synthetic_mix(500, 128, 16, 9);
+        assert_eq!(a, b);
+        let predicts = a
+            .iter()
+            .filter(|r| matches!(r, Request::Predict { .. }))
+            .count();
+        assert!(predicts > 400, "predicts={predicts}");
+        assert!(predicts < 500, "mix must contain refits");
+    }
+
+    #[test]
+    fn synth_rows_match_shape() {
+        let dense = DenseMatrix::synth_rows(12, 12.0, 5, 1);
+        assert_eq!((dense.n(), dense.d()), (5, 12));
+        let sparse = CscMatrix::synth_rows(100, 5.0, 7, 2);
+        assert_eq!((sparse.n(), sparse.d()), (7, 100));
+        assert!(sparse.x.nnz() >= 7); // ~5 nnz per example
+    }
+}

@@ -1,0 +1,334 @@
+//! The resident serving session: one pool, one dataset, one model —
+//! reused across every predict/refit/retrain request (see the module docs
+//! in [`crate::serve`] for the determinism and warm-start arguments).
+
+use crate::data::{AppendExamples, Dataset};
+use crate::glm::{self, GapReport, ModelState, Objective};
+use crate::solver::{train, ExecPolicy, PoolStats, SolverConfig, WorkerPool};
+use crate::sysinfo::Topology;
+use crate::util::Timer;
+use std::sync::Arc;
+
+/// Outcome of one training-shaped request (initial train, partial refit,
+/// retrain).
+#[derive(Clone, Debug)]
+pub struct RefitReport {
+    /// Which request produced this ("initial-train", "refit-rows",
+    /// "refit-lambda", "retrain").
+    pub kind: &'static str,
+    /// Solver epochs the request consumed — the number the warm-start
+    /// claim is about (warm refits must beat cold retrains here).
+    pub epochs: usize,
+    pub converged: bool,
+    /// Duality gap of the model now being served.
+    pub gap: f64,
+    pub wall_s: f64,
+    /// Dataset size after the request.
+    pub n: usize,
+}
+
+/// Lifetime counters of one session.
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    pub predicts: u64,
+    pub predicted_examples: u64,
+    pub refits: u64,
+    pub retrains: u64,
+    /// Solver epochs across the initial train and every refit/retrain.
+    pub epochs_total: u64,
+}
+
+/// A long-lived serving session: owns the dataset, the trained model and
+/// a shared [`WorkerPool`] that answers every request without respawning
+/// workers. Requests are served one at a time (the parallelism lives
+/// *inside* a request: sharded predict, replica training rounds).
+pub struct Session<M: AppendExamples> {
+    ds: Dataset<M>,
+    cfg: SolverConfig,
+    topo: Topology,
+    pool: Arc<WorkerPool>,
+    state: ModelState,
+    /// Primal weights of `state` — cached because every predict reads them.
+    weights: Vec<f64>,
+    stats: SessionStats,
+}
+
+impl<M: AppendExamples> Session<M> {
+    /// Build the resident pool from `cfg.threads` on the (detected or
+    /// configured) topology, then train the initial model on it.
+    pub fn new(ds: Dataset<M>, cfg: SolverConfig) -> Self {
+        let topo = cfg.topology.clone().unwrap_or_else(Topology::detect);
+        let pool = Arc::new(WorkerPool::new(cfg.threads.max(1), &topo));
+        let mut cfg = cfg;
+        cfg.topology = Some(topo.clone());
+        cfg.exec = ExecPolicy::Shared(Arc::clone(&pool));
+        cfg.warm_start = None;
+        let mut sess = Session {
+            ds,
+            cfg,
+            topo,
+            pool,
+            state: ModelState::zeros(0, 0),
+            weights: Vec::new(),
+            stats: SessionStats::default(),
+        };
+        sess.fit(None, "initial-train");
+        sess
+    }
+
+    /// Margins `⟨x_j, w⟩` for the requested examples, computed in parallel
+    /// shards on the resident pool and merged in job order — bit-wise
+    /// equal to [`glm::model::margins`] on the same weights (see the
+    /// module-level determinism argument).
+    pub fn predict(&mut self, idx: &[usize]) -> Vec<f64> {
+        self.stats.predicts += 1;
+        self.stats.predicted_examples += idx.len() as u64;
+        if idx.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.pool.workers();
+        // one contiguous shard per worker; shard s carries worker s's node
+        // tag so its column reads stay node-local under the pool's layout
+        let per = idx.len().div_ceil(workers);
+        let jobs: Vec<(usize, _)> = idx
+            .chunks(per)
+            .enumerate()
+            .map(|(s, chunk)| {
+                let (ds, w) = (&self.ds, &self.weights[..]);
+                let node = self.pool.node_of_worker(s % workers);
+                (node, move || glm::model::margins(ds, w, chunk))
+            })
+            .collect();
+        let parts = self.pool.run_tagged(jobs);
+        let mut out = Vec::with_capacity(idx.len());
+        for part in parts {
+            out.extend_from_slice(&part);
+        }
+        out
+    }
+
+    /// `±1` predictions for classification objectives (margin sign).
+    pub fn predict_labels(&mut self, idx: &[usize]) -> Vec<f64> {
+        self.predict(idx)
+            .into_iter()
+            .map(|m| if m >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Append freshly arrived examples and warm-start refit: `α` is
+    /// extended with zeros for the new rows, `v` is rebuilt exactly from
+    /// `α`, and the solver resumes from that state on the same pool.
+    pub fn partial_fit_rows(&mut self, rows: &Dataset<M>) -> RefitReport {
+        assert_eq!(rows.d(), self.ds.d(), "appended rows must match d");
+        self.stats.refits += 1;
+        self.ds.append(rows);
+        let mut warm = self.state.extended(self.ds.n());
+        warm.rebuild_v(&self.ds);
+        self.fit(Some(warm), "refit-rows")
+    }
+
+    /// Change the regularization strength and warm-start refit from the
+    /// current state (`α` stays dual-feasible under a new λ; `v` does not
+    /// depend on λ at all).
+    ///
+    /// Panics on a non-finite or non-positive λ — `1/(λn)` would poison
+    /// every coordinate update and the session would silently serve NaN
+    /// margins afterwards.
+    pub fn partial_fit_lambda(&mut self, lambda: f64) -> RefitReport {
+        assert!(
+            lambda.is_finite() && lambda > 0.0,
+            "refit lambda must be finite and positive, got {lambda}"
+        );
+        self.stats.refits += 1;
+        self.cfg.obj = self.cfg.obj.with_lambda(lambda);
+        let mut warm = self.state.clone();
+        warm.rebuild_v(&self.ds);
+        self.fit(Some(warm), "refit-lambda")
+    }
+
+    /// Cold retrain under a new configuration, reusing the resident pool.
+    /// If the new config asks for a different worker count the session
+    /// pool is rebuilt to match (logged) — the one situation where workers
+    /// are respawned mid-session.
+    pub fn retrain(&mut self, cfg: SolverConfig) -> RefitReport {
+        self.stats.retrains += 1;
+        let mut cfg = cfg;
+        cfg.topology = Some(self.topo.clone());
+        let want = cfg.threads.max(1);
+        if want != self.pool.workers() {
+            eprintln!(
+                "parlin serve: retrain wants {want} workers, session pool has {}; \
+                 rebuilding the resident pool",
+                self.pool.workers()
+            );
+            self.pool = Arc::new(WorkerPool::new(want, &self.topo));
+        }
+        cfg.exec = ExecPolicy::Shared(Arc::clone(&self.pool));
+        cfg.warm_start = None;
+        self.cfg = cfg;
+        self.fit(None, "retrain")
+    }
+
+    /// Cold retrain with the session's current configuration (the baseline
+    /// warm refits are measured against).
+    pub fn retrain_same(&mut self) -> RefitReport {
+        let cfg = self.cfg.clone();
+        self.retrain(cfg)
+    }
+
+    /// Run the solver on the session dataset (optionally warm) and install
+    /// the resulting model as the served one.
+    fn fit(&mut self, warm: Option<ModelState>, kind: &'static str) -> RefitReport {
+        let t = Timer::start();
+        let mut cfg = self.cfg.clone();
+        cfg.warm_start = warm;
+        let out = train(&self.ds, &cfg);
+        self.stats.epochs_total += out.epochs_run as u64;
+        let report = RefitReport {
+            kind,
+            epochs: out.epochs_run,
+            converged: out.converged,
+            gap: out.final_gap,
+            wall_s: t.elapsed_s(),
+            n: self.ds.n(),
+        };
+        self.weights = out.state.w(&self.cfg.obj);
+        self.state = out.state;
+        report
+    }
+
+    pub fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    /// Mean non-zeros per example (shape information for synthetic
+    /// refit-row generation).
+    pub fn avg_nnz(&self) -> f64 {
+        self.ds.x.nnz() as f64 / self.ds.n().max(1) as f64
+    }
+
+    /// Primal weights of the currently served model.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn dataset(&self) -> &Dataset<M> {
+        &self.ds
+    }
+
+    pub fn objective(&self) -> &Objective {
+        &self.cfg.obj
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+
+    /// Busy-time census of the resident pool (see [`PoolStats`]).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Duality gap of the currently served model (`O(nnz)`).
+    pub fn gap(&self) -> GapReport {
+        glm::duality_gap(&self.ds, &self.cfg.obj, &self.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::Variant;
+
+    fn cfg(n: usize, threads: usize) -> SolverConfig {
+        SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / n as f64,
+        })
+        .with_variant(Variant::Domesticated)
+        .with_threads(threads)
+        .with_topology(Topology::flat(threads))
+        .with_tol(1e-4)
+        .with_max_epochs(300)
+    }
+
+    #[test]
+    fn session_trains_and_predicts() {
+        let ds = synthetic::dense_classification(200, 8, 41);
+        let mut sess = Session::new(ds, cfg(200, 2));
+        assert_eq!((sess.n(), sess.d(), sess.workers()), (200, 8, 2));
+        assert!(sess.gap().gap < 1e-2, "gap={}", sess.gap().gap);
+        let m = sess.predict(&[0, 5, 199]);
+        assert_eq!(m.len(), 3);
+        assert!(sess.predict(&[]).is_empty());
+        let labels = sess.predict_labels(&[0, 1, 2, 3]);
+        assert!(labels.iter().all(|&l| l == 1.0 || l == -1.0));
+        assert_eq!(sess.stats().predicts, 3);
+    }
+
+    #[test]
+    fn lambda_refit_updates_objective() {
+        let ds = synthetic::dense_classification(150, 6, 42);
+        let mut sess = Session::new(ds, cfg(150, 2));
+        let r = sess.partial_fit_lambda(0.05);
+        assert_eq!(r.kind, "refit-lambda");
+        assert!(r.converged);
+        assert!((sess.objective().lambda() - 0.05).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lambda_refit_rejects_nonpositive() {
+        let ds = synthetic::dense_classification(80, 4, 48);
+        let mut sess = Session::new(ds, cfg(80, 2));
+        let _ = sess.partial_fit_lambda(0.0);
+    }
+
+    #[test]
+    fn rows_refit_grows_dataset_and_stays_consistent() {
+        let ds = synthetic::dense_classification(100, 5, 43);
+        let mut sess = Session::new(ds, cfg(100, 2));
+        let fresh = synthetic::dense_classification(10, 5, 44);
+        let r = sess.partial_fit_rows(&fresh);
+        assert_eq!((r.n, sess.n()), (110, 110));
+        assert!(r.converged);
+        assert!(sess.state().v_drift(sess.dataset()) < 1e-6);
+        assert_eq!(sess.stats().refits, 1);
+    }
+
+    #[test]
+    fn retrain_rebuilds_pool_on_thread_change() {
+        let ds = synthetic::dense_classification(120, 5, 45);
+        let mut sess = Session::new(ds, cfg(120, 2));
+        assert_eq!(sess.workers(), 2);
+        let r = sess.retrain(cfg(120, 3));
+        assert_eq!(sess.workers(), 3);
+        assert!(r.converged);
+        assert_eq!(sess.stats().retrains, 1);
+        // the rebuilt pool serves predicts too
+        assert_eq!(sess.predict(&[0, 1]).len(), 2);
+    }
+
+    #[test]
+    fn sparse_sessions_work_end_to_end() {
+        let ds = synthetic::sparse_classification(300, 80, 0.05, 46);
+        let mut sess = Session::new(ds, cfg(300, 2));
+        let fresh = synthetic::sparse_classification(15, 80, 0.05, 47);
+        let r = sess.partial_fit_rows(&fresh);
+        assert_eq!(sess.n(), 315);
+        assert!(r.converged);
+        assert_eq!(sess.predict(&[0, 314]).len(), 2);
+    }
+}

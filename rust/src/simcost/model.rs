@@ -80,7 +80,13 @@ pub struct TimeBreakdown {
 
 impl TimeBreakdown {
     pub fn total(&self) -> f64 {
-        self.compute + self.stream + self.alpha + self.shared + self.shuffle + self.merge + self.reduce
+        self.compute
+            + self.stream
+            + self.alpha
+            + self.shared
+            + self.shuffle
+            + self.merge
+            + self.reduce
     }
 }
 
@@ -108,7 +114,12 @@ impl CostOpts {
 }
 
 /// Estimate one epoch of `kind` on `machine` for `w`.
-pub fn epoch_time(machine: &MachineModel, w: &Workload, kind: SolverKind, opts: &CostOpts) -> TimeBreakdown {
+pub fn epoch_time(
+    machine: &MachineModel,
+    w: &Workload,
+    kind: SolverKind,
+    opts: &CostOpts,
+) -> TimeBreakdown {
     let threads = opts.threads.max(1) as f64;
     let placement = machine.topology.place_threads(opts.threads.max(1));
     let nodes_used = placement.iter().filter(|&&p| p > 0).count().max(1) as f64;
@@ -257,7 +268,12 @@ pub fn epoch_time(machine: &MachineModel, w: &Workload, kind: SolverKind, opts: 
 }
 
 /// Convenience: total seconds per epoch.
-pub fn epoch_seconds(machine: &MachineModel, w: &Workload, kind: SolverKind, opts: &CostOpts) -> f64 {
+pub fn epoch_seconds(
+    machine: &MachineModel,
+    w: &Workload,
+    kind: SolverKind,
+    opts: &CostOpts,
+) -> f64 {
     epoch_time(machine, w, kind, opts).total()
 }
 

@@ -29,6 +29,14 @@ impl ConvergenceMonitor {
         }
     }
 
+    /// Seed the previous-epoch model (warm starts): the first epoch's
+    /// relative change is then measured against the warm state instead of
+    /// zero, so a refit of an already-converged model can stop after one
+    /// epoch. The divergence scale is still taken at the first `observe`.
+    pub fn seed(&mut self, alpha: &[f64]) {
+        self.prev_alpha.copy_from_slice(alpha);
+    }
+
     /// Feed the end-of-epoch model; returns the relative change.
     pub fn observe(&mut self, alpha: &[f64]) -> f64 {
         let rc = crate::util::rel_change(alpha, &self.prev_alpha);
@@ -89,6 +97,14 @@ mod tests {
         let mut m = ConvergenceMonitor::new(3, 1e-3, 1e3);
         m.observe(&[1.0, 1.0, 1.0]);
         assert!(!m.converged()); // first epoch: change from zero is 100%
+        m.observe(&[1.0, 1.0, 1.0 + 1e-6]);
+        assert!(m.converged());
+    }
+
+    #[test]
+    fn seeded_monitor_can_converge_on_first_epoch() {
+        let mut m = ConvergenceMonitor::new(3, 1e-3, 1e3);
+        m.seed(&[1.0, 1.0, 1.0]);
         m.observe(&[1.0, 1.0, 1.0 + 1e-6]);
         assert!(m.converged());
     }

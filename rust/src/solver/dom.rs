@@ -110,17 +110,35 @@ pub fn train_domesticated_exec<M: DataMatrix>(
     let mut partitioner = Partitioner::new(cfg.partition, buckets.count(), t_workers);
     let rounds = cfg.resolve_merges(ds);
 
+    let init = crate::solver::initial_state(cfg, ds);
     let alpha: Vec<AtomicF64> = atomic_vec(n);
-    let mut v_global = vec![0.0f64; ds.d()];
+    for (slot, &a) in alpha.iter().zip(init.alpha.iter()) {
+        if a != 0.0 {
+            slot.store(a);
+        }
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    if cfg.warm_start.is_some() {
+        mon.seed(&init.alpha);
+    }
+    let mut v_global = init.v;
 
     let total = Timer::start();
     let mut epochs = Vec::new();
     let mut converged = false;
     // dual value of the merged model — the adaptive-σ backtracking signal
-    // (D(0) = 0 for all three objectives at the cold start)
-    let mut prev_dual = 0.0f64;
+    // (D(0) = 0 for all three objectives at the cold start; a warm start
+    // resumes the backtracking baseline from its own dual value)
+    let mut prev_dual = if adaptive && cfg.warm_start.is_some() {
+        let st = ModelState {
+            alpha: snapshot(&alpha),
+            v: v_global.clone(),
+        };
+        crate::glm::gap::dual_value(ds, &obj, &st)
+    } else {
+        0.0f64
+    };
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
         // snapshot for possible backtracking

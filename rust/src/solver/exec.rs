@@ -9,23 +9,29 @@
 //! reproduces the paper's convergence results (epoch counts) for 8–32
 //! "threads" on any host (see DESIGN.md §4 substitutions).
 //!
-//! Three interchangeable executors:
+//! Four interchangeable executors:
 //!
 //! * [`Executor::Pool`] — the production path: persistent NUMA-aware
 //!   workers (see [`WorkerPool`]) created once per `train()` call, so the
 //!   per-merge-round dispatch is a queue push instead of an OS thread
 //!   spawn/join.
+//! * [`Executor::Shared`] — the same resident pool, but owned by a
+//!   longer-lived session ([`crate::serve::Session`], hyperparameter
+//!   sweeps) and reused across many `train()` calls, amortizing the spawn
+//!   across the whole session.
 //! * [`Executor::Threads`] — spawn-per-batch via `std::thread::scope`;
 //!   kept as the zero-state reference implementation the pool is tested
 //!   against.
 //! * [`Executor::Sequential`] — in order on the calling thread
 //!   (virtual-thread mode; the basis of `crate::vthread`).
 //!
-//! The three-way bit-wise equivalence is asserted in
-//! `rust/tests/solver_equivalence.rs` and `rust/tests/pool_equivalence.rs`.
+//! The bit-wise equivalence across executors is asserted in
+//! `rust/tests/solver_equivalence.rs` and `rust/tests/pool_equivalence.rs`;
+//! `rust/tests/serving.rs` extends it to the shared-pool serving path.
 
 use crate::solver::pool::WorkerPool;
 use crate::sysinfo::Topology;
+use std::sync::Arc;
 
 /// How to run a batch of independent worker jobs.
 pub enum Executor {
@@ -33,8 +39,12 @@ pub enum Executor {
     Threads,
     /// Run jobs in order on the calling thread (virtual-thread mode).
     Sequential,
-    /// Dispatch onto a resident [`WorkerPool`].
+    /// Dispatch onto a run-scoped resident [`WorkerPool`].
     Pool(WorkerPool),
+    /// Dispatch onto a pool owned by someone else (a serving
+    /// [`Session`](crate::serve::Session)) and shared across many runs —
+    /// the workers outlive this executor and this training run.
+    Shared(Arc<WorkerPool>),
 }
 
 impl std::fmt::Debug for Executor {
@@ -43,6 +53,7 @@ impl std::fmt::Debug for Executor {
             Executor::Threads => write!(f, "Threads"),
             Executor::Sequential => write!(f, "Sequential"),
             Executor::Pool(p) => write!(f, "Pool({} workers)", p.workers()),
+            Executor::Shared(p) => write!(f, "Shared({} workers)", p.workers()),
         }
     }
 }
@@ -64,6 +75,7 @@ impl Executor {
                     .collect()
             }),
             Executor::Pool(pool) => pool.run(jobs),
+            Executor::Shared(pool) => pool.run(jobs),
         }
     }
 
@@ -79,23 +91,55 @@ impl Executor {
     {
         match self {
             Executor::Pool(pool) => pool.run_tagged(jobs),
+            Executor::Shared(pool) => pool.run_tagged(jobs),
             other => other.run(jobs.into_iter().map(|(_, f)| f).collect()),
         }
     }
 }
 
-/// Which executor a `train()` call should build — the plain-data knob
-/// carried by [`SolverConfig`](crate::solver::SolverConfig). Resolved
-/// into a concrete [`Executor`] (spawning the pool's resident workers for
+/// Which executor a `train()` call should build — the config knob carried
+/// by [`SolverConfig`](crate::solver::SolverConfig). Resolved into a
+/// concrete [`Executor`] (spawning the pool's resident workers for
 /// [`ExecPolicy::Pool`]) exactly once per training run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone)]
 pub enum ExecPolicy {
-    /// Persistent NUMA-aware worker pool (default production path).
+    /// Persistent NUMA-aware worker pool, created for this run (default).
     Pool,
     /// Fresh OS threads per merge round (the pre-pool behaviour).
     Threads,
     /// Single-core in-order execution (deterministic vthread mode).
     Sequential,
+    /// Reuse a caller-owned resident pool across `train()` calls — the
+    /// session-scoped handle the serving subsystem (`crate::serve`) and
+    /// hyperparameter sweeps use to amortize worker spawn. Worker-count
+    /// mismatch story: if the shared pool's worker count differs from the
+    /// run's `threads`, a run-scoped pool is rebuilt instead (and the
+    /// mismatch is logged) — the shared pool is never resized under its
+    /// owner.
+    Shared(Arc<WorkerPool>),
+}
+
+impl std::fmt::Debug for ExecPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecPolicy::Pool => write!(f, "Pool"),
+            ExecPolicy::Threads => write!(f, "Threads"),
+            ExecPolicy::Sequential => write!(f, "Sequential"),
+            ExecPolicy::Shared(p) => write!(f, "Shared({} workers)", p.workers()),
+        }
+    }
+}
+
+impl PartialEq for ExecPolicy {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (ExecPolicy::Pool, ExecPolicy::Pool)
+            | (ExecPolicy::Threads, ExecPolicy::Threads)
+            | (ExecPolicy::Sequential, ExecPolicy::Sequential) => true,
+            (ExecPolicy::Shared(a), ExecPolicy::Shared(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
 }
 
 impl ExecPolicy {
@@ -105,6 +149,18 @@ impl ExecPolicy {
             ExecPolicy::Sequential => Executor::Sequential,
             ExecPolicy::Threads => Executor::Threads,
             ExecPolicy::Pool => Executor::Pool(WorkerPool::new(threads, topo)),
+            ExecPolicy::Shared(pool) => {
+                if pool.workers() == threads {
+                    Executor::Shared(Arc::clone(pool))
+                } else {
+                    eprintln!(
+                        "parlin: shared pool has {} workers but the run wants {threads}; \
+                         building a run-scoped pool (rebuild-on-mismatch)",
+                        pool.workers()
+                    );
+                    Executor::Pool(WorkerPool::new(threads, topo))
+                }
+            }
         }
     }
 }
@@ -118,6 +174,7 @@ mod tests {
             Executor::Sequential,
             Executor::Threads,
             Executor::Pool(WorkerPool::new(4, &Topology::flat(4))),
+            Executor::Shared(Arc::new(WorkerPool::new(4, &Topology::flat(4)))),
         ]
     }
 
@@ -169,5 +226,36 @@ mod tests {
             Executor::Pool(p) => assert_eq!(p.workers(), 4),
             other => panic!("expected pool, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn shared_policy_reuses_matching_pool() {
+        let topo = Topology::flat(4);
+        let pool = Arc::new(WorkerPool::new(4, &topo));
+        match ExecPolicy::Shared(Arc::clone(&pool)).build(4, &topo) {
+            Executor::Shared(p) => assert!(Arc::ptr_eq(&p, &pool), "must reuse the same pool"),
+            other => panic!("expected shared pool, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shared_policy_rebuilds_on_worker_count_mismatch() {
+        let topo = Topology::flat(4);
+        let pool = Arc::new(WorkerPool::new(4, &topo));
+        match ExecPolicy::Shared(pool).build(2, &topo) {
+            Executor::Pool(p) => assert_eq!(p.workers(), 2, "rebuilt pool must match the run"),
+            other => panic!("expected a run-scoped rebuild, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shared_policy_equality_is_pool_identity() {
+        let topo = Topology::flat(2);
+        let a = Arc::new(WorkerPool::new(2, &topo));
+        let b = Arc::new(WorkerPool::new(2, &topo));
+        assert_eq!(ExecPolicy::Shared(Arc::clone(&a)), ExecPolicy::Shared(Arc::clone(&a)));
+        assert_ne!(ExecPolicy::Shared(a), ExecPolicy::Shared(b));
+        assert_eq!(ExecPolicy::Pool, ExecPolicy::Pool);
+        assert_ne!(ExecPolicy::Pool, ExecPolicy::Threads);
     }
 }

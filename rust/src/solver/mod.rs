@@ -30,7 +30,7 @@ pub use bucket::{BucketPolicy, Buckets};
 pub use convergence::ConvergenceMonitor;
 pub use exec::{ExecPolicy, Executor};
 pub use partition::Partitioning;
-pub use pool::WorkerPool;
+pub use pool::{PoolStats, WorkerPool, WorkerStats};
 
 use crate::data::{DataMatrix, Dataset};
 use crate::glm::{GapReport, ModelState, Objective};
@@ -94,10 +94,17 @@ pub struct SolverConfig {
     /// σ′ policy for the replica solvers (see [`SigmaPolicy`]).
     pub sigma: SigmaPolicy,
     /// How worker jobs are executed (see [`ExecPolicy`]): the persistent
-    /// NUMA-aware pool by default; `Threads` for spawn-per-round;
-    /// `Sequential` for deterministic single-core runs. All three produce
-    /// bit-wise identical models.
+    /// NUMA-aware pool by default; `Shared` to reuse a session-owned pool
+    /// across runs; `Threads` for spawn-per-round; `Sequential` for
+    /// deterministic single-core runs. All of them produce bit-wise
+    /// identical models.
     pub exec: ExecPolicy,
+    /// Optional warm start: resume from an existing [`ModelState`] instead
+    /// of `α = 0` (serving-side partial refits after appending examples or
+    /// changing λ). Honored by the `seq`/`dom`/`numa`/`wild` trainers; the
+    /// state's dimensions must match the dataset or the run falls back to
+    /// a cold start (logged). The `vthread` simulators ignore it.
+    pub warm_start: Option<ModelState>,
     /// NUMA topology override (default: detect host).
     pub topology: Option<Topology>,
     /// Abort when the primal objective exceeds this multiple of its initial
@@ -121,6 +128,7 @@ impl SolverConfig {
             merges_per_epoch: 0, // auto
             sigma: SigmaPolicy::Adaptive,
             exec: ExecPolicy::Pool,
+            warm_start: None,
             topology: None,
             divergence_factor: 1e3,
         }
@@ -171,6 +179,13 @@ impl SolverConfig {
         self
     }
 
+    /// Resume training from an existing model state (see
+    /// [`SolverConfig::warm_start`]).
+    pub fn with_warm_start(mut self, st: ModelState) -> Self {
+        self.warm_start = Some(st);
+        self
+    }
+
     /// Build this run's executor (resolving [`ExecPolicy::Pool`] into a
     /// freshly spawned resident [`WorkerPool`] on `topo`). Called once per
     /// `train_*` entry point so the pool's workers persist across every
@@ -208,6 +223,28 @@ impl SolverConfig {
             }
             v => v,
         }
+    }
+}
+
+/// Resolve a run's starting [`ModelState`]: the configured warm start when
+/// its shape matches the dataset, otherwise a cold `α = 0` start. A
+/// mismatched warm state (e.g. examples were appended without extending
+/// `α`) is rejected loudly on stderr instead of corrupting the run.
+pub(crate) fn initial_state<M: DataMatrix>(cfg: &SolverConfig, ds: &Dataset<M>) -> ModelState {
+    match &cfg.warm_start {
+        Some(ws) if ws.alpha.len() == ds.n() && ws.v.len() == ds.d() => ws.clone(),
+        Some(ws) => {
+            eprintln!(
+                "parlin: warm-start shape ({} examples, {} features) does not match the \
+                 dataset ({}, {}); cold-starting",
+                ws.alpha.len(),
+                ws.v.len(),
+                ds.n(),
+                ds.d()
+            );
+            ModelState::zeros(ds.n(), ds.d())
+        }
+        None => ModelState::zeros(ds.n(), ds.d()),
     }
 }
 
@@ -296,5 +333,63 @@ mod tests {
         let out = train(&ds, &cfg);
         assert!(out.converged);
         assert!(out.final_gap < 1e-2, "gap={}", out.final_gap);
+    }
+
+    #[test]
+    fn warm_start_resumes_instead_of_restarting() {
+        let ds = synthetic::dense_classification(250, 10, 3);
+        let cfg = SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / 250.0,
+        })
+        .with_tol(1e-5)
+        .with_max_epochs(400);
+        let cold = train(&ds, &cfg);
+        assert!(cold.converged);
+        let warm = train(&ds, &cfg.clone().with_warm_start(cold.state.clone()));
+        assert!(warm.converged);
+        assert!(
+            warm.epochs_run < cold.epochs_run,
+            "warm {} vs cold {}",
+            warm.epochs_run,
+            cold.epochs_run
+        );
+        assert!(warm.final_gap <= cold.final_gap * 1.5 + 1e-12);
+    }
+
+    #[test]
+    fn warm_start_honored_by_replica_solvers() {
+        let ds = synthetic::dense_classification(300, 12, 4);
+        let topo = Topology::uniform(2, 2);
+        for variant in [Variant::Domesticated, Variant::Numa] {
+            let cfg = SolverConfig::new(Objective::Logistic {
+                lambda: 1.0 / 300.0,
+            })
+            .with_variant(variant)
+            .with_threads(4)
+            .with_topology(topo.clone())
+            .with_tol(1e-4)
+            .with_max_epochs(500);
+            let cold = train(&ds, &cfg);
+            assert!(cold.converged, "{variant:?} cold run must converge");
+            let warm = train(&ds, &cfg.clone().with_warm_start(cold.state.clone()));
+            assert!(
+                warm.epochs_run <= 4,
+                "{variant:?}: warm restart from the optimum ran {} epochs",
+                warm.epochs_run
+            );
+            assert!(warm.epochs_run <= cold.epochs_run);
+        }
+    }
+
+    #[test]
+    fn mismatched_warm_start_falls_back_to_cold() {
+        let ds = synthetic::dense_classification(120, 6, 5);
+        let cfg = SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / 120.0,
+        })
+        .with_warm_start(ModelState::zeros(7, 6)); // wrong n
+        let st = initial_state(&cfg, &ds);
+        assert_eq!(st.alpha.len(), 120);
+        assert!(st.alpha.iter().all(|&a| a == 0.0));
     }
 }

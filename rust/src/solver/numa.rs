@@ -34,7 +34,11 @@ use crate::util::{Rng, Timer};
 /// worker pool laid out on `topo`, created once here; its per-node bucket
 /// queues then receive every node's merge-round jobs via
 /// [`Executor::run_tagged`].
-pub fn train_numa<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig, topo: &Topology) -> TrainOutput {
+pub fn train_numa<M: DataMatrix>(
+    ds: &Dataset<M>,
+    cfg: &SolverConfig,
+    topo: &Topology,
+) -> TrainOutput {
     let exec = cfg.build_executor(topo);
     train_numa_exec(ds, cfg, topo, &exec)
 }
@@ -102,15 +106,24 @@ pub fn train_numa_exec<M: DataMatrix>(
         })
         .collect();
 
+    let init = crate::solver::initial_state(cfg, ds);
     let alpha: Vec<AtomicF64> = atomic_vec(n);
-    let mut v_global = vec![0.0f64; ds.d()];
+    for (slot, &a) in alpha.iter().zip(init.alpha.iter()) {
+        if a != 0.0 {
+            slot.store(a);
+        }
+    }
+    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    if cfg.warm_start.is_some() {
+        mon.seed(&init.alpha);
+    }
+    let mut v_global = init.v;
     // per-node replicas of the shared vector
     let mut v_nodes: Vec<Vec<f64>> = placement
         .iter()
         .map(|&p| if p > 0 { v_global.clone() } else { Vec::new() })
         .collect();
     let mut rng = Rng::new(cfg.seed);
-    let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
     // The paper's hierarchy synchronizes replicas at epoch granularity:
     // "Each node holds its own replica of the shared vector, which is
     // reduced across nodes at the end of each epoch" (§3). Intra-epoch
@@ -123,7 +136,16 @@ pub fn train_numa_exec<M: DataMatrix>(
     let total = Timer::start();
     let mut epochs = Vec::new();
     let mut converged = false;
-    let mut prev_dual = 0.0f64; // D(0) = 0 at the cold start
+    // D(0) = 0 at a cold start; warm starts resume from their own dual
+    let mut prev_dual = if adaptive && cfg.warm_start.is_some() {
+        let st = ModelState {
+            alpha: snapshot(&alpha),
+            v: v_global.clone(),
+        };
+        crate::glm::gap::dual_value(ds, &obj, &st)
+    } else {
+        0.0f64
+    };
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
         let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));

@@ -57,9 +57,10 @@
 use crate::sysinfo::Topology;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A lifetime-erased job as stored on a worker queue.
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -159,6 +160,60 @@ impl<T> Clone for SendPtr<T> {
 
 impl<T> Copy for SendPtr<T> {}
 
+/// Per-worker busy-time accounting: the worker adds each job's measured
+/// duration (one `Instant` pair per job — nanoseconds of overhead against
+/// worker jobs that run for micro- to milliseconds).
+#[derive(Default)]
+struct WorkerTiming {
+    busy_ns: AtomicU64,
+    jobs: AtomicU64,
+}
+
+/// One worker's timing census (see [`WorkerPool::stats`]).
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub node: usize,
+    /// Total seconds this worker spent executing jobs.
+    pub busy_s: f64,
+    /// Jobs completed (panicked jobs count — they occupied the worker).
+    pub jobs: u64,
+}
+
+/// Aggregated per-worker busy-time statistics — the straggler-imbalance
+/// measurement the work-stealing roadmap item needs, and the load report
+/// `parlin serve` prints.
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl PoolStats {
+    pub fn total_jobs(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.jobs).sum()
+    }
+
+    pub fn total_busy_s(&self) -> f64 {
+        self.per_worker.iter().map(|w| w.busy_s).sum()
+    }
+
+    /// Max/mean busy-time ratio across workers: 1.0 means perfectly
+    /// balanced; large values mean stragglers dominate the batch critical
+    /// path (the signal that would justify intra-node work stealing).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.total_busy_s() / self.per_worker.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        let max = self
+            .per_worker
+            .iter()
+            .map(|w| w.busy_s)
+            .fold(0.0f64, f64::max);
+        max / mean
+    }
+}
+
 /// Persistent worker pool with one job queue per worker, workers grouped
 /// per NUMA node (see the module docs).
 pub struct WorkerPool {
@@ -168,6 +223,8 @@ pub struct WorkerPool {
     node_of: Vec<usize>,
     /// Worker ids grouped per node: `node_workers[k]` = workers on node k.
     node_workers: Vec<Vec<usize>>,
+    /// Per-worker busy-time counters (aligned with `queues`).
+    timings: Vec<Arc<WorkerTiming>>,
 }
 
 impl WorkerPool {
@@ -180,19 +237,23 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(threads);
         let mut node_of = Vec::with_capacity(threads);
         let mut node_workers = vec![Vec::new(); placement.len()];
+        let mut timings = Vec::with_capacity(threads);
         let mut wid = 0usize;
         for (node, &count) in placement.iter().enumerate() {
             for _ in 0..count {
                 let queue = Arc::new(JobQueue::new());
                 let worker_queue = Arc::clone(&queue);
+                let timing = Arc::new(WorkerTiming::default());
+                let worker_timing = Arc::clone(&timing);
                 let handle = std::thread::Builder::new()
                     .name(format!("parlin-pool-n{node}-w{wid}"))
-                    .spawn(move || worker_main(worker_queue))
+                    .spawn(move || worker_main(worker_queue, worker_timing))
                     .expect("spawn pool worker");
                 queues.push(queue);
                 handles.push(handle);
                 node_of.push(node);
                 node_workers[node].push(wid);
+                timings.push(timing);
                 wid += 1;
             }
         }
@@ -201,6 +262,7 @@ impl WorkerPool {
             handles,
             node_of,
             node_workers,
+            timings,
         }
     }
 
@@ -217,6 +279,24 @@ impl WorkerPool {
     /// Workers per node, aligned with the construction topology.
     pub fn workers_per_node(&self) -> Vec<usize> {
         self.node_workers.iter().map(|w| w.len()).collect()
+    }
+
+    /// Snapshot of the per-worker busy-time counters accumulated since the
+    /// pool was created (jobs in flight are not yet counted).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            per_worker: self
+                .timings
+                .iter()
+                .enumerate()
+                .map(|(w, t)| WorkerStats {
+                    worker: w,
+                    node: self.node_of[w],
+                    busy_s: t.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                    jobs: t.jobs.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
     }
 
     /// Run all jobs to completion, returning results in job order.
@@ -313,9 +393,14 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_main(queue: Arc<JobQueue>) {
+fn worker_main(queue: Arc<JobQueue>, timing: Arc<WorkerTiming>) {
     while let Some(job) = queue.pop() {
+        let start = Instant::now();
         job();
+        timing
+            .busy_ns
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        timing.jobs.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -425,6 +510,34 @@ mod tests {
             pool.run(jobs);
         }
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn per_job_timing_accumulates() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        assert_eq!(pool.stats().total_jobs(), 0);
+        // 6 jobs route i % 2, so each worker gets exactly 3
+        let jobs: Vec<_> = (0..6usize)
+            .map(|i| {
+                move || {
+                    let mut s = 0.0f64;
+                    for k in 0..20_000usize {
+                        s += ((i * 20_000 + k) as f64).sqrt();
+                    }
+                    s
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        let stats = pool.stats();
+        assert_eq!(stats.total_jobs(), 6);
+        assert!(stats.per_worker.iter().all(|w| w.jobs == 3), "{stats:?}");
+        assert!(stats.total_busy_s() >= 0.0);
+        assert!(stats.imbalance() >= 1.0 - 1e-9, "{}", stats.imbalance());
+        // node attribution follows the construction layout
+        for w in &stats.per_worker {
+            assert_eq!(w.node, pool.node_of_worker(w.worker));
+        }
     }
 
     #[test]

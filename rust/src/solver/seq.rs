@@ -3,7 +3,7 @@
 //! reuses for its per-worker inner loop.
 
 use crate::data::{DataMatrix, Dataset};
-use crate::glm::{ModelState, Objective};
+use crate::glm::Objective;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::{Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::{Rng, Timer};
@@ -59,8 +59,13 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     let buckets = Buckets::new(n, bucket_size);
     let mut ids = buckets.ids();
     let mut rng = Rng::new(cfg.seed);
-    let mut st = ModelState::zeros(n, ds.d());
+    let mut st = crate::solver::initial_state(cfg, ds);
     let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    if cfg.warm_start.is_some() {
+        // measure the first epoch's progress against the warm state, so a
+        // refit that is already converged can stop after one epoch
+        mon.seed(&st.alpha);
+    }
     let inv_lambda_n = 1.0 / (obj.lambda() * n as f64);
 
     let total = Timer::start();
@@ -173,7 +178,10 @@ mod tests {
     fn hinge_converges() {
         let ds = synthetic::dense_classification(300, 10, 4);
         let obj = Objective::Hinge { lambda: 1.0 / 300.0 };
-        let out = train_sequential(&ds, &SolverConfig::new(obj).with_tol(1e-6).with_max_epochs(500));
+        let out = train_sequential(
+            &ds,
+            &SolverConfig::new(obj).with_tol(1e-6).with_max_epochs(500),
+        );
         assert!(out.final_gap < 1e-2, "gap={}", out.final_gap);
         let idx: Vec<usize> = (0..300).collect();
         let acc = crate::glm::accuracy(&ds, &out.weights(&obj), &idx);

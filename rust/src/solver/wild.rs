@@ -35,11 +35,25 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         .unwrap_or_else(crate::sysinfo::Topology::detect);
     let exec = cfg.build_executor(&topo);
 
+    let init = crate::solver::initial_state(cfg, ds);
     let alpha: Vec<AtomicF64> = atomic_vec(n);
     let v: Vec<AtomicF64> = atomic_vec(ds.d());
+    for (slot, &a) in alpha.iter().zip(init.alpha.iter()) {
+        if a != 0.0 {
+            slot.store(a);
+        }
+    }
+    for (slot, &x) in v.iter().zip(init.v.iter()) {
+        if x != 0.0 {
+            slot.store(x);
+        }
+    }
     let mut perm: Vec<u32> = (0..n as u32).collect();
     let mut rng = Rng::new(cfg.seed);
     let mut mon = ConvergenceMonitor::new(n, cfg.tol, cfg.divergence_factor);
+    if cfg.warm_start.is_some() {
+        mon.seed(&init.alpha);
+    }
 
     let total = Timer::start();
     let mut epochs = Vec::new();

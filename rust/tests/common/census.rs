@@ -1,0 +1,30 @@
+//! Shared OS-thread census for leak tests (`pool_stress.rs`,
+//! `serving.rs`): included via `#[path]` so both suites use one parser
+//! and one settle policy.
+
+/// Threads currently owned by this process (Linux: `/proc/self/status`;
+/// elsewhere: 0, which degrades the assertions to leak-monotonicity).
+pub fn thread_census() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find_map(|l| {
+                l.strip_prefix("Threads:")
+                    .and_then(|v| v.trim().parse::<usize>().ok())
+            })
+        })
+        .unwrap_or(0)
+}
+
+/// Wait (bounded) for the kernel to reap exiting threads before counting.
+pub fn settled_census(target_max: usize) -> usize {
+    let mut count = thread_census();
+    for _ in 0..200 {
+        if count <= target_max {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        count = thread_census();
+    }
+    count
+}

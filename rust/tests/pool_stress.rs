@@ -15,32 +15,9 @@ use parlin::solver::pool::WorkerPool;
 use parlin::solver::{dom, numa, train, SolverConfig, Variant};
 use parlin::sysinfo::Topology;
 
-/// Threads currently owned by this process (Linux: `/proc/self/status`;
-/// elsewhere: 0, which degrades the assertions to leak-monotonicity).
-fn thread_census() -> usize {
-    std::fs::read_to_string("/proc/self/status")
-        .ok()
-        .and_then(|s| {
-            s.lines().find_map(|l| {
-                l.strip_prefix("Threads:")
-                    .and_then(|v| v.trim().parse::<usize>().ok())
-            })
-        })
-        .unwrap_or(0)
-}
-
-/// Wait (bounded) for the kernel to reap exiting threads before counting.
-fn settled_census(target_max: usize) -> usize {
-    let mut count = thread_census();
-    for _ in 0..200 {
-        if count <= target_max {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(5));
-        count = thread_census();
-    }
-    count
-}
+#[path = "common/census.rs"]
+mod census;
+use census::{settled_census, thread_census};
 
 #[test]
 fn pool_survives_repeated_training_without_leaking_threads() {

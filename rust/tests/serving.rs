@@ -1,0 +1,161 @@
+//! Serving-subsystem guarantees:
+//!
+//! (a) `Session::predict` (sharded, pool-parallel) is **bit-wise** equal
+//!     to the batch path `glm::model::margins` on `TrainOutput::weights`;
+//! (b) warm-start `partial_fit` after appending 5% new rows converges in
+//!     strictly fewer epochs than a cold retrain of the same dataset;
+//! (c) 50 interleaved predict/refit calls on one `Session` cause zero net
+//!     thread growth (the resident pool is really reused), and dropping
+//!     the session joins its workers.
+//!
+//! The tests in this binary serialize on a mutex: (c) counts OS threads
+//! via `/proc/self/status` (the census shared with `pool_stress.rs`, see
+//! `common/census.rs`), so no sibling test's pools may spawn or die while
+//! it runs.
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::serve::Session;
+use parlin::solver::{train, SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use std::sync::{Mutex, MutexGuard};
+
+#[path = "common/census.rs"]
+mod census;
+use census::settled_census;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn logistic(n: usize) -> Objective {
+    Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    }
+}
+
+#[test]
+fn predict_bitwise_matches_batch_margins() {
+    let _g = gate();
+    let topo = Topology::uniform(2, 2);
+    let cfg = SolverConfig::new(logistic(400))
+        .with_variant(Variant::Domesticated)
+        .with_threads(4)
+        .with_topology(topo)
+        .with_tol(1e-4)
+        .with_max_epochs(300);
+    let ds = synthetic::dense_classification(400, 16, 31);
+
+    // batch reference: the plain train() front door + glm::model::margins
+    let reference = train(&ds, &cfg);
+    let ref_w = reference.weights(&logistic(400));
+
+    let mut sess = Session::new(ds.clone(), cfg);
+    assert_eq!(
+        sess.weights(),
+        &ref_w[..],
+        "session must train the identical model (shared-pool executor equivalence)"
+    );
+
+    // any order, any batch size, including shards smaller than the pool
+    let mut idx: Vec<usize> = (0..400).rev().collect();
+    idx.extend([7usize, 7, 0, 399]); // duplicates are fine
+    let got = sess.predict(&idx);
+    let want = parlin::glm::model::margins(&ds, &ref_w, &idx);
+    assert_eq!(got, want, "sharded predict must be bit-wise identical");
+
+    let tiny = sess.predict(&[3]);
+    assert_eq!(tiny, parlin::glm::model::margins(&ds, &ref_w, &[3]));
+}
+
+#[test]
+fn warm_refit_beats_cold_retrain_in_epochs() {
+    let _g = gate();
+    let cfg = SolverConfig::new(logistic(400))
+        .with_variant(Variant::Domesticated)
+        .with_threads(4)
+        .with_topology(Topology::flat(4))
+        .with_tol(1e-4)
+        .with_max_epochs(500);
+    let ds = synthetic::dense_classification(400, 15, 32);
+    let mut sess = Session::new(ds, cfg);
+
+    // append 5% new rows and warm-start refit
+    let fresh = synthetic::dense_classification(20, 15, 33);
+    let warm = sess.partial_fit_rows(&fresh);
+    assert_eq!(warm.n, 420);
+    assert!(warm.converged, "warm refit must converge");
+
+    // cold retrain of the *same* (appended) dataset on the same pool
+    let cold = sess.retrain_same();
+    assert!(cold.converged, "cold retrain must converge");
+    assert!(
+        warm.epochs < cold.epochs,
+        "warm start must beat cold retrain: warm={} cold={}",
+        warm.epochs,
+        cold.epochs
+    );
+    // both end at a served model of equivalent quality
+    assert!(sess.gap().gap < 1e-2);
+}
+
+#[test]
+fn fifty_interleaved_requests_leak_no_threads() {
+    let _g = gate();
+    let topo = Topology::uniform(2, 2);
+    // Variant::Auto resolves to the hierarchical solver at 4 threads on
+    // this topology, so refits exercise the node-tagged dispatch path.
+    let cfg = SolverConfig::new(logistic(300))
+        .with_threads(4)
+        .with_topology(topo)
+        .with_tol(1e-3)
+        .with_max_epochs(200);
+    let ds = synthetic::dense_classification(300, 10, 34);
+    let mut sess = Session::new(ds, cfg);
+    let workers = sess.workers();
+    assert_eq!(workers, 4);
+
+    // warm-up one request of each kind, then take the baseline census
+    let _ = sess.predict(&[0, 1, 2]);
+    let warm = synthetic::dense_classification(5, 10, 99);
+    let _ = sess.partial_fit_rows(&warm);
+    let baseline = settled_census(usize::MAX - 1);
+
+    for i in 0..50usize {
+        match i % 5 {
+            0 => {
+                let fresh = synthetic::dense_classification(5, 10, 100 + i as u64);
+                let r = sess.partial_fit_rows(&fresh);
+                assert!(r.epochs >= 1);
+            }
+            3 => {
+                let r = sess.partial_fit_lambda(1.0 / sess.n() as f64);
+                assert!(r.epochs >= 1);
+            }
+            _ => {
+                let n = sess.n();
+                let idx: Vec<usize> = (0..64).map(|k| (i * 17 + k) % n).collect();
+                assert_eq!(sess.predict(&idx).len(), 64);
+            }
+        }
+    }
+    let after = settled_census(baseline);
+    assert!(
+        after <= baseline,
+        "50 interleaved requests grew threads: baseline={baseline}, after={after}"
+    );
+
+    // the session's drop must join exactly its resident workers
+    drop(sess);
+    let target = baseline.saturating_sub(workers);
+    let end = settled_census(target);
+    if end > 0 {
+        // census is 0 on non-Linux; only assert where it means something
+        assert!(
+            end <= target,
+            "session drop did not join its pool: baseline={baseline}, end={end}"
+        );
+    }
+}
