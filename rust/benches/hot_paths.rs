@@ -9,10 +9,10 @@
 //!
 //! Output format: `name  median  p10  p90  [derived throughput]`.
 
-use parlin::data::{synthetic, DataMatrix};
+use parlin::data::{synthetic, DataMatrix, Dataset, ShardedLayout};
 use parlin::glm::{ModelState, Objective};
 use parlin::solver::seq::run_bucket;
-use parlin::solver::{BucketPolicy, SolverConfig};
+use parlin::solver::{kernel, BucketPolicy, Buckets, LayoutPolicy, SolverConfig};
 use parlin::util::timer::bench_fn;
 use parlin::util::{percentile, Rng};
 
@@ -26,6 +26,92 @@ fn report(name: &str, samples: &[f64], work_items: f64, unit: &str) {
         p10 * 1e3,
         p90 * 1e3,
         work_items / med / 1e6
+    );
+}
+
+/// Layout × kernel ablation: one full-epoch sweep through the raw bucket
+/// kernels — the split two-pass `DataMatrix` walk against the fused
+/// single-stream interleaved kernel — plus the end-to-end solver epochs
+/// under both `LayoutPolicy`s. (The two paths train bit-wise identical
+/// models; `tests/pool_equivalence.rs` locks that in.)
+fn layout_ablation<M: DataMatrix>(label: &str, ds: &Dataset<M>, obj: Objective) {
+    let n = ds.n();
+    let inv_ln = 1.0 / (obj.lambda() * n as f64);
+    let buckets = Buckets::new(n, 8);
+
+    // layout build cost (paid once per train()/Session)
+    let samples = bench_fn(1, 5, || ShardedLayout::single(&ds.x, &buckets).nnz());
+    report(&format!("{label}: layout build"), &samples, ds.x.nnz() as f64, "nnz");
+
+    // raw kernels: split two-pass CSC/dense walk vs fused interleaved
+    let mut raw_meds = Vec::new();
+    {
+        let mut st = ModelState::zeros(n, ds.d());
+        let samples = bench_fn(2, 10, || {
+            run_bucket(ds, &obj, 0..n, &mut st.alpha, &mut st.v, inv_ln, n);
+        });
+        report(&format!("{label}: kernel csc 2-pass"), &samples, ds.x.nnz() as f64, "nnz");
+        raw_meds.push(percentile(&samples, 50.0));
+    }
+    {
+        let layout = ShardedLayout::single(&ds.x, &buckets);
+        let sh = layout.shard(0);
+        let mut st = ModelState::zeros(n, ds.d());
+        let samples = bench_fn(2, 10, || {
+            for b in 0..buckets.count() {
+                if b + 1 < buckets.count() {
+                    sh.prefetch_bucket(b + 1);
+                }
+                kernel::run_bucket(
+                    sh,
+                    &obj,
+                    buckets.range(b),
+                    &mut st.alpha,
+                    &mut st.v,
+                    &ds.y,
+                    ds.norms(),
+                    inv_ln,
+                    n,
+                );
+            }
+        });
+        report(&format!("{label}: kernel fused interleaved"), &samples, ds.x.nnz() as f64, "nnz");
+        raw_meds.push(percentile(&samples, 50.0));
+    }
+
+    // full solver epochs under both layout policies; the interleaved run
+    // gets the encoding via layout_cache (its build cost is reported
+    // separately above), so the ratio compares steady-state epochs only
+    let prebuilt = std::sync::Arc::new(ShardedLayout::single(&ds.x, &buckets));
+    let mut solver_meds = Vec::new();
+    for (tag, layout) in [
+        ("csc", LayoutPolicy::Csc),
+        ("interleaved", LayoutPolicy::Interleaved),
+    ] {
+        let mut cfg = SolverConfig::new(obj)
+            .with_tol(0.0)
+            .with_max_epochs(3)
+            .with_bucket(BucketPolicy::Fixed(8))
+            .with_layout(layout);
+        if layout == LayoutPolicy::Interleaved {
+            cfg = cfg.with_layout_cache(prebuilt.clone());
+        }
+        let samples = bench_fn(1, 5, || {
+            parlin::solver::seq::train_sequential(ds, &cfg).epochs_run
+        });
+        report(
+            &format!("{label}: solver 3 epochs, {tag}"),
+            &samples,
+            3.0 * ds.x.nnz() as f64,
+            "nnz",
+        );
+        solver_meds.push(percentile(&samples, 50.0));
+    }
+    println!(
+        "    {label}: interleaved/csc ratio — raw kernel {:.3}, solver epoch {:.3} \
+         (< 1.0 means the fused layout wins)",
+        raw_meds[1] / raw_meds[0],
+        solver_meds[1] / solver_meds[0]
     );
 }
 
@@ -88,6 +174,10 @@ fn main() {
         });
         report(label, &samples, 3.0 * dense.x.nnz() as f64, "nnz");
     }
+
+    // ---- layout × kernel ablation (interleaved shard + fused kernels) --
+    layout_ablation("dense 20k x 100", &dense, obj);
+    layout_ablation("sparse 50k x 1k @1%", &sparse, Objective::Logistic { lambda: 1e-5 });
 
     // ---- shuffle (the serial Fig 2a bottleneck) -----------------------
     {

@@ -61,27 +61,12 @@ impl DenseMatrix {
     /// Hint the hardware prefetcher at the column range `j_lo..j_hi`
     /// (the *next* bucket while the current one is being processed —
     /// §3's "CPU prefetching efficiency" made explicit). No-op on
-    /// non-x86 targets.
+    /// non-x86 targets (see [`util::prefetch_slice`]).
     #[inline]
     fn prefetch_cols_impl(&self, j_lo: usize, j_hi: usize) {
-        #[cfg(target_arch = "x86_64")]
-        {
-            let lo = j_lo * self.d;
-            let hi = (j_hi * self.d).min(self.data.len());
-            let bytes = &self.data[lo..hi];
-            let mut p = bytes.as_ptr() as *const i8;
-            let end = unsafe { p.add(bytes.len() * 8) };
-            while p < end {
-                unsafe {
-                    std::arch::x86_64::_mm_prefetch(p, std::arch::x86_64::_MM_HINT_T0);
-                    p = p.add(64);
-                }
-            }
-        }
-        #[cfg(not(target_arch = "x86_64"))]
-        {
-            let _ = (j_lo, j_hi);
-        }
+        let lo = j_lo * self.d;
+        let hi = (j_hi * self.d).min(self.data.len());
+        util::prefetch_slice(&self.data[lo..hi]);
     }
 
     /// Copy the selected examples into a new matrix (train/test splits).
@@ -171,7 +156,7 @@ impl DataMatrix for DenseMatrix {
         }
     }
 
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64 {
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
         let col = self.col(j);
         let mut s = 0.0;
         for (x, vi) in col.iter().zip(v.iter()) {
@@ -180,7 +165,7 @@ impl DataMatrix for DenseMatrix {
         s
     }
 
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]) {
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
         let col = self.col(j);
         for (x, vi) in col.iter().zip(v.iter()) {
             vi.add_wild(scale * x);

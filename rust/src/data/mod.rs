@@ -5,9 +5,14 @@
 //! example is one contiguous column. SDCA touches one example per step, so
 //! example-contiguity is what makes the inner products stream.
 //!
-//! Two concrete layouts are provided:
+//! Two concrete source layouts are provided:
 //! * [`dense::DenseMatrix`] — column-major dense (higgs / epsilon style),
-//! * [`sparse::CscMatrix`] — compressed sparse column (criteo style).
+//! * [`sparse::CscMatrix`] — compressed sparse column (criteo style),
+//!
+//! plus a derived *training* layout, [`shard::ShardedLayout`]: a
+//! shard-resident, bucket-major interleaved encoding the solvers stream
+//! through fused kernels by default (see [`shard`] and
+//! [`crate::solver::kernel`]; selected by [`LayoutPolicy`]).
 //!
 //! Solvers are generic over [`DataMatrix`] and get monomorphized per layout
 //! (no dynamic dispatch in the coordinate loop). [`AnyDataset`] is the
@@ -15,10 +20,12 @@
 
 pub mod dense;
 pub mod loader;
+pub mod shard;
 pub mod sparse;
 pub mod synthetic;
 
 pub use dense::DenseMatrix;
+pub use shard::{LayoutPolicy, ShardedLayout};
 pub use sparse::CscMatrix;
 
 /// Column access interface shared by dense and sparse layouts.
@@ -51,11 +58,13 @@ pub trait DataMatrix: Sync {
     fn for_each_col_entry(&self, j: usize, f: impl FnMut(usize, f64))
     where
         Self: Sized;
-    /// `⟨x_j, v⟩` against an atomically-shared vector (wild solver reads).
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64;
+    /// `⟨x_j, v⟩` against the atomically-shared vector (wild solver
+    /// reads). The elements are cache-line padded so concurrent updates
+    /// of *distinct* coordinates never contend on one line.
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64;
     /// `v += scale·x_j` with *unsynchronized* per-element RMWs — the wild
     /// solver's `ADD(v_i, δ·A_ij)`; concurrent callers may lose updates.
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]);
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]);
     /// Hint that examples `j_lo..j_hi` will be read next (software
     /// prefetch for the bucketed random-order walk). Default: no-op.
     #[inline]
@@ -107,6 +116,13 @@ impl<M: DataMatrix> Dataset<M> {
     #[inline]
     pub fn norm_sq(&self, j: usize) -> f64 {
         self.norms_sq[j]
+    }
+
+    /// The cached squared norms as a slice (the fused interleaved kernels
+    /// index it directly instead of going through [`Self::norm_sq`]).
+    #[inline]
+    pub fn norms(&self) -> &[f64] {
+        &self.norms_sq
     }
 
     /// Bytes of matrix payload — feeds the cost model's streaming term.

@@ -1,0 +1,545 @@
+//! Shard-resident interleaved training layout — the paper's cache-line
+//! locality and cache-line prefetching optimizations (§4) applied to the
+//! *example data* access pattern, not just the model vector.
+//!
+//! ## Why a second copy of the data
+//!
+//! The generic [`DataMatrix`] stores sparse examples CSC-style as split
+//! `idx`/`val` arrays, and every coordinate step walks an example **twice**
+//! (`dot_col` to get the margin, then `axpy_col` to apply the update).
+//! That is four stream walks per step over two distinct address streams —
+//! the hardware prefetcher has to track both, and the second pass re-issues
+//! the same index loads. The paper's measurements (and SySCD's layout
+//! redesign) show the remaining per-epoch time on large models is exactly
+//! this memory traffic.
+//!
+//! [`ShardedLayout`] materializes, once per `train()` call (or per serving
+//! [`Session`](crate::serve::Session)), a bucket-major **interleaved**
+//! encoding of each worker shard:
+//!
+//! * one [`Entry`] record `(idx: u32, val_bits: u64)` per stored non-zero,
+//!   packed per example, examples laid out in exactly the order the bucket
+//!   walk visits them — one coordinate step is one forward streaming read
+//!   of a single contiguous slice (§4 "cache line locality");
+//! * the backing buffer is 64-byte aligned ([`EntryBuf`]), so bucket entry
+//!   ranges start on cache-line boundaries and a bucket's stream never
+//!   splits a line with its neighbour;
+//! * per-bucket entry ranges are indexable, so the *next* bucket of the
+//!   shuffled permutation can be software-prefetched while the current one
+//!   computes ([`Shard::prefetch_bucket`]) — the shuffled bucket order
+//!   defeats the hardware stream detector, but the permutation makes the
+//!   target known one step ahead (§4 "cache line prefetching");
+//! * shards follow the *static* partitioning boundaries (one shard per
+//!   NUMA node for the hierarchical solver, one global shard otherwise).
+//!   The paper's **dynamic** re-deal shuffles bucket *assignment* between
+//!   workers every epoch — assignments are index lists, so a re-deal is a
+//!   pointer swap and never touches the per-bucket encoding. The layout is
+//!   rebuilt only when the partition geometry or the dataset itself
+//!   changes (e.g. `refit-rows` appends examples).
+//!
+//! ## When it pays
+//!
+//! An [`Entry`] costs 16 bytes per stored non-zero. For sparse data that
+//! replaces a 12-byte split `(idx, val)` pair that the two-pass walk
+//! reads **twice** per step with one forward 16-byte stream — strictly
+//! fewer cold bytes plus the fused/prefetched access pattern. For dense
+//! data the encoding doubles the cold bytes per value (8 → 16, the index
+//! is implicit in a dense column) in exchange for the same fusion and
+//! prefetch wins; which effect dominates is bandwidth-dependent, so the
+//! `benches/hot_paths.rs` layout ablation measures both and `--layout
+//! csc` opts any run out — results are bit-wise identical either way.
+//!
+//! ## Determinism
+//!
+//! The interleaved kernels ([`crate::solver::kernel`]) reproduce the exact
+//! floating-point reduction order of the `DataMatrix` paths (the same
+//! 4-accumulator chains as [`crate::util::dot`]), so training over a
+//! `ShardedLayout` is **bit-wise identical** to training over the source
+//! matrix — locked in by `rust/tests/pool_equivalence.rs`.
+
+use super::DataMatrix;
+use crate::solver::bucket::Buckets;
+
+/// Which data layout the inner training loops stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LayoutPolicy {
+    /// Walk the source matrix directly (split `idx`/`val` CSC arrays or
+    /// the dense column store) — the pre-layout baseline.
+    Csc,
+    /// Stream the shard-resident interleaved encoding with fused,
+    /// prefetching bucket kernels (default).
+    #[default]
+    Interleaved,
+}
+
+/// One interleaved stored non-zero: feature index + value bits in a single
+/// 16-byte record, so margin and update passes read **one** stream.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct Entry {
+    /// Feature index (the paper's datasets stay under 2³² features).
+    pub idx: u32,
+    _pad: u32,
+    /// `f64::to_bits` of the value — a free bit-cast on both ends.
+    pub val_bits: u64,
+}
+
+impl Entry {
+    #[inline]
+    pub fn new(idx: u32, val: f64) -> Self {
+        Entry {
+            idx,
+            _pad: 0,
+            val_bits: val.to_bits(),
+        }
+    }
+
+    #[inline]
+    pub fn val(&self) -> f64 {
+        f64::from_bits(self.val_bits)
+    }
+}
+
+/// Entries per 64-byte cache line (16 B each).
+const ENTRIES_PER_LINE: usize = 4;
+
+/// A 64-byte-aligned line of four entries — the allocation unit that keeps
+/// the whole backing buffer cache-line aligned without custom allocators.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct EntryLine(
+    // read through `EntryBuf::as_slice`'s pointer cast, never by name
+    #[allow(dead_code)] [Entry; ENTRIES_PER_LINE],
+);
+
+/// 64-byte-aligned entry buffer. Logical length may be any entry count;
+/// the tail of the last line is zero padding that is never addressed.
+#[derive(Clone)]
+pub struct EntryBuf {
+    lines: Vec<EntryLine>,
+    len: usize,
+}
+
+impl EntryBuf {
+    fn zeroed(len: usize) -> Self {
+        let line = EntryLine([Entry::new(0, 0.0); ENTRIES_PER_LINE]);
+        EntryBuf {
+            lines: vec![line; len.div_ceil(ENTRIES_PER_LINE)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Entry] {
+        // Safety: `lines` owns `len.div_ceil(4)` properly-initialized
+        // `EntryLine`s, each exactly four `Entry`s, so the first `len`
+        // entries are initialized and in bounds; alignment 64 ≥ 8.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<Entry>(), self.len) }
+    }
+
+    #[inline]
+    fn as_mut_slice(&mut self) -> &mut [Entry] {
+        // Safety: see `as_slice`; exclusive borrow of `lines`.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<Entry>(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for EntryBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EntryBuf({} entries, 64B-aligned)", self.len)
+    }
+}
+
+/// One worker shard: the interleaved encoding of a contiguous global
+/// bucket range (a NUMA node's static split, or everything).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Global bucket range `[bucket_lo, bucket_hi)` this shard encodes.
+    bucket_lo: usize,
+    bucket_hi: usize,
+    /// Global example range covered (derived from the bucket range).
+    example_lo: usize,
+    example_hi: usize,
+    /// Entry offset of local example `e`: entries of global example `j`
+    /// are `buf[col_ptr[j - example_lo] .. col_ptr[j - example_lo + 1]]`.
+    col_ptr: Vec<usize>,
+    buf: EntryBuf,
+    bucket_size: usize,
+    n_total: usize,
+}
+
+impl Shard {
+    fn build<M: DataMatrix>(x: &M, buckets: &Buckets, bucket_lo: usize, bucket_hi: usize) -> Self {
+        let n = x.n();
+        let size = buckets.size();
+        let example_lo = (bucket_lo * size).min(n);
+        let example_hi = (bucket_hi * size).min(n);
+        let total: usize = (example_lo..example_hi).map(|j| x.nnz_col(j)).sum();
+        let mut col_ptr = Vec::with_capacity(example_hi - example_lo + 1);
+        col_ptr.push(0usize);
+        let mut buf = EntryBuf::zeroed(total);
+        let slice = buf.as_mut_slice();
+        let mut k = 0usize;
+        for j in example_lo..example_hi {
+            x.for_each_col_entry(j, |i, v| {
+                slice[k] = Entry::new(i as u32, v);
+                k += 1;
+            });
+            col_ptr.push(k);
+        }
+        debug_assert_eq!(k, total);
+        Shard {
+            bucket_lo,
+            bucket_hi,
+            example_lo,
+            example_hi,
+            col_ptr,
+            buf,
+            bucket_size: size,
+            n_total: n,
+        }
+    }
+
+    /// Global bucket range this shard encodes.
+    #[inline]
+    pub fn bucket_range(&self) -> std::ops::Range<usize> {
+        self.bucket_lo..self.bucket_hi
+    }
+
+    /// Global example range this shard encodes.
+    #[inline]
+    pub fn example_range(&self) -> std::ops::Range<usize> {
+        self.example_lo..self.example_hi
+    }
+
+    #[inline]
+    pub fn covers_bucket(&self, b: usize) -> bool {
+        b >= self.bucket_lo && b < self.bucket_hi
+    }
+
+    /// Interleaved entries of global example `j` (must be in this shard).
+    #[inline]
+    pub fn entries(&self, j: usize) -> &[Entry] {
+        let local = j - self.example_lo;
+        let lo = self.col_ptr[local];
+        let hi = self.col_ptr[local + 1];
+        &self.buf.as_slice()[lo..hi]
+    }
+
+    /// Entry range (into this shard's buffer) of global bucket `b`.
+    #[inline]
+    pub fn bucket_entry_range(&self, b: usize) -> std::ops::Range<usize> {
+        debug_assert!(self.covers_bucket(b));
+        let lo = (b * self.bucket_size).min(self.n_total) - self.example_lo;
+        let hi = ((b + 1) * self.bucket_size).min(self.n_total) - self.example_lo;
+        self.col_ptr[lo]..self.col_ptr[hi]
+    }
+
+    /// Software-prefetch the entry stream of global bucket `b` — issued
+    /// for the *next* bucket of the shuffled permutation while the current
+    /// one computes, because the shuffled bucket order defeats the
+    /// hardware stream detector (§4). No-op off x86_64 and for buckets
+    /// outside this shard.
+    #[inline]
+    pub fn prefetch_bucket(&self, b: usize) {
+        if !self.covers_bucket(b) {
+            return;
+        }
+        self.prefetch_entries(self.bucket_entry_range(b));
+    }
+
+    /// Software-prefetch one example's entry stream — the wild solver's
+    /// walk unit (its flat permutation ignores bucket geometry, so this
+    /// works against a shard built with any bucket size).
+    #[inline]
+    pub fn prefetch_example(&self, j: usize) {
+        if j < self.example_lo || j >= self.example_hi {
+            return;
+        }
+        let local = j - self.example_lo;
+        self.prefetch_entries(self.col_ptr[local]..self.col_ptr[local + 1]);
+    }
+
+    #[inline]
+    fn prefetch_entries(&self, range: std::ops::Range<usize>) {
+        crate::util::prefetch_slice(&self.buf.as_slice()[range]);
+    }
+
+    /// Stored entries in this shard.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// The shard-resident interleaved layout of one dataset: one [`Shard`] per
+/// static partition (per active NUMA node for the hierarchical solver, one
+/// global shard otherwise). Built once per `train()`/`Session`; dynamic
+/// re-deals of buckets to workers only swap index lists, never entries.
+#[derive(Clone, Debug)]
+pub struct ShardedLayout {
+    shards: Vec<Shard>,
+    bucket_size: usize,
+    n: usize,
+    d: usize,
+}
+
+impl ShardedLayout {
+    /// One global shard over all buckets — the `seq`/`dom`/`wild` layout
+    /// (their dynamic partitioning shares the whole dataset).
+    pub fn single<M: DataMatrix>(x: &M, buckets: &Buckets) -> Self {
+        ShardedLayout {
+            shards: vec![Shard::build(x, buckets, 0, buckets.count())],
+            bucket_size: buckets.size(),
+            n: x.n(),
+            d: x.d(),
+        }
+    }
+
+    /// One shard per static bucket range — the hierarchical solver's
+    /// per-NUMA-node split (`ranges[k]` is node `k`'s range; inactive
+    /// nodes pass an empty range and get an empty shard, keeping shard
+    /// index == node index).
+    pub fn for_nodes<M: DataMatrix>(
+        x: &M,
+        buckets: &Buckets,
+        ranges: &[std::ops::Range<u32>],
+    ) -> Self {
+        ShardedLayout {
+            shards: ranges
+                .iter()
+                .map(|r| Shard::build(x, buckets, r.start as usize, r.end as usize))
+                .collect(),
+            bucket_size: buckets.size(),
+            n: x.n(),
+            d: x.d(),
+        }
+    }
+
+    #[inline]
+    pub fn shard(&self, s: usize) -> &Shard {
+        &self.shards[s]
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    pub fn bucket_size(&self) -> usize {
+        self.bucket_size
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Total interleaved entries across shards.
+    pub fn nnz(&self) -> usize {
+        self.shards.iter().map(|s| s.nnz()).sum()
+    }
+
+    /// Does this layout describe the same dataset shape (`n`, `d`, total
+    /// stored entries)? A necessary condition for any reuse — a cache
+    /// built from a *different* dataset that happened to share `n` would
+    /// otherwise be streamed silently against the wrong labels/norms.
+    fn same_shape(&self, n: usize, d: usize, nnz: usize) -> bool {
+        self.n == n && self.d == d && self.nnz() == nnz
+    }
+
+    /// Is this a single-shard layout over exactly this dataset shape with
+    /// exactly this bucket geometry? The gate for reusing a
+    /// caller-provided layout (`SolverConfig::layout_cache`) in the
+    /// bucketed solvers.
+    pub fn matches_single(&self, n: usize, d: usize, nnz: usize, bucket_size: usize) -> bool {
+        self.shards.len() == 1 && self.bucket_size == bucket_size && self.same_shape(n, d, nnz)
+    }
+
+    /// Is this a single-shard layout over exactly this dataset shape (any
+    /// bucket geometry)? Sufficient for per-example consumers (the wild
+    /// solver, serving predicts).
+    pub fn covers_examples(&self, n: usize, d: usize, nnz: usize) -> bool {
+        self.shards.len() == 1 && self.same_shape(n, d, nnz)
+    }
+}
+
+/// The layout one training run streams: borrowed from a caller's cache
+/// ([`SolverConfig::layout_cache`](crate::solver::SolverConfig)) when its
+/// geometry fits, owned by the run otherwise, absent under
+/// [`LayoutPolicy::Csc`]. The single [`RunLayout::resolve`] constructor
+/// encodes the "reuse iff it fits, else build" invariant, so solver call
+/// sites cannot desynchronize the gate from the build.
+pub enum RunLayout<'a> {
+    None,
+    Cached(&'a ShardedLayout),
+    Built(ShardedLayout),
+}
+
+impl<'a> RunLayout<'a> {
+    pub fn resolve(
+        interleaved: bool,
+        cache: Option<&'a std::sync::Arc<ShardedLayout>>,
+        fits: impl Fn(&ShardedLayout) -> bool,
+        build: impl FnOnce() -> ShardedLayout,
+    ) -> Self {
+        if !interleaved {
+            return RunLayout::None;
+        }
+        match cache.map(|l| l.as_ref()).filter(|l| fits(l)) {
+            Some(l) => RunLayout::Cached(l),
+            None => RunLayout::Built(build()),
+        }
+    }
+
+    /// Shard `s`, if a layout is present.
+    pub fn shard(&self, s: usize) -> Option<&Shard> {
+        match self {
+            RunLayout::None => None,
+            RunLayout::Cached(l) => Some(l.shard(s)),
+            RunLayout::Built(l) => Some(l.shard(s)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CscMatrix, DenseMatrix};
+
+    fn sample_sparse() -> CscMatrix {
+        CscMatrix::from_examples(
+            5,
+            &[
+                vec![(0, 1.0), (3, -2.0)],
+                vec![],
+                vec![(1, 0.5), (2, 4.0), (4, -1.0)],
+                vec![(2, 3.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn entry_line_is_one_cache_line() {
+        assert_eq!(std::mem::size_of::<Entry>(), 16);
+        assert_eq!(std::mem::size_of::<EntryLine>(), 64);
+        assert_eq!(std::mem::align_of::<EntryLine>(), 64);
+    }
+
+    #[test]
+    fn backing_buffer_is_64b_aligned() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 2);
+        let layout = ShardedLayout::single(&m, &buckets);
+        let entries = layout.shard(0).entries(0);
+        assert_eq!(entries.as_ptr() as usize % 64, 0, "shard stream must start on a line");
+    }
+
+    #[test]
+    fn single_shard_roundtrips_sparse() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 2);
+        let layout = ShardedLayout::single(&m, &buckets);
+        assert_eq!((layout.n(), layout.d(), layout.nnz()), (4, 5, 6));
+        let sh = layout.shard(0);
+        for j in 0..m.n() {
+            let mut want = Vec::new();
+            m.for_each_col_entry(j, |i, v| want.push((i as u32, v.to_bits())));
+            let got: Vec<(u32, u64)> = sh.entries(j).iter().map(|e| (e.idx, e.val_bits)).collect();
+            assert_eq!(got, want, "example {j}");
+        }
+    }
+
+    #[test]
+    fn single_shard_roundtrips_dense() {
+        let m = DenseMatrix::from_columns(3, &[&[1.0, 0.0, 2.0], &[-1.0, 4.0, 0.5]]);
+        let layout = ShardedLayout::single(&m, &Buckets::new(2, 1));
+        let sh = layout.shard(0);
+        let e = sh.entries(1);
+        assert_eq!(e.len(), 3);
+        assert_eq!((e[0].idx, e[0].val()), (0, -1.0));
+        assert_eq!((e[2].idx, e[2].val()), (2, 0.5));
+    }
+
+    #[test]
+    fn node_shards_cover_their_ranges() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 1); // 4 buckets of 1 example
+        let layout = ShardedLayout::for_nodes(&m, &buckets, &[0..2, 2..2, 2..4]);
+        assert_eq!(layout.num_shards(), 3);
+        assert_eq!(layout.shard(0).example_range(), 0..2);
+        assert_eq!(layout.shard(1).example_range(), 2..2); // inactive node
+        assert_eq!(layout.shard(2).example_range(), 2..4);
+        assert!(layout.shard(2).covers_bucket(3));
+        assert!(!layout.shard(2).covers_bucket(1));
+        let e = layout.shard(2).entries(3);
+        assert_eq!((e[0].idx, e[0].val()), (2, 3.0));
+        assert_eq!(layout.shard(0).nnz() + layout.shard(2).nnz(), m.nnz());
+    }
+
+    #[test]
+    fn bucket_entry_ranges_tile_the_stream() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 3); // buckets: [0..3), [3..4)
+        let layout = ShardedLayout::single(&m, &buckets);
+        let sh = layout.shard(0);
+        assert_eq!(sh.bucket_entry_range(0), 0..5);
+        assert_eq!(sh.bucket_entry_range(1), 5..6);
+        sh.prefetch_bucket(0); // smoke: must not fault
+        sh.prefetch_bucket(7); // out of range: no-op
+    }
+
+    #[test]
+    fn run_layout_reuses_only_a_fitting_cache() {
+        let m = sample_sparse();
+        let cache = std::sync::Arc::new(ShardedLayout::single(&m, &Buckets::new(m.n(), 2)));
+        let r = RunLayout::resolve(true, Some(&cache), |l| l.matches_single(4, 5, 6, 2), || {
+            unreachable!("fitting cache must not trigger a build")
+        });
+        assert!(matches!(r, RunLayout::Cached(_)));
+        assert!(r.shard(0).is_some());
+        for miss in [
+            (4usize, 5usize, 6usize, 8usize), // wrong bucket geometry
+            (5, 5, 6, 2),                     // wrong n (different dataset)
+            (4, 7, 6, 2),                     // wrong d
+            (4, 5, 9, 2),                     // wrong nnz
+        ] {
+            let r = RunLayout::resolve(
+                true,
+                Some(&cache),
+                |l| l.matches_single(miss.0, miss.1, miss.2, miss.3),
+                || ShardedLayout::single(&m, &Buckets::new(m.n(), 8)),
+            );
+            assert!(matches!(r, RunLayout::Built(_)), "{miss:?} must rebuild");
+        }
+        let r = RunLayout::resolve(false, Some(&cache), |_| true, || {
+            unreachable!("Csc runs never build a layout")
+        });
+        assert!(matches!(r, RunLayout::None));
+        assert!(r.shard(0).is_none());
+    }
+
+    #[test]
+    fn empty_dataset_ok() {
+        let m = CscMatrix::from_examples(3, &[]);
+        let layout = ShardedLayout::single(&m, &Buckets::new(0, 4));
+        assert_eq!(layout.nnz(), 0);
+        assert_eq!(layout.shard(0).example_range(), 0..0);
+    }
+}

@@ -65,10 +65,14 @@ impl CscMatrix {
     }
 
     /// Copy the selected examples into a new matrix (train/test splits).
+    /// Output vectors are pre-sized to the exact selected nnz — growing
+    /// them by push caused repeated reallocs (and full copies) on large
+    /// shards.
     pub fn subset(&self, idx: &[usize]) -> CscMatrix {
+        let total: usize = idx.iter().map(|&j| self.nnz_col(j)).sum();
         let mut col_ptr = Vec::with_capacity(idx.len() + 1);
-        let mut new_idx = Vec::new();
-        let mut new_val = Vec::new();
+        let mut new_idx = Vec::with_capacity(total);
+        let mut new_val = Vec::with_capacity(total);
         col_ptr.push(0);
         for &j in idx {
             let (ci, cv) = self.col(j);
@@ -120,12 +124,11 @@ impl DataMatrix for CscMatrix {
 
     #[inline]
     fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
+        // The shared 4-chain reduction (`util::dot4_by`): independent
+        // chains keep the gather pipeline full, and the sparse, dense and
+        // interleaved dot paths stay bit-wise identical by construction.
         let (idx, val) = self.col(j);
-        let mut s = 0.0;
-        for (&i, &x) in idx.iter().zip(val.iter()) {
-            s += x * v[i as usize];
-        }
-        s
+        crate::util::dot4_by(idx.len(), |k| (val[k], v[idx[k] as usize]))
     }
 
     #[inline]
@@ -166,7 +169,7 @@ impl DataMatrix for CscMatrix {
         }
     }
 
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::AtomicF64]) -> f64 {
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
         let (idx, val) = self.col(j);
         let mut s = 0.0;
         for (&i, &x) in idx.iter().zip(val.iter()) {
@@ -175,7 +178,7 @@ impl DataMatrix for CscMatrix {
         s
     }
 
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::AtomicF64]) {
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
         let (idx, val) = self.col(j);
         for (&i, &x) in idx.iter().zip(val.iter()) {
             v[i as usize].add_wild(scale * x);

@@ -20,7 +20,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
-use parlin::solver::{train, BucketPolicy, ExecPolicy, Partitioning, SolverConfig, Variant};
+use parlin::solver::{
+    train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
+};
 use parlin::sysinfo::Topology;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -72,6 +74,10 @@ TRAIN OPTIONS:
   --bucket      auto | off | <size>                   (default auto)
   --partition   dynamic | static                      (default dynamic)
   --exec        pool | threads | seq                  (default pool)
+  --layout      interleaved | csc                     (default interleaved)
+                interleaved streams the shard-resident fused-kernel
+                layout; csc walks the source matrix (bit-wise identical
+                models either way)
   --n / --d     synthetic dataset size overrides
   --seed        RNG seed                              (default 42)
   --csv         write the per-epoch log to a CSV file
@@ -208,6 +214,15 @@ fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<So
         "seq" | "sequential" => ExecPolicy::Sequential,
         other => bail!("unknown executor '{other}'"),
     };
+    let layout = match flags
+        .get("layout")
+        .map(String::as_str)
+        .unwrap_or("interleaved")
+    {
+        "interleaved" => LayoutPolicy::Interleaved,
+        "csc" | "native" => LayoutPolicy::Csc,
+        other => bail!("unknown layout '{other}'"),
+    };
     Ok(SolverConfig::new(obj)
         .with_variant(variant)
         .with_threads(get_parse(flags, "threads", 1usize)?)
@@ -216,6 +231,7 @@ fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<So
         .with_bucket(bucket)
         .with_partition(partition)
         .with_exec(exec)
+        .with_layout(layout)
         .with_seed(get_parse(flags, "seed", 42u64)?))
 }
 
@@ -462,5 +478,18 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.variant, Variant::Domesticated);
         assert!((cfg.obj.lambda() - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn layout_flag_parses_and_defaults_to_interleaved() {
+        let default = solver_cfg_from_flags(&parse_flags(&args(&[])).unwrap(), 100).unwrap();
+        assert_eq!(default.layout, LayoutPolicy::Interleaved);
+        let csc =
+            solver_cfg_from_flags(&parse_flags(&args(&["--layout=csc"])).unwrap(), 100).unwrap();
+        assert_eq!(csc.layout, LayoutPolicy::Csc);
+        assert!(
+            solver_cfg_from_flags(&parse_flags(&args(&["--layout", "rowmajor"])).unwrap(), 100)
+                .is_err()
+        );
     }
 }

@@ -2,9 +2,9 @@
 //! reused across every predict/refit/retrain request (see the module docs
 //! in [`crate::serve`] for the determinism and warm-start arguments).
 
-use crate::data::{AppendExamples, Dataset};
+use crate::data::{AppendExamples, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::{self, GapReport, ModelState, Objective};
-use crate::solver::{train, ExecPolicy, PoolStats, SolverConfig, WorkerPool};
+use crate::solver::{kernel, train, Buckets, ExecPolicy, PoolStats, SolverConfig, WorkerPool};
 use crate::sysinfo::Topology;
 use crate::util::Timer;
 use std::sync::Arc;
@@ -50,6 +50,13 @@ pub struct Session<M: AppendExamples> {
     state: ModelState,
     /// Primal weights of `state` — cached because every predict reads them.
     weights: Vec<f64>,
+    /// Session-resident interleaved layout ([`ShardedLayout`]) streaming
+    /// every predict's margins, and shared with the solver on every
+    /// refit/retrain via [`SolverConfig::layout_cache`] (so a training
+    /// request re-uses this encoding instead of rebuilding it). Rebuilt
+    /// only when the dataset changes (`refit-rows` appends) or a retrain
+    /// swaps the config. `None` under [`LayoutPolicy::Csc`].
+    layout: Option<Arc<ShardedLayout>>,
     stats: SessionStats,
 }
 
@@ -70,10 +77,24 @@ impl<M: AppendExamples> Session<M> {
             pool,
             state: ModelState::zeros(0, 0),
             weights: Vec::new(),
+            layout: None,
             stats: SessionStats::default(),
         };
+        sess.rebuild_layout();
         sess.fit(None, "initial-train");
         sess
+    }
+
+    /// (Re)materialize the resident interleaved layout from the current
+    /// dataset — called at session start and whenever the dataset or the
+    /// layout-relevant config changes. A no-op plain-matrix session under
+    /// [`LayoutPolicy::Csc`].
+    fn rebuild_layout(&mut self) {
+        self.layout = (self.cfg.layout == LayoutPolicy::Interleaved).then(|| {
+            let n = self.ds.n();
+            let buckets = Buckets::new(n, self.cfg.bucket.resolve_host(n));
+            Arc::new(ShardedLayout::single(&self.ds.x, &buckets))
+        });
     }
 
     /// Margins `⟨x_j, w⟩` for the requested examples, computed in parallel
@@ -95,8 +116,18 @@ impl<M: AppendExamples> Session<M> {
             .enumerate()
             .map(|(s, chunk)| {
                 let (ds, w) = (&self.ds, &self.weights[..]);
+                // margins stream the resident interleaved layout when one
+                // is materialized — bit-wise equal to `glm::model::margins`
+                // (kernel::dot_entries reproduces dot_col's reduction)
+                let shard = self.layout.as_ref().map(|l| l.shard(0));
                 let node = self.pool.node_of_worker(s % workers);
-                (node, move || glm::model::margins(ds, w, chunk))
+                (node, move || match shard {
+                    Some(sh) => chunk
+                        .iter()
+                        .map(|&j| kernel::dot_entries(sh.entries(j), w))
+                        .collect(),
+                    None => glm::model::margins(ds, w, chunk),
+                })
             })
             .collect();
         let parts = self.pool.run_tagged(jobs);
@@ -122,6 +153,9 @@ impl<M: AppendExamples> Session<M> {
         assert_eq!(rows.d(), self.ds.d(), "appended rows must match d");
         self.stats.refits += 1;
         self.ds.append(rows);
+        // the dataset changed shape: the resident interleaved encoding is
+        // stale and must be rematerialized before the next predict
+        self.rebuild_layout();
         let mut warm = self.state.extended(self.ds.n());
         warm.rebuild_v(&self.ds);
         self.fit(Some(warm), "refit-rows")
@@ -166,6 +200,8 @@ impl<M: AppendExamples> Session<M> {
         cfg.exec = ExecPolicy::Shared(Arc::clone(&self.pool));
         cfg.warm_start = None;
         self.cfg = cfg;
+        // a retrain may change the layout policy or bucket geometry
+        self.rebuild_layout();
         self.fit(None, "retrain")
     }
 
@@ -182,6 +218,10 @@ impl<M: AppendExamples> Session<M> {
         let t = Timer::start();
         let mut cfg = self.cfg.clone();
         cfg.warm_start = warm;
+        // hand the resident encoding to the solver — `seq`/`dom`/`wild`
+        // reuse it when the geometry fits instead of re-encoding the
+        // dataset (the hierarchical solver builds its own per-node shards)
+        cfg.layout_cache = self.layout.clone();
         let out = train(&self.ds, &cfg);
         self.stats.epochs_total += out.epochs_run as u64;
         let report = RefitReport {

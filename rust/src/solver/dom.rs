@@ -17,12 +17,13 @@
 //! Convergence is checked on the merged model exactly as in the sequential
 //! solver, so "epochs to converge" is directly comparable across variants.
 
-use crate::data::{DataMatrix, Dataset};
+use crate::data::shard::{RunLayout, Shard};
+use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::{ModelState, Objective};
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::exec::Executor;
 use crate::solver::seq::sdca_delta;
-use crate::solver::{Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
+use crate::solver::{kernel, Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
 use crate::solver::partition::Partitioner;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
 use crate::util::{Rng, Timer};
@@ -56,6 +57,7 @@ pub(crate) fn worker_round<M: DataMatrix>(
     obj: &Objective,
     buckets: &Buckets,
     my_buckets: &[u32],
+    shard: Option<&Shard>,
     alpha: &[AtomicF64],
     v_global: &[f64],
     inv_lambda_n: f64,
@@ -63,13 +65,35 @@ pub(crate) fn worker_round<M: DataMatrix>(
     sigma: f64,
 ) -> Vec<f64> {
     let mut u = v_global.to_vec();
-    for &b in my_buckets {
-        for j in buckets.range(b as usize) {
-            let a = alpha[j].load();
-            let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
-            if delta != 0.0 {
-                alpha[j].store(a + delta);
-                ds.x.axpy_col(j, sigma * delta, &mut u);
+    if let Some(sh) = shard {
+        // fused interleaved kernels; the worker's own (re-dealt) bucket
+        // list drives the one-ahead software prefetch
+        for (i, &b) in my_buckets.iter().enumerate() {
+            if let Some(&nb) = my_buckets.get(i + 1) {
+                sh.prefetch_bucket(nb as usize);
+            }
+            kernel::run_bucket_replica(
+                sh,
+                obj,
+                buckets.range(b as usize),
+                alpha,
+                &mut u,
+                &ds.y,
+                ds.norms(),
+                inv_lambda_n,
+                n_eff,
+                sigma,
+            );
+        }
+    } else {
+        for &b in my_buckets {
+            for j in buckets.range(b as usize) {
+                let a = alpha[j].load();
+                let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+                if delta != 0.0 {
+                    alpha[j].store(a + delta);
+                    ds.x.axpy_col(j, sigma * delta, &mut u);
+                }
             }
         }
     }
@@ -107,6 +131,17 @@ pub fn train_domesticated_exec<M: DataMatrix>(
 
     let bucket_size = cfg.bucket.resolve_host(n);
     let buckets = Buckets::new(n, bucket_size);
+    // One global interleaved shard, shared read-only by every worker:
+    // dynamic re-deals move bucket *ids* between workers, never entries,
+    // so the encoding is built exactly once per run — or not at all, when
+    // the caller's cached layout already has the right geometry.
+    let layout = RunLayout::resolve(
+        cfg.layout == LayoutPolicy::Interleaved,
+        cfg.layout_cache.as_ref(),
+        |l| l.matches_single(n, ds.d(), ds.x.nnz(), bucket_size),
+        || ShardedLayout::single(&ds.x, &buckets),
+    );
+    let shard = layout.shard(0);
     let mut partitioner = Partitioner::new(cfg.partition, buckets.count(), t_workers);
     let rounds = cfg.resolve_merges(ds);
 
@@ -155,7 +190,8 @@ pub fn train_domesticated_exec<M: DataMatrix>(
                         (&*ds, &obj, &buckets, &alpha[..], &v_global[..]);
                     move || {
                         worker_round(
-                            ds, obj, buckets, seg, alpha, v_ref, inv_lambda_n, n_eff, sigma,
+                            ds, obj, buckets, seg, shard, alpha, v_ref, inv_lambda_n, n_eff,
+                            sigma,
                         )
                     }
                 })

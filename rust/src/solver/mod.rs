@@ -20,6 +20,7 @@ pub mod bucket;
 pub mod convergence;
 pub mod dom;
 pub mod exec;
+pub mod kernel;
 pub mod numa;
 pub mod partition;
 pub mod pool;
@@ -31,6 +32,8 @@ pub use convergence::ConvergenceMonitor;
 pub use exec::{ExecPolicy, Executor};
 pub use partition::Partitioning;
 pub use pool::{PoolStats, WorkerPool, WorkerStats};
+
+pub use crate::data::LayoutPolicy;
 
 use crate::data::{DataMatrix, Dataset};
 use crate::glm::{GapReport, ModelState, Objective};
@@ -99,6 +102,21 @@ pub struct SolverConfig {
     /// deterministic single-core runs. All of them produce bit-wise
     /// identical models.
     pub exec: ExecPolicy,
+    /// Which data layout the inner loops stream (see [`LayoutPolicy`]):
+    /// the shard-resident interleaved encoding with fused, prefetching
+    /// bucket kernels by default, or the source matrix directly (`Csc`).
+    /// Both produce bit-wise identical models — locked in by
+    /// `rust/tests/pool_equivalence.rs`.
+    pub layout: LayoutPolicy,
+    /// Optional pre-built interleaved layout shared by the caller (a
+    /// serving [`Session`](crate::serve::Session) keeps one resident for
+    /// predicts). A solver reuses it instead of re-encoding the dataset
+    /// when the geometry fits — `seq`/`dom` need a single shard with the
+    /// run's exact bucket size, `wild` any single shard over the same
+    /// examples; the hierarchical solver always builds its own per-node
+    /// shards. Contents are identical to a fresh build, so the bit-wise
+    /// guarantees are unaffected.
+    pub layout_cache: Option<std::sync::Arc<crate::data::ShardedLayout>>,
     /// Optional warm start: resume from an existing [`ModelState`] instead
     /// of `α = 0` (serving-side partial refits after appending examples or
     /// changing λ). Honored by the `seq`/`dom`/`numa`/`wild` trainers; the
@@ -128,6 +146,8 @@ impl SolverConfig {
             merges_per_epoch: 0, // auto
             sigma: SigmaPolicy::Adaptive,
             exec: ExecPolicy::Pool,
+            layout: LayoutPolicy::Interleaved,
+            layout_cache: None,
             warm_start: None,
             topology: None,
             divergence_factor: 1e3,
@@ -176,6 +196,18 @@ impl SolverConfig {
 
     pub fn with_exec(mut self, e: ExecPolicy) -> Self {
         self.exec = e;
+        self
+    }
+
+    pub fn with_layout(mut self, l: LayoutPolicy) -> Self {
+        self.layout = l;
+        self
+    }
+
+    /// Share a pre-built interleaved layout with this run (see
+    /// [`SolverConfig::layout_cache`]).
+    pub fn with_layout_cache(mut self, l: std::sync::Arc<crate::data::ShardedLayout>) -> Self {
+        self.layout_cache = Some(l);
         self
     }
 

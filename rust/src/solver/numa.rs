@@ -18,13 +18,13 @@
 //! The training dataset itself is never replicated: it is read-only and
 //! causes no coherence traffic (§3).
 
-use crate::data::{DataMatrix, Dataset};
+use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::exec::Executor;
 use crate::solver::partition::Partitioner;
 use crate::solver::seq::sdca_delta;
-use crate::solver::{Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::sysinfo::Topology;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
 use crate::util::{Rng, Timer};
@@ -96,6 +96,12 @@ pub fn train_numa_exec<M: DataMatrix>(
     let bucket_size = cfg.bucket.resolve_host(n);
     let buckets = Buckets::new(n, bucket_size);
     let node_ranges = node_bucket_ranges(buckets.count(), &placement);
+    // Shard-resident interleaved layout: one shard per node, following the
+    // *static* cross-node bucket split, so every node's workers stream
+    // only entries their node materialized (first-touch keeps the shard on
+    // the node's memory). Intra-node dynamic re-deals are index swaps.
+    let layout = (cfg.layout == LayoutPolicy::Interleaved)
+        .then(|| ShardedLayout::for_nodes(&ds.x, &buckets, &node_ranges));
 
     // per-node dynamic partitioners over the node's own bucket range
     let mut node_parts: Vec<Option<Partitioner>> = placement
@@ -170,18 +176,40 @@ pub fn train_numa_exec<M: DataMatrix>(
                     let seg = super::dom::segment(tl, round, rounds);
                     let (ds, obj, buckets, alpha, v_ref) =
                         (&*ds, &obj, &buckets, &alpha[..], &v_nodes[k][..]);
+                    let shard = layout.as_ref().map(|l| l.shard(k));
                     jobs.push((k, move || {
                         // σ′-scaled replica: u = v_node + σ′·A·Δα_local
                         // (see solver::dom::worker_round for the algebra)
                         let mut u = v_ref.to_vec();
-                        for &b in seg {
-                            let global_b = (range_lo + b) as usize;
-                            for j in buckets.range(global_b) {
-                                let a = alpha[j].load();
-                                let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
-                                if delta != 0.0 {
-                                    alpha[j].store(a + delta);
-                                    ds.x.axpy_col(j, sigma * delta, &mut u);
+                        if let Some(sh) = shard {
+                            for (i, &b) in seg.iter().enumerate() {
+                                if let Some(&nb) = seg.get(i + 1) {
+                                    sh.prefetch_bucket((range_lo + nb) as usize);
+                                }
+                                kernel::run_bucket_replica(
+                                    sh,
+                                    obj,
+                                    buckets.range((range_lo + b) as usize),
+                                    alpha,
+                                    &mut u,
+                                    &ds.y,
+                                    ds.norms(),
+                                    inv_lambda_n,
+                                    n_eff,
+                                    sigma,
+                                );
+                            }
+                        } else {
+                            for &b in seg {
+                                let global_b = (range_lo + b) as usize;
+                                for j in buckets.range(global_b) {
+                                    let a = alpha[j].load();
+                                    let delta =
+                                        sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+                                    if delta != 0.0 {
+                                        alpha[j].store(a + delta);
+                                        ds.x.axpy_col(j, sigma * delta, &mut u);
+                                    }
                                 }
                             }
                         }

@@ -2,10 +2,11 @@
 //! single-threaded trainer and the building block every parallel variant
 //! reuses for its per-worker inner loop.
 
-use crate::data::{DataMatrix, Dataset};
+use crate::data::shard::RunLayout;
+use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::Objective;
 use crate::metrics::{EpochStats, RunRecord};
-use crate::solver::{Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::{Rng, Timer};
 
 /// One exact SDCA coordinate step on example `j` against the vector `v`
@@ -57,6 +58,16 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     let obj = cfg.obj;
     let bucket_size = cfg.bucket.resolve_host(n);
     let buckets = Buckets::new(n, bucket_size);
+    // Interleaved layout: one global shard, materialized once for the
+    // whole run (or borrowed from the caller's cache when its geometry
+    // matches) — per-epoch shuffles only permute bucket *ids* over it.
+    let layout = RunLayout::resolve(
+        cfg.layout == LayoutPolicy::Interleaved,
+        cfg.layout_cache.as_ref(),
+        |l| l.matches_single(n, ds.d(), ds.x.nnz(), bucket_size),
+        || ShardedLayout::single(&ds.x, &buckets),
+    );
+    let shard = layout.shard(0);
     let mut ids = buckets.ids();
     let mut rng = Rng::new(cfg.seed);
     let mut st = crate::solver::initial_state(cfg, ds);
@@ -79,6 +90,23 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
             // compute (§3: bucketing makes prefetching effective; the
             // shuffled *bucket* order still defeats the hardware stream
             // detector, so we hint it explicitly)
+            if let Some(sh) = shard {
+                if let Some(&nb) = ids.get(i + 1) {
+                    sh.prefetch_bucket(nb as usize);
+                }
+                kernel::run_bucket(
+                    sh,
+                    &obj,
+                    buckets.range(b as usize),
+                    &mut st.alpha,
+                    &mut st.v,
+                    &ds.y,
+                    ds.norms(),
+                    inv_lambda_n,
+                    n,
+                );
+                continue;
+            }
             if let Some(&nb) = ids.get(i + 1) {
                 let r = buckets.range(nb as usize);
                 ds.x.prefetch_cols(r.start, r.end);

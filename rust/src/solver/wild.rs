@@ -14,11 +14,12 @@
 //! convergence-vs-thread-count studies on this 1-core box use the
 //! deterministic lockstep engine in [`crate::vthread`] instead.
 
-use crate::data::{DataMatrix, Dataset};
+use crate::data::shard::RunLayout;
+use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
-use crate::solver::{ConvergenceMonitor, SolverConfig, TrainOutput};
-use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
+use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::util::atomic::{atomic_vec, padded_atomic_vec, snapshot, AtomicF64, PaddedAtomicF64};
 use crate::util::{Rng, Timer};
 
 pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
@@ -35,9 +36,23 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         .unwrap_or_else(crate::sysinfo::Topology::detect);
     let exec = cfg.build_executor(&topo);
 
+    // Per-example interleaved stream: wild walks a flat shuffled
+    // permutation, so the layout's win here is the single interleaved
+    // read per visit plus one-ahead prefetch off the permutation. Any
+    // caller-cached single shard over the same examples serves (bucket
+    // geometry is irrelevant to a per-example walk). Shared vector `v`
+    // is cache-line padded — adjacent coordinates no longer false-share
+    // under the unsynchronized ADDs.
+    let layout = RunLayout::resolve(
+        cfg.layout == LayoutPolicy::Interleaved,
+        cfg.layout_cache.as_ref(),
+        |l| l.covers_examples(n, ds.d(), ds.x.nnz()),
+        || ShardedLayout::single(&ds.x, &Buckets::new(n, 1)),
+    );
+    let shard = layout.shard(0);
     let init = crate::solver::initial_state(cfg, ds);
     let alpha: Vec<AtomicF64> = atomic_vec(n);
-    let v: Vec<AtomicF64> = atomic_vec(ds.d());
+    let v: Vec<PaddedAtomicF64> = padded_atomic_vec(ds.d());
     for (slot, &a) in alpha.iter().zip(init.alpha.iter()) {
         if a != 0.0 {
             slot.store(a);
@@ -78,6 +93,27 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
             let ds = &ds;
             let obj = &obj;
             jobs.push(move || {
+                if let Some(sh) = shard {
+                    for (i, &jj) in my.iter().enumerate() {
+                        let j = jj as usize;
+                        // one-ahead prefetch off the thread's permutation
+                        // slice
+                        if let Some(&nj) = my.get(i + 1) {
+                            sh.prefetch_example(nj as usize);
+                        }
+                        // READ current (possibly stale/racing) state
+                        let a = alpha[j].load();
+                        let entries = sh.entries(j);
+                        let xw = kernel::dot_entries_atomic(entries, v) * inv_lambda_n;
+                        let delta = obj.delta(a, xw, ds.norm_sq(j), ds.y[j], n);
+                        if delta != 0.0 {
+                            // WRITE α_j (exclusive), ADD to v (wild)
+                            alpha[j].store(a + delta);
+                            kernel::axpy_entries_wild(entries, delta, v);
+                        }
+                    }
+                    return;
+                }
                 for &jj in my {
                     let j = jj as usize;
                     // READ current (possibly stale/racing) state

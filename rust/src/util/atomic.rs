@@ -55,9 +55,53 @@ impl AtomicF64 {
     }
 }
 
+/// [`AtomicF64`] padded out to its own 64-byte cache line.
+///
+/// The wild solver's shared vector `v` is hammered by unsynchronized
+/// read-modify-writes from every thread; with plain 8-byte elements,
+/// eight *distinct* coordinates share one line and every `add_wild`
+/// ping-pongs that line between cores (false sharing) even when no two
+/// threads touch the same coordinate. One element per line removes the
+/// coherence traffic for distinct-coordinate updates.
+///
+/// Only `v` pays for this: the `α` arrays deliberately stay compact
+/// `AtomicF64`s — the bucket optimization *wants* eight `α` slots per
+/// fetched line (see [`crate::solver::bucket`]).
+///
+/// The trade-off: padding multiplies `v`'s footprint (and the lines a
+/// full-vector margin dot streams) by 8 — it buys write-coherence relief
+/// at the price of read amplification, which side wins depends on thread
+/// count and `d` (the ROADMAP tracks measuring it on real hardware).
+/// Wild is a *baseline* the paper argues against, so its absolute speed
+/// is not on any critical path.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct PaddedAtomicF64(AtomicF64);
+
+impl PaddedAtomicF64 {
+    pub fn new(v: f64) -> Self {
+        PaddedAtomicF64(AtomicF64::new(v))
+    }
+}
+
+impl std::ops::Deref for PaddedAtomicF64 {
+    type Target = AtomicF64;
+
+    #[inline]
+    fn deref(&self) -> &AtomicF64 {
+        &self.0
+    }
+}
+
 /// Allocate a zeroed atomic vector.
 pub fn atomic_vec(n: usize) -> Vec<AtomicF64> {
     (0..n).map(|_| AtomicF64::new(0.0)).collect()
+}
+
+/// Allocate a zeroed cache-line-padded atomic vector (one element per
+/// 64-byte line — the wild shared vector's false-sharing fix).
+pub fn padded_atomic_vec(n: usize) -> Vec<PaddedAtomicF64> {
+    (0..n).map(|_| PaddedAtomicF64::new(0.0)).collect()
 }
 
 /// Snapshot an atomic vector into plain f64s.
@@ -105,5 +149,20 @@ mod tests {
         let v = atomic_vec(3);
         v[1].store(7.0);
         assert_eq!(snapshot(&v), vec![0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn padded_is_one_element_per_line() {
+        assert_eq!(std::mem::size_of::<PaddedAtomicF64>(), 64);
+        assert_eq!(std::mem::align_of::<PaddedAtomicF64>(), 64);
+        let v = padded_atomic_vec(3);
+        let base = v.as_ptr() as usize;
+        assert_eq!(base % 64, 0);
+        assert_eq!(&v[1] as *const _ as usize - base, 64);
+        v[2].store(1.5);
+        v[2].add_wild(0.5); // Deref: the AtomicF64 API carries over
+        v[2].fetch_add(1.0);
+        assert_eq!(v[2].load(), 3.0);
+        assert_eq!(v[0].load(), 0.0);
     }
 }

@@ -10,34 +10,75 @@ pub mod rng;
 pub mod stats;
 pub mod timer;
 
-pub use atomic::AtomicF64;
+pub use atomic::{AtomicF64, PaddedAtomicF64};
 pub use rng::Rng;
 pub use stats::{geomean, mean, percentile, stddev};
 pub use timer::Timer;
 
-/// Dot product of two equal-length slices.
+/// The ONE 4-chain dot reduction: `Σ x_k·y_k` over `n` product pairs
+/// produced by `pair(k)`, accumulated in four independent chains folded
+/// as `(s0+s1)+(s2+s3)` with a sequential tail.
 ///
-/// Written as four independent accumulator chains so LLVM can vectorize and
-/// keep the FMA pipeline full — this is the innermost hot loop of the dense
-/// SDCA coordinate update (see `solver::seq`).
+/// Four chains let LLVM vectorize and keep the FMA pipeline full; every
+/// dot path in the crate — [`dot`] (dense columns), `CscMatrix::dot_col`
+/// (sparse gather) and `solver::kernel::dot_entries` (interleaved
+/// stream) — routes through this single implementation, so their
+/// floating-point evaluation order is identical **by construction**. The
+/// layout-equivalence guarantee (`tests/pool_equivalence.rs`) depends on
+/// that: change the reduction here and every path changes together.
+#[inline]
+pub fn dot4_by(n: usize, pair: impl Fn(usize) -> (f64, f64)) -> f64 {
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let k = c * 4;
+        let (x0, y0) = pair(k);
+        let (x1, y1) = pair(k + 1);
+        let (x2, y2) = pair(k + 2);
+        let (x3, y3) = pair(k + 3);
+        s0 += x0 * y0;
+        s1 += x1 * y1;
+        s2 += x2 * y2;
+        s3 += x3 * y3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        let (x, y) = pair(k);
+        s += x * y;
+    }
+    s
+}
+
+/// Dot product of two equal-length slices — the innermost hot loop of the
+/// dense SDCA coordinate update (see `solver::seq`); one instance of the
+/// shared [`dot4_by`] reduction.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
+    dot4_by(a.len(), |k| (a[k], b[k]))
+}
+
+/// Software-prefetch a slice's bytes toward L1 — one `_mm_prefetch` per
+/// 64-byte line on x86_64, a no-op elsewhere. The ONE prefetch loop
+/// behind both `DenseMatrix::prefetch_cols` and
+/// `data::shard::Shard::prefetch_bucket`/`prefetch_example`.
+#[inline]
+pub fn prefetch_slice<T>(data: &[T]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut p = data.as_ptr() as *const i8;
+        let end = unsafe { p.add(std::mem::size_of_val(data)) };
+        while p < end {
+            unsafe {
+                std::arch::x86_64::_mm_prefetch(p, std::arch::x86_64::_MM_HINT_T0);
+                p = p.add(64);
+            }
+        }
     }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = data;
     }
-    s
 }
 
 /// `y += alpha * x` (axpy), the shared-vector update of the SDCA step.

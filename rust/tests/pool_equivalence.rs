@@ -9,7 +9,9 @@ use parlin::data::synthetic;
 use parlin::glm::Objective;
 use parlin::solver::exec::Executor;
 use parlin::solver::pool::WorkerPool;
-use parlin::solver::{dom, numa, train, ExecPolicy, SolverConfig, Variant};
+use parlin::solver::{
+    dom, numa, train, BucketPolicy, ExecPolicy, LayoutPolicy, SolverConfig, Variant,
+};
 use parlin::sysinfo::Topology;
 
 fn logistic(n: usize) -> Objective {
@@ -112,6 +114,144 @@ fn pool_identical_across_objectives() {
         assert_eq!(p.state.alpha, s.state.alpha, "{obj:?}");
         assert_eq!(p.state.v, s.state.v, "{obj:?}");
     }
+}
+
+/// The tentpole guarantee of the shard-resident interleaved layout: for
+/// every solver variant, training over `LayoutPolicy::Interleaved` (fused
+/// single-stream kernels + software prefetch) produces **bit-wise
+/// identical** `alpha` and `v` to `LayoutPolicy::Csc` (the split
+/// two-pass `DataMatrix` walk). The layout changes how bytes are
+/// streamed, never a single floating-point operation or its order.
+///
+/// `wild` runs under the `Sequential` executor: its multi-threaded mode
+/// is intentionally racy, so only the deterministic dispatch admits a
+/// bit-wise claim (the kernels themselves are identical either way).
+#[test]
+fn layouts_bitwise_identical_across_all_solvers() {
+    let dense = synthetic::dense_classification(420, 14, 27);
+    let sparse = synthetic::sparse_classification(500, 120, 0.06, 28);
+    let topo = Topology::uniform(2, 2);
+    for variant in [
+        Variant::Sequential,
+        Variant::Domesticated,
+        Variant::Numa,
+        Variant::Wild,
+    ] {
+        let mut base = SolverConfig::new(logistic(420))
+            .with_variant(variant)
+            .with_threads(if variant == Variant::Sequential { 1 } else { 4 })
+            .with_topology(topo.clone())
+            .with_bucket(BucketPolicy::Fixed(8))
+            .with_tol(0.0)
+            .with_max_epochs(8);
+        if variant == Variant::Wild {
+            base = base.with_exec(ExecPolicy::Sequential);
+        }
+        let csc = train(&dense, &base.clone().with_layout(LayoutPolicy::Csc));
+        let il = train(&dense, &base.clone().with_layout(LayoutPolicy::Interleaved));
+        assert_eq!(csc.state.alpha, il.state.alpha, "{variant:?} α, dense");
+        assert_eq!(csc.state.v, il.state.v, "{variant:?} v, dense");
+
+        let base = base.with_threads(if variant == Variant::Sequential { 1 } else { 3 });
+        let csc = train(&sparse, &base.clone().with_layout(LayoutPolicy::Csc));
+        let il = train(&sparse, &base.clone().with_layout(LayoutPolicy::Interleaved));
+        assert_eq!(csc.state.alpha, il.state.alpha, "{variant:?} α, sparse");
+        assert_eq!(csc.state.v, il.state.v, "{variant:?} v, sparse");
+    }
+}
+
+/// Layout equivalence holds for the non-logistic duals too (ridge's
+/// closed-form step and hinge's box-clipped step go through the same
+/// fused kernel).
+#[test]
+fn layouts_bitwise_identical_across_objectives() {
+    let ds = synthetic::dense_classification(260, 9, 29);
+    for obj in [
+        Objective::Hinge { lambda: 1.0 / 260.0 },
+        Objective::Ridge { lambda: 0.05 },
+    ] {
+        let base = SolverConfig::new(obj)
+            .with_variant(Variant::Domesticated)
+            .with_threads(3)
+            .with_bucket(BucketPolicy::Fixed(4))
+            .with_tol(0.0)
+            .with_max_epochs(6);
+        let csc = train(&ds, &base.clone().with_layout(LayoutPolicy::Csc));
+        let il = train(&ds, &base.clone().with_layout(LayoutPolicy::Interleaved));
+        assert_eq!(csc.state.alpha, il.state.alpha, "{obj:?}");
+        assert_eq!(csc.state.v, il.state.v, "{obj:?}");
+    }
+}
+
+/// Auto bucket policy + warm starts ride the same interleaved plumbing:
+/// a warm interleaved refit resumes bit-wise from where a CSC run left
+/// off (the layouts must be interchangeable *mid-trajectory*).
+#[test]
+fn layouts_interchangeable_mid_trajectory() {
+    let ds = synthetic::sparse_classification(300, 60, 0.08, 30);
+    let base = SolverConfig::new(logistic(300))
+        .with_variant(Variant::Domesticated)
+        .with_threads(2)
+        .with_tol(0.0)
+        .with_max_epochs(5);
+    let first = train(&ds, &base.clone().with_layout(LayoutPolicy::Csc));
+    let a = train(
+        &ds,
+        &base
+            .clone()
+            .with_layout(LayoutPolicy::Csc)
+            .with_warm_start(first.state.clone()),
+    );
+    let b = train(
+        &ds,
+        &base
+            .clone()
+            .with_layout(LayoutPolicy::Interleaved)
+            .with_warm_start(first.state.clone()),
+    );
+    assert_eq!(a.state.alpha, b.state.alpha);
+    assert_eq!(a.state.v, b.state.v);
+}
+
+/// A caller-provided `layout_cache` (the serving session's resident
+/// encoding) must be a pure reuse: bit-wise identical to a run that
+/// builds its own layout, for matching geometry and for the wild
+/// per-example walk where any single shard over the same examples fits.
+#[test]
+fn layout_cache_reuse_is_bitwise_identical() {
+    use parlin::data::ShardedLayout;
+    let ds = synthetic::sparse_classification(400, 90, 0.07, 31);
+    let bucket = 8usize;
+    let layout = std::sync::Arc::new(ShardedLayout::single(
+        &ds.x,
+        &parlin::solver::Buckets::new(400, bucket),
+    ));
+    for variant in [Variant::Sequential, Variant::Domesticated, Variant::Wild] {
+        let mut base = SolverConfig::new(logistic(400))
+            .with_variant(variant)
+            .with_threads(if variant == Variant::Sequential { 1 } else { 3 })
+            .with_bucket(BucketPolicy::Fixed(bucket))
+            .with_tol(0.0)
+            .with_max_epochs(6);
+        if variant == Variant::Wild {
+            base = base.with_exec(ExecPolicy::Sequential);
+        }
+        let own = train(&ds, &base.clone());
+        let shared = train(&ds, &base.clone().with_layout_cache(layout.clone()));
+        assert_eq!(own.state.alpha, shared.state.alpha, "{variant:?} α cached vs built");
+        assert_eq!(own.state.v, shared.state.v, "{variant:?} v cached vs built");
+    }
+    // mismatched geometry must fall back to a private build, not misuse
+    // the cache: same data, different bucket size
+    let cfg = SolverConfig::new(logistic(400))
+        .with_variant(Variant::Sequential)
+        .with_bucket(BucketPolicy::Fixed(4))
+        .with_tol(0.0)
+        .with_max_epochs(6);
+    let own = train(&ds, &cfg.clone());
+    let shared = train(&ds, &cfg.with_layout_cache(layout));
+    assert_eq!(own.state.alpha, shared.state.alpha, "mismatched cache must be ignored");
+    assert_eq!(own.state.v, shared.state.v);
 }
 
 /// One pool serves many consecutive dispatch rounds of one run AND many

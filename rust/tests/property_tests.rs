@@ -368,3 +368,57 @@ fn prop_subset_preserves_examples() {
         }
     }
 }
+
+/// The shard-resident interleaved layout round-trips to the exact
+/// `(example, idx, val)` multiset of its source — for random sparse and
+/// dense datasets, random bucket sizes, and random shard splits. Entries
+/// must also appear in source stream order per example (the fused
+/// kernels' bit-wise determinism argument relies on it).
+#[test]
+fn prop_sharded_layout_roundtrip() {
+    use parlin::data::shard::ShardedLayout;
+    use parlin::solver::Buckets;
+
+    fn source_entries<M: DataMatrix>(x: &M, j: usize) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        x.for_each_col_entry(j, |i, v| out.push((i as u32, v.to_bits())));
+        out
+    }
+
+    fn check_layout<M: DataMatrix>(x: &M, layout: &ShardedLayout, replay: &str) {
+        let mut total = 0usize;
+        for s in 0..layout.num_shards() {
+            let sh = layout.shard(s);
+            for j in sh.example_range() {
+                let want = source_entries(x, j);
+                let got: Vec<(u32, u64)> =
+                    sh.entries(j).iter().map(|e| (e.idx, e.val_bits)).collect();
+                assert_eq!(got, want, "{replay}: shard {s} example {j}");
+                total += got.len();
+            }
+        }
+        assert_eq!(total, x.nnz(), "{replay}: entry multiset size");
+    }
+
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed);
+        let d = 3 + rng.next_below(24) as usize;
+        let n = 1 + rng.next_below(60) as usize;
+        let (dense, sparse) = paired_matrices(&mut rng, d, n);
+        let bucket_size = 1 + rng.next_below(9) as usize;
+        let buckets = Buckets::new(n, bucket_size);
+        let replay = format!("seed={seed} d={d} n={n} bucket={bucket_size}");
+
+        check_layout(&sparse, &ShardedLayout::single(&sparse, &buckets), &replay);
+        check_layout(&dense, &ShardedLayout::single(&dense, &buckets), &replay);
+
+        // random 3-way shard split (possibly with empty middle shard)
+        let count = buckets.count() as u32;
+        let cut_a = rng.next_below(count as u64 + 1) as u32;
+        let cut_b = cut_a + rng.next_below((count - cut_a) as u64 + 1) as u32;
+        let ranges = [0..cut_a, cut_a..cut_b, cut_b..count];
+        let split = format!("{replay} cuts=({cut_a},{cut_b})");
+        check_layout(&sparse, &ShardedLayout::for_nodes(&sparse, &buckets, &ranges), &split);
+        check_layout(&dense, &ShardedLayout::for_nodes(&dense, &buckets, &ranges), &split);
+    }
+}

@@ -101,6 +101,54 @@ fn warm_refit_beats_cold_retrain_in_epochs() {
     assert!(sess.gap().gap < 1e-2);
 }
 
+/// The ROADMAP's work-stealing decision needs *recorded* imbalance
+/// numbers from a real serving workload — this smoke test produces them.
+/// Ignored by default (it is a measurement, not a guarantee); run with:
+///
+/// ```bash
+/// cargo test --test serving -- --ignored --nocapture
+/// ```
+///
+/// Decision rule (ROADMAP): if max/mean busy time is materially above 1,
+/// add intra-node work stealing.
+#[test]
+#[ignore = "serving smoke workload: run explicitly to record pool imbalance"]
+fn smoke_synthetic_serve_records_pool_imbalance() {
+    let _g = gate();
+    let topo = Topology::uniform(2, 2);
+    let cfg = SolverConfig::new(logistic(3000))
+        .with_variant(Variant::Domesticated)
+        .with_threads(4)
+        .with_topology(topo)
+        .with_tol(1e-3)
+        .with_max_epochs(150);
+    let ds = synthetic::sparse_classification(3000, 300, 0.05, 77);
+    let mut sess = Session::new(ds, cfg);
+
+    let reqs = parlin::serve::synthetic_mix(150, 256, 32, 7);
+    let report = parlin::serve::drive(&mut sess, &reqs, 7);
+    let ps = sess.pool_stats();
+    let imb = ps.imbalance();
+    println!(
+        "serve smoke: {} requests in {:.3}s ({} predicts / {} refits / {} retrains)",
+        report.requests(),
+        report.total_wall_s,
+        report.predict_s.len(),
+        report.refit_s.len(),
+        report.retrain_s.len()
+    );
+    println!("pool imbalance (max/mean busy): {imb:.3} over {} jobs", ps.total_jobs());
+    for w in &ps.per_worker {
+        println!(
+            "  worker {:>2} (node {}): {:>7} jobs, {:>8.4}s busy",
+            w.worker, w.node, w.jobs, w.busy_s
+        );
+    }
+    assert!(ps.total_jobs() > 0, "the workload must have exercised the pool");
+    assert!(imb.is_finite(), "imbalance must be finite, got {imb}");
+    assert!(imb >= 1.0 - 1e-9, "max/mean cannot be below 1, got {imb}");
+}
+
 #[test]
 fn fifty_interleaved_requests_leak_no_threads() {
     let _g = gate();
