@@ -1,8 +1,14 @@
 //! Closed-loop serving benchmark (custom harness — no criterion in the
-//! offline toolchain): stand up one resident `Session`, replay a synthetic
-//! predict/refit request mix against it, and report per-kind p50/p99
-//! latency, throughput, pool busy-time imbalance, and the warm-vs-cold
-//! refit epoch comparison the subsystem exists for.
+//! offline toolchain), in two acts:
+//!
+//! 1. the single-request `Session` loop: replay a synthetic predict/refit
+//!    mix, report per-kind p50/p99 latency, pool busy-time imbalance, and
+//!    the warm-vs-cold refit epoch comparison;
+//! 2. the concurrent `Scheduler` loop: a predict storm on N reader
+//!    threads interleaved with an append stream, background refits
+//!    publishing versioned snapshots — reporting per-version p50/p99,
+//!    the snapshot-age distribution, and how many predicts overlapped an
+//!    in-flight refit (the overlap the scheduler exists to create).
 //!
 //! ```bash
 //! cargo bench --bench serving
@@ -10,7 +16,9 @@
 
 use parlin::data::synthetic;
 use parlin::glm::Objective;
-use parlin::serve::{drive, synthetic_mix, Session};
+use parlin::serve::{
+    drive, drive_concurrent, synthetic_mix, Scheduler, SchedulerConfig, Session, StormConfig,
+};
 use parlin::solver::{SolverConfig, Variant};
 use parlin::sysinfo::Topology;
 use parlin::util::Timer;
@@ -70,5 +78,65 @@ fn main() {
         cold.epochs,
         cold.wall_s,
         cold.epochs as f64 / warm.epochs.max(1) as f64
+    );
+
+    // ==== act 2: concurrent scheduler — predict storm × append stream ===
+    println!("\n== concurrent scheduler (storm × stream) ==\n");
+    let (n, d) = (12_000usize, 80usize);
+    let ds = synthetic::dense_classification(n, d, 11);
+    let cfg = SolverConfig::new(Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    })
+    .with_variant(Variant::Domesticated)
+    .with_threads(4)
+    .with_topology(Topology::flat(4))
+    .with_tol(1e-3)
+    .with_max_epochs(150);
+    let t = Timer::start();
+    let sched_cfg = SchedulerConfig {
+        refit_rows_threshold: 256,
+        refit_staleness_s: 0.05,
+    };
+    let storm = StormConfig {
+        readers: 4,
+        predicts: 600,
+        predict_batch: 256,
+        appends: 6,
+        rows_per_append: 128,
+    };
+    println!(
+        "storm: {} readers × {} predicts({}), stream: {} bursts × {} rows \
+         (refit at {} rows / {:.0} ms stale)\n",
+        storm.readers,
+        storm.predicts,
+        storm.predict_batch,
+        storm.appends,
+        storm.rows_per_append,
+        sched_cfg.refit_rows_threshold,
+        sched_cfg.refit_staleness_s * 1e3
+    );
+    let sched = Scheduler::new(Session::new(ds, cfg), sched_cfg);
+    println!("scheduler ready in {:.3}s (version 0 published)\n", t.elapsed_s());
+    let report = drive_concurrent(&sched, &storm, 12);
+    print!("{}", report.summary());
+    println!(
+        "\noverlap: {} of {} predicts completed while a background refit \
+         was training — readers kept serving the previous version instead \
+         of idling behind the writer",
+        report.overlapped_predicts, report.predicts
+    );
+    let ps = sched.pool_stats();
+    println!(
+        "pool: {} jobs over {} workers, busy imbalance {:.2} (max/mean)",
+        ps.total_jobs(),
+        ps.per_worker.len(),
+        ps.imbalance()
+    );
+    println!(
+        "final: version {}, n={} (ingested {} rows), gap {:.3e}",
+        sched.version(),
+        sched.current_n(),
+        report.ingested_rows,
+        sched.gap().gap
     );
 }

@@ -77,7 +77,13 @@ pub trait DataMatrix: Sync {
 /// examples in place. The serving subsystem ([`crate::serve`]) appends new
 /// rows to a resident dataset and warm-restarts training from the existing
 /// dual state instead of re-loading and re-training from scratch.
-pub trait AppendExamples: DataMatrix + Sized {
+///
+/// `Clone` is required: the request scheduler publishes versioned
+/// [`ModelSnapshot`](crate::serve::ModelSnapshot)s whose datasets are
+/// shared with concurrent readers via `Arc`; the writer mutates its copy
+/// through `Arc::make_mut`, which clones only when a reader still holds
+/// the previous version.
+pub trait AppendExamples: DataMatrix + Sized + Clone {
     /// Append `other`'s examples (columns) after this matrix's own; the
     /// feature dimension must match.
     fn append_examples(&mut self, other: &Self);

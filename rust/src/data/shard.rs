@@ -108,8 +108,9 @@ const ENTRIES_PER_LINE: usize = 4;
 #[repr(C, align(64))]
 #[derive(Clone, Copy)]
 struct EntryLine(
-    // read through `EntryBuf::as_slice`'s pointer cast, never by name
-    #[allow(dead_code)] [Entry; ENTRIES_PER_LINE],
+    // read through `EntryBuf::as_slice`'s pointer cast; written by name
+    // only on the append path (`EntryBuf::push`)
+    [Entry; ENTRIES_PER_LINE],
 );
 
 /// 64-byte-aligned entry buffer. Logical length may be any entry count;
@@ -151,6 +152,21 @@ impl EntryBuf {
     fn as_mut_slice(&mut self) -> &mut [Entry] {
         // Safety: see `as_slice`; exclusive borrow of `lines`.
         unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<Entry>(), self.len) }
+    }
+
+    /// Append one entry, filling the zero-padded tail of the last line
+    /// before growing a new one — the streaming-ingestion path, amortized
+    /// `O(1)` per entry and alignment-preserving (`lines` only ever holds
+    /// whole 64-byte lines).
+    #[inline]
+    fn push(&mut self, e: Entry) {
+        let slot = self.len % ENTRIES_PER_LINE;
+        if slot == 0 {
+            self.lines
+                .push(EntryLine([Entry::new(0, 0.0); ENTRIES_PER_LINE]));
+        }
+        self.lines.last_mut().expect("line pushed above").0[slot] = e;
+        self.len += 1;
     }
 }
 
@@ -280,6 +296,22 @@ impl Shard {
     pub fn nnz(&self) -> usize {
         self.buf.len()
     }
+
+    /// Extend this shard's encoding with the examples `x` gained since it
+    /// was built (they all sit at the tail, `self.example_hi..x.n()`), and
+    /// grow the covered bucket range to `new_bucket_hi`. The entry stream
+    /// and `col_ptr` are strictly appended to — existing entries are not
+    /// touched — so the cost is `O(entries added)`, not `O(nnz)`.
+    fn append_tail<M: DataMatrix>(&mut self, x: &M, new_bucket_hi: usize) {
+        debug_assert_eq!(self.example_lo, 0, "tail append targets the global shard");
+        for j in self.example_hi..x.n() {
+            x.for_each_col_entry(j, |i, v| self.buf.push(Entry::new(i as u32, v)));
+            self.col_ptr.push(self.buf.len());
+        }
+        self.example_hi = x.n();
+        self.n_total = x.n();
+        self.bucket_hi = new_bucket_hi;
+    }
 }
 
 /// The shard-resident interleaved layout of one dataset: one [`Shard`] per
@@ -377,6 +409,57 @@ impl ShardedLayout {
     /// solver, serving predicts).
     pub fn covers_examples(&self, n: usize, d: usize, nnz: usize) -> bool {
         self.shards.len() == 1 && self.same_shape(n, d, nnz)
+    }
+
+    /// Is this a per-node layout over exactly this dataset shape, bucket
+    /// geometry and static cross-node bucket split? The reuse gate for the
+    /// hierarchical solver's `layout_cache`: a serving session caches its
+    /// per-node shards keyed on (placement, bucket size) so `Variant::Numa`
+    /// refits stop paying `O(nnz)` re-encoding per `train()`.
+    pub fn matches_nodes(
+        &self,
+        n: usize,
+        d: usize,
+        nnz: usize,
+        bucket_size: usize,
+        ranges: &[std::ops::Range<u32>],
+    ) -> bool {
+        self.bucket_size == bucket_size
+            && self.same_shape(n, d, nnz)
+            && self.shards.len() == ranges.len()
+            && self
+                .shards
+                .iter()
+                .zip(ranges)
+                .all(|(s, r)| s.bucket_range() == (r.start as usize..r.end as usize))
+    }
+
+    /// Incrementally re-encode the tail after `x` grew by appended
+    /// examples: freshly ingested rows land *after* every existing one, so
+    /// only the last (possibly partial) bucket and the new buckets need
+    /// encoding — layout maintenance is `O(rows added)` instead of the
+    /// `O(nnz)` full rebuild (ROADMAP "Streaming layout updates"). Only
+    /// the single-shard layout supports this (a per-node split moves its
+    /// range boundaries when the bucket count grows — rebuild those).
+    ///
+    /// The result is bit-wise identical to `ShardedLayout::single(&x, …)`
+    /// built from scratch — locked in by the `append_tail_*` tests below.
+    pub fn append_tail<M: DataMatrix>(&mut self, x: &M) {
+        assert_eq!(
+            self.shards.len(),
+            1,
+            "append_tail needs the single-shard layout; per-node splits must rebuild"
+        );
+        assert_eq!(x.d(), self.d, "appended examples must keep the feature dim");
+        assert!(
+            x.n() >= self.n,
+            "append_tail cannot shrink the example axis ({} -> {})",
+            self.n,
+            x.n()
+        );
+        let buckets = Buckets::new(x.n(), self.bucket_size);
+        self.shards[0].append_tail(x, buckets.count());
+        self.n = x.n();
     }
 }
 
@@ -533,6 +616,118 @@ mod tests {
         });
         assert!(matches!(r, RunLayout::None));
         assert!(r.shard(0).is_none());
+    }
+
+    /// Bit-wise equality of two single-shard layouts over the same matrix:
+    /// every example's `(idx, val_bits)` stream, every bucket's entry
+    /// range, and the shape metadata must agree exactly.
+    fn assert_layouts_bitwise_eq<M: DataMatrix>(a: &ShardedLayout, b: &ShardedLayout, x: &M) {
+        assert_eq!((a.n(), a.d(), a.nnz()), (b.n(), b.d(), b.nnz()));
+        assert_eq!(a.bucket_size(), b.bucket_size());
+        assert_eq!(a.num_shards(), b.num_shards());
+        let (sa, sb) = (a.shard(0), b.shard(0));
+        assert_eq!(sa.bucket_range(), sb.bucket_range());
+        assert_eq!(sa.example_range(), sb.example_range());
+        for j in 0..x.n() {
+            let ea: Vec<(u32, u64)> = sa.entries(j).iter().map(|e| (e.idx, e.val_bits)).collect();
+            let eb: Vec<(u32, u64)> = sb.entries(j).iter().map(|e| (e.idx, e.val_bits)).collect();
+            assert_eq!(ea, eb, "example {j} diverged");
+        }
+        for bkt in 0..Buckets::new(x.n(), a.bucket_size()).count() {
+            assert_eq!(
+                sa.bucket_entry_range(bkt),
+                sb.bucket_entry_range(bkt),
+                "bucket {bkt} entry range diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn append_tail_matches_full_rebuild_sparse() {
+        let mut m = sample_sparse(); // 4 examples, bucket size 3 → partial tail bucket
+        let mut incr = ShardedLayout::single(&m, &Buckets::new(m.n(), 3));
+        // two successive appends: one that fills out the partial tail
+        // bucket + line, one that adds whole new buckets
+        for batch in [
+            vec![vec![(0u32, 7.0f64)], vec![(4, -3.5), (1, 0.75)]],
+            vec![vec![], vec![(2, 1.0), (3, 2.0), (0, -9.0)], vec![(4, 0.5)]],
+        ] {
+            let grown = {
+                let mut ex: Vec<Vec<(u32, f64)>> = (0..m.n())
+                    .map(|j| {
+                        let mut col = Vec::new();
+                        m.for_each_col_entry(j, |i, v| col.push((i as u32, v)));
+                        col
+                    })
+                    .collect();
+                ex.extend(batch.iter().cloned());
+                CscMatrix::from_examples(5, &ex)
+            };
+            m = grown;
+            incr.append_tail(&m);
+            let rebuilt = ShardedLayout::single(&m, &Buckets::new(m.n(), 3));
+            assert_layouts_bitwise_eq(&incr, &rebuilt, &m);
+        }
+        assert_eq!(incr.n(), 9);
+    }
+
+    #[test]
+    fn append_tail_matches_full_rebuild_dense() {
+        let mut cols: Vec<Vec<f64>> = (0..3)
+            .map(|j| (0..5).map(|i| (i * 3 + j) as f64 * 0.25 - 1.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+        let m = DenseMatrix::from_columns(5, &refs);
+        let mut incr = ShardedLayout::single(&m, &Buckets::new(m.n(), 2));
+        cols.push(vec![0.5, -0.5, 1.5, -1.5, 2.5]);
+        cols.push(vec![9.0, 8.0, 7.0, 6.0, 5.0]);
+        let refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+        let grown = DenseMatrix::from_columns(5, &refs);
+        incr.append_tail(&grown);
+        let rebuilt = ShardedLayout::single(&grown, &Buckets::new(grown.n(), 2));
+        assert_layouts_bitwise_eq(&incr, &rebuilt, &grown);
+        // the appended stream stays 64-byte aligned at its head
+        assert_eq!(incr.shard(0).entries(0).as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn append_tail_from_empty_matches_rebuild() {
+        let empty = CscMatrix::from_examples(5, &[]);
+        let mut incr = ShardedLayout::single(&empty, &Buckets::new(0, 2));
+        let m = sample_sparse();
+        incr.append_tail(&m);
+        let rebuilt = ShardedLayout::single(&m, &Buckets::new(m.n(), 2));
+        assert_layouts_bitwise_eq(&incr, &rebuilt, &m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn append_tail_rejects_node_split_layouts() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 1);
+        let mut layout = ShardedLayout::for_nodes(&m, &buckets, &[0..2, 2..4]);
+        layout.append_tail(&m);
+    }
+
+    #[test]
+    fn matches_nodes_gates_on_split_shape_and_geometry() {
+        let m = sample_sparse();
+        let buckets = Buckets::new(m.n(), 1); // 4 buckets
+        let ranges = [0u32..2, 2..2, 2..4];
+        let layout = ShardedLayout::for_nodes(&m, &buckets, &ranges);
+        assert!(layout.matches_nodes(4, 5, 6, 1, &ranges));
+        // any drifted key must miss
+        assert!(!layout.matches_nodes(5, 5, 6, 1, &ranges), "wrong n");
+        assert!(!layout.matches_nodes(4, 7, 6, 1, &ranges), "wrong d");
+        assert!(!layout.matches_nodes(4, 5, 9, 1, &ranges), "wrong nnz");
+        assert!(!layout.matches_nodes(4, 5, 6, 2, &ranges), "wrong bucket size");
+        assert!(!layout.matches_nodes(4, 5, 6, 1, &ranges[..2]), "wrong node count");
+        let shifted = [0u32..3, 3..3, 3..4];
+        assert!(!layout.matches_nodes(4, 5, 6, 1, &shifted), "wrong split");
+        // a single-shard layout never satisfies a multi-node key
+        let single = ShardedLayout::single(&m, &buckets);
+        assert!(!single.matches_nodes(4, 5, 6, 1, &ranges));
+        assert!(single.matches_nodes(4, 5, 6, 1, &[0u32..4]));
     }
 
     #[test]

@@ -93,6 +93,22 @@ SERVE OPTIONS (plus the train options above):
   request: predicts run as NUMA-sharded parallel margins, refits
   warm-start from the current model, retrains reuse the same pool.
   Output: per-kind p50/p99 latency, throughput and per-worker busy time.
+
+CONCURRENT SERVE OPTIONS (scheduler mode, enabled by --concurrency > 1):
+  --concurrency          concurrent predict reader threads      (default 1)
+  --refit-rows-threshold staged rows that trigger a background
+                         refit                                  (default 64)
+  --refit-staleness      seconds staged rows may wait before a
+                         refit is forced (the deadline is
+                         checked on the request path, so it
+                         needs ongoing traffic to fire)         (default 0.25)
+  A request scheduler serves --count predicts from --concurrency readers
+  against immutable versioned model snapshots while an append stream
+  (--count/10 bursts of --refit-rows rows) feeds staged ingestion;
+  refits run in the background and publish new versions atomically.
+  Request scripts (--requests <path>) are single-request mode only.
+  Output: per-version p50/p99 predict latency, snapshot-age distribution,
+  and how many predicts overlapped an in-flight refit.
 ";
 
 /// Flag parser accepting `--key value` and `--key=value` (flags without a
@@ -136,6 +152,42 @@ where
     match flags.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v}: {e}")),
+    }
+}
+
+/// Parse a count flag that must be ≥ 1 (`--concurrency`,
+/// `--refit-rows-threshold`): zero would mean "no readers" / "refit on
+/// every arrival" — always a spelling mistake, so reject it at the
+/// parser instead of letting the scheduler panic mid-run.
+fn get_positive_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    let v = get_parse(flags, key, default)?;
+    if v == 0 {
+        bail!("--{key} must be >= 1, got 0");
+    }
+    Ok(v)
+}
+
+/// Parse a duration/threshold flag that must be finite and positive
+/// (`--refit-staleness`): NaN/∞ would make the staleness trigger never
+/// (or always) fire, and a negative budget is meaningless.
+fn get_positive_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    let v: f64 = get_parse(flags, key, default)?;
+    if !v.is_finite() || v <= 0.0 {
+        bail!("--{key} must be finite and positive, got {v}");
+    }
+    Ok(v)
+}
+
+/// Scheduler mode (`--concurrency > 1`) drives its own synthetic
+/// storm×stream workload; a `--requests` script would be silently
+/// ignored, so reject the combination loudly instead.
+fn check_concurrent_requests_flag(flags: &HashMap<String, String>) -> Result<()> {
+    match flags.get("requests").map(String::as_str) {
+        None | Some("synthetic") | Some("true") => Ok(()),
+        Some(path) => bail!(
+            "--concurrency > 1 runs the synthetic storm×stream driver; \
+             request scripts are not supported in scheduler mode (got --requests {path})"
+        ),
     }
 }
 
@@ -281,6 +333,38 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let n = ds.n();
     let cfg = solver_cfg_from_flags(flags, n)?;
     let seed = get_parse(flags, "seed", 42u64)?;
+    // concurrency knobs are validated even in single-request mode so a
+    // typo fails fast instead of silently degrading to defaults
+    let concurrency = get_positive_usize(flags, "concurrency", 1)?;
+    let sched_cfg = parlin::serve::SchedulerConfig {
+        refit_rows_threshold: get_positive_usize(flags, "refit-rows-threshold", 64)?,
+        refit_staleness_s: get_positive_f64(flags, "refit-staleness", 0.25)?,
+    };
+    if concurrency > 1 {
+        check_concurrent_requests_flag(flags)?;
+        let storm = parlin::serve::StormConfig {
+            readers: concurrency,
+            predicts: get_parse(flags, "count", 200usize)?,
+            predict_batch: get_parse(flags, "predict-batch", 256usize)?,
+            appends: (get_parse(flags, "count", 200usize)? / 10).max(1),
+            rows_per_append: get_parse(flags, "refit-rows", 32usize)?,
+        };
+        println!(
+            "serving (concurrent): n={n} d={} threads={} readers={} \
+             predicts={} appends={}×{} rows (refit at {} rows / {:.3}s stale)",
+            ds.d(),
+            cfg.threads,
+            storm.readers,
+            storm.predicts,
+            storm.appends,
+            storm.rows_per_append,
+            sched_cfg.refit_rows_threshold,
+            sched_cfg.refit_staleness_s
+        );
+        return parlin::figures::with_ds!(ds, d => {
+            run_serve_concurrent(d, cfg, sched_cfg, storm, seed)
+        });
+    }
     let reqs = match flags.get("requests").map(String::as_str) {
         None | Some("synthetic") | Some("true") => parlin::serve::synthetic_mix(
             get_parse(flags, "count", 200usize)?,
@@ -347,6 +431,47 @@ where
         report.retrain_epochs,
         sess.n(),
         sess.gap().gap
+    );
+    Ok(())
+}
+
+/// Stand up a scheduler over a resident session and run the concurrent
+/// closed loop: a predict storm on `storm.readers` threads interleaved
+/// with an append stream, background refits publishing versioned
+/// snapshots. Prints per-version latency, snapshot age and overlap.
+fn run_serve_concurrent<M>(
+    ds: parlin::data::Dataset<M>,
+    cfg: SolverConfig,
+    sched_cfg: parlin::serve::SchedulerConfig,
+    storm: parlin::serve::StormConfig,
+    seed: u64,
+) -> Result<()>
+where
+    M: parlin::serve::SynthRows + Send + 'static,
+{
+    let t = parlin::util::Timer::start();
+    let sess = parlin::serve::Session::new(ds, cfg);
+    println!(
+        "session ready in {:.3}s ({} pool workers, initial gap {:.3e})",
+        t.elapsed_s(),
+        sess.workers(),
+        sess.gap().gap
+    );
+    let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    let report = parlin::serve::drive_concurrent(&sched, &storm, seed);
+    print!("{}", report.summary());
+    let ps = sched.pool_stats();
+    println!(
+        "pool: {} workers, {} jobs, busy imbalance {:.2} (max/mean)",
+        ps.per_worker.len(),
+        ps.total_jobs(),
+        ps.imbalance()
+    );
+    println!(
+        "final: version {}, n={}, gap {:.3e}",
+        sched.version(),
+        sched.current_n(),
+        sched.gap().gap
     );
     Ok(())
 }
@@ -478,6 +603,71 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.variant, Variant::Domesticated);
         assert!((cfg.obj.lambda() - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn concurrency_flags_validated_positive_at_the_parser() {
+        // defaults pass untouched
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert_eq!(get_positive_usize(&empty, "concurrency", 1).unwrap(), 1);
+        assert_eq!(
+            get_positive_usize(&empty, "refit-rows-threshold", 64).unwrap(),
+            64
+        );
+        assert!((get_positive_f64(&empty, "refit-staleness", 0.25).unwrap() - 0.25).abs() < 1e-15);
+
+        // good explicit values pass through both flag forms
+        let ok = parse_flags(&args(&[
+            "--concurrency=8",
+            "--refit-rows-threshold",
+            "128",
+            "--refit-staleness=0.5",
+        ]))
+        .unwrap();
+        assert_eq!(get_positive_usize(&ok, "concurrency", 1).unwrap(), 8);
+        assert_eq!(
+            get_positive_usize(&ok, "refit-rows-threshold", 64).unwrap(),
+            128
+        );
+        assert!((get_positive_f64(&ok, "refit-staleness", 0.25).unwrap() - 0.5).abs() < 1e-15);
+
+        // zero / negative / non-finite / garbage are rejected loudly
+        for bad in ["--concurrency=0", "--concurrency=-2", "--concurrency=x"] {
+            let f = parse_flags(&args(&[bad])).unwrap();
+            assert!(
+                get_positive_usize(&f, "concurrency", 1).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        let f = parse_flags(&args(&["--refit-rows-threshold=0"])).unwrap();
+        assert!(get_positive_usize(&f, "refit-rows-threshold", 64).is_err());
+        for bad in [
+            "--refit-staleness=0",
+            "--refit-staleness=-0.5",
+            "--refit-staleness=NaN",
+            "--refit-staleness=inf",
+            "--refit-staleness=soon",
+        ] {
+            let f = parse_flags(&args(&[bad])).unwrap();
+            assert!(
+                get_positive_f64(&f, "refit-staleness", 0.25).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn scheduler_mode_rejects_request_scripts() {
+        for ok in [
+            &[][..],
+            &["--requests=synthetic"][..],
+            &["--requests"][..], // bare flag parses to "true"
+        ] {
+            let f = parse_flags(&args(ok)).unwrap();
+            assert!(check_concurrent_requests_flag(&f).is_ok(), "{ok:?}");
+        }
+        let f = parse_flags(&args(&["--requests=trace.txt"])).unwrap();
+        assert!(check_concurrent_requests_flag(&f).is_err());
     }
 
     #[test]

@@ -21,6 +21,15 @@
 //! | `partial_fit(rows \| λ)` | [`Session::partial_fit_rows`] / [`Session::partial_fit_lambda`] | warm      |
 //! | `retrain(cfg)`           | [`Session::retrain`]              | cold      |
 //!
+//! A bare session admits one request at a time. The concurrent front end
+//! ([`scheduler`]) layers a reader/writer split on top: any number of
+//! predicts run in parallel against immutable, versioned
+//! [`ModelSnapshot`]s ([`snapshot`]) while refit/retrain writers
+//! serialize and publish new versions atomically; streaming ingestion
+//! ([`Scheduler::ingest`]) stages arrivals and refits in the background
+//! on row-count/staleness thresholds. See the determinism argument in
+//! [`scheduler`]'s module docs.
+//!
 //! ## Determinism of sharded predict
 //!
 //! [`Session::predict`] splits a request batch into one contiguous shard
@@ -52,7 +61,14 @@
 //! spawned or torn down on the request path.
 
 pub mod request;
+pub mod scheduler;
 pub mod session;
+pub mod snapshot;
 
-pub use request::{drive, parse_script, synthetic_mix, Request, ServeReport, SynthRows};
+pub use request::{
+    drive, drive_concurrent, parse_script, synthetic_mix, Request, ServeReport, StormConfig,
+    SynthRows,
+};
+pub use scheduler::{PredictOutcome, SchedReport, Scheduler, SchedulerConfig, VersionLatencies};
 pub use session::{RefitReport, Session, SessionStats};
+pub use snapshot::ModelSnapshot;

@@ -1,12 +1,16 @@
 //! Serving requests: the wire-level model of `parlin serve` — a parsed
-//! request script or a deterministic synthetic mix — plus the closed-loop
-//! driver that replays requests against a [`Session`] and records
-//! latencies.
+//! request script or a deterministic synthetic mix — plus two closed-loop
+//! drivers: [`drive`] replays requests one at a time against a
+//! [`Session`], [`drive_concurrent`] runs a predict storm on reader
+//! threads against a [`Scheduler`](crate::serve::Scheduler) while an
+//! append stream triggers background refits.
 
 use crate::data::{synthetic, AppendExamples, CscMatrix, Dataset, DenseMatrix};
+use crate::serve::scheduler::{SchedReport, Scheduler};
 use crate::serve::session::Session;
 use crate::util::{percentile, Rng, Timer};
 use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One serving request.
 #[derive(Clone, Debug, PartialEq)]
@@ -208,6 +212,96 @@ pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -
             }
         }
     }
+    report.total_wall_s = total.elapsed_s();
+    report
+}
+
+/// Shape of one concurrent closed-loop run: a predict storm spread over
+/// `readers` threads, interleaved with `appends` ingestion bursts paced
+/// across the storm (the `parlin serve --concurrency N` workload and the
+/// serving bench's overlap demonstration).
+#[derive(Clone, Debug)]
+pub struct StormConfig {
+    /// Concurrent reader threads (`--concurrency`).
+    pub readers: usize,
+    /// Total predict requests across all readers.
+    pub predicts: usize,
+    /// Examples per predict request.
+    pub predict_batch: usize,
+    /// Ingestion bursts issued while the storm runs.
+    pub appends: usize,
+    /// Freshly generated examples per burst.
+    pub rows_per_append: usize,
+}
+
+/// Run a predict storm against the scheduler from `readers` threads while
+/// the driver thread streams `appends` ingestion bursts, paced evenly
+/// across the storm so background refits genuinely overlap reads. Closed
+/// loop per reader (a reader issues its next predict when the previous
+/// one returns). Ends with a [`Scheduler::flush`] so every ingested row
+/// is absorbed, then returns the scheduler's per-version report with the
+/// wall clock stamped.
+pub fn drive_concurrent<M>(sched: &Scheduler<M>, storm: &StormConfig, seed: u64) -> SchedReport
+where
+    M: SynthRows + Send + 'static,
+{
+    assert!(storm.readers >= 1, "storm needs at least one reader");
+    let total = Timer::start();
+    let issued = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for reader in 0..storm.readers {
+            let issued = &issued;
+            scope.spawn(move || {
+                loop {
+                    let k = issued.fetch_add(1, Ordering::Relaxed);
+                    if k >= storm.predicts {
+                        break;
+                    }
+                    // rotating window over the dataset as of the *current*
+                    // snapshot; datasets only grow, so the indices stay
+                    // valid for whichever version actually serves them
+                    let n = sched.current_n();
+                    let idx: Vec<usize> = (0..storm.predict_batch)
+                        .map(|i| (k * 131 + i * 7 + reader) % n)
+                        .collect();
+                    let out = sched.predict(&idx);
+                    std::hint::black_box(out.margins);
+                }
+            });
+        }
+        // the append stream, paced so each burst lands mid-storm instead
+        // of front-loading the whole stream before the readers start
+        let gap = (storm.predicts / (storm.appends + 1)).max(1);
+        let mut row_seed = seed;
+        for burst in 0..storm.appends {
+            // capped at the storm size so a burst count larger than the
+            // storm cannot wait for progress that will never come
+            let due = ((burst + 1) * gap).min(storm.predicts);
+            // parked waiting, not a spin: the pacer must not burn a core
+            // the readers need (that would skew the very latencies this
+            // driver reports). The wait is also bounded so a storm whose
+            // readers all died (a panicking assert) stops pacing and lets
+            // the scope join surface the panic instead of hanging.
+            let mut waited_ms = 0u32;
+            while issued.load(Ordering::Relaxed) < due {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                waited_ms += 1;
+                if waited_ms > 30_000 {
+                    break;
+                }
+            }
+            row_seed = row_seed.wrapping_add(1);
+            let fresh = M::synth_rows(
+                sched.d(),
+                sched.avg_nnz(),
+                storm.rows_per_append.max(1),
+                row_seed,
+            );
+            sched.ingest(fresh);
+        }
+    });
+    sched.flush();
+    let mut report = sched.report();
     report.total_wall_s = total.elapsed_s();
     report
 }

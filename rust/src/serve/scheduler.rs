@@ -1,0 +1,715 @@
+//! Concurrent request scheduler: readers run in parallel against
+//! versioned snapshots, writers serialize and publish atomically.
+//!
+//! A bare [`Session`] admits one request at a time, so the resident pool
+//! idles between refits even though predicts are read-only. The
+//! [`Scheduler`] puts a reader/writer split in front of the session:
+//!
+//! * **Readers** ([`Scheduler::predict`]) — any number run concurrently.
+//!   A reader grabs the current [`ModelSnapshot`] (one brief mutex lock
+//!   to clone two `Arc`s — never held across any compute) and serves the
+//!   request entirely from that immutable version. Readers never take the
+//!   writer lock, so they never wait for a refit to finish; a predict
+//!   storm keeps flowing while a refit trains in the background.
+//! * **Writers** ([`Scheduler::ingest`]-triggered refits,
+//!   [`Scheduler::refit_lambda`], [`Scheduler::retrain`]) — serialized on
+//!   the session mutex. A writer mutates only the session's private state
+//!   and, on completion, publishes a brand-new snapshot by swapping the
+//!   `Arc` — version `k+1` becomes visible to the next reader in one
+//!   pointer store while version `k` keeps serving everyone who already
+//!   holds it.
+//!
+//! ## Determinism of concurrent reads
+//!
+//! Every predict is bit-wise identical to a *sequential* predict against
+//! the snapshot version it was served from, regardless of how many
+//! readers and writers are in flight:
+//!
+//! 1. a snapshot is immutable after construction and `Arc`-shared — a
+//!    writer producing `k+1` builds new state off to the side (the
+//!    session's copy-on-write dataset/layout/weights), so no bytes a
+//!    version-`k` reader can reach are ever written again; a torn or
+//!    mixed-version read is impossible by construction, not by locking
+//!    discipline;
+//! 2. each margin `z_j = ⟨x_j, w⟩` is a pure function of that frozen
+//!    snapshot, computed by the same kernel
+//!    ([`kernel::dot_entries`](crate::solver::kernel::dot_entries) /
+//!    `dot_col`) whether the request runs sequentially
+//!    ([`ModelSnapshot::predict`]) or as pool shards
+//!    ([`ModelSnapshot::predict_on`] — disjoint contiguous shards, merged
+//!    in job order), so *where* and *when* a reader runs cannot change a
+//!    single bit;
+//! 3. writers publish whole versions atomically (one `Arc` store under
+//!    the publish mutex) and never in place — a reader observes either
+//!    all of version `k` or all of `k+1`.
+//!
+//! `rust/tests/scheduler.rs` locks this in: predicts racing a live
+//! writer are replayed sequentially against their version's retained
+//! snapshot and compared bit-for-bit.
+//!
+//! Reader shards and writer merge-rounds share the same resident
+//! [`WorkerPool`] (its per-worker queues accept dispatch from any number
+//! of in-flight requests); they interleave at job granularity, which
+//! affects latency only — never results.
+//!
+//! ## Streaming ingestion
+//!
+//! [`Scheduler::ingest`] appends rows to a staging buffer and returns —
+//! arrivals do not block on training. A background refit (one dedicated
+//! writer thread; never more than one in flight) drains the buffer into
+//! [`Session::partial_fit_rows`] when either threshold trips:
+//! `refit_rows_threshold` staged rows, or the oldest staged row waiting
+//! `refit_staleness_s` seconds. Until the refit lands, readers keep
+//! serving the previous snapshot; [`Scheduler::flush`] forces a
+//! synchronous drain (shutdown, tests).
+
+use crate::data::{AppendExamples, Dataset};
+use crate::glm::GapReport;
+use crate::serve::session::{RefitReport, Session};
+use crate::serve::snapshot::ModelSnapshot;
+use crate::solver::{PoolStats, WorkerPool};
+use crate::util::percentile;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Streaming-ingestion thresholds (the serve CLI's `--refit-rows-threshold`
+/// and `--refit-staleness`). Validated in [`Scheduler::new`]: both must be
+/// positive (and the staleness finite) — a zero row threshold would refit
+/// on every arrival and an infinite staleness would never drain a
+/// below-threshold buffer.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Staged rows that trigger a background refit.
+    pub refit_rows_threshold: usize,
+    /// Seconds the oldest staged row may wait before a refit is forced.
+    ///
+    /// The deadline is checked on the request path (every `ingest` and
+    /// `predict`), not by a timer: a completely idle scheduler holds
+    /// below-threshold rows until the next request or `flush` arrives.
+    /// Under any ongoing traffic the bound behaves as stated.
+    pub refit_staleness_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            refit_rows_threshold: 64,
+            refit_staleness_s: 0.25,
+        }
+    }
+}
+
+/// What one scheduled predict observed.
+#[derive(Clone, Debug)]
+pub struct PredictOutcome {
+    /// Snapshot version this request was served from.
+    pub version: u64,
+    pub margins: Vec<f64>,
+    /// Age of the served snapshot when the request started.
+    pub snapshot_age_s: f64,
+    /// Was a background refit in flight while this predict ran? (The
+    /// overlap the scheduler exists to create.)
+    pub overlapped_refit: bool,
+}
+
+/// Predict latencies of one snapshot version.
+#[derive(Clone, Debug)]
+pub struct VersionLatencies {
+    pub version: u64,
+    pub predict_s: Vec<f64>,
+}
+
+/// Aggregated scheduler metrics: per-version latency distributions plus
+/// the snapshot-age distribution across every served predict.
+#[derive(Clone, Debug, Default)]
+pub struct SchedReport {
+    /// Ascending by version.
+    pub per_version: Vec<VersionLatencies>,
+    /// Snapshot age observed by each predict, in arrival order.
+    pub snapshot_age_s: Vec<f64>,
+    pub predicts: u64,
+    pub predicted_examples: u64,
+    /// Predicts that ran while a background refit was in flight.
+    pub overlapped_predicts: u64,
+    pub ingested_rows: u64,
+    /// Versions published after the initial one (refits + retrains).
+    pub publishes: u64,
+    /// Staging-buffer drains executed (background writer refits plus a
+    /// foreground [`Scheduler::flush`] that found rows waiting).
+    pub staged_drains: u64,
+    /// Filled by the closed-loop driver.
+    pub total_wall_s: f64,
+}
+
+impl SchedReport {
+    /// Human-readable per-version p50/p99 + snapshot-age table.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for v in &self.per_version {
+            s.push_str(&format!(
+                "  version {:>3}: {:>6} predicts  p50 {:>9.3} ms  p99 {:>9.3} ms\n",
+                v.version,
+                v.predict_s.len(),
+                percentile(&v.predict_s, 50.0) * 1e3,
+                percentile(&v.predict_s, 99.0) * 1e3,
+            ));
+        }
+        if !self.snapshot_age_s.is_empty() {
+            let max = self.snapshot_age_s.iter().fold(0.0f64, |a, &b| a.max(b));
+            s.push_str(&format!(
+                "  snapshot age: p50 {:>8.1} ms  p99 {:>8.1} ms  max {:>8.1} ms\n",
+                percentile(&self.snapshot_age_s, 50.0) * 1e3,
+                percentile(&self.snapshot_age_s, 99.0) * 1e3,
+                max * 1e3,
+            ));
+        }
+        s.push_str(&format!(
+            "  {} predicts ({} overlapped an in-flight refit), {} rows ingested, \
+             {} versions published ({} staged drains)\n",
+            self.predicts,
+            self.overlapped_predicts,
+            self.ingested_rows,
+            self.publishes,
+            self.staged_drains,
+        ));
+        if self.total_wall_s > 0.0 {
+            s.push_str(&format!(
+                "  wall {:.3}s  ({:.1} predicts/s)\n",
+                self.total_wall_s,
+                self.predicts as f64 / self.total_wall_s.max(1e-9)
+            ));
+        }
+        s
+    }
+}
+
+/// The staging buffer of the streaming-ingestion path: arrivals append
+/// here (cheap, never blocks on training) until a threshold trips.
+struct Staging<M: AppendExamples> {
+    rows: Option<Dataset<M>>,
+    /// When the oldest currently-staged row arrived.
+    since: Option<Instant>,
+}
+
+impl<M: AppendExamples> Staging<M> {
+    fn staged(&self) -> usize {
+        self.rows.as_ref().map(|d| d.n()).unwrap_or(0)
+    }
+}
+
+/// The published read state: the current snapshot plus the pool readers
+/// shard on. Locked only to clone/swap the `Arc`s — never across compute.
+struct Published<M: AppendExamples> {
+    snap: Arc<ModelSnapshot<M>>,
+    pool: Arc<WorkerPool>,
+}
+
+#[derive(Default)]
+struct SchedMetrics {
+    per_version: BTreeMap<u64, Vec<f64>>,
+    ages: Vec<f64>,
+    predicts: u64,
+    predicted_examples: u64,
+    overlapped: u64,
+    ingested_rows: u64,
+    publishes: u64,
+    staged_drains: u64,
+}
+
+struct Shared<M: AppendExamples> {
+    cfg: SchedulerConfig,
+    /// Writer state. Writers (refits, retrains) serialize here; readers
+    /// never touch it.
+    session: Mutex<Session<M>>,
+    published: Mutex<Published<M>>,
+    staging: Mutex<Staging<M>>,
+    /// Mirror of `staging`'s row count, maintained under the staging lock
+    /// but readable without it — the predict hot path polls "anything
+    /// staged?" on every request, and an atomic load keeps that poll off
+    /// the lock (readers must not serialize on a third mutex to check an
+    /// almost-always-false condition).
+    staged_count: AtomicUsize,
+    /// Mirror of the published snapshot's example count, maintained in
+    /// `publish` — the storm readers poll `current_n` before every
+    /// request, and an atomic load keeps that poll off the publish lock
+    /// (which each predict must already take once).
+    published_n: AtomicUsize,
+    /// At most one background refit in flight (CAS-guarded).
+    refit_running: AtomicBool,
+    refit_handle: Mutex<Option<JoinHandle<()>>>,
+    metrics: Mutex<SchedMetrics>,
+}
+
+impl<M: AppendExamples + Send> Shared<M> {
+    /// Atomically remove everything staged (resetting the fast-path
+    /// counter with it).
+    fn take_batch(&self) -> Option<Dataset<M>> {
+        let mut g = self.staging.lock().unwrap();
+        self.staged_count.store(0, Ordering::Relaxed);
+        g.since = None;
+        g.rows.take()
+    }
+
+    /// Drain the staging buffer into a warm refit and publish the result
+    /// — the one drain sequence, shared by the background writer thread
+    /// and the foreground [`Scheduler::flush`]. The session lock is held
+    /// for the whole training request; readers are unaffected (they hold
+    /// snapshots), other writers queue behind the lock.
+    fn run_staged_refit(&self) -> Option<RefitReport> {
+        let mut sess = self.session.lock().unwrap();
+        let batch = self.take_batch()?;
+        let report = sess.partial_fit_rows(&batch);
+        self.metrics.lock().unwrap().staged_drains += 1;
+        self.publish(&sess, report.kind);
+        Some(report)
+    }
+
+    /// Install the session's current model as the next snapshot version.
+    /// One `Arc` swap under the publish lock: readers that already cloned
+    /// version `k` keep it; the next reader gets `k+1` whole.
+    fn publish(&self, sess: &Session<M>, kind: &'static str) -> u64 {
+        let mut g = self.published.lock().unwrap();
+        let version = g.snap.version() + 1;
+        g.snap = Arc::new(sess.snapshot(version, kind));
+        g.pool = sess.pool_arc();
+        self.published_n.store(g.snap.n(), Ordering::Relaxed);
+        drop(g);
+        self.metrics.lock().unwrap().publishes += 1;
+        version
+    }
+
+    /// Wait out any in-flight background writer — including one whose
+    /// spawner has CAS'd `refit_running` but not yet stored the handle
+    /// (the `None` + flag-still-set window). Shared by [`Scheduler::flush`]
+    /// and the `Drop` impl so the subtle loop exists exactly once.
+    fn join_background_writer(&self) {
+        loop {
+            let prev = self.refit_handle.lock().unwrap().take();
+            match prev {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => {
+                    if !self.refit_running.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Reader/writer scheduler over one resident [`Session`] — see the module
+/// docs for the concurrency and determinism contract.
+pub struct Scheduler<M: AppendExamples + Send + 'static> {
+    shared: Arc<Shared<M>>,
+}
+
+impl<M: AppendExamples + Send + 'static> Scheduler<M> {
+    /// Wrap a trained session and publish its model as snapshot version 0.
+    ///
+    /// Panics on a non-positive rows threshold or a non-finite /
+    /// non-positive staleness (the same loud-at-the-door treatment
+    /// `refit-lambda` gets): a zero threshold would refit per arrival, a
+    /// bad staleness would either spin or never drain.
+    pub fn new(session: Session<M>, cfg: SchedulerConfig) -> Self {
+        assert!(
+            cfg.refit_rows_threshold >= 1,
+            "refit rows threshold must be >= 1, got {}",
+            cfg.refit_rows_threshold
+        );
+        assert!(
+            cfg.refit_staleness_s.is_finite() && cfg.refit_staleness_s > 0.0,
+            "refit staleness must be finite and positive, got {}",
+            cfg.refit_staleness_s
+        );
+        let snap = Arc::new(session.snapshot(0, "initial-train"));
+        let pool = session.pool_arc();
+        let published_n = AtomicUsize::new(snap.n());
+        Scheduler {
+            shared: Arc::new(Shared {
+                cfg,
+                session: Mutex::new(session),
+                published: Mutex::new(Published { snap, pool }),
+                staging: Mutex::new(Staging {
+                    rows: None,
+                    since: None,
+                }),
+                staged_count: AtomicUsize::new(0),
+                published_n,
+                refit_running: AtomicBool::new(false),
+                refit_handle: Mutex::new(None),
+                metrics: Mutex::new(SchedMetrics::default()),
+            }),
+        }
+    }
+
+    /// The currently published snapshot (cheap: two `Arc` clones).
+    /// Holding the returned `Arc` pins that version — it stays fully
+    /// servable no matter how many writers publish after it.
+    pub fn snapshot(&self) -> Arc<ModelSnapshot<M>> {
+        self.shared.published.lock().unwrap().snap.clone()
+    }
+
+    /// Version of the currently published snapshot.
+    pub fn version(&self) -> u64 {
+        self.snapshot().version()
+    }
+
+    /// Example count of the current snapshot (one atomic load — no lock,
+    /// the storm readers poll this before every request). Datasets only
+    /// grow, so an index below this stays valid against every later
+    /// version too.
+    pub fn current_n(&self) -> usize {
+        self.shared.published_n.load(Ordering::Relaxed)
+    }
+
+    pub fn d(&self) -> usize {
+        self.snapshot().d()
+    }
+
+    pub fn avg_nnz(&self) -> f64 {
+        self.snapshot().avg_nnz()
+    }
+
+    /// Serve a read-only predict concurrently: grab the current snapshot,
+    /// compute sharded margins on the resident pool, record per-version
+    /// latency + snapshot age. Never takes the writer lock. Also gives
+    /// the ingestion thresholds a chance to fire (a storm keeps staleness
+    /// honest even when the append stream pauses).
+    pub fn predict(&self, idx: &[usize]) -> PredictOutcome {
+        let (snap, pool) = {
+            let g = self.shared.published.lock().unwrap();
+            (g.snap.clone(), g.pool.clone())
+        };
+        let overlapped_at_start = self.shared.refit_running.load(Ordering::Relaxed);
+        let age = snap.age_s();
+        let t = crate::util::Timer::start();
+        let margins = snap.predict_on(&pool, idx);
+        let dt = t.elapsed_s();
+        let overlapped = overlapped_at_start || self.shared.refit_running.load(Ordering::Relaxed);
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.per_version.entry(snap.version()).or_default().push(dt);
+            m.ages.push(age);
+            m.predicts += 1;
+            m.predicted_examples += idx.len() as u64;
+            if overlapped {
+                m.overlapped += 1;
+            }
+        }
+        self.maybe_spawn_refit();
+        PredictOutcome {
+            version: snap.version(),
+            margins,
+            snapshot_age_s: age,
+            overlapped_refit: overlapped,
+        }
+    }
+
+    /// Stream freshly arrived examples into the staging buffer (cheap —
+    /// no training on this path) and kick a background refit if a
+    /// threshold tripped. Readers keep serving the previous snapshot
+    /// until the refit publishes.
+    pub fn ingest(&self, rows: Dataset<M>) {
+        assert_eq!(rows.d(), self.d(), "ingested rows must match d");
+        let k = rows.n();
+        {
+            let mut g = self.shared.staging.lock().unwrap();
+            match g.rows.take() {
+                Some(mut acc) => {
+                    acc.append(&rows);
+                    g.rows = Some(acc);
+                }
+                None => {
+                    g.since = Some(Instant::now());
+                    g.rows = Some(rows);
+                }
+            }
+            self.shared.staged_count.store(g.staged(), Ordering::Relaxed);
+        }
+        self.shared.metrics.lock().unwrap().ingested_rows += k as u64;
+        self.maybe_spawn_refit();
+    }
+
+    /// Rows currently staged (not yet absorbed by a refit).
+    pub fn staged_rows(&self) -> usize {
+        self.shared.staged_count.load(Ordering::Relaxed)
+    }
+
+    /// Has the staging buffer tripped a refit threshold? The empty-buffer
+    /// case — the predict hot path's poll — is answered by one atomic
+    /// load; the staging lock is taken only while rows are actually
+    /// waiting (a bounded window: a due refit soon drains them to zero).
+    pub fn refit_due(&self) -> bool {
+        if self.shared.staged_count.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        let g = self.shared.staging.lock().unwrap();
+        let staged = g.staged();
+        staged >= self.shared.cfg.refit_rows_threshold
+            || (staged > 0
+                && g.since
+                    .map(|s| s.elapsed().as_secs_f64() >= self.shared.cfg.refit_staleness_s)
+                    .unwrap_or(false))
+    }
+
+    /// Spawn the background writer if a threshold tripped and none is in
+    /// flight. Returns whether a refit was started.
+    fn maybe_spawn_refit(&self) -> bool {
+        if !self.refit_due() {
+            return false;
+        }
+        if self.shared.refit_running.swap(true, Ordering::SeqCst) {
+            return false; // one background writer at a time
+        }
+        // the handle slot is held across reap → spawn → store so a slow
+        // spawner can never clobber (and thereby detach) a newer writer's
+        // handle — whoever joins the stored handle joins the latest writer
+        let mut slot = self.shared.refit_handle.lock().unwrap();
+        if let Some(h) = slot.take() {
+            // previous writer already cleared refit_running, so it has
+            // finished its work; the join is a formality
+            let _ = h.join();
+        }
+        let shared = Arc::clone(&self.shared);
+        let handle = std::thread::Builder::new()
+            .name("parlin-sched-refit".to_string())
+            .spawn(move || {
+                // clear the in-flight flag even if the refit panics (e.g.
+                // a poisoned session lock) — a stuck `true` would disable
+                // background refits forever and leave flush() spinning
+                struct Reset<'a>(&'a AtomicBool);
+                impl Drop for Reset<'_> {
+                    fn drop(&mut self) {
+                        self.0.store(false, Ordering::SeqCst);
+                    }
+                }
+                let _reset = Reset(&shared.refit_running);
+                let _ = shared.run_staged_refit();
+            })
+            .expect("spawn background refit writer");
+        *slot = Some(handle);
+        true
+    }
+
+    /// Foreground writer: change λ and warm-refit, then publish.
+    /// Serializes with every other writer on the session lock.
+    pub fn refit_lambda(&self, lambda: f64) -> RefitReport {
+        let mut sess = self.shared.session.lock().unwrap();
+        let r = sess.partial_fit_lambda(lambda);
+        self.shared.publish(&sess, r.kind);
+        r
+    }
+
+    /// Foreground writer: cold retrain with the session's current config,
+    /// then publish.
+    pub fn retrain(&self) -> RefitReport {
+        let mut sess = self.shared.session.lock().unwrap();
+        let r = sess.retrain_same();
+        self.shared.publish(&sess, r.kind);
+        r
+    }
+
+    /// Wait out any in-flight background refit, then synchronously drain
+    /// whatever is still staged (ignoring thresholds). Returns the drain
+    /// refit's report, if rows were staged.
+    pub fn flush(&self) -> Option<RefitReport> {
+        self.shared.join_background_writer();
+        self.shared.run_staged_refit()
+    }
+
+    /// Snapshot of the accumulated metrics (per-version latencies,
+    /// snapshot ages, overlap counters). `total_wall_s` is left 0 — the
+    /// closed-loop driver stamps it.
+    pub fn report(&self) -> SchedReport {
+        let m = self.shared.metrics.lock().unwrap();
+        SchedReport {
+            per_version: m
+                .per_version
+                .iter()
+                .map(|(&version, lat)| VersionLatencies {
+                    version,
+                    predict_s: lat.clone(),
+                })
+                .collect(),
+            snapshot_age_s: m.ages.clone(),
+            predicts: m.predicts,
+            predicted_examples: m.predicted_examples,
+            overlapped_predicts: m.overlapped,
+            ingested_rows: m.ingested_rows,
+            publishes: m.publishes,
+            staged_drains: m.staged_drains,
+            total_wall_s: 0.0,
+        }
+    }
+
+    /// Busy-time census of the resident pool (locks the writer state
+    /// briefly; diagnostics only).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.shared.session.lock().unwrap().pool_stats()
+    }
+
+    /// Duality gap of the model the *writer* currently holds (may be one
+    /// publish ahead of the read side; diagnostics only).
+    pub fn gap(&self) -> GapReport {
+        self.shared.session.lock().unwrap().gap()
+    }
+}
+
+impl<M: AppendExamples + Send + 'static> Drop for Scheduler<M> {
+    fn drop(&mut self) {
+        // deterministic shutdown: reap the background writer so dropping
+        // the scheduler leaves no transient thread behind (the pool's
+        // workers are joined by the session drop right after)
+        self.shared.join_background_writer();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::glm::Objective;
+    use crate::solver::{SolverConfig, Variant};
+    use crate::sysinfo::Topology;
+
+    fn session(n: usize, seed: u64) -> Session<crate::data::DenseMatrix> {
+        let ds = synthetic::dense_classification(n, 6, seed);
+        let cfg = SolverConfig::new(Objective::Logistic {
+            lambda: 1.0 / n as f64,
+        })
+        .with_variant(Variant::Domesticated)
+        .with_threads(2)
+        .with_topology(Topology::flat(2))
+        .with_tol(1e-3)
+        .with_max_epochs(200);
+        Session::new(ds, cfg)
+    }
+
+    #[test]
+    fn publishes_version_zero_and_serves_it() {
+        let sched = Scheduler::new(session(120, 71), SchedulerConfig::default());
+        assert_eq!(sched.version(), 0);
+        let snap = sched.snapshot();
+        let out = sched.predict(&[0, 7, 119]);
+        assert_eq!(out.version, 0);
+        assert_eq!(out.margins, snap.predict(&[0, 7, 119]));
+        assert!(!out.overlapped_refit);
+        let report = sched.report();
+        assert_eq!((report.predicts, report.publishes), (1, 0));
+        assert_eq!(report.per_version.len(), 1);
+    }
+
+    #[test]
+    fn row_threshold_triggers_background_refit() {
+        let sched = Scheduler::new(
+            session(120, 72),
+            SchedulerConfig {
+                refit_rows_threshold: 10,
+                refit_staleness_s: 1e6, // rows, not time, must trip this
+            },
+        );
+        sched.ingest(synthetic::dense_classification(4, 6, 73));
+        assert!(!sched.refit_due(), "4 staged rows are below the threshold");
+        assert_eq!(sched.version(), 0);
+        sched.ingest(synthetic::dense_classification(6, 6, 74));
+        // the threshold tripped inside ingest; wait for the background
+        // writer to publish
+        for _ in 0..2000 {
+            if sched.version() > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(sched.version(), 1, "background refit must publish v1");
+        assert_eq!(sched.current_n(), 130);
+        assert_eq!(sched.staged_rows(), 0);
+        let report = sched.report();
+        assert_eq!(report.ingested_rows, 10);
+        assert_eq!(report.staged_drains, 1);
+    }
+
+    #[test]
+    fn staleness_threshold_trips_via_reads() {
+        let sched = Scheduler::new(
+            session(100, 75),
+            SchedulerConfig {
+                refit_rows_threshold: 1_000_000, // time, not rows, must trip
+                refit_staleness_s: 0.02,
+            },
+        );
+        sched.ingest(synthetic::dense_classification(3, 6, 76));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(sched.refit_due(), "staged rows outlived the staleness budget");
+        let _ = sched.predict(&[0, 1]); // a read is enough to kick the writer
+        for _ in 0..2000 {
+            if sched.version() > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(sched.version(), 1);
+        assert_eq!(sched.current_n(), 103);
+    }
+
+    #[test]
+    fn flush_drains_below_threshold_rows() {
+        let sched = Scheduler::new(
+            session(100, 77),
+            SchedulerConfig {
+                refit_rows_threshold: 1_000_000,
+                refit_staleness_s: 1e6,
+            },
+        );
+        sched.ingest(synthetic::dense_classification(5, 6, 78));
+        assert_eq!(sched.version(), 0);
+        let r = sched.flush().expect("staged rows must force a drain refit");
+        assert_eq!(r.kind, "refit-rows");
+        assert_eq!((sched.version(), sched.current_n()), (1, 105));
+        assert!(sched.flush().is_none(), "nothing staged, nothing to drain");
+    }
+
+    #[test]
+    fn foreground_writers_publish_in_sequence() {
+        let sched = Scheduler::new(session(110, 79), SchedulerConfig::default());
+        let r1 = sched.refit_lambda(0.02);
+        assert_eq!((r1.kind, sched.version()), ("refit-lambda", 1));
+        let r2 = sched.retrain();
+        assert_eq!((r2.kind, sched.version()), ("retrain", 2));
+        // the published snapshot serves the post-retrain weights
+        let snap = sched.snapshot();
+        assert_eq!(snap.produced_by(), "retrain");
+        let out = sched.predict(&[1, 2, 3]);
+        assert_eq!(out.version, 2);
+        assert_eq!(out.margins, snap.predict(&[1, 2, 3]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_rows_threshold() {
+        let _ = Scheduler::new(
+            session(60, 80),
+            SchedulerConfig {
+                refit_rows_threshold: 0,
+                refit_staleness_s: 1.0,
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonfinite_staleness() {
+        let _ = Scheduler::new(
+            session(60, 81),
+            SchedulerConfig {
+                refit_rows_threshold: 8,
+                refit_staleness_s: f64::INFINITY,
+            },
+        );
+    }
+}

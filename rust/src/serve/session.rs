@@ -1,10 +1,21 @@
 //! The resident serving session: one pool, one dataset, one model —
 //! reused across every predict/refit/retrain request (see the module docs
 //! in [`crate::serve`] for the determinism and warm-start arguments).
+//!
+//! The dataset, the primal weights and the resident layout are held in
+//! `Arc`s so the session can hand out immutable, versioned
+//! [`ModelSnapshot`]s ([`Session::snapshot`]) that stay valid while the
+//! session itself moves on — the substrate of the concurrent
+//! [`Scheduler`](crate::serve::Scheduler). Mutation goes through
+//! `Arc::make_mut`: in the single-owner case (no snapshot outstanding) an
+//! append is in place, and layout maintenance is the `O(rows added)`
+//! tail re-encode ([`ShardedLayout::append_tail`]); when a reader still
+//! holds the previous version, the writer transparently works on a copy.
 
 use crate::data::{AppendExamples, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::{self, GapReport, ModelState, Objective};
-use crate::solver::{kernel, train, Buckets, ExecPolicy, PoolStats, SolverConfig, WorkerPool};
+use crate::serve::snapshot::{sharded_margins, ModelSnapshot};
+use crate::solver::{train, Buckets, ExecPolicy, PoolStats, SolverConfig, Variant, WorkerPool};
 use crate::sysinfo::Topology;
 use crate::util::Timer;
 use std::sync::Arc;
@@ -40,23 +51,42 @@ pub struct SessionStats {
 
 /// A long-lived serving session: owns the dataset, the trained model and
 /// a shared [`WorkerPool`] that answers every request without respawning
-/// workers. Requests are served one at a time (the parallelism lives
-/// *inside* a request: sharded predict, replica training rounds).
+/// workers. A bare session serves requests one at a time (the parallelism
+/// lives *inside* a request: sharded predict, replica training rounds);
+/// the [`Scheduler`](crate::serve::Scheduler) wraps one to run readers
+/// concurrently against published snapshots while writers serialize here.
 pub struct Session<M: AppendExamples> {
-    ds: Dataset<M>,
+    ds: Arc<Dataset<M>>,
     cfg: SolverConfig,
     topo: Topology,
     pool: Arc<WorkerPool>,
     state: ModelState,
-    /// Primal weights of `state` — cached because every predict reads them.
-    weights: Vec<f64>,
+    /// Primal weights of `state` — cached because every predict reads
+    /// them; `Arc`'d so snapshots share them with zero copies.
+    weights: Arc<Vec<f64>>,
     /// Session-resident interleaved layout ([`ShardedLayout`]) streaming
     /// every predict's margins, and shared with the solver on every
     /// refit/retrain via [`SolverConfig::layout_cache`] (so a training
-    /// request re-uses this encoding instead of rebuilding it). Rebuilt
-    /// only when the dataset changes (`refit-rows` appends) or a retrain
-    /// swaps the config. `None` under [`LayoutPolicy::Csc`].
+    /// request re-uses this encoding instead of rebuilding it). Appends
+    /// extend it incrementally ([`ShardedLayout::append_tail`]); a
+    /// retrain may swap the config and rebuild. `None` under
+    /// [`LayoutPolicy::Csc`].
     layout: Option<Arc<ShardedLayout>>,
+    /// Cached per-node layout for `Variant::Numa` training requests,
+    /// keyed on (placement, bucket size) and gated on the dataset shape
+    /// via [`ShardedLayout::matches_nodes`] — NUMA refits stop paying the
+    /// `O(nnz)` per-node re-encode per `train()`.
+    ///
+    /// Memory note: a NUMA session under the default Interleaved layout
+    /// therefore keeps **two** 16 B/entry encodings resident (this one
+    /// for training, `layout` for predicts) on top of the source matrix —
+    /// roughly 3.7× a sparse dataset's 12 B/nnz payload in total. `--layout
+    /// csc` drops both encodings (bit-wise identical results) if memory
+    /// is the binding constraint.
+    node_layout: Option<Arc<ShardedLayout>>,
+    /// Monotone ingestion counter: +1 per absorbed append batch. Carried
+    /// by every published [`ModelSnapshot`].
+    ds_epoch: u64,
     stats: SessionStats,
 }
 
@@ -71,13 +101,15 @@ impl<M: AppendExamples> Session<M> {
         cfg.exec = ExecPolicy::Shared(Arc::clone(&pool));
         cfg.warm_start = None;
         let mut sess = Session {
-            ds,
+            ds: Arc::new(ds),
             cfg,
             topo,
             pool,
             state: ModelState::zeros(0, 0),
-            weights: Vec::new(),
+            weights: Arc::new(Vec::new()),
             layout: None,
+            node_layout: None,
+            ds_epoch: 0,
             stats: SessionStats::default(),
         };
         sess.rebuild_layout();
@@ -86,15 +118,37 @@ impl<M: AppendExamples> Session<M> {
     }
 
     /// (Re)materialize the resident interleaved layout from the current
-    /// dataset — called at session start and whenever the dataset or the
-    /// layout-relevant config changes. A no-op plain-matrix session under
-    /// [`LayoutPolicy::Csc`].
+    /// dataset — called at session start and whenever the layout-relevant
+    /// config changes, or when an append flips the bucket geometry. A
+    /// no-op plain-matrix session under [`LayoutPolicy::Csc`].
     fn rebuild_layout(&mut self) {
         self.layout = (self.cfg.layout == LayoutPolicy::Interleaved).then(|| {
             let n = self.ds.n();
             let buckets = Buckets::new(n, self.cfg.bucket.resolve_host(n));
             Arc::new(ShardedLayout::single(&self.ds.x, &buckets))
         });
+    }
+
+    /// Bring the resident layout up to date after an append. Appended
+    /// examples land at the tail, so as long as the bucket geometry is
+    /// unchanged this is the `O(rows added)` incremental re-encode; the
+    /// full rebuild only happens when `BucketPolicy::Auto` flips the
+    /// bucket size (the grown model vector crossed the LLC boundary).
+    /// `Arc::make_mut` keeps outstanding snapshots intact: they hold the
+    /// previous encoding, the session mutates its own (copy when shared).
+    fn refresh_layout_after_append(&mut self) {
+        if self.layout.is_none() {
+            return;
+        }
+        let want = self.cfg.bucket.resolve_host(self.ds.n());
+        if self.layout.as_ref().is_some_and(|l| l.bucket_size() == want) {
+            let ds = &self.ds;
+            if let Some(arc) = self.layout.as_mut() {
+                Arc::make_mut(arc).append_tail(&ds.x);
+            }
+        } else {
+            self.rebuild_layout();
+        }
     }
 
     /// Margins `⟨x_j, w⟩` for the requested examples, computed in parallel
@@ -104,38 +158,13 @@ impl<M: AppendExamples> Session<M> {
     pub fn predict(&mut self, idx: &[usize]) -> Vec<f64> {
         self.stats.predicts += 1;
         self.stats.predicted_examples += idx.len() as u64;
-        if idx.is_empty() {
-            return Vec::new();
-        }
-        let workers = self.pool.workers();
-        // one contiguous shard per worker; shard s carries worker s's node
-        // tag so its column reads stay node-local under the pool's layout
-        let per = idx.len().div_ceil(workers);
-        let jobs: Vec<(usize, _)> = idx
-            .chunks(per)
-            .enumerate()
-            .map(|(s, chunk)| {
-                let (ds, w) = (&self.ds, &self.weights[..]);
-                // margins stream the resident interleaved layout when one
-                // is materialized — bit-wise equal to `glm::model::margins`
-                // (kernel::dot_entries reproduces dot_col's reduction)
-                let shard = self.layout.as_ref().map(|l| l.shard(0));
-                let node = self.pool.node_of_worker(s % workers);
-                (node, move || match shard {
-                    Some(sh) => chunk
-                        .iter()
-                        .map(|&j| kernel::dot_entries(sh.entries(j), w))
-                        .collect(),
-                    None => glm::model::margins(ds, w, chunk),
-                })
-            })
-            .collect();
-        let parts = self.pool.run_tagged(jobs);
-        let mut out = Vec::with_capacity(idx.len());
-        for part in parts {
-            out.extend_from_slice(&part);
-        }
-        out
+        sharded_margins(
+            &self.ds,
+            &self.weights,
+            self.layout.as_deref(),
+            &self.pool,
+            idx,
+        )
     }
 
     /// `±1` predictions for classification objectives (margin sign).
@@ -152,10 +181,11 @@ impl<M: AppendExamples> Session<M> {
     pub fn partial_fit_rows(&mut self, rows: &Dataset<M>) -> RefitReport {
         assert_eq!(rows.d(), self.ds.d(), "appended rows must match d");
         self.stats.refits += 1;
-        self.ds.append(rows);
-        // the dataset changed shape: the resident interleaved encoding is
-        // stale and must be rematerialized before the next predict
-        self.rebuild_layout();
+        // in place when this session is the sole owner; a copy when a
+        // published snapshot still serves the previous dataset version
+        Arc::make_mut(&mut self.ds).append(rows);
+        self.ds_epoch += 1;
+        self.refresh_layout_after_append();
         let mut warm = self.state.extended(self.ds.n());
         warm.rebuild_v(&self.ds);
         self.fit(Some(warm), "refit-rows")
@@ -212,16 +242,48 @@ impl<M: AppendExamples> Session<M> {
         self.retrain(cfg)
     }
 
+    /// The per-node layout to hand a `Variant::Numa` training request:
+    /// the cached one when it still describes this exact (dataset,
+    /// bucket size, thread placement), a fresh build otherwise. Appends
+    /// and config changes invalidate through the key itself — a stale
+    /// cache simply fails [`ShardedLayout::matches_nodes`] and is
+    /// replaced.
+    fn node_layout_cache(&mut self, cfg: &SolverConfig) -> Option<Arc<ShardedLayout>> {
+        if cfg.layout != LayoutPolicy::Interleaved {
+            return None;
+        }
+        let (n, d, nnz) = (self.ds.n(), self.ds.d(), self.ds.x.nnz());
+        let bucket_size = cfg.bucket.resolve_host(n);
+        let buckets = Buckets::new(n, bucket_size);
+        let placement = self.topo.place_threads(cfg.threads.max(1));
+        let ranges = crate::solver::numa::node_bucket_ranges(buckets.count(), &placement);
+        let hit = self
+            .node_layout
+            .as_ref()
+            .is_some_and(|l| l.matches_nodes(n, d, nnz, bucket_size, &ranges));
+        if !hit {
+            self.node_layout = Some(Arc::new(ShardedLayout::for_nodes(
+                &self.ds.x,
+                &buckets,
+                &ranges,
+            )));
+        }
+        self.node_layout.clone()
+    }
+
     /// Run the solver on the session dataset (optionally warm) and install
     /// the resulting model as the served one.
     fn fit(&mut self, warm: Option<ModelState>, kind: &'static str) -> RefitReport {
         let t = Timer::start();
         let mut cfg = self.cfg.clone();
         cfg.warm_start = warm;
-        // hand the resident encoding to the solver — `seq`/`dom`/`wild`
-        // reuse it when the geometry fits instead of re-encoding the
-        // dataset (the hierarchical solver builds its own per-node shards)
-        cfg.layout_cache = self.layout.clone();
+        // hand the resident encoding to the solver instead of re-encoding
+        // the dataset: the hierarchical solver gets the cached per-node
+        // shards, everything else the session's single-shard layout
+        cfg.layout_cache = match cfg.resolve_variant(&self.topo) {
+            Variant::Numa => self.node_layout_cache(&cfg),
+            _ => self.layout.clone(),
+        };
         let out = train(&self.ds, &cfg);
         self.stats.epochs_total += out.epochs_run as u64;
         let report = RefitReport {
@@ -232,9 +294,23 @@ impl<M: AppendExamples> Session<M> {
             wall_s: t.elapsed_s(),
             n: self.ds.n(),
         };
-        self.weights = out.state.w(&self.cfg.obj);
+        self.weights = Arc::new(out.state.w(&self.cfg.obj));
         self.state = out.state;
         report
+    }
+
+    /// Freeze the served model as an immutable, versioned snapshot —
+    /// `Arc` clones only, no data copies. The scheduler assigns versions;
+    /// the session only stamps its ingestion epoch.
+    pub fn snapshot(&self, version: u64, produced_by: &'static str) -> ModelSnapshot<M> {
+        ModelSnapshot::new(
+            version,
+            produced_by,
+            self.ds_epoch,
+            Arc::clone(&self.ds),
+            Arc::clone(&self.weights),
+            self.layout.clone(),
+        )
     }
 
     pub fn n(&self) -> usize {
@@ -249,6 +325,11 @@ impl<M: AppendExamples> Session<M> {
     /// refit-row generation).
     pub fn avg_nnz(&self) -> f64 {
         self.ds.x.nnz() as f64 / self.ds.n().max(1) as f64
+    }
+
+    /// Monotone ingestion counter (+1 per absorbed append batch).
+    pub fn ds_epoch(&self) -> u64 {
+        self.ds_epoch
     }
 
     /// Primal weights of the currently served model.
@@ -270,6 +351,12 @@ impl<M: AppendExamples> Session<M> {
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// The resident pool itself — the scheduler shards concurrent reader
+    /// predicts on it (the pool accepts dispatch from any thread).
+    pub fn pool_arc(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
     }
 
     pub fn stats(&self) -> &SessionStats {
@@ -346,6 +433,25 @@ mod tests {
         assert!(r.converged);
         assert!(sess.state().v_drift(sess.dataset()) < 1e-6);
         assert_eq!(sess.stats().refits, 1);
+        assert_eq!(sess.ds_epoch(), 1);
+    }
+
+    #[test]
+    fn incremental_layout_append_serves_correct_margins() {
+        // several appends in a row exercise the O(rows added) tail
+        // re-encode; every predict must stay bit-wise on the batch path
+        let ds = synthetic::sparse_classification(120, 40, 0.1, 51);
+        let mut sess = Session::new(ds, cfg(120, 2));
+        for round in 0..3u64 {
+            let fresh = synthetic::sparse_classification(9, 40, 0.1, 52 + round);
+            sess.partial_fit_rows(&fresh);
+            let idx: Vec<usize> = (0..sess.n()).step_by(7).collect();
+            let got = sess.predict(&idx);
+            let want = glm::model::margins(sess.dataset(), &sess.weights().to_vec(), &idx);
+            assert_eq!(got, want, "append round {round}");
+        }
+        assert_eq!(sess.n(), 147);
+        assert_eq!(sess.ds_epoch(), 3);
     }
 
     #[test]
@@ -370,5 +476,36 @@ mod tests {
         assert_eq!(sess.n(), 315);
         assert!(r.converged);
         assert_eq!(sess.predict(&[0, 314]).len(), 2);
+    }
+
+    #[test]
+    fn numa_session_caches_node_layout_across_refits() {
+        let topo = Topology::uniform(2, 2);
+        let cfg = SolverConfig::new(Objective::Logistic { lambda: 1.0 / 240.0 })
+            .with_variant(Variant::Numa)
+            .with_threads(4)
+            .with_topology(topo)
+            .with_tol(1e-3)
+            .with_max_epochs(300);
+        let ds = synthetic::dense_classification(240, 9, 49);
+        let mut sess = Session::new(ds, cfg);
+        assert!(sess.node_layout.is_some(), "numa train must seed the cache");
+        let first = Arc::as_ptr(sess.node_layout.as_ref().unwrap());
+        // λ refit keeps the dataset: the cache must be reused, not rebuilt
+        let r = sess.partial_fit_lambda(0.01);
+        assert!(r.epochs >= 1);
+        assert_eq!(
+            Arc::as_ptr(sess.node_layout.as_ref().unwrap()),
+            first,
+            "same-geometry refit must hit the per-node layout cache"
+        );
+        // an append changes (n, nnz): the key misses and the cache rolls
+        let fresh = synthetic::dense_classification(12, 9, 50);
+        sess.partial_fit_rows(&fresh);
+        assert_ne!(Arc::as_ptr(sess.node_layout.as_ref().unwrap()), first);
+        let idx: Vec<usize> = (0..sess.n()).collect();
+        let got = sess.predict(&idx);
+        let want = glm::model::margins(sess.dataset(), &sess.weights().to_vec(), &idx);
+        assert_eq!(got, want);
     }
 }

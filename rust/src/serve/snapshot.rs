@@ -1,0 +1,268 @@
+//! Versioned, immutable model snapshots — the read side of the concurrent
+//! serving scheduler ([`crate::serve::scheduler`]).
+//!
+//! A [`ModelSnapshot`] freezes everything a predict needs: the primal
+//! weights, the dataset as of a given ingestion epoch, and the resident
+//! interleaved [`ShardedLayout`] that streams the margins. All three are
+//! `Arc`'d, so
+//!
+//! * publishing a new version is a pointer swap (the writer builds the
+//!   next snapshot off to the side and installs it atomically),
+//! * any number of readers can hold and serve version `k` while a writer
+//!   produces `k+1` — a snapshot is never mutated after construction, so
+//!   a reader cannot observe a torn model, and
+//! * memory for version `k` is reclaimed exactly when its last reader
+//!   drops it.
+//!
+//! Margins are computed by [`sharded_margins`] — one contiguous shard per
+//! pool worker, merged in job order — which is the *same* code path
+//! [`Session::predict`](crate::serve::Session::predict) uses, so a
+//! snapshot predict is bit-wise identical to the session's single-request
+//! path and to the sequential batch path [`glm::model::margins`]
+//! (argument in the [`crate::serve`] module docs; locked in by
+//! `rust/tests/serving.rs` and `rust/tests/scheduler.rs`).
+
+use crate::data::{DataMatrix, Dataset, ShardedLayout};
+use crate::glm;
+use crate::solver::{kernel, WorkerPool};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One immutable, versioned view of the served model. Cheap to clone
+/// (four `Arc`s and a few words); see the module docs for the sharing
+/// contract.
+#[derive(Clone)]
+pub struct ModelSnapshot<M: DataMatrix> {
+    version: u64,
+    /// Which request published this version ("initial-train",
+    /// "refit-rows", "refit-lambda", "retrain").
+    produced_by: &'static str,
+    /// Monotone ingestion counter: how many append batches the session
+    /// had absorbed when this version was published.
+    dataset_epoch: u64,
+    ds: Arc<Dataset<M>>,
+    weights: Arc<Vec<f64>>,
+    /// Single-shard resident interleaved layout of `ds` (absent under
+    /// `LayoutPolicy::Csc`; predicts then walk the source matrix).
+    layout: Option<Arc<ShardedLayout>>,
+    published_at: Instant,
+}
+
+impl<M: DataMatrix> ModelSnapshot<M> {
+    pub(crate) fn new(
+        version: u64,
+        produced_by: &'static str,
+        dataset_epoch: u64,
+        ds: Arc<Dataset<M>>,
+        weights: Arc<Vec<f64>>,
+        layout: Option<Arc<ShardedLayout>>,
+    ) -> Self {
+        debug_assert!(
+            layout.as_ref().is_none_or(|l| l.covers_examples(ds.n(), ds.d(), ds.x.nnz())),
+            "snapshot layout must encode exactly the snapshot dataset"
+        );
+        ModelSnapshot {
+            version,
+            produced_by,
+            dataset_epoch,
+            ds,
+            weights,
+            layout,
+            published_at: Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    #[inline]
+    pub fn produced_by(&self) -> &'static str {
+        self.produced_by
+    }
+
+    #[inline]
+    pub fn dataset_epoch(&self) -> u64 {
+        self.dataset_epoch
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    /// Mean stored non-zeros per example (shape information for synthetic
+    /// ingestion streams).
+    pub fn avg_nnz(&self) -> f64 {
+        self.ds.x.nnz() as f64 / self.ds.n().max(1) as f64
+    }
+
+    /// Seconds since this version was published — the "snapshot age" a
+    /// request served from this version observes.
+    pub fn age_s(&self) -> f64 {
+        self.published_at.elapsed().as_secs_f64()
+    }
+
+    /// Primal weights of this version.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn dataset(&self) -> &Dataset<M> {
+        &self.ds
+    }
+
+    /// Margins `⟨x_j, w⟩` computed sequentially on the calling thread — a
+    /// pure function of this (immutable) snapshot, usable from any reader
+    /// thread without touching the pool. Bit-wise equal to
+    /// [`ModelSnapshot::predict_on`]: both compute each margin with the
+    /// identical kernel and emit them in request order.
+    pub fn predict(&self, idx: &[usize]) -> Vec<f64> {
+        match self.layout.as_deref() {
+            Some(l) => {
+                let sh = l.shard(0);
+                idx.iter()
+                    .map(|&j| kernel::dot_entries(sh.entries(j), &self.weights))
+                    .collect()
+            }
+            None => glm::model::margins(&self.ds, &self.weights, idx),
+        }
+    }
+
+    /// Margins computed as parallel shards on `pool`, merged in job order
+    /// — the throughput path for large batches. Bit-wise equal to
+    /// [`ModelSnapshot::predict`] and to `glm::model::margins` on the
+    /// snapshot weights.
+    pub fn predict_on(&self, pool: &WorkerPool, idx: &[usize]) -> Vec<f64> {
+        sharded_margins(&self.ds, &self.weights, self.layout.as_deref(), pool, idx)
+    }
+}
+
+impl<M: DataMatrix> std::fmt::Debug for ModelSnapshot<M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ModelSnapshot(v{}, n={}, d={}, epoch={}, by={})",
+            self.version,
+            self.n(),
+            self.d(),
+            self.dataset_epoch,
+            self.produced_by
+        )
+    }
+}
+
+/// Margins for `idx` computed in one contiguous shard per pool worker,
+/// shard `s` tagged with worker `s`'s NUMA node, merged in job order —
+/// bit-wise equal to the sequential batch path (`glm::model::margins` /
+/// [`ModelSnapshot::predict`]); see the determinism argument in the
+/// [`crate::serve`] module docs. Shared by `Session::predict` and the
+/// scheduler's concurrent readers, so the equality is structural.
+pub(crate) fn sharded_margins<M: DataMatrix>(
+    ds: &Dataset<M>,
+    w: &[f64],
+    layout: Option<&ShardedLayout>,
+    pool: &WorkerPool,
+    idx: &[usize],
+) -> Vec<f64> {
+    if idx.is_empty() {
+        return Vec::new();
+    }
+    let workers = pool.workers();
+    // one contiguous shard per worker; shard s carries worker s's node
+    // tag so its column reads stay node-local under the pool's layout
+    let per = idx.len().div_ceil(workers);
+    let jobs: Vec<(usize, _)> = idx
+        .chunks(per)
+        .enumerate()
+        .map(|(s, chunk)| {
+            // margins stream the resident interleaved layout when one is
+            // materialized — bit-wise equal to `glm::model::margins`
+            // (kernel::dot_entries reproduces dot_col's reduction)
+            let shard = layout.map(|l| l.shard(0));
+            let node = pool.node_of_worker(s % workers);
+            (node, move || match shard {
+                Some(sh) => chunk
+                    .iter()
+                    .map(|&j| kernel::dot_entries(sh.entries(j), w))
+                    .collect(),
+                None => glm::model::margins(ds, w, chunk),
+            })
+        })
+        .collect();
+    let parts = pool.run_tagged(jobs);
+    let mut out = Vec::with_capacity(idx.len());
+    for part in parts {
+        out.extend_from_slice(&part);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, LayoutPolicy};
+    use crate::glm::Objective;
+    use crate::serve::Session;
+    use crate::solver::{SolverConfig, Variant};
+    use crate::sysinfo::Topology;
+
+    fn session(layout: LayoutPolicy) -> Session<crate::data::DenseMatrix> {
+        let ds = synthetic::dense_classification(160, 7, 61);
+        let cfg = SolverConfig::new(Objective::Logistic { lambda: 1.0 / 160.0 })
+            .with_variant(Variant::Domesticated)
+            .with_threads(2)
+            .with_topology(Topology::flat(2))
+            .with_layout(layout)
+            .with_tol(1e-4)
+            .with_max_epochs(300);
+        Session::new(ds, cfg)
+    }
+
+    #[test]
+    fn sequential_and_pooled_predicts_agree_bitwise() {
+        for layout in [LayoutPolicy::Interleaved, LayoutPolicy::Csc] {
+            let sess = session(layout);
+            let snap = sess.snapshot(3, "initial-train");
+            assert_eq!(snap.version(), 3);
+            assert_eq!((snap.n(), snap.d()), (160, 7));
+            let idx: Vec<usize> = (0..160).rev().chain([5, 5, 0]).collect();
+            let seq = snap.predict(&idx);
+            let pooled = snap.predict_on(&sess.pool_arc(), &idx);
+            assert_eq!(seq, pooled, "layout {layout:?}");
+            let batch = glm::model::margins(snap.dataset(), snap.weights(), &idx);
+            assert_eq!(seq, batch, "layout {layout:?} vs batch path");
+            assert!(snap.predict(&[]).is_empty());
+        }
+    }
+
+    #[test]
+    fn snapshot_is_frozen_while_session_moves_on() {
+        let mut sess = session(LayoutPolicy::Interleaved);
+        let snap = sess.snapshot(0, "initial-train");
+        let before = snap.predict(&[0, 1, 2]);
+        let w_before = snap.weights().to_vec();
+        // the writer appends + refits; version-0 readers must be unaffected
+        let fresh = synthetic::dense_classification(16, 7, 62);
+        let r = sess.partial_fit_rows(&fresh);
+        assert_eq!(r.n, 176);
+        assert_eq!(snap.n(), 160, "snapshot keeps its dataset version");
+        assert_eq!(snap.weights(), &w_before[..]);
+        assert_eq!(snap.predict(&[0, 1, 2]), before);
+        // while the *new* snapshot serves the grown dataset
+        let next = sess.snapshot(1, "refit-rows");
+        assert_eq!(next.n(), 176);
+        assert_eq!(next.dataset_epoch(), 1);
+        assert_eq!(
+            next.predict(&[175]),
+            glm::model::margins(next.dataset(), next.weights(), &[175])
+        );
+        assert!(snap.age_s() >= 0.0);
+    }
+}

@@ -18,6 +18,7 @@
 //! The training dataset itself is never replicated: it is read-only and
 //! causes no coherence traffic (§3).
 
+use crate::data::shard::RunLayout;
 use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
@@ -45,7 +46,10 @@ pub fn train_numa<M: DataMatrix>(
 
 /// Static split of the bucket space across active nodes, proportional to
 /// each node's thread share (a node with more threads gets more buckets).
-fn node_bucket_ranges(num_buckets: usize, placement: &[usize]) -> Vec<std::ops::Range<u32>> {
+/// Public because a serving [`Session`](crate::serve::Session) computes
+/// the same split to key its cached per-node layout
+/// ([`ShardedLayout::matches_nodes`]).
+pub fn node_bucket_ranges(num_buckets: usize, placement: &[usize]) -> Vec<std::ops::Range<u32>> {
     let total_threads: usize = placement.iter().sum();
     let mut ranges = Vec::with_capacity(placement.len());
     let mut next = 0usize;
@@ -100,8 +104,15 @@ pub fn train_numa_exec<M: DataMatrix>(
     // *static* cross-node bucket split, so every node's workers stream
     // only entries their node materialized (first-touch keeps the shard on
     // the node's memory). Intra-node dynamic re-deals are index swaps.
-    let layout = (cfg.layout == LayoutPolicy::Interleaved)
-        .then(|| ShardedLayout::for_nodes(&ds.x, &buckets, &node_ranges));
+    // A caller-provided cache (a serving session's resident per-node
+    // layout) is reused when it describes exactly this dataset, bucket
+    // geometry and node split — refits then skip the O(nnz) re-encode.
+    let layout = RunLayout::resolve(
+        cfg.layout == LayoutPolicy::Interleaved,
+        cfg.layout_cache.as_ref(),
+        |l| l.matches_nodes(n, ds.d(), ds.x.nnz(), bucket_size, &node_ranges),
+        || ShardedLayout::for_nodes(&ds.x, &buckets, &node_ranges),
+    );
 
     // per-node dynamic partitioners over the node's own bucket range
     let mut node_parts: Vec<Option<Partitioner>> = placement
@@ -176,7 +187,7 @@ pub fn train_numa_exec<M: DataMatrix>(
                     let seg = super::dom::segment(tl, round, rounds);
                     let (ds, obj, buckets, alpha, v_ref) =
                         (&*ds, &obj, &buckets, &alpha[..], &v_nodes[k][..]);
-                    let shard = layout.as_ref().map(|l| l.shard(k));
+                    let shard = layout.shard(k);
                     jobs.push((k, move || {
                         // σ′-scaled replica: u = v_node + σ′·A·Δα_local
                         // (see solver::dom::worker_round for the algebra)
@@ -365,6 +376,31 @@ mod tests {
         let b = train_numa_exec(&ds, &c, &topo, &Executor::Sequential);
         assert_eq!(a.state.alpha, b.state.alpha);
         assert_eq!(a.state.v, b.state.v);
+    }
+
+    #[test]
+    fn node_layout_cache_reuse_is_bitwise_identical() {
+        let ds = synthetic::sparse_classification(300, 60, 0.08, 6);
+        let topo = Topology::uniform(2, 2);
+        let c = cfg(1.0 / 300.0, 4)
+            .with_bucket(crate::solver::BucketPolicy::Fixed(4))
+            .with_max_epochs(25)
+            .with_tol(0.0);
+        let fresh = train_numa(&ds, &c, &topo);
+        // pre-build the exact per-node layout a session would keep resident
+        let buckets = Buckets::new(ds.n(), 4);
+        let ranges = node_bucket_ranges(buckets.count(), &topo.place_threads(4));
+        let cache = std::sync::Arc::new(ShardedLayout::for_nodes(&ds.x, &buckets, &ranges));
+        assert!(cache.matches_nodes(ds.n(), ds.d(), ds.x.nnz(), 4, &ranges));
+        let cached = train_numa(&ds, &c.clone().with_layout_cache(cache), &topo);
+        assert_eq!(fresh.state.alpha, cached.state.alpha);
+        assert_eq!(fresh.state.v, cached.state.v);
+        // a single-shard cache (the predict-side layout) must be ignored,
+        // not streamed against the wrong node split
+        let single = std::sync::Arc::new(ShardedLayout::single(&ds.x, &buckets));
+        let ignored = train_numa(&ds, &c.clone().with_layout_cache(single), &topo);
+        assert_eq!(fresh.state.alpha, ignored.state.alpha);
+        assert_eq!(fresh.state.v, ignored.state.v);
     }
 
     #[test]

@@ -44,6 +44,18 @@
 //! `rust/tests/pool_equivalence.rs` locks this in by asserting bit-wise
 //! equal `α`/`v` trajectories across all three executors.
 //!
+//! ## Multiple in-flight requests
+//!
+//! Dispatch is re-entrant across threads: every `run*` call carries its
+//! own completion latch and result slots, and the per-worker queues are
+//! mutex-guarded, so any number of callers may have batches in flight at
+//! once. The concurrent serving scheduler ([`crate::serve::Scheduler`])
+//! relies on this — reader predict shards and a writer's merge-round jobs
+//! interleave on the same queues at job granularity (FIFO per worker).
+//! Interleaving affects only *when* a job runs, never its inputs or the
+//! order results are returned in, so the determinism argument above is
+//! untouched.
+//!
 //! ## Safety
 //!
 //! Jobs borrow solver state (`&Dataset`, `&[AtomicF64]`, replica slices),
@@ -538,6 +550,39 @@ mod tests {
         for w in &stats.per_worker {
             assert_eq!(w.node, pool.node_of_worker(w.worker));
         }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_the_pool() {
+        // the serving scheduler's shape: several request threads, each
+        // with its own batch in flight on ONE resident pool — every
+        // caller must get exactly its own results, in its own job order
+        let pool = WorkerPool::new(3, &Topology::uniform(3, 1));
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let handles: Vec<_> = (0..6usize)
+                .map(|caller| {
+                    s.spawn(move || {
+                        for round in 0..40usize {
+                            let jobs: Vec<_> = (0..5usize)
+                                .map(|i| {
+                                    let node = i % 3;
+                                    (node, move || caller * 1000 + round * 10 + i)
+                                })
+                                .collect();
+                            let got = pool.run_tagged(jobs);
+                            let want: Vec<usize> =
+                                (0..5).map(|i| caller * 1000 + round * 10 + i).collect();
+                            assert_eq!(got, want, "caller {caller} round {round}");
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("dispatcher thread panicked");
+            }
+        });
+        assert_eq!(pool.stats().total_jobs(), 6 * 40 * 5);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! offline toolchain carries no proptest, so generation uses the crate's
 //! own PRNG — failures print the seed for replay).
 
-use parlin::data::{synthetic, CscMatrix, DataMatrix, Dataset, DenseMatrix};
+use parlin::data::{synthetic, AppendExamples, CscMatrix, DataMatrix, Dataset, DenseMatrix};
 use parlin::glm::Objective;
 use parlin::runtime::manifest::Json;
 use parlin::solver::partition::{EpochAssignment, Partitioner};
@@ -420,5 +420,69 @@ fn prop_sharded_layout_roundtrip() {
         let split = format!("{replay} cuts=({cut_a},{cut_b})");
         check_layout(&sparse, &ShardedLayout::for_nodes(&sparse, &buckets, &ranges), &split);
         check_layout(&dense, &ShardedLayout::for_nodes(&dense, &buckets, &ranges), &split);
+    }
+}
+
+/// Incremental tail re-encode (`ShardedLayout::append_tail`) is bit-wise
+/// identical to a full rebuild — for random sparse/dense sources, random
+/// bucket sizes, and random sequences of append batches (including empty
+/// batches and batches that straddle partial tail buckets/lines).
+#[test]
+fn prop_layout_append_tail_matches_rebuild() {
+    use parlin::data::shard::ShardedLayout;
+    use parlin::solver::Buckets;
+
+    fn entries_of(l: &ShardedLayout, j: usize) -> Vec<(u32, u64)> {
+        l.shard(0).entries(j).iter().map(|e| (e.idx, e.val_bits)).collect()
+    }
+
+    fn assert_bitwise_eq<M: DataMatrix>(
+        incr: &ShardedLayout,
+        rebuilt: &ShardedLayout,
+        x: &M,
+        replay: &str,
+    ) {
+        assert_eq!(
+            (incr.n(), incr.d(), incr.nnz(), incr.bucket_size()),
+            (rebuilt.n(), rebuilt.d(), rebuilt.nnz(), rebuilt.bucket_size()),
+            "{replay}: shape"
+        );
+        for j in 0..x.n() {
+            assert_eq!(entries_of(incr, j), entries_of(rebuilt, j), "{replay}: example {j}");
+        }
+        let buckets = Buckets::new(x.n(), incr.bucket_size());
+        for b in 0..buckets.count() {
+            assert_eq!(
+                incr.shard(0).bucket_entry_range(b),
+                rebuilt.shard(0).bucket_entry_range(b),
+                "{replay}: bucket {b}"
+            );
+        }
+    }
+
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let d = 3 + rng.next_below(16) as usize;
+        let n0 = rng.next_below(40) as usize; // empty starts allowed
+        let bucket_size = 1 + rng.next_below(7) as usize;
+        let (mut dense, mut sparse) = paired_matrices(&mut rng, d, n0);
+        let mut incr_dense = ShardedLayout::single(&dense, &Buckets::new(n0, bucket_size));
+        let mut incr_sparse = ShardedLayout::single(&sparse, &Buckets::new(n0, bucket_size));
+        for step in 0..4u32 {
+            let k = rng.next_below(25) as usize; // 0-row appends allowed
+            let (fresh_dense, fresh_sparse) = paired_matrices(&mut rng, d, k);
+            dense.append_examples(&fresh_dense);
+            sparse.append_examples(&fresh_sparse);
+            incr_dense.append_tail(&dense);
+            incr_sparse.append_tail(&sparse);
+            let replay =
+                format!("seed={seed} d={d} n0={n0} bucket={bucket_size} step={step} k={k}");
+            let rebuilt_dense =
+                ShardedLayout::single(&dense, &Buckets::new(dense.n(), bucket_size));
+            let rebuilt_sparse =
+                ShardedLayout::single(&sparse, &Buckets::new(sparse.n(), bucket_size));
+            assert_bitwise_eq(&incr_dense, &rebuilt_dense, &dense, &replay);
+            assert_bitwise_eq(&incr_sparse, &rebuilt_sparse, &sparse, &replay);
+        }
     }
 }

@@ -1,0 +1,228 @@
+//! Concurrent-scheduler guarantees:
+//!
+//! (a) **Versioned determinism** — predicts racing a live writer are
+//!     bit-wise identical to *sequential* predicts against the snapshot
+//!     version each one was served from; since a torn or mixed-version
+//!     read could not reproduce any single version's sequential answer,
+//!     this also proves no request ever observes a torn snapshot.
+//! (b) **Readers don't wait for writers** — a predict storm completes
+//!     while a writer holds the session lock for a whole retrain.
+//! (c) **Streaming ingestion** — staged rows are absorbed exactly once,
+//!     across background refits and the final flush.
+//! (d) **No thread growth** — a full concurrent storm with background
+//!     refits leaves the process thread count where it started, and
+//!     dropping the scheduler joins both the pool and the writer thread
+//!     (the `/proc/self/status` census shared with `pool_stress.rs` and
+//!     `serving.rs`).
+//!
+//! The tests serialize on a mutex: (d) counts OS threads, so no sibling
+//! test's pools may spawn or die while it runs.
+
+use parlin::data::{synthetic, DenseMatrix};
+use parlin::glm::Objective;
+use parlin::serve::{
+    drive_concurrent, ModelSnapshot, Scheduler, SchedulerConfig, Session, StormConfig,
+};
+use parlin::solver::{SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+#[path = "common/census.rs"]
+mod census;
+use census::settled_census;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn session(n: usize, threads: usize, seed: u64) -> Session<DenseMatrix> {
+    let ds = synthetic::dense_classification(n, 8, seed);
+    let cfg = SolverConfig::new(Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    })
+    .with_variant(Variant::Domesticated)
+    .with_threads(threads)
+    .with_topology(Topology::uniform(2, threads.div_ceil(2)))
+    .with_tol(1e-3)
+    .with_max_epochs(250);
+    Session::new(ds, cfg)
+}
+
+/// The acceptance-criterion test: concurrent predicts against version `k`
+/// race a writer producing `k+1`; afterwards every result is replayed
+/// *sequentially* against the retained snapshot of the version that
+/// served it and compared bit-for-bit.
+#[test]
+fn racing_predicts_are_bitwise_sequential_for_their_version() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(300, 4, 91),
+        SchedulerConfig {
+            refit_rows_threshold: 40,
+            refit_staleness_s: 1e3,
+        },
+    );
+    // retain version 0 — it must stay fully servable throughout
+    let snap0 = sched.snapshot();
+    assert_eq!(snap0.version(), 0);
+
+    let outcomes: Mutex<Vec<(u64, Vec<usize>, Vec<f64>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for reader in 0..4usize {
+            let (sched, outcomes) = (&sched, &outcomes);
+            scope.spawn(move || {
+                for k in 0..60usize {
+                    let idx: Vec<usize> =
+                        (0..48).map(|i| (reader * 61 + k * 13 + i * 3) % 300).collect();
+                    let out = sched.predict(&idx);
+                    outcomes.lock().unwrap().push((out.version, idx, out.margins));
+                }
+            });
+        }
+        // the writer: cross the row threshold mid-storm so a background
+        // refit trains and publishes version 1 while readers are racing
+        let fresh = synthetic::dense_classification(40, 8, 92);
+        sched.ingest(fresh);
+    });
+    sched.flush();
+    let snap1 = sched.snapshot();
+    assert_eq!(snap1.version(), 1, "the ingested rows must have published v1");
+    assert_eq!(snap1.n(), 340);
+    assert_eq!(snap0.n(), 300, "the retained version must be untouched");
+
+    let by_version = |v: u64| -> Arc<ModelSnapshot<DenseMatrix>> {
+        match v {
+            0 => Arc::clone(&snap0),
+            1 => Arc::clone(&snap1),
+            other => panic!("request served from unpublished version {other}"),
+        }
+    };
+    let outcomes = outcomes.into_inner().unwrap();
+    assert_eq!(outcomes.len(), 240);
+    for (version, idx, margins) in &outcomes {
+        let sequential = by_version(*version).predict(idx);
+        assert_eq!(
+            margins, &sequential,
+            "a v{version} predict diverged from the sequential answer — torn snapshot"
+        );
+        // cross-check one level deeper: the sequential answer itself must
+        // be the plain batch path on that version's frozen state
+        let snap = by_version(*version);
+        let batch = parlin::glm::model::margins(snap.dataset(), snap.weights(), idx);
+        assert_eq!(margins, &batch);
+    }
+    let report = sched.report();
+    assert_eq!(report.predicts, 240);
+    assert_eq!(report.ingested_rows, 40);
+    assert!(report.publishes >= 1);
+}
+
+/// Readers must complete while a writer holds the session lock for an
+/// entire retrain — the "readers never block on a refit" contract.
+#[test]
+fn predict_storm_completes_while_writer_retrains() {
+    let _g = gate();
+    let sched = Scheduler::new(session(260, 4, 93), SchedulerConfig::default());
+    let snap0 = sched.snapshot();
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(|| sched.retrain());
+        // the storm runs regardless of where the writer currently is;
+        // every result must match one published version exactly
+        for k in 0..80usize {
+            let idx: Vec<usize> = (0..32).map(|i| (k * 7 + i) % 260).collect();
+            let out = sched.predict(&idx);
+            let expect = if out.version == 0 {
+                snap0.predict(&idx)
+            } else {
+                assert_eq!(out.version, 1);
+                sched.snapshot().predict(&idx)
+            };
+            assert_eq!(out.margins, expect, "storm predict {k}");
+        }
+        let r = writer.join().expect("writer panicked");
+        assert_eq!(r.kind, "retrain");
+    });
+    assert_eq!(sched.version(), 1);
+}
+
+/// Every staged row is absorbed exactly once across background refits and
+/// the final flush, and versions advance monotonically.
+#[test]
+fn ingestion_stream_is_absorbed_exactly_once() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(200, 2, 94),
+        SchedulerConfig {
+            refit_rows_threshold: 25,
+            refit_staleness_s: 1e3,
+        },
+    );
+    let mut sent = 0usize;
+    for burst in 0..8u64 {
+        let rows = 10 + (burst as usize % 3); // 10/11/12-row bursts
+        sent += rows;
+        sched.ingest(synthetic::dense_classification(rows, 8, 95 + burst));
+    }
+    sched.flush();
+    assert_eq!(sched.staged_rows(), 0, "flush must drain the buffer");
+    assert_eq!(sched.current_n(), 200 + sent, "no row lost or duplicated");
+    let report = sched.report();
+    assert_eq!(report.ingested_rows, sent as u64);
+    assert!(report.publishes >= 1);
+    // the final snapshot serves the fully-grown dataset
+    let snap = sched.snapshot();
+    let idx = [0usize, 199, 200 + sent - 1];
+    assert_eq!(snap.predict(&idx).len(), 3);
+}
+
+/// A full concurrent closed loop (storm + append stream + background
+/// refits) must neither grow the process thread count nor leave threads
+/// behind when the scheduler is dropped.
+#[test]
+fn concurrent_storm_leaks_no_threads() {
+    let _g = gate();
+    let sess = session(240, 4, 96);
+    let workers = sess.workers();
+    assert_eq!(workers, 4);
+    let sched = Scheduler::new(
+        sess,
+        SchedulerConfig {
+            refit_rows_threshold: 30,
+            refit_staleness_s: 0.05,
+        },
+    );
+    // warm up each path once (predict, ingest→background refit, flush)
+    let _ = sched.predict(&[0, 1, 2]);
+    sched.ingest(synthetic::dense_classification(30, 8, 97));
+    sched.flush();
+    let baseline = settled_census(usize::MAX - 1);
+
+    let storm = StormConfig {
+        readers: 3,
+        predicts: 90,
+        predict_batch: 64,
+        appends: 3,
+        rows_per_append: 15,
+    };
+    let report = drive_concurrent(&sched, &storm, 98);
+    assert_eq!(report.predicts, 90 + 1); // the storm plus the warm-up predict
+    let after = settled_census(baseline);
+    assert!(
+        after <= baseline,
+        "concurrent storm grew threads: baseline={baseline}, after={after}"
+    );
+
+    // dropping the scheduler joins the writer thread and the pool workers
+    drop(sched);
+    let target = baseline.saturating_sub(workers);
+    let end = settled_census(target);
+    if end > 0 {
+        // census is 0 on non-Linux; only assert where it means something
+        assert!(
+            end <= target,
+            "scheduler drop did not join its threads: baseline={baseline}, end={end}"
+        );
+    }
+}
