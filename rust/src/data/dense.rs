@@ -1,22 +1,61 @@
-//! Column-major dense matrix: example `j` occupies the contiguous slice
-//! `data[j·d .. (j+1)·d]`, so one SDCA step streams exactly one column —
-//! the access pattern the paper's prefetching argument relies on.
+//! Column-major dense matrix, stored as a segment list: example `j`
+//! occupies one contiguous `d`-length slice inside the immutable
+//! [`DenseSegment`] that owns it, so one SDCA step streams exactly one
+//! column — the access pattern the paper's prefetching argument relies
+//! on. A freshly loaded matrix is a single segment; appends seal the
+//! arriving columns into a new tail segment and share every existing one
+//! by `Arc` (see the [`crate::data`] module docs for the segment model).
 
 use super::{AppendExamples, DataMatrix};
 use crate::util;
+use std::sync::Arc;
 
+/// One immutable chunk of the example axis: a column-major block of
+/// consecutive examples, sealed at construction and shared by `Arc`
+/// between dataset versions.
+#[derive(Debug)]
+pub struct DenseSegment {
+    d: usize,
+    n: usize,
+    /// Column-major payload, `data.len() == d·n`.
+    data: Vec<f64>,
+}
+
+impl DenseSegment {
+    /// Local example `local` as a slice.
+    #[inline]
+    fn col(&self, local: usize) -> &[f64] {
+        &self.data[local * self.d..(local + 1) * self.d]
+    }
+}
+
+/// Column-major dense matrix over an ordered list of immutable
+/// [`DenseSegment`] chunks. Single-segment after a bulk load (no lookup
+/// cost on the fast path); one extra segment per appended batch, all
+/// existing segments shared with prior dataset versions.
 #[derive(Clone, Debug)]
 pub struct DenseMatrix {
     d: usize,
     n: usize,
-    data: Vec<f64>,
+    segs: Vec<Arc<DenseSegment>>,
+    /// `seg_start[s]` = first global example of segment `s`, plus one
+    /// trailing entry equal to `n` (`seg_start.len() == segs.len() + 1`).
+    seg_start: Vec<usize>,
 }
 
 impl DenseMatrix {
-    /// Build from raw column-major storage (`data.len() == d·n`).
+    /// Build from raw column-major storage (`data.len() == d·n`) — one
+    /// sealed segment.
     pub fn new(d: usize, n: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), d * n, "dense payload must be d·n");
-        DenseMatrix { d, n, data }
+        let mut m = DenseMatrix {
+            d,
+            n: 0,
+            segs: Vec::new(),
+            seg_start: vec![0],
+        };
+        m.push_segment(Arc::new(DenseSegment { d, n, data }));
+        m
     }
 
     /// Build from explicit column slices (test helper).
@@ -26,50 +65,52 @@ impl DenseMatrix {
             assert_eq!(c.len(), d);
             data.extend_from_slice(c);
         }
-        DenseMatrix {
-            d,
-            n: cols.len(),
-            data,
-        }
+        DenseMatrix::new(d, cols.len(), data)
     }
 
     /// Zero matrix with shape `(d, n)`.
     pub fn zeros(d: usize, n: usize) -> Self {
-        DenseMatrix {
-            d,
-            n,
-            data: vec![0.0; d * n],
+        DenseMatrix::new(d, n, vec![0.0; d * n])
+    }
+
+    /// Attach a sealed segment to the tail (empty segments are skipped so
+    /// `segment_range` stays non-empty for every listed segment).
+    fn push_segment(&mut self, seg: Arc<DenseSegment>) {
+        debug_assert_eq!(seg.d, self.d, "segment feature dim mismatch");
+        if seg.n == 0 {
+            return;
         }
+        self.n += seg.n;
+        self.seg_start.push(self.n);
+        self.segs.push(seg);
+    }
+
+    /// `(segment, local example)` of global example `j`.
+    #[inline]
+    fn locate(&self, j: usize) -> (usize, usize) {
+        // fast path: the monolithic (single bulk load) case
+        if self.segs.len() == 1 {
+            return (0, j);
+        }
+        let s = self.seg_start.partition_point(|&lo| lo <= j) - 1;
+        (s, j - self.seg_start[s])
     }
 
     /// Example `j` as a slice.
     #[inline]
     pub fn col(&self, j: usize) -> &[f64] {
-        &self.data[j * self.d..(j + 1) * self.d]
+        let (s, local) = self.locate(j);
+        self.segs[s].col(local)
     }
 
-    #[inline]
-    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
-        &mut self.data[j * self.d..(j + 1) * self.d]
+    /// Strong reference count of segment `s`'s backing `Arc` — the
+    /// clone-count diagnostic the structural-sharing tests assert on.
+    pub fn segment_rc(&self, s: usize) -> usize {
+        Arc::strong_count(&self.segs[s])
     }
 
-    /// Raw payload (runtime tiling uses this to feed PJRT buffers).
-    pub fn raw(&self) -> &[f64] {
-        &self.data
-    }
-
-    /// Hint the hardware prefetcher at the column range `j_lo..j_hi`
-    /// (the *next* bucket while the current one is being processed —
-    /// §3's "CPU prefetching efficiency" made explicit). No-op on
-    /// non-x86 targets (see [`util::prefetch_slice`]).
-    #[inline]
-    fn prefetch_cols_impl(&self, j_lo: usize, j_hi: usize) {
-        let lo = j_lo * self.d;
-        let hi = (j_hi * self.d).min(self.data.len());
-        util::prefetch_slice(&self.data[lo..hi]);
-    }
-
-    /// Copy the selected examples into a new matrix (train/test splits).
+    /// Copy the selected examples into a new (single-segment) matrix
+    /// (train/test splits).
     pub fn subset(&self, idx: &[usize]) -> DenseMatrix {
         let mut data = Vec::with_capacity(idx.len() * self.d);
         for &j in idx {
@@ -91,8 +132,9 @@ impl DenseMatrix {
 impl AppendExamples for DenseMatrix {
     fn append_examples(&mut self, other: &Self) {
         assert_eq!(self.d, other.d, "feature dimension mismatch");
-        self.data.extend_from_slice(&other.data);
-        self.n += other.n;
+        for seg in &other.segs {
+            self.push_segment(Arc::clone(seg));
+        }
     }
 }
 
@@ -118,16 +160,6 @@ impl DataMatrix for DenseMatrix {
     }
 
     #[inline]
-    fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
-        util::dot(self.col(j), v)
-    }
-
-    #[inline]
-    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]) {
-        util::axpy(scale, self.col(j), v);
-    }
-
-    #[inline]
     fn norm_sq_col(&self, j: usize) -> f64 {
         util::norm_sq(self.col(j))
     }
@@ -139,37 +171,79 @@ impl DataMatrix for DenseMatrix {
         }
     }
 
-    #[inline]
-    fn prefetch_cols(&self, j_lo: usize, j_hi: usize) {
-        self.prefetch_cols_impl(j_lo, j_hi);
-    }
-
     fn for_each_col_index(&self, _j: usize, mut f: impl FnMut(usize)) {
         for i in 0..self.d {
             f(i);
         }
     }
 
-    fn for_each_col_entry(&self, j: usize, mut f: impl FnMut(usize, f64)) {
-        for (i, &x) in self.col(j).iter().enumerate() {
+    #[inline]
+    fn num_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    #[inline]
+    fn segment_of(&self, j: usize) -> usize {
+        self.locate(j).0
+    }
+
+    #[inline]
+    fn segment_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.seg_start[s]..self.seg_start[s + 1]
+    }
+
+    #[inline]
+    fn dot_col_in(&self, s: usize, j: usize, v: &[f64]) -> f64 {
+        util::dot(self.segs[s].col(j - self.seg_start[s]), v)
+    }
+
+    #[inline]
+    fn axpy_col_in(&self, s: usize, j: usize, scale: f64, v: &mut [f64]) {
+        util::axpy(scale, self.segs[s].col(j - self.seg_start[s]), v);
+    }
+
+    #[inline]
+    fn nnz_col_in(&self, _s: usize, _j: usize) -> usize {
+        self.d
+    }
+
+    fn for_each_col_entry_in(&self, s: usize, j: usize, mut f: impl FnMut(usize, f64)) {
+        for (i, &x) in self.segs[s].col(j - self.seg_start[s]).iter().enumerate() {
             f(i, x);
         }
     }
 
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
-        let col = self.col(j);
-        let mut s = 0.0;
+    fn dot_col_atomic_in(&self, s: usize, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
+        let col = self.segs[s].col(j - self.seg_start[s]);
+        let mut sum = 0.0;
         for (x, vi) in col.iter().zip(v.iter()) {
-            s += x * vi.load();
+            sum += x * vi.load();
         }
-        s
+        sum
     }
 
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
-        let col = self.col(j);
+    fn axpy_col_wild_in(&self, s: usize, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
+        let col = self.segs[s].col(j - self.seg_start[s]);
         for (x, vi) in col.iter().zip(v.iter()) {
             vi.add_wild(scale * x);
         }
+    }
+
+    /// Hint the hardware prefetcher at the column range `j_lo..j_hi`
+    /// (the *next* bucket while the current one is being processed —
+    /// §3's "CPU prefetching efficiency" made explicit). Clamped to the
+    /// segment containing `j_lo`: a range that crosses a segment
+    /// boundary prefetches its head, which is all a hint needs. No-op on
+    /// non-x86 targets (see [`util::prefetch_slice`]).
+    #[inline]
+    fn prefetch_cols(&self, j_lo: usize, j_hi: usize) {
+        if j_lo >= self.n || j_hi <= j_lo {
+            return;
+        }
+        let (s, local) = self.locate(j_lo);
+        let seg = &self.segs[s];
+        let hi_local = (j_hi.min(self.seg_start[s] + seg.n) - self.seg_start[s]).max(local);
+        util::prefetch_slice(&seg.data[local * self.d..hi_local * self.d]);
     }
 }
 
@@ -186,6 +260,8 @@ mod tests {
         let m = sample();
         assert_eq!((m.d(), m.n(), m.nnz()), (3, 2, 6));
         assert_eq!(m.col(1), &[0.0, -1.0, 0.5]);
+        assert_eq!(m.num_segments(), 1);
+        assert_eq!(m.segment_range(0), 0..2);
     }
 
     #[test]
@@ -218,6 +294,38 @@ mod tests {
         let mut out = vec![9.0; 5];
         m.write_col_dense(0, &mut out);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn append_pushes_shared_tail_segment() {
+        let mut m = sample();
+        let p0 = m.col(0).as_ptr();
+        let tail = DenseMatrix::from_columns(3, &[&[7.0, 8.0, 9.0]]);
+        let p_tail = tail.col(0).as_ptr();
+        m.append_examples(&tail);
+        assert_eq!((m.n(), m.num_segments()), (3, 2));
+        assert_eq!(m.col(2), &[7.0, 8.0, 9.0]);
+        // structural sharing: both allocations are reused, not copied
+        assert_eq!(m.col(0).as_ptr(), p0);
+        assert_eq!(m.col(2).as_ptr(), p_tail);
+        assert_eq!(m.segment_of(1), 0);
+        assert_eq!(m.segment_of(2), 1);
+        assert_eq!(m.segment_range(1), 2..3);
+        // column ops cross the boundary transparently
+        let v = [1.0, 1.0, 1.0];
+        assert!((m.dot_col(2, &v) - 24.0).abs() < 1e-12);
+        // appending an empty matrix adds no segment
+        m.append_examples(&DenseMatrix::zeros(3, 0));
+        assert_eq!((m.n(), m.num_segments()), (3, 2));
+    }
+
+    #[test]
+    fn prefetch_clamps_to_segment() {
+        let mut m = sample();
+        m.append_examples(&sample());
+        m.prefetch_cols(1, 4); // crosses the boundary: must not fault
+        m.prefetch_cols(3, 3); // empty range: no-op
+        m.prefetch_cols(9, 12); // out of range: no-op
     }
 
     #[test]

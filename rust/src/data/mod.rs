@@ -1,9 +1,40 @@
-//! Training-data substrate.
+//! Training-data substrate: the segment-chunked dataset.
 //!
 //! Following the paper (Algorithm 1), the data matrix is stored
 //! **example-major**: `A = [x_1, …, x_n] ∈ R^{d×n}`, i.e. each training
 //! example is one contiguous column. SDCA touches one example per step, so
 //! example-contiguity is what makes the inner products stream.
+//!
+//! ## The segment model
+//!
+//! The example axis of a matrix is an ordered list of **immutable
+//! segments** (`Arc<DenseSegment>` / `Arc<CscSegment>`), each holding a
+//! contiguous run of columns. Invariants:
+//!
+//! * segments are **sealed at construction** — no code path mutates a
+//!   segment after it is wrapped in its `Arc`;
+//! * segments **partition the example axis**: segment `s` owns the global
+//!   examples `segment_range(s)`, ranges are contiguous, ascending and
+//!   non-empty, and every column lives entirely inside one segment;
+//! * [`AppendExamples::append_examples`] **seals and pushes**: the
+//!   appended matrix's segments are attached to the tail by `Arc` clone —
+//!   existing storage is *shared*, never copied. Appending `k` rows costs
+//!   `O(segments + rows added)`, independent of the resident `nnz`. This
+//!   is what makes streaming refits clone-free while concurrent readers
+//!   hold [`ModelSnapshot`](crate::serve::ModelSnapshot)s of earlier
+//!   dataset versions (see `docs/ARCHITECTURE.md`, "copy-on-write
+//!   appends");
+//! * a freshly loaded matrix has exactly **one** segment, so the
+//!   monolithic fast path (no per-access segment search) is preserved for
+//!   batch training.
+//!
+//! The cost of chunking is one indirection on column access: locating the
+//! owning segment. Random access pays a `partition_point` over the segment
+//! offsets (with a single-segment fast path); loop-shaped access goes
+//! through a [`ColCursor`], which caches the current segment and re-seats
+//! only when a walk crosses a segment boundary — the solvers, the layout
+//! encoder and [`glm::model::margins`](crate::glm::model::margins) all
+//! walk columns through cursors.
 //!
 //! Two concrete source layouts are provided:
 //! * [`dense::DenseMatrix`] — column-major dense (higgs / epsilon style),
@@ -17,6 +48,10 @@
 //! Solvers are generic over [`DataMatrix`] and get monomorphized per layout
 //! (no dynamic dispatch in the coordinate loop). [`AnyDataset`] is the
 //! type-erased wrapper used by the CLI and figure harnesses.
+//!
+//! The full layer map (data → layout → kernels → solvers → pool →
+//! serve/scheduler) and the memory cost of each resident encoding are
+//! documented in `docs/ARCHITECTURE.md`.
 
 pub mod dense;
 pub mod loader;
@@ -33,6 +68,14 @@ pub use sparse::CscMatrix;
 /// `Sync` is required: the multi-threaded solvers share the (read-only)
 /// matrix across threads — the paper's NUMA design explicitly relies on the
 /// dataset being read-only so it never generates coherence traffic.
+///
+/// Storage is segmented along the example axis (see the module docs). The
+/// `*_in` methods are the segment-scoped primitives: they take the segment
+/// `s` known to contain global example `j` and skip the lookup. The plain
+/// per-column methods are provided on top of them (locating the segment
+/// per call); loops should prefer a [`ColCursor`] (via
+/// [`DataMatrix::col_cursor`]), which amortizes the lookup across
+/// consecutive visits.
 pub trait DataMatrix: Sync {
     /// Number of examples (columns).
     fn n(&self) -> usize;
@@ -42,10 +85,6 @@ pub trait DataMatrix: Sync {
     fn nnz(&self) -> usize;
     /// Non-zeros in example `j`.
     fn nnz_col(&self, j: usize) -> usize;
-    /// `⟨x_j, v⟩` where `v` has length `d`.
-    fn dot_col(&self, j: usize, v: &[f64]) -> f64;
-    /// `v += scale · x_j`.
-    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]);
     /// `‖x_j‖²`.
     fn norm_sq_col(&self, j: usize) -> f64;
     /// Densify example `j` into a length-`d` buffer (runtime tiling path).
@@ -54,38 +93,191 @@ pub trait DataMatrix: Sync {
     fn for_each_col_index(&self, j: usize, f: impl FnMut(usize))
     where
         Self: Sized;
-    /// Visit the `(index, value)` entries of example `j`.
-    fn for_each_col_entry(&self, j: usize, f: impl FnMut(usize, f64))
+
+    // ---- segment geometry ------------------------------------------------
+
+    /// Number of immutable storage segments the example axis is chunked
+    /// into (1 for a freshly loaded matrix; +1 per appended batch).
+    fn num_segments(&self) -> usize;
+    /// The segment containing global example `j`.
+    fn segment_of(&self, j: usize) -> usize;
+    /// Global example range `[lo, hi)` owned by segment `s`. Ranges are
+    /// contiguous, ascending and partition `0..n`.
+    fn segment_range(&self, s: usize) -> std::ops::Range<usize>;
+
+    // ---- segment-scoped column primitives --------------------------------
+    // `j` is always the GLOBAL example index; `s` must be the segment
+    // containing it (callers obtain `s` from `segment_of` or a cursor).
+
+    /// `⟨x_j, v⟩` where `v` has length `d` and `s` contains `j`.
+    fn dot_col_in(&self, s: usize, j: usize, v: &[f64]) -> f64;
+    /// `v += scale · x_j` where `s` contains `j`.
+    fn axpy_col_in(&self, s: usize, j: usize, scale: f64, v: &mut [f64]);
+    /// Non-zeros in example `j` where `s` contains `j`.
+    fn nnz_col_in(&self, s: usize, j: usize) -> usize;
+    /// Visit the `(index, value)` entries of example `j` (`s` contains `j`).
+    fn for_each_col_entry_in(&self, s: usize, j: usize, f: impl FnMut(usize, f64))
     where
         Self: Sized;
     /// `⟨x_j, v⟩` against the atomically-shared vector (wild solver
-    /// reads). The elements are cache-line padded so concurrent updates
-    /// of *distinct* coordinates never contend on one line.
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64;
+    /// reads; `s` contains `j`). The elements are cache-line padded so
+    /// concurrent updates of *distinct* coordinates never contend on one
+    /// line.
+    fn dot_col_atomic_in(&self, s: usize, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64;
     /// `v += scale·x_j` with *unsynchronized* per-element RMWs — the wild
-    /// solver's `ADD(v_i, δ·A_ij)`; concurrent callers may lose updates.
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]);
+    /// solver's `ADD(v_i, δ·A_ij)`; concurrent callers may lose updates
+    /// (`s` contains `j`).
+    fn axpy_col_wild_in(&self, s: usize, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]);
+
+    // ---- per-column conveniences (one segment lookup per call) -----------
+
+    /// `⟨x_j, v⟩` where `v` has length `d`.
+    #[inline]
+    fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
+        self.dot_col_in(self.segment_of(j), j, v)
+    }
+    /// `v += scale · x_j`.
+    #[inline]
+    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]) {
+        self.axpy_col_in(self.segment_of(j), j, scale, v)
+    }
+    /// Visit the `(index, value)` entries of example `j`.
+    #[inline]
+    fn for_each_col_entry(&self, j: usize, f: impl FnMut(usize, f64))
+    where
+        Self: Sized,
+    {
+        self.for_each_col_entry_in(self.segment_of(j), j, f)
+    }
+    /// `⟨x_j, v⟩` against the atomically-shared vector (wild reads).
+    #[inline]
+    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
+        self.dot_col_atomic_in(self.segment_of(j), j, v)
+    }
+    /// Unsynchronized `v += scale·x_j` (the wild `ADD`).
+    #[inline]
+    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
+        self.axpy_col_wild_in(self.segment_of(j), j, scale, v)
+    }
+
     /// Hint that examples `j_lo..j_hi` will be read next (software
     /// prefetch for the bucketed random-order walk). Default: no-op.
     #[inline]
     fn prefetch_cols(&self, j_lo: usize, j_hi: usize) {
         let _ = (j_lo, j_hi);
     }
+
+    /// A cursor that amortizes the segment lookup across consecutive
+    /// column visits — the intended access path for every loop over
+    /// examples (solver inner loops, margins, layout encoding).
+    #[inline]
+    fn col_cursor(&self) -> ColCursor<'_, Self>
+    where
+        Self: Sized,
+    {
+        ColCursor::new(self)
+    }
+}
+
+/// Amortized column walker over a segmented [`DataMatrix`]: caches the
+/// segment containing the last visited example and re-resolves it only
+/// when a visit leaves the cached range. Within one segment — the common
+/// case for bucket walks, whole-dataset sweeps and tail appends — every
+/// operation is a direct segment access, exactly the pre-segmentation
+/// cost.
+///
+/// A cursor borrows the matrix immutably, so any number of cursors can
+/// walk the same matrix from concurrent workers.
+pub struct ColCursor<'a, M: DataMatrix> {
+    m: &'a M,
+    /// Cached segment, valid for global examples in `lo..hi` (the empty
+    /// initial range forces the first visit to seat).
+    seg: usize,
+    lo: usize,
+    hi: usize,
+}
+
+impl<'a, M: DataMatrix> ColCursor<'a, M> {
+    #[inline]
+    pub fn new(m: &'a M) -> Self {
+        ColCursor {
+            m,
+            seg: 0,
+            lo: 0,
+            hi: 0,
+        }
+    }
+
+    /// Resolve (and cache) the segment containing `j`.
+    #[inline]
+    fn seat(&mut self, j: usize) -> usize {
+        if j < self.lo || j >= self.hi {
+            self.seg = self.m.segment_of(j);
+            let r = self.m.segment_range(self.seg);
+            self.lo = r.start;
+            self.hi = r.end;
+        }
+        self.seg
+    }
+
+    /// `⟨x_j, v⟩`.
+    #[inline]
+    pub fn dot(&mut self, j: usize, v: &[f64]) -> f64 {
+        let s = self.seat(j);
+        self.m.dot_col_in(s, j, v)
+    }
+
+    /// `v += scale · x_j`.
+    #[inline]
+    pub fn axpy(&mut self, j: usize, scale: f64, v: &mut [f64]) {
+        let s = self.seat(j);
+        self.m.axpy_col_in(s, j, scale, v)
+    }
+
+    /// Non-zeros in example `j`.
+    #[inline]
+    pub fn nnz_col(&mut self, j: usize) -> usize {
+        let s = self.seat(j);
+        self.m.nnz_col_in(s, j)
+    }
+
+    /// Visit the `(index, value)` entries of example `j`.
+    #[inline]
+    pub fn for_each_entry(&mut self, j: usize, f: impl FnMut(usize, f64)) {
+        let s = self.seat(j);
+        self.m.for_each_col_entry_in(s, j, f)
+    }
+
+    /// `⟨x_j, v⟩` against the wild solver's padded atomic vector.
+    #[inline]
+    pub fn dot_atomic(&mut self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
+        let s = self.seat(j);
+        self.m.dot_col_atomic_in(s, j, v)
+    }
+
+    /// Unsynchronized `v += scale·x_j` (the wild `ADD`).
+    #[inline]
+    pub fn axpy_wild(&mut self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
+        let s = self.seat(j);
+        self.m.axpy_col_wild_in(s, j, scale, v)
+    }
 }
 
 /// Growable example axis: matrix layouts that can take freshly arrived
-/// examples in place. The serving subsystem ([`crate::serve`]) appends new
-/// rows to a resident dataset and warm-restarts training from the existing
-/// dual state instead of re-loading and re-training from scratch.
+/// examples. The serving subsystem ([`crate::serve`]) appends new rows to
+/// a resident dataset and warm-restarts training from the existing dual
+/// state instead of re-loading and re-training from scratch.
 ///
-/// `Clone` is required: the request scheduler publishes versioned
-/// [`ModelSnapshot`](crate::serve::ModelSnapshot)s whose datasets are
-/// shared with concurrent readers via `Arc`; the writer mutates its copy
-/// through `Arc::make_mut`, which clones only when a reader still holds
-/// the previous version.
+/// Appending is **structural sharing**, not copying: the appended
+/// matrix's sealed segments are pushed onto the tail by `Arc` clone, so
+/// every snapshot of the pre-append dataset keeps serving its own segment
+/// list while the successor shares all of it. `Clone` is consequently
+/// cheap — `O(segments)` `Arc` bumps, never an `O(nnz)` payload copy —
+/// which is what the scheduler's versioned-snapshot publishing relies on.
 pub trait AppendExamples: DataMatrix + Sized + Clone {
-    /// Append `other`'s examples (columns) after this matrix's own; the
-    /// feature dimension must match.
+    /// Append `other`'s examples (columns) after this matrix's own by
+    /// sharing `other`'s sealed segments; the feature dimension must
+    /// match.
     fn append_examples(&mut self, other: &Self);
 }
 
@@ -93,6 +285,12 @@ pub trait AppendExamples: DataMatrix + Sized + Clone {
 ///
 /// Labels are `±1` for classification objectives and real-valued for ridge
 /// regression; the objective decides the interpretation.
+///
+/// `y` and the cached norms stay *flat* (`Vec<f64>`) rather than chunked:
+/// the fused kernels index them directly as slices on the hot path, and
+/// at 16 B per example they are dwarfed by the matrix payload. An append
+/// therefore copies `O(n)` label/norm floats but never the `O(nnz)`
+/// matrix storage (see [`Dataset::appended`]).
 #[derive(Clone)]
 pub struct Dataset<M: DataMatrix> {
     pub x: M,
@@ -144,12 +342,27 @@ impl<M: DataMatrix> Dataset<M> {
 
 impl<M: AppendExamples> Dataset<M> {
     /// Append another dataset's examples in place (labels and cached norms
-    /// included) — the serving-side ingestion path.
+    /// included). The matrix side shares `other`'s sealed segments
+    /// ([`AppendExamples::append_examples`]); only labels/norms are
+    /// extended by value.
     pub fn append(&mut self, other: &Dataset<M>) {
         assert_eq!(self.d(), other.d(), "feature dimension mismatch");
         self.x.append_examples(&other.x);
         self.y.extend_from_slice(&other.y);
         self.norms_sq.extend_from_slice(&other.norms_sq);
+    }
+
+    /// Functional append: build the successor dataset without touching
+    /// this one. Every existing matrix segment is shared by `Arc`, so the
+    /// cost is `O(segments + rows added)` for storage plus an `O(n)`
+    /// label/norm copy — never an `O(nnz)` clone, no matter how many
+    /// snapshots still hold the predecessor. This is the serving-side
+    /// ingestion path
+    /// ([`crate::serve::Session::partial_fit_rows`]).
+    pub fn appended(&self, other: &Dataset<M>) -> Dataset<M> {
+        let mut next = self.clone();
+        next.append(other);
+        next
     }
 }
 
@@ -282,6 +495,84 @@ mod tests {
         let mut a = Dataset::new(DenseMatrix::zeros(2, 1), vec![1.0]);
         let b = Dataset::new(DenseMatrix::zeros(3, 1), vec![1.0]);
         a.append(&b);
+    }
+
+    /// The core structural-sharing claim: after an append, the original
+    /// columns live in the SAME allocation (no payload copy), the appended
+    /// matrix gained exactly the other side's segments, and the source
+    /// dataset is untouched.
+    #[test]
+    fn append_shares_segments_structurally() {
+        let a = Dataset::new(
+            DenseMatrix::from_columns(2, &[&[1.0, 2.0], &[3.0, 4.0]]),
+            vec![1.0, -1.0],
+        );
+        let b = Dataset::new(DenseMatrix::from_columns(2, &[&[5.0, 6.0]]), vec![1.0]);
+        let p_a = a.x.col(0).as_ptr();
+        let p_b = b.x.col(0).as_ptr();
+        let grown = a.appended(&b);
+        assert_eq!(grown.n(), 3);
+        assert_eq!(grown.x.num_segments(), 2);
+        // both sides' storage is shared, not copied
+        assert_eq!(grown.x.col(0).as_ptr(), p_a);
+        assert_eq!(grown.x.col(2).as_ptr(), p_b);
+        // the predecessor is untouched (snapshots keep serving it)
+        assert_eq!((a.n(), a.x.num_segments()), (2, 1));
+        assert!(a.x.segment_rc(0) >= 2, "segment must now be shared");
+
+        let sa = Dataset::new(
+            CscMatrix::from_examples(3, &[vec![(0, 1.0)], vec![(2, 2.0)]]),
+            vec![1.0, -1.0],
+        );
+        let sb = Dataset::new(CscMatrix::from_examples(3, &[vec![(1, 3.0)]]), vec![1.0]);
+        let p_sa = sa.x.col(0).1.as_ptr();
+        let grown = sa.appended(&sb);
+        assert_eq!(grown.x.num_segments(), 2);
+        assert_eq!(grown.x.col(0).1.as_ptr(), p_sa);
+        assert!(sa.x.segment_rc(0) >= 2);
+    }
+
+    /// A cursor walk across segment boundaries agrees with the per-column
+    /// trait path (which re-locates per call).
+    #[test]
+    fn cursor_matches_per_column_access_across_segments() {
+        let mut ds = Dataset::new(
+            CscMatrix::from_examples(4, &[vec![(0, 1.0), (3, -2.0)], vec![(1, 0.5)]]),
+            vec![1.0, -1.0],
+        );
+        for k in 0..3 {
+            let extra = Dataset::new(
+                CscMatrix::from_examples(4, &[vec![(2, 1.0 + k as f64)], vec![(0, -0.25)]]),
+                vec![1.0, -1.0],
+            );
+            ds.append(&extra);
+        }
+        assert_eq!(ds.x.num_segments(), 4);
+        let v = [0.3, -1.2, 2.0, 0.7];
+        let mut cur = ds.x.col_cursor();
+        // forward then backward visits all agree bit-wise
+        let order: Vec<usize> = (0..ds.n()).chain((0..ds.n()).rev()).collect();
+        for &j in &order {
+            assert_eq!(cur.dot(j, &v).to_bits(), ds.x.dot_col(j, &v).to_bits(), "col {j}");
+            assert_eq!(cur.nnz_col(j), ds.x.nnz_col(j));
+            let mut a = vec![0.1; 4];
+            let mut b = vec![0.1; 4];
+            cur.axpy(j, 1.5, &mut a);
+            ds.x.axpy_col(j, 1.5, &mut b);
+            assert_eq!(a, b);
+        }
+        // segment geometry is a partition
+        let mut end = 0;
+        for s in 0..ds.x.num_segments() {
+            let r = ds.x.segment_range(s);
+            assert_eq!(r.start, end);
+            assert!(r.end > r.start);
+            for j in r.clone() {
+                assert_eq!(ds.x.segment_of(j), s);
+            }
+            end = r.end;
+        }
+        assert_eq!(end, ds.n());
     }
 
     #[test]

@@ -37,6 +37,14 @@
 //!   rebuilt only when the partition geometry or the dataset itself
 //!   changes (e.g. `refit-rows` appends examples).
 //!
+//! The source matrix itself is a segment list ([`crate::data`]): the
+//! encoder walks it through a [`ColCursor`](crate::data::ColCursor), so
+//! building a shard from a many-segment dataset costs the same one
+//! forward pass, and [`ShardedLayout::append_tail`] consumes exactly the
+//! freshly appended tail segments. Note the encoding itself stays one
+//! contiguous buffer per shard (bucket streams must not be chunked);
+//! segmenting it the same way is a recorded follow-on (ROADMAP).
+//!
 //! ## When it pays
 //!
 //! An [`Entry`] costs 16 bytes per stored non-zero. For sparse data that
@@ -200,14 +208,18 @@ impl Shard {
         let size = buckets.size();
         let example_lo = (bucket_lo * size).min(n);
         let example_hi = (bucket_hi * size).min(n);
-        let total: usize = (example_lo..example_hi).map(|j| x.nnz_col(j)).sum();
+        // encode from the source's segment list: a cursor walk visits the
+        // columns in global order, so the segment lookup is amortized to
+        // one re-seat per segment boundary crossed
+        let mut cur = x.col_cursor();
+        let total: usize = (example_lo..example_hi).map(|j| cur.nnz_col(j)).sum();
         let mut col_ptr = Vec::with_capacity(example_hi - example_lo + 1);
         col_ptr.push(0usize);
         let mut buf = EntryBuf::zeroed(total);
         let slice = buf.as_mut_slice();
         let mut k = 0usize;
         for j in example_lo..example_hi {
-            x.for_each_col_entry(j, |i, v| {
+            cur.for_each_entry(j, |i, v| {
                 slice[k] = Entry::new(i as u32, v);
                 k += 1;
             });
@@ -301,11 +313,15 @@ impl Shard {
     /// was built (they all sit at the tail, `self.example_hi..x.n()`), and
     /// grow the covered bucket range to `new_bucket_hi`. The entry stream
     /// and `col_ptr` are strictly appended to — existing entries are not
-    /// touched — so the cost is `O(entries added)`, not `O(nnz)`.
+    /// touched — so the cost is `O(entries added)`, not `O(nnz)`. The
+    /// walk consumes the freshly appended tail segment(s) directly: the
+    /// cursor seats on the first tail segment and never revisits the
+    /// already-encoded head.
     fn append_tail<M: DataMatrix>(&mut self, x: &M, new_bucket_hi: usize) {
         debug_assert_eq!(self.example_lo, 0, "tail append targets the global shard");
+        let mut cur = x.col_cursor();
         for j in self.example_hi..x.n() {
-            x.for_each_col_entry(j, |i, v| self.buf.push(Entry::new(i as u32, v)));
+            cur.for_each_entry(j, |i, v| self.buf.push(Entry::new(i as u32, v)));
             self.col_ptr.push(self.buf.len());
         }
         self.example_hi = x.n();

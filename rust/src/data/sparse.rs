@@ -1,34 +1,78 @@
-//! Compressed-sparse-column matrix (examples are columns, criteo-style).
+//! Compressed-sparse-column matrix (examples are columns, criteo-style),
+//! stored as a segment list: each immutable [`CscSegment`] holds the CSC
+//! arrays of a contiguous run of examples, sealed at construction and
+//! shared by `Arc` across dataset versions (see the [`crate::data`]
+//! module docs for the segment model).
 //!
 //! Feature indices are `u32` (the paper's datasets stay under 2³² features)
 //! which halves index bandwidth vs `usize` — per-epoch time on sparse data
 //! is dominated by streaming `(index, value)` pairs.
 
 use super::{AppendExamples, DataMatrix};
+use std::sync::Arc;
 
-#[derive(Clone, Debug)]
-pub struct CscMatrix {
+/// One immutable CSC chunk of the example axis.
+#[derive(Debug)]
+pub struct CscSegment {
     d: usize,
     n: usize,
-    /// `col_ptr[j]..col_ptr[j+1]` bounds example `j`'s entries.
+    /// `col_ptr[l]..col_ptr[l+1]` bounds local example `l`'s entries.
     col_ptr: Vec<usize>,
     idx: Vec<u32>,
     val: Vec<f64>,
 }
 
+impl CscSegment {
+    /// `(indices, values)` of local example `local`.
+    #[inline]
+    fn col(&self, local: usize) -> (&[u32], &[f64]) {
+        let lo = self.col_ptr[local];
+        let hi = self.col_ptr[local + 1];
+        (&self.idx[lo..hi], &self.val[lo..hi])
+    }
+
+    #[inline]
+    fn nnz_col(&self, local: usize) -> usize {
+        self.col_ptr[local + 1] - self.col_ptr[local]
+    }
+}
+
+/// CSC matrix over an ordered list of immutable [`CscSegment`] chunks.
+/// Single-segment after a bulk load; one extra segment per appended
+/// batch, all existing segments shared with prior dataset versions.
+#[derive(Clone, Debug)]
+pub struct CscMatrix {
+    d: usize,
+    n: usize,
+    nnz: usize,
+    segs: Vec<Arc<CscSegment>>,
+    /// `seg_start[s]` = first global example of segment `s`, plus one
+    /// trailing entry equal to `n` (`seg_start.len() == segs.len() + 1`).
+    seg_start: Vec<usize>,
+}
+
 impl CscMatrix {
+    /// Build from raw CSC arrays — one sealed segment.
     pub fn new(d: usize, n: usize, col_ptr: Vec<usize>, idx: Vec<u32>, val: Vec<f64>) -> Self {
         assert_eq!(col_ptr.len(), n + 1);
         assert_eq!(*col_ptr.last().unwrap(), idx.len());
         assert_eq!(idx.len(), val.len());
         debug_assert!(idx.iter().all(|&i| (i as usize) < d));
-        CscMatrix {
+        let mut m = CscMatrix {
+            d,
+            n: 0,
+            nnz: 0,
+            segs: Vec::new(),
+            seg_start: vec![0],
+        };
+        m.push_segment(Arc::new(CscSegment {
             d,
             n,
             col_ptr,
             idx,
             val,
-        }
+        }));
+        m
     }
 
     /// Build from per-example `(feature, value)` lists.
@@ -47,35 +91,61 @@ impl CscMatrix {
             }
             col_ptr.push(idx.len());
         }
-        CscMatrix {
-            d,
-            n,
-            col_ptr,
-            idx,
-            val,
+        CscMatrix::new(d, n, col_ptr, idx, val)
+    }
+
+    /// Attach a sealed segment to the tail (empty segments are skipped so
+    /// `segment_range` stays non-empty for every listed segment).
+    fn push_segment(&mut self, seg: Arc<CscSegment>) {
+        debug_assert_eq!(seg.d, self.d, "segment feature dim mismatch");
+        if seg.n == 0 {
+            return;
         }
+        self.n += seg.n;
+        self.nnz += seg.idx.len();
+        self.seg_start.push(self.n);
+        self.segs.push(seg);
+    }
+
+    /// `(segment, local example)` of global example `j`.
+    #[inline]
+    fn locate(&self, j: usize) -> (usize, usize) {
+        // fast path: the monolithic (single bulk load) case
+        if self.segs.len() == 1 {
+            return (0, j);
+        }
+        let s = self.seg_start.partition_point(|&lo| lo <= j) - 1;
+        (s, j - self.seg_start[s])
     }
 
     /// `(indices, values)` of example `j`.
     #[inline]
     pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
-        let lo = self.col_ptr[j];
-        let hi = self.col_ptr[j + 1];
-        (&self.idx[lo..hi], &self.val[lo..hi])
+        let (s, local) = self.locate(j);
+        self.segs[s].col(local)
     }
 
-    /// Copy the selected examples into a new matrix (train/test splits).
-    /// Output vectors are pre-sized to the exact selected nnz — growing
-    /// them by push caused repeated reallocs (and full copies) on large
-    /// shards.
+    /// Strong reference count of segment `s`'s backing `Arc` — the
+    /// clone-count diagnostic the structural-sharing tests assert on.
+    pub fn segment_rc(&self, s: usize) -> usize {
+        Arc::strong_count(&self.segs[s])
+    }
+
+    /// Copy the selected examples into a new (single-segment) matrix
+    /// (train/test splits). Output vectors are pre-sized to the exact
+    /// selected nnz — growing them by push caused repeated reallocs (and
+    /// full copies) on large shards. Each selected column is located
+    /// exactly once (the slices are kept for the copy pass); a cursor
+    /// would not help here because split index lists are shuffled, so
+    /// consecutive visits rarely share a segment.
     pub fn subset(&self, idx: &[usize]) -> CscMatrix {
-        let total: usize = idx.iter().map(|&j| self.nnz_col(j)).sum();
+        let cols: Vec<(&[u32], &[f64])> = idx.iter().map(|&j| self.col(j)).collect();
+        let total: usize = cols.iter().map(|(ci, _)| ci.len()).sum();
         let mut col_ptr = Vec::with_capacity(idx.len() + 1);
         let mut new_idx = Vec::with_capacity(total);
         let mut new_val = Vec::with_capacity(total);
         col_ptr.push(0);
-        for &j in idx {
-            let (ci, cv) = self.col(j);
+        for (ci, cv) in cols {
             new_idx.extend_from_slice(ci);
             new_val.extend_from_slice(cv);
             col_ptr.push(new_idx.len());
@@ -92,12 +162,9 @@ impl CscMatrix {
 impl AppendExamples for CscMatrix {
     fn append_examples(&mut self, other: &Self) {
         assert_eq!(self.d, other.d, "feature dimension mismatch");
-        let base = *self.col_ptr.last().unwrap();
-        self.col_ptr
-            .extend(other.col_ptr.iter().skip(1).map(|&p| base + p));
-        self.idx.extend_from_slice(&other.idx);
-        self.val.extend_from_slice(&other.val);
-        self.n += other.n;
+        for seg in &other.segs {
+            self.push_segment(Arc::clone(seg));
+        }
     }
 }
 
@@ -114,29 +181,13 @@ impl DataMatrix for CscMatrix {
 
     #[inline]
     fn nnz(&self) -> usize {
-        self.val.len()
+        self.nnz
     }
 
     #[inline]
     fn nnz_col(&self, j: usize) -> usize {
-        self.col_ptr[j + 1] - self.col_ptr[j]
-    }
-
-    #[inline]
-    fn dot_col(&self, j: usize, v: &[f64]) -> f64 {
-        // The shared 4-chain reduction (`util::dot4_by`): independent
-        // chains keep the gather pipeline full, and the sparse, dense and
-        // interleaved dot paths stay bit-wise identical by construction.
-        let (idx, val) = self.col(j);
-        crate::util::dot4_by(idx.len(), |k| (val[k], v[idx[k] as usize]))
-    }
-
-    #[inline]
-    fn axpy_col(&self, j: usize, scale: f64, v: &mut [f64]) {
-        let (idx, val) = self.col(j);
-        for (&i, &x) in idx.iter().zip(val.iter()) {
-            v[i as usize] += scale * x;
-        }
+        let (s, local) = self.locate(j);
+        self.segs[s].nnz_col(local)
     }
 
     #[inline]
@@ -162,24 +213,61 @@ impl DataMatrix for CscMatrix {
         }
     }
 
-    fn for_each_col_entry(&self, j: usize, mut f: impl FnMut(usize, f64)) {
-        let (idx, val) = self.col(j);
+    #[inline]
+    fn num_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    #[inline]
+    fn segment_of(&self, j: usize) -> usize {
+        self.locate(j).0
+    }
+
+    #[inline]
+    fn segment_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.seg_start[s]..self.seg_start[s + 1]
+    }
+
+    #[inline]
+    fn dot_col_in(&self, s: usize, j: usize, v: &[f64]) -> f64 {
+        // The shared 4-chain reduction (`util::dot4_by`): independent
+        // chains keep the gather pipeline full, and the sparse, dense and
+        // interleaved dot paths stay bit-wise identical by construction.
+        let (idx, val) = self.segs[s].col(j - self.seg_start[s]);
+        crate::util::dot4_by(idx.len(), |k| (val[k], v[idx[k] as usize]))
+    }
+
+    #[inline]
+    fn axpy_col_in(&self, s: usize, j: usize, scale: f64, v: &mut [f64]) {
+        let (idx, val) = self.segs[s].col(j - self.seg_start[s]);
+        for (&i, &x) in idx.iter().zip(val.iter()) {
+            v[i as usize] += scale * x;
+        }
+    }
+
+    #[inline]
+    fn nnz_col_in(&self, s: usize, j: usize) -> usize {
+        self.segs[s].nnz_col(j - self.seg_start[s])
+    }
+
+    fn for_each_col_entry_in(&self, s: usize, j: usize, mut f: impl FnMut(usize, f64)) {
+        let (idx, val) = self.segs[s].col(j - self.seg_start[s]);
         for (&i, &x) in idx.iter().zip(val.iter()) {
             f(i as usize, x);
         }
     }
 
-    fn dot_col_atomic(&self, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
-        let (idx, val) = self.col(j);
-        let mut s = 0.0;
+    fn dot_col_atomic_in(&self, s: usize, j: usize, v: &[crate::util::PaddedAtomicF64]) -> f64 {
+        let (idx, val) = self.segs[s].col(j - self.seg_start[s]);
+        let mut sum = 0.0;
         for (&i, &x) in idx.iter().zip(val.iter()) {
-            s += x * v[i as usize].load();
+            sum += x * v[i as usize].load();
         }
-        s
+        sum
     }
 
-    fn axpy_col_wild(&self, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
-        let (idx, val) = self.col(j);
+    fn axpy_col_wild_in(&self, s: usize, j: usize, scale: f64, v: &[crate::util::PaddedAtomicF64]) {
+        let (idx, val) = self.segs[s].col(j - self.seg_start[s]);
         for (&i, &x) in idx.iter().zip(val.iter()) {
             v[i as usize].add_wild(scale * x);
         }
@@ -201,6 +289,7 @@ mod tests {
         assert_eq!((m.d(), m.n(), m.nnz()), (4, 2, 4));
         assert_eq!(m.nnz_col(0), 2);
         assert!((m.avg_nnz() - 2.0).abs() < 1e-12);
+        assert_eq!(m.num_segments(), 1);
     }
 
     #[test]
@@ -221,6 +310,25 @@ mod tests {
         let mut out = vec![7.0; 4];
         m.write_col_dense(1, &mut out);
         assert_eq!(out, vec![0.0, -1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn append_pushes_shared_tail_segment() {
+        let mut m = sample();
+        let p0 = m.col(0).1.as_ptr();
+        let tail = CscMatrix::from_examples(4, &[vec![(0, 9.0)], vec![]]);
+        m.append_examples(&tail);
+        assert_eq!((m.n(), m.nnz(), m.num_segments()), (4, 5, 2));
+        // structural sharing of the original payload
+        assert_eq!(m.col(0).1.as_ptr(), p0);
+        // cross-boundary access
+        let (idx, val) = m.col(2);
+        assert_eq!((idx, val), (&[0u32][..], &[9.0][..]));
+        assert_eq!(m.nnz_col(3), 0);
+        assert_eq!(m.segment_of(3), 1);
+        // appending an empty matrix adds no segment
+        m.append_examples(&CscMatrix::from_examples(4, &[]));
+        assert_eq!(m.num_segments(), 2);
     }
 
     #[test]

@@ -260,6 +260,8 @@ mod tests {
         let a = dense_classification(50, 8, 9);
         let b = dense_classification(50, 8, 9);
         assert_eq!(a.y, b.y);
-        assert_eq!(a.x.raw(), b.x.raw());
+        for j in 0..a.n() {
+            assert_eq!(a.x.col(j), b.x.col(j));
+        }
     }
 }

@@ -20,9 +20,10 @@ pub struct GapReport {
 /// `P(w) = (1/n) Σ ℓ_i(⟨x_i, w⟩) + (λ/2)‖w‖²`.
 pub fn primal_value<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, w: &[f64]) -> f64 {
     let n = ds.n();
+    let mut cur = ds.x.col_cursor();
     let mut loss = 0.0;
     for j in 0..n {
-        loss += obj.primal_loss(ds.x.dot_col(j, w), ds.y[j]);
+        loss += obj.primal_loss(cur.dot(j, w), ds.y[j]);
     }
     loss / n as f64 + 0.5 * obj.lambda() * crate::util::norm_sq(w)
 }
@@ -57,9 +58,10 @@ pub fn test_loss<M: DataMatrix>(ds: &Dataset<M>, obj: &Objective, w: &[f64], idx
     if idx.is_empty() {
         return 0.0;
     }
+    let mut cur = ds.x.col_cursor();
     let mut loss = 0.0;
     for &j in idx {
-        loss += obj.primal_loss(ds.x.dot_col(j, w), ds.y[j]);
+        loss += obj.primal_loss(cur.dot(j, w), ds.y[j]);
     }
     loss / idx.len() as f64
 }
@@ -69,9 +71,10 @@ pub fn accuracy<M: DataMatrix>(ds: &Dataset<M>, w: &[f64], idx: &[usize]) -> f64
     if idx.is_empty() {
         return 0.0;
     }
+    let mut cur = ds.x.col_cursor();
     let correct = idx
         .iter()
-        .filter(|&&j| ds.x.dot_col(j, w) * ds.y[j] > 0.0)
+        .filter(|&&j| cur.dot(j, w) * ds.y[j] > 0.0)
         .count();
     correct as f64 / idx.len() as f64
 }

@@ -53,14 +53,17 @@ impl ModelState {
 
     /// Recompute `v` from scratch (`v = Σ α_i x_i`). Used by the replica
     /// solvers after merges, and by tests to bound drift of the
-    /// incrementally-maintained `v`.
+    /// incrementally-maintained `v`. The sweep walks the (segmented)
+    /// matrix through one cursor, so the per-column cost matches the
+    /// monolithic layout exactly.
     pub fn rebuild_v<M: DataMatrix>(&mut self, ds: &Dataset<M>) {
         for vi in self.v.iter_mut() {
             *vi = 0.0;
         }
+        let mut cur = ds.x.col_cursor();
         for (j, &a) in self.alpha.iter().enumerate() {
             if a != 0.0 {
-                ds.x.axpy_col(j, a, &mut self.v);
+                cur.axpy(j, a, &mut self.v);
             }
         }
     }
@@ -68,9 +71,10 @@ impl ModelState {
     /// Max |v_incremental − v_rebuilt| — drift diagnostic.
     pub fn v_drift<M: DataMatrix>(&self, ds: &Dataset<M>) -> f64 {
         let mut fresh = vec![0.0; self.v.len()];
+        let mut cur = ds.x.col_cursor();
         for (j, &a) in self.alpha.iter().enumerate() {
             if a != 0.0 {
-                ds.x.axpy_col(j, a, &mut fresh);
+                cur.axpy(j, a, &mut fresh);
             }
         }
         self.v
@@ -82,8 +86,14 @@ impl ModelState {
 }
 
 /// Margins `z_j = ⟨x_j, w⟩` for a set of examples (test or train side).
+/// Column access goes through a [`ColCursor`](crate::data::ColCursor):
+/// request batches are typically windows over one dataset segment, so the
+/// chunked storage costs one seat, not one lookup per margin. Bit-wise
+/// identical to per-column `dot_col` access (same `dot4_by` reduction on
+/// the same slices).
 pub fn margins<M: DataMatrix>(ds: &Dataset<M>, w: &[f64], idx: &[usize]) -> Vec<f64> {
-    idx.iter().map(|&j| ds.x.dot_col(j, w)).collect()
+    let mut cur = ds.x.col_cursor();
+    idx.iter().map(|&j| cur.dot(j, w)).collect()
 }
 
 #[cfg(test)]

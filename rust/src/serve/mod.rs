@@ -9,7 +9,11 @@
 //!   persistent NUMA-aware workers, spawned **once** and reused by every
 //!   request the session ever serves (training dispatch reaches them via
 //!   [`ExecPolicy::Shared`](crate::solver::ExecPolicy)),
-//! * the dataset (appendable in place — `refit-rows` requests grow it),
+//! * the dataset — a segment-chunked [`Dataset`](crate::data::Dataset):
+//!   `refit-rows` requests grow it by sealing the arrivals into a new
+//!   tail segment and sharing every existing segment with outstanding
+//!   snapshots (clone-free appends; see [`crate::data`] and
+//!   `docs/ARCHITECTURE.md`),
 //! * the current trained [`ModelState`](crate::glm::ModelState) and its
 //!   cached primal weights.
 //!
@@ -28,7 +32,9 @@
 //! serialize and publish new versions atomically; streaming ingestion
 //! ([`Scheduler::ingest`]) stages arrivals and refits in the background
 //! on row-count/staleness thresholds. See the determinism argument in
-//! [`scheduler`]'s module docs.
+//! [`scheduler`]'s module docs; all three determinism arguments of this
+//! codebase (job-order merge, layout bit-equality, immutable versioned
+//! snapshots) are collected in `docs/ARCHITECTURE.md`.
 //!
 //! ## Determinism of sharded predict
 //!

@@ -26,11 +26,12 @@
 //! readers and writers are in flight:
 //!
 //! 1. a snapshot is immutable after construction and `Arc`-shared — a
-//!    writer producing `k+1` builds new state off to the side (the
-//!    session's copy-on-write dataset/layout/weights), so no bytes a
-//!    version-`k` reader can reach are ever written again; a torn or
-//!    mixed-version read is impossible by construction, not by locking
-//!    discipline;
+//!    writer producing `k+1` builds new state off to the side (a fresh
+//!    weight vector, and a successor dataset that *shares* version `k`'s
+//!    sealed segments while adding its own tail — clone-free appends, see
+//!    [`crate::data`]), so no bytes a version-`k` reader can reach are
+//!    ever written again; a torn or mixed-version read is impossible by
+//!    construction, not by locking discipline;
 //! 2. each margin `z_j = ⟨x_j, w⟩` is a pure function of that frozen
 //!    snapshot, computed by the same kernel
 //!    ([`kernel::dot_entries`](crate::solver::kernel::dot_entries) /
@@ -55,9 +56,13 @@
 //! ## Streaming ingestion
 //!
 //! [`Scheduler::ingest`] appends rows to a staging buffer and returns —
-//! arrivals do not block on training. A background refit (one dedicated
-//! writer thread; never more than one in flight) drains the buffer into
-//! [`Session::partial_fit_rows`] when either threshold trips:
+//! arrivals do not block on training, and staging is itself a segment
+//! append (each burst's matrix is attached by `Arc`, not copied). A
+//! background refit (one dedicated writer thread; never more than one in
+//! flight) drains the buffer into
+//! [`Session::partial_fit_rows`] — which appends the staged segments to
+//! the resident dataset clone-free, whatever snapshots are outstanding —
+//! when either threshold trips:
 //! `refit_rows_threshold` staged rows, or the oldest staged row waiting
 //! `refit_staleness_s` seconds. Until the refit lands, readers keep
 //! serving the previous snapshot; [`Scheduler::flush`] forces a

@@ -10,9 +10,15 @@
 //!   next snapshot off to the side and installs it atomically),
 //! * any number of readers can hold and serve version `k` while a writer
 //!   produces `k+1` — a snapshot is never mutated after construction, so
-//!   a reader cannot observe a torn model, and
+//!   a reader cannot observe a torn model,
+//! * the dataset inside a snapshot is a **segment list**
+//!   ([`crate::data`]): successive versions share all common segments by
+//!   `Arc`, so holding many versions of a growing dataset costs one
+//!   payload plus the per-version tails — version `k` and `k+1` differ
+//!   only by the appended segment(s), and
 //! * memory for version `k` is reclaimed exactly when its last reader
-//!   drops it.
+//!   drops it (segments individually, once no retained version lists
+//!   them).
 //!
 //! Margins are computed by [`sharded_margins`] — one contiguous shard per
 //! pool worker, merged in job order — which is the *same* code path

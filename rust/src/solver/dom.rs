@@ -22,7 +22,7 @@ use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::{ModelState, Objective};
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::exec::Executor;
-use crate::solver::seq::sdca_delta;
+use crate::solver::seq::sdca_delta_at;
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
 use crate::solver::partition::Partitioner;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
@@ -86,13 +86,16 @@ pub(crate) fn worker_round<M: DataMatrix>(
             );
         }
     } else {
+        // source-matrix walk: one cursor per worker round amortizes the
+        // segment lookup of the chunked dataset across its bucket list
+        let mut cur = ds.x.col_cursor();
         for &b in my_buckets {
             for j in buckets.range(b as usize) {
                 let a = alpha[j].load();
-                let delta = sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+                let delta = sdca_delta_at(&mut cur, ds, obj, j, a, &u, inv_lambda_n, n_eff);
                 if delta != 0.0 {
                     alpha[j].store(a + delta);
-                    ds.x.axpy_col(j, sigma * delta, &mut u);
+                    cur.axpy(j, sigma * delta, &mut u);
                 }
             }
         }

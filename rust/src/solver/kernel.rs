@@ -21,9 +21,10 @@
 //!
 //! * [`dot_entries`] routes through the single shared 4-chain reduction
 //!   [`crate::util::dot4_by`] — the same implementation behind
-//!   [`crate::util::dot`] (dense columns) and `CscMatrix::dot_col`
-//!   (sparse columns), so the three are product-for-product identical
-//!   **by construction**, not by textual convention;
+//!   [`crate::util::dot`] (dense columns) and `CscMatrix::dot_col_in`
+//!   (sparse columns, whichever segment of the chunked matrix serves
+//!   them), so the three are product-for-product identical **by
+//!   construction**, not by textual convention;
 //! * [`axpy_entries`] applies `v[i] += scale · x` element-wise in stream
 //!   order, exactly like `axpy_col`;
 //! * the wild kernels ([`dot_entries_atomic`], [`axpy_entries_wild`]) are

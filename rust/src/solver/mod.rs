@@ -15,6 +15,15 @@
 //! per-epoch [`metrics::RunRecord`], so the figure harnesses can sweep them
 //! uniformly. Convergence-vs-thread-count studies on arbitrary simulated
 //! thread counts run through [`crate::vthread`].
+//!
+//! Data access: solvers stream either the shard-resident interleaved
+//! layout ([`crate::data::shard`], the default) or the segment-chunked
+//! source matrix through a [`ColCursor`](crate::data::ColCursor)
+//! (`--layout csc`). Both are bit-wise identical by construction — every
+//! dot path shares the one [`crate::util::dot4_by`] reduction. The layer
+//! map and all determinism arguments (job-order merge across executors,
+//! Interleaved==Csc bit-equality, immutable versioned serving snapshots)
+//! are collected in `docs/ARCHITECTURE.md`.
 
 pub mod bucket;
 pub mod convergence;

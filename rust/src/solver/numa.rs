@@ -24,7 +24,7 @@ use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::exec::Executor;
 use crate::solver::partition::Partitioner;
-use crate::solver::seq::sdca_delta;
+use crate::solver::seq::sdca_delta_at;
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::sysinfo::Topology;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
@@ -211,15 +211,19 @@ pub fn train_numa_exec<M: DataMatrix>(
                                 );
                             }
                         } else {
+                            // source-matrix walk through a per-worker
+                            // cursor (amortized segment lookup)
+                            let mut cur = ds.x.col_cursor();
                             for &b in seg {
                                 let global_b = (range_lo + b) as usize;
                                 for j in buckets.range(global_b) {
                                     let a = alpha[j].load();
-                                    let delta =
-                                        sdca_delta(ds, obj, j, a, &u, inv_lambda_n, n_eff);
+                                    let delta = sdca_delta_at(
+                                        &mut cur, ds, obj, j, a, &u, inv_lambda_n, n_eff,
+                                    );
                                     if delta != 0.0 {
                                         alpha[j].store(a + delta);
-                                        ds.x.axpy_col(j, sigma * delta, &mut u);
+                                        cur.axpy(j, sigma * delta, &mut u);
                                     }
                                 }
                             }

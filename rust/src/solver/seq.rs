@@ -3,21 +3,26 @@
 //! reuses for its per-worker inner loop.
 
 use crate::data::shard::RunLayout;
-use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
+use crate::data::{ColCursor, DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::Objective;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::{Rng, Timer};
 
 /// One exact SDCA coordinate step on example `j` against the vector `v`
-/// (shared, replica or node-local — the caller decides).
+/// (shared, replica or node-local — the caller decides), read through a
+/// column cursor — the loop form every solver's source-matrix
+/// (`--layout csc`) inner loop uses: the cursor amortizes the segment
+/// lookup of the chunked dataset across consecutive steps.
 ///
 /// `n_eff` is the example count used for the curvature of the local
 /// subproblem: the global `n` for the sequential/wild solvers, and the
 /// CoCoA-safe `n/K` for `K`-way replica solvers (σ′ = K scaling).
 /// Returns `δ`; the caller owns applying `α_j += δ` and `v += δ·x_j`.
+#[allow(clippy::too_many_arguments)]
 #[inline]
-pub fn sdca_delta<M: DataMatrix>(
+pub fn sdca_delta_at<M: DataMatrix>(
+    cur: &mut ColCursor<'_, M>,
     ds: &Dataset<M>,
     obj: &Objective,
     j: usize,
@@ -26,12 +31,15 @@ pub fn sdca_delta<M: DataMatrix>(
     inv_lambda_n: f64,
     n_eff: usize,
 ) -> f64 {
-    let xw = ds.x.dot_col(j, v) * inv_lambda_n;
+    let xw = cur.dot(j, v) * inv_lambda_n;
     obj.delta(alpha_j, xw, ds.norm_sq(j), ds.y[j], n_eff)
 }
 
 /// Run one bucket of consecutive coordinates in-place against (`alpha`,
 /// `v`). Shared by the sequential, domesticated and NUMA inner loops.
+/// Column access goes through a [`ColCursor`], so a bucket that sits
+/// inside one dataset segment (the overwhelmingly common case — buckets
+/// are small, segments are append batches) pays exactly one seat.
 #[inline]
 pub fn run_bucket<M: DataMatrix>(
     ds: &Dataset<M>,
@@ -42,11 +50,12 @@ pub fn run_bucket<M: DataMatrix>(
     inv_lambda_n: f64,
     n_eff: usize,
 ) {
+    let mut cur = ds.x.col_cursor();
     for j in range {
-        let delta = sdca_delta(ds, obj, j, alpha[j], v, inv_lambda_n, n_eff);
+        let delta = sdca_delta_at(&mut cur, ds, obj, j, alpha[j], v, inv_lambda_n, n_eff);
         if delta != 0.0 {
             alpha[j] += delta;
-            ds.x.axpy_col(j, delta, v);
+            cur.axpy(j, delta, v);
         }
     }
 }

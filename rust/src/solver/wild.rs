@@ -114,16 +114,20 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
                     }
                     return;
                 }
+                // source-matrix walk: per-thread cursor (the shuffled
+                // permutation hops segments, but the seat check is one
+                // branch and the thread shares nothing through it)
+                let mut cur = ds.x.col_cursor();
                 for &jj in my {
                     let j = jj as usize;
                     // READ current (possibly stale/racing) state
                     let a = alpha[j].load();
-                    let xw = ds.x.dot_col_atomic(j, v) * inv_lambda_n;
+                    let xw = cur.dot_atomic(j, v) * inv_lambda_n;
                     let delta = obj.delta(a, xw, ds.norm_sq(j), ds.y[j], n);
                     if delta != 0.0 {
                         // WRITE α_j (exclusive), ADD to v (wild)
                         alpha[j].store(a + delta);
-                        ds.x.axpy_col_wild(j, delta, v);
+                        cur.axpy_wild(j, delta, v);
                     }
                 }
             });

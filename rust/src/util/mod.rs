@@ -20,10 +20,11 @@ pub use timer::Timer;
 /// as `(s0+s1)+(s2+s3)` with a sequential tail.
 ///
 /// Four chains let LLVM vectorize and keep the FMA pipeline full; every
-/// dot path in the crate — [`dot`] (dense columns), `CscMatrix::dot_col`
-/// (sparse gather) and `solver::kernel::dot_entries` (interleaved
-/// stream) — routes through this single implementation, so their
-/// floating-point evaluation order is identical **by construction**. The
+/// dot path in the crate — [`dot`] (dense columns, behind
+/// `DenseMatrix::dot_col_in`), `CscMatrix::dot_col_in` (sparse gather)
+/// and `solver::kernel::dot_entries` (interleaved stream) — routes
+/// through this single implementation, so their floating-point
+/// evaluation order is identical **by construction**. The
 /// layout-equivalence guarantee (`tests/pool_equivalence.rs`) depends on
 /// that: change the reduction here and every path changes together.
 #[inline]

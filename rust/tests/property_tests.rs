@@ -423,6 +423,137 @@ fn prop_sharded_layout_roundtrip() {
     }
 }
 
+/// A dataset built by K segment appends is indistinguishable from the
+/// same rows loaded monolithically: margins are bit-wise equal for any
+/// weight vector, and training is bit-wise equal (`alpha` and `v`) for
+/// all four solver variants under BOTH data layouts (interleaved and the
+/// cursor-walked source matrix). This is the correctness lock on the
+/// segment-chunked storage: the per-example visit order — and with it
+/// every floating-point reduction — must not depend on how the example
+/// axis is chunked.
+///
+/// Determinism note: all variants run on `ExecPolicy::Sequential`
+/// (bit-wise identical to the threaded executors for seq/dom/numa, and
+/// the one executor that makes the wild solver's shared-vector updates
+/// deterministic), so a bit-for-bit comparison is meaningful.
+#[test]
+fn prop_segmented_append_matches_monolithic_bitwise() {
+    use parlin::solver::{train, ExecPolicy, LayoutPolicy, SolverConfig, Variant};
+    use parlin::sysinfo::Topology;
+
+    /// Chunk `0..n` at ascending random cuts (possibly creating empty
+    /// chunks — 0-row appends must be transparent too).
+    fn random_cuts(rng: &mut Rng, n: usize, pieces: usize) -> Vec<usize> {
+        let mut cuts: Vec<usize> = (0..pieces - 1)
+            .map(|_| rng.next_below(n as u64 + 1) as usize)
+            .collect();
+        cuts.sort_unstable();
+        let mut bounds = vec![0];
+        bounds.extend(cuts);
+        bounds.push(n);
+        bounds
+    }
+
+    fn segmented<M: AppendExamples>(chunks: Vec<Dataset<M>>) -> Dataset<M> {
+        let mut it = chunks.into_iter();
+        let mut acc = it.next().expect("at least one chunk");
+        for c in it {
+            acc.append(&c);
+        }
+        acc
+    }
+
+    for seed in [5u64, 41] {
+        let mut rng = Rng::new(seed);
+        let d = 4 + rng.next_below(8) as usize;
+        let n = 60 + rng.next_below(40) as usize;
+        let (dense, sparse) = paired_matrices(&mut rng, d, n);
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let bounds = random_cuts(&mut rng, n, 4);
+        let replay = format!("seed={seed} d={d} n={n} cuts={bounds:?}");
+
+        // build (monolithic, K-append segmented) pairs for both layouts
+        let mono_dense = Dataset::new(dense.clone(), y.clone());
+        let mono_sparse = Dataset::new(sparse.clone(), y.clone());
+        let chunk = |lo: usize, hi: usize| {
+            let idx: Vec<usize> = (lo..hi).collect();
+            (mono_dense.subset(&idx), mono_sparse.subset(&idx))
+        };
+        let mut dense_chunks = Vec::new();
+        let mut sparse_chunks = Vec::new();
+        for w in bounds.windows(2) {
+            let (dc, sc) = chunk(w[0], w[1]);
+            dense_chunks.push(dc);
+            sparse_chunks.push(sc);
+        }
+        let seg_dense = segmented(dense_chunks);
+        let seg_sparse = segmented(sparse_chunks);
+        assert_eq!(seg_dense.n(), n, "{replay}");
+        assert!(seg_dense.x.num_segments() >= 1);
+
+        // margins: bit-wise equal for an arbitrary weight vector
+        let w: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let idx: Vec<usize> = (0..n).rev().chain(0..n).collect();
+        let bits = |m: &[f64]| m.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&parlin::glm::model::margins(&mono_dense, &w, &idx)),
+            bits(&parlin::glm::model::margins(&seg_dense, &w, &idx)),
+            "{replay}: dense margins"
+        );
+        assert_eq!(
+            bits(&parlin::glm::model::margins(&mono_sparse, &w, &idx)),
+            bits(&parlin::glm::model::margins(&seg_sparse, &w, &idx)),
+            "{replay}: sparse margins"
+        );
+
+        // per-column norms (cached at Dataset::new) agree too
+        for j in 0..n {
+            assert_eq!(
+                mono_sparse.norm_sq(j).to_bits(),
+                seg_sparse.norm_sq(j).to_bits(),
+                "{replay}: norm {j}"
+            );
+        }
+
+        // training: every variant × layout, fixed epoch budget
+        let obj = Objective::Logistic { lambda: 1.0 / n as f64 };
+        for variant in [
+            Variant::Sequential,
+            Variant::Wild,
+            Variant::Domesticated,
+            Variant::Numa,
+        ] {
+            for layout in [LayoutPolicy::Interleaved, LayoutPolicy::Csc] {
+                let threads = match variant {
+                    Variant::Sequential => 1,
+                    Variant::Numa => 4,
+                    _ => 2,
+                };
+                let cfg = SolverConfig::new(obj)
+                    .with_variant(variant)
+                    .with_threads(threads)
+                    .with_topology(Topology::uniform(2, 2))
+                    .with_exec(ExecPolicy::Sequential)
+                    .with_layout(layout)
+                    .with_tol(0.0)
+                    .with_max_epochs(5)
+                    .with_seed(seed);
+                let what = format!("{replay} {variant:?} {layout:?}");
+                let a = train(&mono_dense, &cfg);
+                let b = train(&seg_dense, &cfg);
+                assert_eq!(a.state.alpha, b.state.alpha, "{what}: dense alpha");
+                assert_eq!(bits(&a.state.v), bits(&b.state.v), "{what}: dense v");
+                let a = train(&mono_sparse, &cfg);
+                let b = train(&seg_sparse, &cfg);
+                assert_eq!(a.state.alpha, b.state.alpha, "{what}: sparse alpha");
+                assert_eq!(bits(&a.state.v), bits(&b.state.v), "{what}: sparse v");
+            }
+        }
+    }
+}
+
 /// Incremental tail re-encode (`ShardedLayout::append_tail`) is bit-wise
 /// identical to a full rebuild — for random sparse/dense sources, random
 /// bucket sizes, and random sequences of append batches (including empty
