@@ -6,7 +6,9 @@
 //!                [--bucket auto|off|K] [--partition dynamic|static]
 //!                [--objective logistic|ridge|hinge] [--seed N] [--csv out.csv]
 //! parlin serve   --dataset <kind|file.libsvm> [--requests <script|synthetic>]
-//!                [--count N] [--predict-batch N] [--refit-rows N] [train opts]
+//!                [--count N] [--predict-batch N] [--refit-rows N]
+//!                [--arrival-rate R --duration S --arrival-process poisson|fixed
+//!                 --open-loop-seed N] [--max-pending K] [train opts]
 //! parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
 //! parlin inspect               # host topology, cache geometry, artifacts
 //! parlin eval    --dataset <kind> --artifacts DIR   # HLO-path evaluation demo
@@ -20,6 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
+use parlin::serve::ArrivalProcess;
 use parlin::solver::{
     train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
 };
@@ -109,6 +112,26 @@ CONCURRENT SERVE OPTIONS (scheduler mode, enabled by --concurrency > 1):
   Request scripts (--requests <path>) are single-request mode only.
   Output: per-version p50/p99 predict latency, snapshot-age distribution,
   and how many predicts overlapped an in-flight refit.
+
+OPEN-LOOP SERVE OPTIONS (open-loop mode, enabled by --arrival-rate):
+  --arrival-rate     offered load in requests/second; arrivals follow a
+                     pre-generated seeded schedule, independent of how
+                     fast the system serves (must be finite and positive)
+  --duration         schedule length in seconds             (default 2.0)
+  --arrival-process  poisson | fixed inter-arrival gaps (default poisson)
+  --open-loop-seed   arrival-schedule seed              (default --seed)
+  --max-pending      admission budget: max predict readers in flight;
+                     arrivals beyond it are shed and counted, must be
+                     >= 1 when given                  (default unbounded)
+  Latency is measured from each request's *scheduled* arrival, so
+  queueing delay is part of every percentile — the saturation knee a
+  closed loop cannot see. ~2% of arrivals are ingestion bursts of
+  --refit-rows rows; --concurrency sets the dispatcher thread count in
+  this mode (default 8). Request scripts are single-request mode only.
+  Output: offered vs achieved rate, per-kind p50/p99/max latency from
+  scheduled arrival, shed count and per-class pool queue delay.
+  (--max-pending parses in every serve mode, but only the open loop's
+  try_predict admission path sheds on it.)
 ";
 
 /// Flag parser accepting `--key value` and `--key=value` (flags without a
@@ -178,16 +201,43 @@ fn get_positive_f64(flags: &HashMap<String, String>, key: &str, default: f64) ->
     Ok(v)
 }
 
-/// Scheduler mode (`--concurrency > 1`) drives its own synthetic
-/// storm×stream workload; a `--requests` script would be silently
-/// ignored, so reject the combination loudly instead.
+/// Scheduler modes (`--concurrency > 1` closed loop, `--arrival-rate`
+/// open loop) drive their own synthetic workloads; a `--requests` script
+/// would be silently ignored, so reject the combination loudly instead.
 fn check_concurrent_requests_flag(flags: &HashMap<String, String>) -> Result<()> {
     match flags.get("requests").map(String::as_str) {
         None | Some("synthetic") | Some("true") => Ok(()),
         Some(path) => bail!(
-            "--concurrency > 1 runs the synthetic storm×stream driver; \
-             request scripts are not supported in scheduler mode (got --requests {path})"
+            "--concurrency > 1 and --arrival-rate run synthetic scheduler drivers; \
+             request scripts are not supported in these modes (got --requests {path})"
         ),
+    }
+}
+
+/// Parse an optional bounded-budget flag (`--max-pending`): absent means
+/// unbounded admission; when given it must be ≥ 1, since a budget of zero
+/// would shed every reader — always a spelling mistake.
+fn get_optional_positive_usize(
+    flags: &HashMap<String, String>,
+    key: &str,
+) -> Result<Option<usize>> {
+    if flags.contains_key(key) {
+        Ok(Some(get_positive_usize(flags, key, 1)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Parse `--arrival-process` for open-loop serve mode.
+fn parse_arrival_process(flags: &HashMap<String, String>) -> Result<ArrivalProcess> {
+    match flags
+        .get("arrival-process")
+        .map(String::as_str)
+        .unwrap_or("poisson")
+    {
+        "poisson" => Ok(ArrivalProcess::Poisson),
+        "fixed" => Ok(ArrivalProcess::Fixed),
+        other => bail!("unknown arrival process '{other}' (expected poisson | fixed)"),
     }
 }
 
@@ -339,7 +389,43 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let sched_cfg = parlin::serve::SchedulerConfig {
         refit_rows_threshold: get_positive_usize(flags, "refit-rows-threshold", 64)?,
         refit_staleness_s: get_positive_f64(flags, "refit-staleness", 0.25)?,
+        max_pending: get_optional_positive_usize(flags, "max-pending")?,
     };
+    if flags.contains_key("arrival-rate") {
+        check_concurrent_requests_flag(flags)?;
+        let ol_cfg = parlin::serve::OpenLoopConfig {
+            rate_per_s: get_positive_f64(flags, "arrival-rate", 500.0)?,
+            duration_s: get_positive_f64(flags, "duration", 2.0)?,
+            process: parse_arrival_process(flags)?,
+            seed: get_parse(flags, "open-loop-seed", seed)?,
+            predict_batch: get_positive_usize(flags, "predict-batch", 256)?,
+            ingest_fraction: 0.02,
+            rows_per_ingest: get_positive_usize(flags, "refit-rows", 32)?,
+            // --concurrency doubles as the dispatcher count in open-loop
+            // mode; left unset, 8 dispatchers keep a bursty schedule from
+            // serializing behind a single issuing thread
+            dispatchers: if flags.contains_key("concurrency") {
+                concurrency
+            } else {
+                8
+            },
+            record_outcomes: false,
+        };
+        println!(
+            "serving (open loop): n={n} d={} threads={} offered {:.0} req/s for {:.2}s \
+             ({:?} arrivals, {} dispatchers, max pending {:?})",
+            ds.d(),
+            cfg.threads,
+            ol_cfg.rate_per_s,
+            ol_cfg.duration_s,
+            ol_cfg.process,
+            ol_cfg.dispatchers,
+            sched_cfg.max_pending
+        );
+        return parlin::figures::with_ds!(ds, d => {
+            run_serve_open_loop(d, cfg, sched_cfg, ol_cfg)
+        });
+    }
     if concurrency > 1 {
         check_concurrent_requests_flag(flags)?;
         let storm = parlin::serve::StormConfig {
@@ -459,6 +545,46 @@ where
     );
     let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
     let report = parlin::serve::drive_concurrent(&sched, &storm, seed);
+    print!("{}", report.summary());
+    let ps = sched.pool_stats();
+    println!(
+        "pool: {} workers, {} jobs, busy imbalance {:.2} (max/mean)",
+        ps.per_worker.len(),
+        ps.total_jobs(),
+        ps.imbalance()
+    );
+    println!(
+        "final: version {}, n={}, gap {:.3e}",
+        sched.version(),
+        sched.current_n(),
+        sched.gap().gap
+    );
+    Ok(())
+}
+
+/// Stand up a scheduler over a resident session and push a pre-generated
+/// open-loop arrival schedule at it: latencies measured from scheduled
+/// arrival, overload shed via `--max-pending` admission control, per-class
+/// pool queue delay printed alongside the per-kind percentiles.
+fn run_serve_open_loop<M>(
+    ds: parlin::data::Dataset<M>,
+    cfg: SolverConfig,
+    sched_cfg: parlin::serve::SchedulerConfig,
+    ol_cfg: parlin::serve::OpenLoopConfig,
+) -> Result<()>
+where
+    M: parlin::serve::SynthRows + Send + 'static,
+{
+    let t = parlin::util::Timer::start();
+    let sess = parlin::serve::Session::new(ds, cfg);
+    println!(
+        "session ready in {:.3}s ({} pool workers, initial gap {:.3e})",
+        t.elapsed_s(),
+        sess.workers(),
+        sess.gap().gap
+    );
+    let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    let report = parlin::serve::drive_open_loop(&sched, &ol_cfg);
     print!("{}", report.summary());
     let ps = sched.pool_stats();
     println!(
@@ -654,6 +780,46 @@ mod tests {
                 "{bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn max_pending_is_optional_but_must_be_positive() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert_eq!(
+            get_optional_positive_usize(&empty, "max-pending").unwrap(),
+            None
+        );
+        let ok = parse_flags(&args(&["--max-pending=64"])).unwrap();
+        assert_eq!(
+            get_optional_positive_usize(&ok, "max-pending").unwrap(),
+            Some(64)
+        );
+        let zero = parse_flags(&args(&["--max-pending=0"])).unwrap();
+        let err = get_optional_positive_usize(&zero, "max-pending").unwrap_err();
+        assert!(
+            err.to_string().contains("--max-pending must be >= 1, got 0"),
+            "{err}"
+        );
+        let bad = parse_flags(&args(&["--max-pending=lots"])).unwrap();
+        assert!(get_optional_positive_usize(&bad, "max-pending").is_err());
+    }
+
+    #[test]
+    fn arrival_process_flag_parses_and_rejects_unknown() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert_eq!(
+            parse_arrival_process(&empty).unwrap(),
+            ArrivalProcess::Poisson
+        );
+        let fixed = parse_flags(&args(&["--arrival-process=fixed"])).unwrap();
+        assert_eq!(parse_arrival_process(&fixed).unwrap(), ArrivalProcess::Fixed);
+        let bad = parse_flags(&args(&["--arrival-process=uniform"])).unwrap();
+        let err = parse_arrival_process(&bad).unwrap_err();
+        assert!(
+            err.to_string()
+                .contains("unknown arrival process 'uniform' (expected poisson | fixed)"),
+            "{err}"
+        );
     }
 
     #[test]

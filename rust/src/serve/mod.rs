@@ -36,6 +36,13 @@
 //! codebase (job-order merge, layout bit-equality, immutable versioned
 //! snapshots) are collected in `docs/ARCHITECTURE.md`.
 //!
+//! Load is applied by the drivers in [`request`]: closed loop
+//! ([`request::drive`], [`request::drive_concurrent`]) or **open loop**
+//! ([`request::drive_open_loop`]) — a seeded arrival schedule pushed at
+//! the scheduler independent of service times, with latency measured from
+//! each request's *scheduled* arrival and overload shed explicitly via
+//! [`Scheduler::try_predict`] admission control.
+//!
 //! ## Determinism of sharded predict
 //!
 //! [`Session::predict`] splits a request batch into one contiguous shard
@@ -72,9 +79,12 @@ pub mod session;
 pub mod snapshot;
 
 pub use request::{
-    drive, drive_concurrent, parse_script, synthetic_mix, Request, ServeReport, StormConfig,
-    SynthRows,
+    arrival_schedule, drive, drive_concurrent, drive_open_loop, parse_script, synthetic_mix,
+    Arrival, ArrivalKind, ArrivalProcess, OpenLoopConfig, OpenLoopKindStats, OpenLoopOutcome,
+    OpenLoopReport, Request, ServeReport, StormConfig, SynthRows,
 };
-pub use scheduler::{PredictOutcome, SchedReport, Scheduler, SchedulerConfig, VersionLatencies};
+pub use scheduler::{
+    PredictAdmission, PredictOutcome, SchedReport, Scheduler, SchedulerConfig, VersionLatencies,
+};
 pub use session::{RefitReport, Session, SessionStats};
 pub use snapshot::ModelSnapshot;

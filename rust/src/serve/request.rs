@@ -1,16 +1,31 @@
 //! Serving requests: the wire-level model of `parlin serve` — a parsed
-//! request script or a deterministic synthetic mix — plus two closed-loop
-//! drivers: [`drive`] replays requests one at a time against a
-//! [`Session`], [`drive_concurrent`] runs a predict storm on reader
-//! threads against a [`Scheduler`](crate::serve::Scheduler) while an
-//! append stream triggers background refits.
+//! request script or a deterministic synthetic mix — plus three drivers:
+//!
+//! * [`drive`] — closed loop, one request at a time against a [`Session`];
+//! * [`drive_concurrent`] — closed loop per reader: a predict storm on
+//!   reader threads against a [`Scheduler`](crate::serve::Scheduler)
+//!   while an append stream triggers background refits;
+//! * [`drive_open_loop`] — **open loop**: arrivals follow a seeded
+//!   Poisson (or fixed-rate) schedule generated up front, independent of
+//!   service times, and every latency is measured from the request's
+//!   *scheduled* arrival. A closed loop can never see queueing delay
+//!   (the next request politely waits for the previous one); the open
+//!   loop is what exposes the saturation knee and makes admission
+//!   control ([`Scheduler::try_predict`]) meaningful.
+//!
+//! All three stamp a per-class pool [`QueueDelayReport`] so closed- and
+//! open-loop runs report the same scheduled-vs-dispatch queue-delay
+//! signal.
 
 use crate::data::{synthetic, AppendExamples, CscMatrix, Dataset, DenseMatrix};
-use crate::serve::scheduler::{SchedReport, Scheduler};
+use crate::serve::scheduler::{PredictAdmission, SchedReport, Scheduler};
 use crate::serve::session::Session;
+use crate::solver::QueueDelayReport;
 use crate::util::{percentile, Rng, Timer};
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// One serving request.
 #[derive(Clone, Debug, PartialEq)]
@@ -138,6 +153,10 @@ pub struct ServeReport {
     pub refit_epochs: u64,
     /// Solver epochs consumed by cold `retrain` requests.
     pub retrain_epochs: u64,
+    /// Per-class pool queue delay across the run (enqueue→start of reader
+    /// predict shards vs writer refit rounds) — the queueing that a
+    /// closed-loop latency log alone cannot see.
+    pub queue_delay: QueueDelayReport,
 }
 
 impl ServeReport {
@@ -168,6 +187,9 @@ impl ServeReport {
             self.total_wall_s,
             self.requests() as f64 / self.total_wall_s.max(1e-9)
         ));
+        if self.queue_delay.reader.jobs + self.queue_delay.writer.jobs > 0 {
+            s.push_str(&self.queue_delay.summary_line());
+        }
         s
     }
 }
@@ -176,6 +198,7 @@ impl ServeReport {
 /// when the previous one completes), recording per-request latency.
 pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -> ServeReport {
     let mut report = ServeReport::default();
+    let delay_mark = QueueDelayReport::from_stats(&sess.pool_stats());
     let total = Timer::start();
     let mut cursor = 0usize; // rotating predict window over the dataset
     let mut row_seed = seed;
@@ -213,6 +236,7 @@ pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -
         }
     }
     report.total_wall_s = total.elapsed_s();
+    report.queue_delay = QueueDelayReport::from_stats(&sess.pool_stats()).since(&delay_mark);
     report
 }
 
@@ -246,6 +270,7 @@ where
     M: SynthRows + Send + 'static,
 {
     assert!(storm.readers >= 1, "storm needs at least one reader");
+    let delay_mark = QueueDelayReport::from_stats(&sched.pool_stats());
     let total = Timer::start();
     let issued = AtomicUsize::new(0);
     std::thread::scope(|scope| {
@@ -303,7 +328,403 @@ where
     sched.flush();
     let mut report = sched.report();
     report.total_wall_s = total.elapsed_s();
+    report.queue_delay = QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark);
     report
+}
+
+/// Inter-arrival law of the open-loop schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrival gaps (a Poisson process at `rate_per_s`)
+    /// — the standard open-loop load model; bursts happen by design.
+    Poisson,
+    /// Constant gaps of exactly `1 / rate_per_s` — a pathological,
+    /// burst-free baseline useful for isolating service-time effects.
+    Fixed,
+}
+
+/// What kind of request an arrival issues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Predict,
+    Ingest,
+}
+
+/// One pre-scheduled arrival: its offset from the run start and its kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Scheduled arrival time, seconds after the run starts. Latencies
+    /// are measured from here — not from dispatch — so time spent waiting
+    /// for a free dispatcher or a pool worker is *in* the number.
+    pub at_s: f64,
+    pub kind: ArrivalKind,
+}
+
+/// Shape of one open-loop run: a seeded arrival schedule pushed at the
+/// scheduler regardless of how fast it serves (the `parlin serve
+/// --arrival-rate` workload and the serving bench's knee sweep).
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    /// Offered load, requests per second (`--arrival-rate`).
+    pub rate_per_s: f64,
+    /// Length of the schedule, seconds (`--duration`).
+    pub duration_s: f64,
+    pub process: ArrivalProcess,
+    /// Seed of the arrival schedule (`--open-loop-seed`); the same seed
+    /// reproduces the identical schedule, gaps and kinds alike.
+    pub seed: u64,
+    /// Examples per predict arrival.
+    pub predict_batch: usize,
+    /// Fraction of arrivals that are ingestion bursts instead of
+    /// predicts, in `[0, 1)`; drawn per arrival from the schedule seed.
+    pub ingest_fraction: f64,
+    /// Freshly generated examples per ingest arrival.
+    pub rows_per_ingest: usize,
+    /// Dispatcher threads draining the schedule. An arrival whose slot
+    /// finds every dispatcher busy is dispatched late — genuine open-loop
+    /// queueing, charged to its latency via the scheduled timestamp.
+    pub dispatchers: usize,
+    /// Retain per-request [`OpenLoopOutcome`]s in the report (replay
+    /// tests); off for benches — margins of every request are kept alive.
+    pub record_outcomes: bool,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            rate_per_s: 500.0,
+            duration_s: 1.0,
+            process: ArrivalProcess::Poisson,
+            seed: 42,
+            predict_batch: 64,
+            ingest_fraction: 0.0,
+            rows_per_ingest: 32,
+            dispatchers: 4,
+            record_outcomes: false,
+        }
+    }
+}
+
+/// Pre-generate the whole arrival schedule from the config seed: gap
+/// draws and kind draws come from one deterministic [`Rng`] stream, so
+/// the same config reproduces the identical schedule bit-for-bit.
+///
+/// Panics on a non-finite/non-positive rate or duration and on an ingest
+/// fraction outside `[0, 1)` — the CLI validates first, the library
+/// re-checks loudly.
+pub fn arrival_schedule(cfg: &OpenLoopConfig) -> Vec<Arrival> {
+    assert!(
+        cfg.rate_per_s.is_finite() && cfg.rate_per_s > 0.0,
+        "arrival rate must be finite and positive, got {}",
+        cfg.rate_per_s
+    );
+    assert!(
+        cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
+        "duration must be finite and positive, got {}",
+        cfg.duration_s
+    );
+    assert!(
+        (0.0..1.0).contains(&cfg.ingest_fraction),
+        "ingest fraction must be in [0, 1), got {}",
+        cfg.ingest_fraction
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut schedule = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let gap = match cfg.process {
+            // inverse-CDF exponential draw; 1 - u keeps ln's argument in
+            // (0, 1] so the gap is always finite and positive
+            ArrivalProcess::Poisson => -(1.0 - rng.next_f64()).ln() / cfg.rate_per_s,
+            ArrivalProcess::Fixed => 1.0 / cfg.rate_per_s,
+        };
+        t += gap;
+        if t >= cfg.duration_s {
+            return schedule;
+        }
+        let kind = if cfg.ingest_fraction > 0.0 && rng.next_f64() < cfg.ingest_fraction {
+            ArrivalKind::Ingest
+        } else {
+            ArrivalKind::Predict
+        };
+        schedule.push(Arrival { at_s: t, kind });
+    }
+}
+
+/// Latency log of one request kind in an open-loop run. Both series are
+/// measured from the request's *scheduled* arrival, so queueing delay —
+/// invisible to a closed-loop log — is part of every sample.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopKindStats {
+    /// completion − scheduled arrival (queueing + service).
+    pub latency_s: Vec<f64>,
+    /// dispatch − scheduled arrival (pure open-loop queueing: the wait
+    /// for a free dispatcher slot before service even starts).
+    pub dispatch_delay_s: Vec<f64>,
+}
+
+impl OpenLoopKindStats {
+    pub fn count(&self) -> usize {
+        self.latency_s.len()
+    }
+
+    /// p50 total latency in seconds; 0 when no request completed.
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.latency_s, 50.0)
+    }
+
+    /// p99 total latency in seconds; 0 when no request completed.
+    pub fn p99_s(&self) -> f64 {
+        percentile(&self.latency_s, 99.0)
+    }
+
+    /// Worst total latency in seconds; 0 when no request completed.
+    pub fn max_s(&self) -> f64 {
+        self.latency_s.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    fn merge(&mut self, other: OpenLoopKindStats) {
+        self.latency_s.extend(other.latency_s);
+        self.dispatch_delay_s.extend(other.dispatch_delay_s);
+    }
+
+    fn line(&self, name: &str) -> String {
+        if self.latency_s.is_empty() {
+            return format!("  {name:<8} {:>6} reqs\n", 0);
+        }
+        format!(
+            "  {name:<8} {:>6} reqs  p50 {:>9.3} ms  p99 {:>9.3} ms  max {:>9.3} ms  \
+             (dispatch delay p99 {:>8.3} ms)\n",
+            self.count(),
+            self.p50_s() * 1e3,
+            self.p99_s() * 1e3,
+            self.max_s() * 1e3,
+            percentile(&self.dispatch_delay_s, 99.0) * 1e3
+        )
+    }
+}
+
+/// Per-request record of an open-loop run, retained only under
+/// [`OpenLoopConfig::record_outcomes`] — everything the replay test needs
+/// to compare a served predict bit-wise against its retained version.
+#[derive(Clone, Debug)]
+pub struct OpenLoopOutcome {
+    /// Index of this arrival in the generated schedule.
+    pub arrival: usize,
+    pub kind: ArrivalKind,
+    pub scheduled_s: f64,
+    /// `false` when admission control shed the request.
+    pub admitted: bool,
+    /// Snapshot version that served an admitted predict.
+    pub version: Option<u64>,
+    /// Requested example indices (empty for ingests).
+    pub idx: Vec<usize>,
+    /// Served margins (empty for ingests and shed requests).
+    pub margins: Vec<f64>,
+}
+
+/// What one open-loop run measured: per-kind latency distributions from
+/// scheduled arrival, explicit shed accounting, and the per-class pool
+/// queue delay over the window.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopReport {
+    pub offered_rate_per_s: f64,
+    pub duration_s: f64,
+    /// Arrivals in the generated schedule (served + shed).
+    pub scheduled_arrivals: usize,
+    pub predict: OpenLoopKindStats,
+    pub ingest: OpenLoopKindStats,
+    /// Predicts shed by admission control — counted, never dropped.
+    pub rejected_predicts: u64,
+    pub ingested_rows: u64,
+    /// Per-class pool queue delay over the run window.
+    pub queue_delay: QueueDelayReport,
+    pub total_wall_s: f64,
+    /// Per-request records (only under [`OpenLoopConfig::record_outcomes`]).
+    pub outcomes: Vec<OpenLoopOutcome>,
+}
+
+impl OpenLoopReport {
+    /// Requests actually served (admitted predicts + ingests).
+    pub fn served(&self) -> usize {
+        self.predict.count() + self.ingest.count()
+    }
+
+    /// Served requests per second of schedule time — diverges from the
+    /// offered rate exactly when the system saturates (the knee).
+    pub fn achieved_rate_per_s(&self) -> f64 {
+        self.served() as f64 / self.duration_s.max(1e-9)
+    }
+
+    /// Human-readable offered-vs-achieved + per-kind latency table.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "  offered {:.0} req/s for {:.2}s: {} scheduled, {} served \
+             ({:.1} req/s achieved), {} shed\n",
+            self.offered_rate_per_s,
+            self.duration_s,
+            self.scheduled_arrivals,
+            self.served(),
+            self.achieved_rate_per_s(),
+            self.rejected_predicts,
+        ));
+        s.push_str(&self.predict.line("predict"));
+        s.push_str(&self.ingest.line("ingest"));
+        s.push_str(&self.queue_delay.summary_line());
+        if self.total_wall_s > 0.0 {
+            s.push_str(&format!("  wall {:.3}s\n", self.total_wall_s));
+        }
+        s
+    }
+}
+
+/// Dispatcher-local accumulator, merged under one lock when the
+/// dispatcher finishes (the hot path never contends on shared state).
+#[derive(Default)]
+struct OpenLoopLocal {
+    predict: OpenLoopKindStats,
+    ingest: OpenLoopKindStats,
+    rejected: u64,
+    ingested_rows: u64,
+    outcomes: Vec<OpenLoopOutcome>,
+}
+
+/// Drive a pre-generated open-loop schedule at the scheduler: dispatcher
+/// threads claim arrivals in schedule order, park until each scheduled
+/// instant, then issue the request through admission control
+/// ([`Scheduler::try_predict`]) or [`Scheduler::ingest`]. Every latency
+/// is measured from the *scheduled* arrival, so dispatcher and pool
+/// queueing are charged to the request — the closed-loop blind spot this
+/// driver exists to fix. Ends with a [`Scheduler::flush`] so every
+/// ingested row is absorbed.
+pub fn drive_open_loop<M>(sched: &Scheduler<M>, cfg: &OpenLoopConfig) -> OpenLoopReport
+where
+    M: SynthRows + Send + 'static,
+{
+    assert!(cfg.dispatchers >= 1, "open loop needs at least one dispatcher");
+    let schedule = arrival_schedule(cfg);
+    let delay_mark = QueueDelayReport::from_stats(&sched.pool_stats());
+    let wall = Timer::start();
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let merged: Mutex<OpenLoopLocal> = Mutex::new(OpenLoopLocal::default());
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.dispatchers {
+            let (next, merged, schedule) = (&next, &merged, &schedule);
+            scope.spawn(move || {
+                let mut local = OpenLoopLocal::default();
+                loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= schedule.len() {
+                        break;
+                    }
+                    let arrival = schedule[k];
+                    // park until the scheduled instant — arrival times are
+                    // fixed up front, independent of service progress
+                    loop {
+                        let now = t0.elapsed().as_secs_f64();
+                        if now >= arrival.at_s {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_secs_f64(arrival.at_s - now));
+                    }
+                    let dispatch_delay = t0.elapsed().as_secs_f64() - arrival.at_s;
+                    match arrival.kind {
+                        ArrivalKind::Predict => {
+                            // rotating deterministic window over the dataset
+                            // as served by the *current* snapshot; datasets
+                            // only grow, so the indices stay valid for
+                            // whichever version serves them
+                            let n = sched.current_n();
+                            let idx: Vec<usize> = (0..cfg.predict_batch)
+                                .map(|i| (k * 131 + i * 7) % n)
+                                .collect();
+                            match sched.try_predict(&idx) {
+                                PredictAdmission::Served(out) => {
+                                    let latency = t0.elapsed().as_secs_f64() - arrival.at_s;
+                                    local.predict.latency_s.push(latency);
+                                    local.predict.dispatch_delay_s.push(dispatch_delay);
+                                    if cfg.record_outcomes {
+                                        local.outcomes.push(OpenLoopOutcome {
+                                            arrival: k,
+                                            kind: arrival.kind,
+                                            scheduled_s: arrival.at_s,
+                                            admitted: true,
+                                            version: Some(out.version),
+                                            idx,
+                                            margins: out.margins,
+                                        });
+                                    } else {
+                                        std::hint::black_box(out.margins);
+                                    }
+                                }
+                                PredictAdmission::Rejected { .. } => {
+                                    local.rejected += 1;
+                                    if cfg.record_outcomes {
+                                        local.outcomes.push(OpenLoopOutcome {
+                                            arrival: k,
+                                            kind: arrival.kind,
+                                            scheduled_s: arrival.at_s,
+                                            admitted: false,
+                                            version: None,
+                                            idx,
+                                            margins: Vec::new(),
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                        ArrivalKind::Ingest => {
+                            let rows = cfg.rows_per_ingest.max(1);
+                            let fresh = M::synth_rows(
+                                sched.d(),
+                                sched.avg_nnz(),
+                                rows,
+                                cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                            );
+                            sched.ingest(fresh);
+                            let latency = t0.elapsed().as_secs_f64() - arrival.at_s;
+                            local.ingest.latency_s.push(latency);
+                            local.ingest.dispatch_delay_s.push(dispatch_delay);
+                            local.ingested_rows += rows as u64;
+                            if cfg.record_outcomes {
+                                local.outcomes.push(OpenLoopOutcome {
+                                    arrival: k,
+                                    kind: arrival.kind,
+                                    scheduled_s: arrival.at_s,
+                                    admitted: true,
+                                    version: None,
+                                    idx: Vec::new(),
+                                    margins: Vec::new(),
+                                });
+                            }
+                        }
+                    }
+                }
+                let mut m = merged.lock().unwrap();
+                m.predict.merge(local.predict);
+                m.ingest.merge(local.ingest);
+                m.rejected += local.rejected;
+                m.ingested_rows += local.ingested_rows;
+                m.outcomes.extend(local.outcomes);
+            });
+        }
+    });
+    sched.flush();
+    let all = merged.into_inner().unwrap();
+    OpenLoopReport {
+        offered_rate_per_s: cfg.rate_per_s,
+        duration_s: cfg.duration_s,
+        scheduled_arrivals: schedule.len(),
+        predict: all.predict,
+        ingest: all.ingest,
+        rejected_predicts: all.rejected,
+        ingested_rows: all.ingested_rows,
+        queue_delay: QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark),
+        total_wall_s: wall.elapsed_s(),
+        outcomes: all.outcomes,
+    }
 }
 
 #[cfg(test)]
@@ -357,6 +778,73 @@ retrain
             .count();
         assert!(predicts > 400, "predicts={predicts}");
         assert!(predicts < 500, "mix must contain refits");
+    }
+
+    #[test]
+    fn arrival_schedule_same_seed_same_schedule() {
+        let cfg = OpenLoopConfig {
+            rate_per_s: 1000.0,
+            duration_s: 0.25,
+            ingest_fraction: 0.2,
+            seed: 7,
+            ..OpenLoopConfig::default()
+        };
+        let a = arrival_schedule(&cfg);
+        let b = arrival_schedule(&cfg);
+        assert_eq!(a, b, "same seed must reproduce the schedule bit-for-bit");
+        assert!(!a.is_empty());
+        let other = arrival_schedule(&OpenLoopConfig { seed: 8, ..cfg });
+        assert_ne!(a, other, "a different seed must change the schedule");
+    }
+
+    #[test]
+    fn fixed_schedule_spaces_arrivals_exactly() {
+        // powers of two keep every 1/rate gap and partial sum exact in f64,
+        // so the boundary count is deterministic, not rounding luck
+        let cfg = OpenLoopConfig {
+            rate_per_s: 512.0,
+            duration_s: 0.125,
+            process: ArrivalProcess::Fixed,
+            ..OpenLoopConfig::default()
+        };
+        let schedule = arrival_schedule(&cfg);
+        // arrivals at 1/rate, 2/rate, ... strictly below the duration
+        assert_eq!(schedule.len(), 63);
+        for (i, a) in schedule.iter().enumerate() {
+            let want = (i + 1) as f64 / cfg.rate_per_s;
+            assert!((a.at_s - want).abs() < 1e-9, "arrival {i}: {} vs {want}", a.at_s);
+            assert_eq!(a.kind, ArrivalKind::Predict, "ingest_fraction 0 ⇒ all predicts");
+        }
+    }
+
+    #[test]
+    fn ingest_fraction_controls_the_mix() {
+        let cfg = OpenLoopConfig {
+            rate_per_s: 5000.0,
+            duration_s: 1.0,
+            ingest_fraction: 0.1,
+            ..OpenLoopConfig::default()
+        };
+        let schedule = arrival_schedule(&cfg);
+        let ingests = schedule
+            .iter()
+            .filter(|a| a.kind == ArrivalKind::Ingest)
+            .count();
+        let share = ingests as f64 / schedule.len() as f64;
+        assert!((0.05..0.15).contains(&share), "ingest share {share:.3}");
+        // times must be strictly increasing — dispatchers claim in order
+        for w in schedule.windows(2) {
+            assert!(w[0].at_s < w[1].at_s);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "arrival rate must be finite and positive")]
+    fn schedule_rejects_zero_rate() {
+        arrival_schedule(&OpenLoopConfig {
+            rate_per_s: 0.0,
+            ..OpenLoopConfig::default()
+        });
     }
 
     #[test]

@@ -67,12 +67,25 @@
 //! `refit_staleness_s` seconds. Until the refit lands, readers keep
 //! serving the previous snapshot; [`Scheduler::flush`] forces a
 //! synchronous drain (shutdown, tests).
+//!
+//! ## Admission control
+//!
+//! Past saturation an open-loop arrival stream would otherwise queue
+//! readers without bound. [`SchedulerConfig::max_pending`] caps the
+//! readers in flight: [`Scheduler::try_predict`] reserves a pending slot
+//! before serving and returns [`PredictAdmission::Rejected`] — counted in
+//! [`SchedReport::rejected_predicts`], never silently dropped — when the
+//! budget is full. Admission decides only *whether* a request runs, never
+//! what it computes, so every served predict keeps the bit-wise
+//! determinism contract above. [`Scheduler::predict`] stays
+//! unconditional (closed-loop drivers and tests want every request
+//! served) but maintains the same pending gauge.
 
 use crate::data::{AppendExamples, Dataset};
 use crate::glm::GapReport;
 use crate::serve::session::{RefitReport, Session};
 use crate::serve::snapshot::ModelSnapshot;
-use crate::solver::{PoolStats, WorkerPool};
+use crate::solver::{PoolStats, QueueDelayReport, WorkerPool};
 use crate::util::percentile;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -96,6 +109,11 @@ pub struct SchedulerConfig {
     /// below-threshold rows until the next request or `flush` arrives.
     /// Under any ongoing traffic the bound behaves as stated.
     pub refit_staleness_s: f64,
+    /// Bounded pending-reader budget for [`Scheduler::try_predict`]
+    /// (the serve CLI's `--max-pending`): `None` (default) admits every
+    /// reader; `Some(k)` sheds arrivals once `k` readers are in flight.
+    /// Validated in [`Scheduler::new`]: `Some(0)` would shed everything.
+    pub max_pending: Option<usize>,
 }
 
 impl Default for SchedulerConfig {
@@ -103,6 +121,7 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             refit_rows_threshold: 64,
             refit_staleness_s: 0.25,
+            max_pending: None,
         }
     }
 }
@@ -118,6 +137,37 @@ pub struct PredictOutcome {
     /// Was a background refit in flight while this predict ran? (The
     /// overlap the scheduler exists to create.)
     pub overlapped_refit: bool,
+}
+
+/// Outcome of an admission-controlled [`Scheduler::try_predict`]: served
+/// like any other read, or explicitly shed because the pending-reader
+/// budget ([`SchedulerConfig::max_pending`]) was full. A rejection is
+/// counted in [`SchedReport::rejected_predicts`] — load shedding is
+/// always visible, never a silent drop.
+#[derive(Clone, Debug)]
+pub enum PredictAdmission {
+    /// Admitted and served — bit-wise identical to an unconditional
+    /// [`Scheduler::predict`] against the same snapshot version.
+    Served(PredictOutcome),
+    /// Shed at the door: the budget was exhausted by in-flight readers.
+    Rejected {
+        /// Readers in flight when this request was turned away.
+        pending: usize,
+    },
+}
+
+impl PredictAdmission {
+    /// The outcome, if admitted.
+    pub fn served(self) -> Option<PredictOutcome> {
+        match self {
+            PredictAdmission::Served(out) => Some(out),
+            PredictAdmission::Rejected { .. } => None,
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, PredictAdmission::Rejected { .. })
+    }
 }
 
 /// Predict latencies of one snapshot version.
@@ -145,6 +195,13 @@ pub struct SchedReport {
     /// Staging-buffer drains executed (background writer refits plus a
     /// foreground [`Scheduler::flush`] that found rows waiting).
     pub staged_drains: u64,
+    /// Predicts shed by admission control ([`Scheduler::try_predict`]
+    /// against a full [`SchedulerConfig::max_pending`] budget).
+    pub rejected_predicts: u64,
+    /// Per-class pool queue delay over the driven window (enqueue→start
+    /// of reader predict shards vs writer refit rounds). Stamped by the
+    /// closed- and open-loop drivers; zero for a bare `report()` call.
+    pub queue_delay: QueueDelayReport,
     /// Filled by the closed-loop driver.
     pub total_wall_s: f64,
 }
@@ -172,14 +229,18 @@ impl SchedReport {
             ));
         }
         s.push_str(&format!(
-            "  {} predicts ({} overlapped an in-flight refit), {} rows ingested, \
+            "  {} predicts ({} overlapped an in-flight refit, {} shed), {} rows ingested, \
              {} versions published ({} staged drains)\n",
             self.predicts,
             self.overlapped_predicts,
+            self.rejected_predicts,
             self.ingested_rows,
             self.publishes,
             self.staged_drains,
         ));
+        if self.queue_delay.reader.jobs + self.queue_delay.writer.jobs > 0 {
+            s.push_str(&self.queue_delay.summary_line());
+        }
         if self.total_wall_s > 0.0 {
             s.push_str(&format!(
                 "  wall {:.3}s  ({:.1} predicts/s)\n",
@@ -222,6 +283,7 @@ struct SchedMetrics {
     ingested_rows: u64,
     publishes: u64,
     staged_drains: u64,
+    rejected: u64,
 }
 
 struct Shared<M: AppendExamples> {
@@ -245,7 +307,20 @@ struct Shared<M: AppendExamples> {
     /// At most one background refit in flight (CAS-guarded).
     refit_running: AtomicBool,
     refit_handle: Mutex<Option<JoinHandle<()>>>,
+    /// Readers currently in flight (admitted, not yet completed) — the
+    /// gauge [`SchedulerConfig::max_pending`] admission checks against.
+    pending_readers: AtomicUsize,
     metrics: Mutex<SchedMetrics>,
+}
+
+/// Decrements the pending-reader gauge on drop, so an admitted slot is
+/// released even if the predict compute panics.
+struct PendingSlot<'a>(&'a AtomicUsize);
+
+impl Drop for PendingSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl<M: AppendExamples + Send> Shared<M> {
@@ -317,10 +392,11 @@ pub struct Scheduler<M: AppendExamples + Send + 'static> {
 impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// Wrap a trained session and publish its model as snapshot version 0.
     ///
-    /// Panics on a non-positive rows threshold or a non-finite /
-    /// non-positive staleness (the same loud-at-the-door treatment
-    /// `refit-lambda` gets): a zero threshold would refit per arrival, a
-    /// bad staleness would either spin or never drain.
+    /// Panics on a non-positive rows threshold, a non-finite /
+    /// non-positive staleness, or a zero pending budget (the same
+    /// loud-at-the-door treatment `refit-lambda` gets): a zero threshold
+    /// would refit per arrival, a bad staleness would either spin or
+    /// never drain, and a zero budget would shed every request.
     pub fn new(session: Session<M>, cfg: SchedulerConfig) -> Self {
         assert!(
             cfg.refit_rows_threshold >= 1,
@@ -332,6 +408,9 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             "refit staleness must be finite and positive, got {}",
             cfg.refit_staleness_s
         );
+        if let Some(budget) = cfg.max_pending {
+            assert!(budget >= 1, "max pending readers must be >= 1, got 0");
+        }
         let snap = Arc::new(session.snapshot(0, "initial-train"));
         let pool = session.pool_arc();
         let published_n = AtomicUsize::new(snap.n());
@@ -348,6 +427,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
                 published_n,
                 refit_running: AtomicBool::new(false),
                 refit_handle: Mutex::new(None),
+                pending_readers: AtomicUsize::new(0),
                 metrics: Mutex::new(SchedMetrics::default()),
             }),
         }
@@ -385,8 +465,52 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// compute sharded margins on the resident pool, record per-version
     /// latency + snapshot age. Never takes the writer lock. Also gives
     /// the ingestion thresholds a chance to fire (a storm keeps staleness
-    /// honest even when the append stream pauses).
+    /// honest even when the append stream pauses). Always admitted; the
+    /// pending gauge is maintained so concurrent [`try_predict`]
+    /// (admission-controlled) callers see these readers too.
+    ///
+    /// [`try_predict`]: Scheduler::try_predict
     pub fn predict(&self, idx: &[usize]) -> PredictOutcome {
+        self.shared.pending_readers.fetch_add(1, Ordering::SeqCst);
+        let _slot = PendingSlot(&self.shared.pending_readers);
+        self.serve_predict(idx)
+    }
+
+    /// Admission-controlled predict: reserve one of the
+    /// [`SchedulerConfig::max_pending`] pending-reader slots and serve, or
+    /// shed the request explicitly ([`PredictAdmission::Rejected`], which
+    /// is counted in [`SchedReport::rejected_predicts`]). With an
+    /// unbounded budget (`max_pending: None`) every request is admitted.
+    /// The slot is held for the request's whole lifetime — a reader
+    /// blocked on a busy pool keeps its slot, which is exactly what makes
+    /// the budget a backpressure bound past saturation.
+    pub fn try_predict(&self, idx: &[usize]) -> PredictAdmission {
+        let gauge = &self.shared.pending_readers;
+        let mut current = gauge.load(Ordering::SeqCst);
+        loop {
+            if self.shared.cfg.max_pending.is_some_and(|cap| current >= cap) {
+                self.shared.metrics.lock().unwrap().rejected += 1;
+                return PredictAdmission::Rejected { pending: current };
+            }
+            match gauge.compare_exchange(current, current + 1, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => break,
+                Err(now) => current = now,
+            }
+        }
+        let _slot = PendingSlot(gauge);
+        PredictAdmission::Served(self.serve_predict(idx))
+    }
+
+    /// Readers currently in flight (diagnostics + admission tests).
+    pub fn pending_readers(&self) -> usize {
+        self.shared.pending_readers.load(Ordering::SeqCst)
+    }
+
+    /// The one serve path behind [`Scheduler::predict`] and
+    /// [`Scheduler::try_predict`] — admission decides only whether this
+    /// runs, so both entry points are bit-wise identical per version.
+    fn serve_predict(&self, idx: &[usize]) -> PredictOutcome {
         let (snap, pool) = {
             let g = self.shared.published.lock().unwrap();
             (g.snap.clone(), g.pool.clone())
@@ -549,6 +673,8 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             ingested_rows: m.ingested_rows,
             publishes: m.publishes,
             staged_drains: m.staged_drains,
+            rejected_predicts: m.rejected,
+            queue_delay: QueueDelayReport::default(),
             total_wall_s: 0.0,
         }
     }
@@ -617,6 +743,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 10,
                 refit_staleness_s: 1e6, // rows, not time, must trip this
+                max_pending: None,
             },
         );
         sched.ingest(synthetic::dense_classification(4, 6, 73));
@@ -646,6 +773,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 1_000_000, // time, not rows, must trip
                 refit_staleness_s: 0.02,
+                max_pending: None,
             },
         );
         sched.ingest(synthetic::dense_classification(3, 6, 76));
@@ -669,6 +797,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 1_000_000,
                 refit_staleness_s: 1e6,
+                max_pending: None,
             },
         );
         sched.ingest(synthetic::dense_classification(5, 6, 78));
@@ -702,6 +831,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 0,
                 refit_staleness_s: 1.0,
+                max_pending: None,
             },
         );
     }
@@ -714,7 +844,56 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 8,
                 refit_staleness_s: f64::INFINITY,
+                max_pending: None,
             },
         );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_max_pending() {
+        let _ = Scheduler::new(
+            session(60, 82),
+            SchedulerConfig {
+                refit_rows_threshold: 8,
+                refit_staleness_s: 1.0,
+                max_pending: Some(0),
+            },
+        );
+    }
+
+    #[test]
+    fn try_predict_admits_within_budget_and_matches_predict() {
+        let sched = Scheduler::new(
+            session(90, 83),
+            SchedulerConfig {
+                refit_rows_threshold: 1_000_000,
+                refit_staleness_s: 1e6,
+                max_pending: Some(4),
+            },
+        );
+        let idx = [0usize, 3, 89];
+        let out = sched
+            .try_predict(&idx)
+            .served()
+            .expect("an idle scheduler must admit within the budget");
+        // admission changes only whether a request runs, never its bits
+        assert_eq!(out.margins, sched.predict(&idx).margins);
+        assert_eq!(sched.pending_readers(), 0, "slots released after serving");
+        let report = sched.report();
+        assert_eq!(report.rejected_predicts, 0);
+        assert_eq!(report.predicts, 2);
+    }
+
+    #[test]
+    fn unbounded_budget_never_sheds() {
+        let sched = Scheduler::new(session(80, 84), SchedulerConfig::default());
+        for k in 0..10usize {
+            assert!(
+                !sched.try_predict(&[k % 80]).is_rejected(),
+                "max_pending: None must admit every request"
+            );
+        }
+        assert_eq!(sched.report().rejected_predicts, 0);
     }
 }

@@ -164,7 +164,10 @@ impl<M: AppendExamples> Session<M> {
     /// Margins `⟨x_j, w⟩` for the requested examples, computed in parallel
     /// shards on the resident pool and merged in job order — bit-wise
     /// equal to [`glm::model::margins`] on the same weights (see the
-    /// module-level determinism argument).
+    /// module-level determinism argument). Shards are dispatched as
+    /// reader-class jobs ([`crate::solver::JobClass::Reader`]), so on a
+    /// shared pool they jump ahead of queued refit merge rounds without
+    /// changing any computed value.
     pub fn predict(&mut self, idx: &[usize]) -> Vec<f64> {
         self.stats.predicts += 1;
         self.stats.predicted_examples += idx.len() as u64;

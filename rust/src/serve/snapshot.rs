@@ -30,7 +30,7 @@
 
 use crate::data::{DataMatrix, Dataset, ShardedLayout};
 use crate::glm;
-use crate::solver::{kernel, WorkerPool};
+use crate::solver::{kernel, JobClass, WorkerPool};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -170,6 +170,13 @@ impl<M: DataMatrix> std::fmt::Debug for ModelSnapshot<M> {
 /// [`ModelSnapshot::predict`]); see the determinism argument in the
 /// [`crate::serve`] module docs. Shared by `Session::predict` and the
 /// scheduler's concurrent readers, so the equality is structural.
+///
+/// Shards are dispatched as [`JobClass::Reader`] jobs: on every worker
+/// they drain ahead of queued refit merge rounds (writer class), which is
+/// what keeps predict tail latency flat under a live refit. The class
+/// changes only *when* a shard starts — inputs are this frozen snapshot
+/// and the merge below is in job order — so the bit-wise guarantees hold
+/// verbatim.
 pub(crate) fn sharded_margins<M: DataMatrix>(
     ds: &Dataset<M>,
     w: &[f64],
@@ -202,7 +209,7 @@ pub(crate) fn sharded_margins<M: DataMatrix>(
             })
         })
         .collect();
-    let parts = pool.run_tagged(jobs);
+    let parts = pool.run_tagged_as(JobClass::Reader, jobs);
     let mut out = Vec::with_capacity(idx.len());
     for part in parts {
         out.extend_from_slice(&part);

@@ -40,7 +40,7 @@ pub use bucket::{BucketPolicy, Buckets};
 pub use convergence::ConvergenceMonitor;
 pub use exec::{ExecPolicy, Executor};
 pub use partition::Partitioning;
-pub use pool::{PoolStats, WorkerPool, WorkerStats};
+pub use pool::{ClassDelay, JobClass, PoolStats, QueueDelayReport, WorkerPool, WorkerStats};
 
 pub use crate::data::LayoutPolicy;
 

@@ -27,6 +27,21 @@
 //! on pinning, and a `libc`/`hwloc`-backed pin can be slotted into
 //! `worker_main` later without changing any caller.
 //!
+//! ## Two-level queues: reader-priority dispatch
+//!
+//! Each worker owns **two** FIFO deques, one per [`JobClass`]:
+//! latency-sensitive `Reader` jobs (predict shards) and throughput
+//! `Writer` jobs (training merge rounds, refit buckets). A worker always
+//! drains pending readers before touching the writer deque, and stays
+//! FIFO *within* each class. Under a live refit this keeps a predict
+//! shard from queueing behind a long train-round batch — the tail-latency
+//! fix the open-loop serving driver measures. The priority affects only
+//! *when* a job starts, never its inputs or the order results are
+//! returned in (see the determinism argument below). Per-class
+//! enqueue→start waiting time is recorded ([`PoolStats::class_delay`]),
+//! which is the measurable per-class queue-delay signal the SySCD
+//! auto-tuning direction needs.
+//!
 //! ## Determinism argument
 //!
 //! The pool is bit-wise interchangeable with [`Executor::Threads`] and
@@ -41,8 +56,13 @@
 //!    order, so the floating-point merge order is identical across
 //!    executors.
 //!
+//! Reader priority does not weaken either leg: results are delivered
+//! through per-batch slots indexed by job position, so the merge order of
+//! a batch is fixed at submission no matter which class jumped ahead on a
+//! worker, and job inputs stay pure functions of the assignment.
 //! `rust/tests/pool_equivalence.rs` locks this in by asserting bit-wise
-//! equal `α`/`v` trajectories across all three executors.
+//! equal `α`/`v` trajectories across all three executors, and the
+//! priority-invariant unit tests below lock in drain order.
 //!
 //! ## Multiple in-flight requests
 //!
@@ -51,10 +71,10 @@
 //! mutex-guarded, so any number of callers may have batches in flight at
 //! once. The concurrent serving scheduler ([`crate::serve::Scheduler`])
 //! relies on this — reader predict shards and a writer's merge-round jobs
-//! interleave on the same queues at job granularity (FIFO per worker).
-//! Interleaving affects only *when* a job runs, never its inputs or the
-//! order results are returned in, so the determinism argument above is
-//! untouched.
+//! interleave on the same queues at job granularity (readers first, FIFO
+//! per class per worker). Interleaving affects only *when* a job runs,
+//! never its inputs or the order results are returned in, so the
+//! determinism argument above is untouched.
 //!
 //! ## Safety
 //!
@@ -85,44 +105,92 @@ unsafe fn erase_lifetime<'a>(f: Box<dyn FnOnce() + Send + 'a>) -> Job {
     std::mem::transmute(f)
 }
 
-/// One worker's bucket queue: jobs in submission order + a closed flag.
+/// Which of a worker's two queues a dispatched batch lands on.
+///
+/// `Reader` jobs (predict shards) drain before any pending `Writer` job
+/// (training merge rounds, refit buckets); within a class the queue is
+/// FIFO, so merge order — which is fixed by result-slot position anyway —
+/// matches submission order on every worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobClass {
+    /// Latency-sensitive read-only work, served ahead of writers.
+    Reader,
+    /// Throughput work; drained FIFO once no reader is pending.
+    Writer,
+}
+
+impl JobClass {
+    #[inline]
+    fn slot(self) -> usize {
+        match self {
+            JobClass::Reader => 0,
+            JobClass::Writer => 1,
+        }
+    }
+}
+
+/// One worker's two-level queue: a FIFO deque per [`JobClass`] (readers
+/// drain first) + a closed flag. Jobs carry their enqueue instant so the
+/// worker can attribute queueing delay per class.
 struct JobQueue {
-    state: Mutex<(VecDeque<Job>, bool)>,
+    state: Mutex<QueueState>,
     ready: Condvar,
+}
+
+struct QueueState {
+    /// Indexed by `JobClass::slot()`: `[readers, writers]`.
+    classes: [VecDeque<(Job, Instant)>; 2],
+    closed: bool,
 }
 
 impl JobQueue {
     fn new() -> Self {
         JobQueue {
-            state: Mutex::new((VecDeque::new(), false)),
+            state: Mutex::new(QueueState {
+                classes: [VecDeque::new(), VecDeque::new()],
+                closed: false,
+            }),
             ready: Condvar::new(),
         }
     }
 
-    fn push(&self, job: Job) {
+    fn push(&self, job: Job, class: JobClass) {
         let mut g = self.state.lock().unwrap();
-        g.0.push_back(job);
+        g.classes[class.slot()].push_back((job, Instant::now()));
         self.ready.notify_one();
     }
 
     fn close(&self) {
         let mut g = self.state.lock().unwrap();
-        g.1 = true;
+        g.closed = true;
         self.ready.notify_all();
     }
 
     /// Block until a job is available; `None` once closed and drained.
-    fn pop(&self) -> Option<Job> {
+    /// Readers are always preferred over writers; each deque is FIFO.
+    fn pop(&self) -> Option<(Job, Instant, JobClass)> {
         let mut g = self.state.lock().unwrap();
         loop {
-            if let Some(job) = g.0.pop_front() {
-                return Some(job);
+            if let Some((job, at)) = g.classes[JobClass::Reader.slot()].pop_front() {
+                return Some((job, at, JobClass::Reader));
             }
-            if g.1 {
+            if let Some((job, at)) = g.classes[JobClass::Writer.slot()].pop_front() {
+                return Some((job, at, JobClass::Writer));
+            }
+            if g.closed {
                 return None;
             }
             g = self.ready.wait(g).unwrap();
         }
+    }
+
+    /// Pending (not yet started) jobs as `(readers, writers)`.
+    fn depths(&self) -> (usize, usize) {
+        let g = self.state.lock().unwrap();
+        (
+            g.classes[JobClass::Reader.slot()].len(),
+            g.classes[JobClass::Writer.slot()].len(),
+        )
     }
 }
 
@@ -172,13 +240,18 @@ impl<T> Clone for SendPtr<T> {
 
 impl<T> Copy for SendPtr<T> {}
 
-/// Per-worker busy-time accounting: the worker adds each job's measured
-/// duration (one `Instant` pair per job — nanoseconds of overhead against
-/// worker jobs that run for micro- to milliseconds).
+/// Per-worker accounting: the worker adds each job's measured duration
+/// and its enqueue→start wait, the latter split by [`JobClass`] (one
+/// `Instant` pair per job — nanoseconds of overhead against worker jobs
+/// that run for micro- to milliseconds).
 #[derive(Default)]
 struct WorkerTiming {
     busy_ns: AtomicU64,
     jobs: AtomicU64,
+    /// Enqueue→start wait per class, indexed by `JobClass::slot()`.
+    wait_ns: [AtomicU64; 2],
+    /// Completed jobs per class, indexed by `JobClass::slot()`.
+    class_jobs: [AtomicU64; 2],
 }
 
 /// One worker's timing census (see [`WorkerPool::stats`]).
@@ -190,6 +263,78 @@ pub struct WorkerStats {
     pub busy_s: f64,
     /// Jobs completed (panicked jobs count — they occupied the worker).
     pub jobs: u64,
+    /// Reader-class jobs completed and their summed enqueue→start wait.
+    pub reader_jobs: u64,
+    pub reader_wait_s: f64,
+    /// Writer-class jobs completed and their summed enqueue→start wait.
+    pub writer_jobs: u64,
+    pub writer_wait_s: f64,
+}
+
+/// Aggregate queue delay of one [`JobClass`] across the pool: completed
+/// jobs and their summed enqueue→start wait. Counters are monotone, so a
+/// window is measured as a delta of two snapshots ([`ClassDelay::since`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassDelay {
+    pub jobs: u64,
+    pub wait_s: f64,
+}
+
+impl ClassDelay {
+    /// Mean enqueue→start wait per job; 0 when no job completed.
+    pub fn mean_wait_s(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.wait_s / self.jobs as f64
+        }
+    }
+
+    /// Counter delta against an earlier snapshot of the same pool.
+    pub fn since(&self, earlier: &ClassDelay) -> ClassDelay {
+        ClassDelay {
+            jobs: self.jobs.saturating_sub(earlier.jobs),
+            wait_s: (self.wait_s - earlier.wait_s).max(0.0),
+        }
+    }
+}
+
+/// Per-class queue delay over a measured window — the report stamped by
+/// the closed- and open-loop serving drivers so both report the
+/// scheduled-vs-dispatch queueing that used to be invisible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueDelayReport {
+    pub reader: ClassDelay,
+    pub writer: ClassDelay,
+}
+
+impl QueueDelayReport {
+    /// Snapshot both class counters from a pool census.
+    pub fn from_stats(stats: &PoolStats) -> Self {
+        QueueDelayReport {
+            reader: stats.class_delay(JobClass::Reader),
+            writer: stats.class_delay(JobClass::Writer),
+        }
+    }
+
+    /// Window delta against an earlier snapshot of the same pool.
+    pub fn since(&self, earlier: &QueueDelayReport) -> Self {
+        QueueDelayReport {
+            reader: self.reader.since(&earlier.reader),
+            writer: self.writer.since(&earlier.writer),
+        }
+    }
+
+    /// One human-readable line for the serve/bench reports.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "  queue delay: reader {:>6} jobs mean {:>8.3} ms | writer {:>6} jobs mean {:>8.3} ms\n",
+            self.reader.jobs,
+            self.reader.mean_wait_s() * 1e3,
+            self.writer.jobs,
+            self.writer.mean_wait_s() * 1e3
+        )
+    }
 }
 
 /// Aggregated per-worker busy-time statistics — the straggler-imbalance
@@ -224,10 +369,25 @@ impl PoolStats {
             .fold(0.0f64, f64::max);
         max / mean
     }
+
+    /// Pool-wide queue delay of one class (jobs + summed wait across all
+    /// workers since pool creation).
+    pub fn class_delay(&self, class: JobClass) -> ClassDelay {
+        let mut agg = ClassDelay::default();
+        for w in &self.per_worker {
+            let (jobs, wait_s) = match class {
+                JobClass::Reader => (w.reader_jobs, w.reader_wait_s),
+                JobClass::Writer => (w.writer_jobs, w.writer_wait_s),
+            };
+            agg.jobs += jobs;
+            agg.wait_s += wait_s;
+        }
+        agg
+    }
 }
 
-/// Persistent worker pool with one job queue per worker, workers grouped
-/// per NUMA node (see the module docs).
+/// Persistent worker pool with two job queues per worker (reader-priority;
+/// see [`JobClass`]), workers grouped per NUMA node (see the module docs).
 pub struct WorkerPool {
     queues: Vec<Arc<JobQueue>>,
     handles: Vec<JoinHandle<()>>,
@@ -293,8 +453,15 @@ impl WorkerPool {
         self.node_workers.iter().map(|w| w.len()).collect()
     }
 
-    /// Snapshot of the per-worker busy-time counters accumulated since the
-    /// pool was created (jobs in flight are not yet counted).
+    /// Pending (not yet started) jobs per worker as `(readers, writers)`
+    /// — introspection for admission control and the priority-invariant
+    /// tests; jobs currently executing are not counted.
+    pub fn queue_depths(&self) -> Vec<(usize, usize)> {
+        self.queues.iter().map(|q| q.depths()).collect()
+    }
+
+    /// Snapshot of the per-worker counters accumulated since the pool was
+    /// created (jobs in flight are not yet counted).
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             per_worker: self
@@ -306,28 +473,58 @@ impl WorkerPool {
                     node: self.node_of[w],
                     busy_s: t.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
                     jobs: t.jobs.load(Ordering::Relaxed),
+                    reader_jobs: t.class_jobs[JobClass::Reader.slot()].load(Ordering::Relaxed),
+                    reader_wait_s: t.wait_ns[JobClass::Reader.slot()].load(Ordering::Relaxed)
+                        as f64
+                        * 1e-9,
+                    writer_jobs: t.class_jobs[JobClass::Writer.slot()].load(Ordering::Relaxed),
+                    writer_wait_s: t.wait_ns[JobClass::Writer.slot()].load(Ordering::Relaxed)
+                        as f64
+                        * 1e-9,
                 })
                 .collect(),
         }
     }
 
-    /// Run all jobs to completion, returning results in job order.
+    /// Run all jobs to completion as [`JobClass::Writer`] work (the
+    /// solvers' merge-round shape), returning results in job order.
     /// Job `i` goes to worker `i % workers` — with one job per worker
-    /// (the solvers' merge-round shape) every worker gets exactly one.
+    /// every worker gets exactly one.
     pub fn run<R, F>(&self, jobs: Vec<F>) -> Vec<R>
     where
         R: Send,
         F: FnOnce() -> R + Send,
     {
-        let routes: Vec<usize> = (0..jobs.len()).map(|i| i % self.workers()).collect();
-        self.run_routed(jobs, &routes)
+        self.run_as(JobClass::Writer, jobs)
     }
 
-    /// Run node-tagged jobs: each job is queued on a worker of the tagged
-    /// node (round-robin within that node's workers); tags naming a node
-    /// with no workers fall back to the whole pool. Results are returned
-    /// in job order.
+    /// [`run`](WorkerPool::run) with an explicit job class — readers jump
+    /// ahead of queued writer jobs on every worker.
+    pub fn run_as<R, F>(&self, class: JobClass, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        let routes: Vec<usize> = (0..jobs.len()).map(|i| i % self.workers()).collect();
+        self.run_routed(class, jobs, &routes)
+    }
+
+    /// Run node-tagged jobs as [`JobClass::Writer`] work: each job is
+    /// queued on a worker of the tagged node (round-robin within that
+    /// node's workers); tags naming a node with no workers fall back to
+    /// the whole pool. Results are returned in job order.
     pub fn run_tagged<R, F>(&self, jobs: Vec<(usize, F)>) -> Vec<R>
+    where
+        R: Send,
+        F: FnOnce() -> R + Send,
+    {
+        self.run_tagged_as(JobClass::Writer, jobs)
+    }
+
+    /// [`run_tagged`](WorkerPool::run_tagged) with an explicit job class
+    /// — the predict path dispatches its shards as [`JobClass::Reader`]
+    /// so they drain before any queued refit round.
+    pub fn run_tagged_as<R, F>(&self, class: JobClass, jobs: Vec<(usize, F)>) -> Vec<R>
     where
         R: Send,
         F: FnOnce() -> R + Send,
@@ -352,10 +549,10 @@ impl WorkerPool {
             routes.push(worker);
             fns.push(f);
         }
-        self.run_routed(fns, &routes)
+        self.run_routed(class, fns, &routes)
     }
 
-    fn run_routed<R, F>(&self, jobs: Vec<F>, routes: &[usize]) -> Vec<R>
+    fn run_routed<R, F>(&self, class: JobClass, jobs: Vec<F>, routes: &[usize]) -> Vec<R>
     where
         R: Send,
         F: FnOnce() -> R + Send,
@@ -381,7 +578,7 @@ impl WorkerPool {
                 latch_ref.count_down();
             };
             let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(thunk);
-            self.queues[worker].push(unsafe { erase_lifetime(boxed) });
+            self.queues[worker].push(unsafe { erase_lifetime(boxed) }, class);
         }
         latch.wait();
         if latch.panicked.load(Ordering::SeqCst) {
@@ -406,13 +603,16 @@ impl Drop for WorkerPool {
 }
 
 fn worker_main(queue: Arc<JobQueue>, timing: Arc<WorkerTiming>) {
-    while let Some(job) = queue.pop() {
+    while let Some((job, enqueued, class)) = queue.pop() {
+        let wait = enqueued.elapsed();
         let start = Instant::now();
         job();
         timing
             .busy_ns
             .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
         timing.jobs.fetch_add(1, Ordering::Relaxed);
+        timing.wait_ns[class.slot()].fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
+        timing.class_jobs[class.slot()].fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -420,6 +620,7 @@ fn worker_main(queue: Arc<JobQueue>, timing: Arc<WorkerTiming>) {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
 
     #[test]
     fn results_in_job_order() {
@@ -603,5 +804,145 @@ mod tests {
         let one: fn() -> i32 = || 1;
         let two: fn() -> i32 = || 2;
         assert_eq!(pool.run(vec![one, two]), vec![1, 2]);
+    }
+
+    // ---- two-level queue (reader-priority) invariants ----
+
+    /// Poll `cond` for up to ~5 s; panic with `what` if it never holds.
+    fn wait_until(what: &str, cond: impl Fn() -> bool) {
+        for _ in 0..5000 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("timed out waiting for: {what}");
+    }
+
+    /// Readers enqueued AFTER a writer batch must still drain first, and
+    /// each class must stay FIFO in submission order. A single worker is
+    /// blocked so both batches pile up behind it, then released — the
+    /// execution log decides.
+    #[test]
+    fn readers_enqueued_after_writers_drain_first() {
+        let pool = WorkerPool::new(1, &Topology::flat(1));
+        let log: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let release = AtomicBool::new(false);
+        let started = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let (pool2, log2) = (&pool, &log);
+            let (release2, started2) = (&release, &started);
+            let blocker = s.spawn(move || {
+                pool2.run(vec![move || {
+                    started2.store(true, Ordering::SeqCst);
+                    while !release2.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }]);
+            });
+            wait_until("blocker occupies the worker", || {
+                started.load(Ordering::SeqCst)
+            });
+            // a writer batch queues behind the blocker...
+            let writers = s.spawn(move || {
+                pool2.run(
+                    (0..3)
+                        .map(|i| {
+                            let log = log2;
+                            move || log.lock().unwrap().push(format!("w{i}"))
+                        })
+                        .collect::<Vec<_>>(),
+                );
+            });
+            wait_until("writer batch queued", || pool.queue_depths()[0].1 >= 3);
+            // ...then readers arrive later and must still jump ahead
+            let readers = s.spawn(move || {
+                pool2.run_as(
+                    JobClass::Reader,
+                    (0..3)
+                        .map(|i| {
+                            let log = log2;
+                            move || log.lock().unwrap().push(format!("r{i}"))
+                        })
+                        .collect::<Vec<_>>(),
+                );
+            });
+            wait_until("reader batch queued", || pool.queue_depths()[0].0 >= 3);
+            release.store(true, Ordering::SeqCst);
+            blocker.join().expect("blocker dispatcher panicked");
+            writers.join().expect("writer dispatcher panicked");
+            readers.join().expect("reader dispatcher panicked");
+        });
+        // readers first even though they were enqueued last; FIFO within
+        // each class (this is the merge-order-preservation invariant)
+        assert_eq!(
+            log.into_inner().unwrap(),
+            vec!["r0", "r1", "r2", "w0", "w1", "w2"]
+        );
+        assert_eq!(pool.queue_depths(), vec![(0, 0)]);
+    }
+
+    /// Re-entrant dispatch with mixed classes: every caller gets exactly
+    /// its own results in its own job order, whichever class it used.
+    #[test]
+    fn mixed_class_reentrant_dispatch_keeps_each_callers_job_order() {
+        let pool = WorkerPool::new(3, &Topology::uniform(3, 1));
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let handles: Vec<_> = (0..6usize)
+                .map(|caller| {
+                    s.spawn(move || {
+                        let class = if caller % 2 == 0 {
+                            JobClass::Reader
+                        } else {
+                            JobClass::Writer
+                        };
+                        for round in 0..30usize {
+                            let jobs: Vec<_> = (0..5usize)
+                                .map(|i| {
+                                    let node = i % 3;
+                                    (node, move || caller * 1000 + round * 10 + i)
+                                })
+                                .collect();
+                            let got = pool.run_tagged_as(class, jobs);
+                            let want: Vec<usize> =
+                                (0..5).map(|i| caller * 1000 + round * 10 + i).collect();
+                            assert_eq!(got, want, "caller {caller} round {round}");
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("dispatcher thread panicked");
+            }
+        });
+        let stats = pool.stats();
+        assert_eq!(stats.total_jobs(), 6 * 30 * 5);
+        // 3 reader callers and 3 writer callers → an even class split
+        assert_eq!(stats.class_delay(JobClass::Reader).jobs, 3 * 30 * 5);
+        assert_eq!(stats.class_delay(JobClass::Writer).jobs, 3 * 30 * 5);
+    }
+
+    /// Per-class queue-delay counters: jobs are attributed to the class
+    /// they were dispatched as, and window deltas subtract cleanly.
+    #[test]
+    fn per_class_queue_delay_is_recorded() {
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        pool.run((0..4).map(|i| move || i).collect::<Vec<_>>());
+        pool.run_as(JobClass::Reader, (0..4).map(|i| move || i).collect::<Vec<_>>());
+        let stats = pool.stats();
+        let r = stats.class_delay(JobClass::Reader);
+        let w = stats.class_delay(JobClass::Writer);
+        assert_eq!(r.jobs, 4);
+        assert_eq!(w.jobs, 4);
+        assert!(r.wait_s >= 0.0 && w.wait_s >= 0.0);
+        assert!(r.mean_wait_s() >= 0.0);
+        // a window delta counts only the jobs inside the window
+        let mark = QueueDelayReport::from_stats(&stats);
+        pool.run_as(JobClass::Reader, (0..2).map(|i| move || i).collect::<Vec<_>>());
+        let delta = QueueDelayReport::from_stats(&pool.stats()).since(&mark);
+        assert_eq!(delta.reader.jobs, 2);
+        assert_eq!(delta.writer.jobs, 0);
+        assert!(!delta.summary_line().is_empty());
     }
 }

@@ -1,0 +1,334 @@
+//! Open-loop traffic-engine guarantees:
+//!
+//! (a) **Deterministic, rate-correct schedules** — the same seed
+//!     reproduces the identical arrival schedule bit-for-bit, the Poisson
+//!     draw hits the offered rate, the fixed process spaces arrivals
+//!     exactly, and the ingest fraction controls the request mix.
+//! (b) **Versioned determinism under open-loop load** — every predict
+//!     served during an open-loop run (with an ingestion-triggered refit
+//!     racing it) replays bit-wise against the retained snapshot of the
+//!     version that served it, through both the sequential snapshot path
+//!     and the plain batch path.
+//! (c) **Admission control** — with `max_pending = 1` and the pool's only
+//!     worker blocked, the one admitted reader holds the budget, every
+//!     further `try_predict` is shed with the observed pending count, and
+//!     the report's shed/served tallies match exactly.
+//! (d) **No thread growth** — a full open-loop run (dispatchers, shedding,
+//!     background refits, flush) leaves the process thread count where it
+//!     started (the `/proc/self/status` census shared with
+//!     `scheduler.rs`).
+//!
+//! The tests serialize on a mutex: (d) counts OS threads, so no sibling
+//! test's pools may spawn or die while it runs.
+
+use parlin::data::{synthetic, DenseMatrix};
+use parlin::glm::Objective;
+use parlin::serve::{
+    arrival_schedule, drive_open_loop, ArrivalKind, ArrivalProcess, ModelSnapshot, OpenLoopConfig,
+    PredictAdmission, Scheduler, SchedulerConfig, Session,
+};
+use parlin::solver::{SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+#[path = "common/census.rs"]
+mod census;
+use census::settled_census;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn session(n: usize, threads: usize, seed: u64) -> Session<DenseMatrix> {
+    let ds = synthetic::dense_classification(n, 8, seed);
+    let cfg = SolverConfig::new(Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    })
+    .with_variant(Variant::Domesticated)
+    .with_threads(threads)
+    .with_topology(Topology::uniform(2, threads.div_ceil(2)))
+    .with_tol(1e-3)
+    .with_max_epochs(250);
+    Session::new(ds, cfg)
+}
+
+/// Poll until `cond` holds; panic after ~5s so a deadlock fails loudly
+/// instead of hanging the suite.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    for _ in 0..5000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn arrival_schedule_is_deterministic_and_rate_correct() {
+    // same seed ⇒ the identical schedule, bit for bit
+    let cfg = OpenLoopConfig {
+        rate_per_s: 2000.0,
+        duration_s: 1.0,
+        process: ArrivalProcess::Poisson,
+        seed: 5,
+        ingest_fraction: 0.0,
+        ..OpenLoopConfig::default()
+    };
+    let a = arrival_schedule(&cfg);
+    assert_eq!(a, arrival_schedule(&cfg), "same seed must replay exactly");
+    assert_ne!(
+        a,
+        arrival_schedule(&OpenLoopConfig { seed: 6, ..cfg.clone() }),
+        "a different seed must produce a different schedule"
+    );
+
+    // the Poisson draw realizes the offered rate: E[arrivals] = rate ×
+    // duration, and 2000 exponential gaps concentrate well within ±10%
+    let realized = a.len() as f64 / cfg.duration_s;
+    assert!(
+        (realized - cfg.rate_per_s).abs() / cfg.rate_per_s < 0.10,
+        "Poisson schedule realized {realized:.0} req/s, offered {:.0}",
+        cfg.rate_per_s
+    );
+    for w in a.windows(2) {
+        assert!(w[0].at_s < w[1].at_s, "arrival times must strictly increase");
+    }
+
+    // the fixed process is exact: arrival i at (i+1)/rate, no jitter
+    let fixed = arrival_schedule(&OpenLoopConfig {
+        rate_per_s: 800.0,
+        duration_s: 0.25,
+        process: ArrivalProcess::Fixed,
+        ..cfg.clone()
+    });
+    assert!(!fixed.is_empty());
+    for (i, arr) in fixed.iter().enumerate() {
+        let want = (i + 1) as f64 / 800.0;
+        assert!(
+            (arr.at_s - want).abs() < 1e-9,
+            "fixed arrival {i} at {} expected {want}",
+            arr.at_s
+        );
+        assert_eq!(arr.kind, ArrivalKind::Predict);
+    }
+
+    // the ingest fraction controls the mix (drawn from the same seed)
+    let mixed = arrival_schedule(&OpenLoopConfig {
+        ingest_fraction: 0.1,
+        ..cfg
+    });
+    let ingests = mixed.iter().filter(|x| x.kind == ArrivalKind::Ingest).count();
+    let share = ingests as f64 / mixed.len() as f64;
+    assert!(
+        (0.05..0.15).contains(&share),
+        "ingest share {share:.3} strayed from the configured 0.1"
+    );
+}
+
+/// The acceptance-criterion test: predicts served by an open-loop run —
+/// with an ingestion burst racing the dispatchers and publishing a new
+/// version mid-run — replay bit-wise against the retained snapshot of the
+/// version each one was served from.
+#[test]
+fn open_loop_predicts_replay_bitwise_for_their_version() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(300, 2, 71),
+        SchedulerConfig {
+            refit_rows_threshold: 40,
+            refit_staleness_s: 1e3,
+            max_pending: None,
+        },
+    );
+    // retain version 0 — it must stay fully servable throughout
+    let snap0 = sched.snapshot();
+    assert_eq!(snap0.version(), 0);
+
+    let cfg = OpenLoopConfig {
+        rate_per_s: 400.0,
+        duration_s: 0.5,
+        process: ArrivalProcess::Poisson,
+        seed: 17,
+        predict_batch: 32,
+        ingest_fraction: 0.0,
+        rows_per_ingest: 32,
+        dispatchers: 3,
+        record_outcomes: true,
+    };
+    let report = std::thread::scope(|scope| {
+        let driver = scope.spawn(|| drive_open_loop(&sched, &cfg));
+        // cross the row threshold mid-run so a background refit trains
+        // and publishes version 1 while the dispatchers are serving
+        std::thread::sleep(Duration::from_millis(100));
+        sched.ingest(synthetic::dense_classification(40, 8, 72));
+        driver.join().expect("open-loop driver panicked")
+    });
+    // the driver flushes on exit; this one is a no-op unless the ingest
+    // raced past that flush on a heavily loaded box
+    sched.flush();
+    let snap1 = sched.snapshot();
+    assert_eq!(snap1.version(), 1, "the ingested rows must have published v1");
+    assert_eq!(snap1.n(), 340);
+    assert_eq!(snap0.n(), 300, "the retained version must be untouched");
+
+    // nothing shed (unbounded budget): every scheduled arrival has an
+    // outcome on record
+    assert_eq!(report.rejected_predicts, 0);
+    assert_eq!(report.outcomes.len(), report.scheduled_arrivals);
+    assert_eq!(report.served(), report.scheduled_arrivals);
+    assert!(report.served() > 0, "a 0.5s schedule at 400 req/s must serve");
+
+    let by_version = |v: u64| -> Arc<ModelSnapshot<DenseMatrix>> {
+        match v {
+            0 => Arc::clone(&snap0),
+            1 => Arc::clone(&snap1),
+            other => panic!("request served from unpublished version {other}"),
+        }
+    };
+    for out in &report.outcomes {
+        assert_eq!(out.kind, ArrivalKind::Predict);
+        assert!(out.admitted);
+        let version = out.version.expect("admitted predicts carry their version");
+        let snap = by_version(version);
+        let sequential = snap.predict(&out.idx);
+        assert_eq!(
+            out.margins, sequential,
+            "a v{version} open-loop predict diverged from the sequential \
+             answer — torn snapshot"
+        );
+        // one level deeper: the sequential answer itself must be the plain
+        // batch path on that version's frozen state
+        let batch = parlin::glm::model::margins(snap.dataset(), snap.weights(), &out.idx);
+        assert_eq!(out.margins, batch);
+    }
+}
+
+/// With a budget of one and the pool's only worker blocked by a writer
+/// job, the single admitted reader holds the pending slot for its whole
+/// service time: every further `try_predict` must shed (never serve,
+/// never block), the shed count must match the report, and the admitted
+/// reader's answer must still be bit-wise correct once the worker frees.
+#[test]
+fn admission_control_sheds_excess_readers_and_counts_them() {
+    let _g = gate();
+    let sess = session(120, 1, 73);
+    // grab the pool before the scheduler owns the session: the blocker
+    // job must enter the same single worker the predicts shard onto
+    let pool = sess.pool_arc();
+    let sched = Scheduler::new(
+        sess,
+        SchedulerConfig {
+            refit_rows_threshold: 1_000_000,
+            refit_staleness_s: 1e6,
+            max_pending: Some(1),
+        },
+    );
+    let started = AtomicBool::new(false);
+    let release = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let (started, release) = (&started, &release);
+        // occupy the only worker: reader shards queue behind this writer
+        // job until it is released
+        let blocker = scope.spawn(move || {
+            pool.run(vec![move || {
+                started.store(true, Ordering::SeqCst);
+                while !release.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }]);
+        });
+        wait_until("the blocker job to start", || started.load(Ordering::SeqCst));
+
+        // the one admitted reader: enters the budget, then blocks on the
+        // occupied pool for its whole service time
+        let admitted = scope.spawn(|| sched.try_predict(&[0, 1, 2, 3]));
+        wait_until("the admitted reader to hold the pending slot", || {
+            sched.pending_readers() == 1
+        });
+
+        // every further arrival is shed immediately with the observed
+        // pending count — try_predict must never block on the full pool
+        for attempt in 0..5 {
+            match sched.try_predict(&[4, 5]) {
+                PredictAdmission::Rejected { pending } => {
+                    assert_eq!(pending, 1, "attempt {attempt} saw a wrong pending count");
+                }
+                PredictAdmission::Served(_) => {
+                    panic!("attempt {attempt} was admitted past a full budget")
+                }
+            }
+        }
+
+        release.store(true, Ordering::SeqCst);
+        let out = admitted
+            .join()
+            .expect("admitted reader panicked")
+            .served()
+            .expect("the first reader fit the budget and must be served");
+        assert_eq!(out.version, 0);
+        assert_eq!(
+            out.margins,
+            sched.snapshot().predict(&[0, 1, 2, 3]),
+            "the admitted predict must still be bit-wise correct"
+        );
+        blocker.join().expect("blocker panicked");
+    });
+    assert_eq!(sched.pending_readers(), 0, "the budget must drain to zero");
+
+    let report = sched.report();
+    assert_eq!(report.rejected_predicts, 5, "every shed arrival is counted");
+    assert_eq!(report.predicts, 1, "only the admitted reader was served");
+}
+
+/// A full open-loop run — dispatcher threads, a shedding budget, an
+/// ingestion trickle with background refits, the final flush — must leave
+/// the process thread count where it started and account for every row.
+#[test]
+fn open_loop_run_leaks_no_threads() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(270, 4, 75),
+        SchedulerConfig {
+            refit_rows_threshold: 30,
+            refit_staleness_s: 0.05,
+            max_pending: Some(8),
+        },
+    );
+    // warm up each path once (predict, ingest→background refit, flush)
+    let _ = sched.predict(&[0, 1, 2]);
+    sched.ingest(synthetic::dense_classification(30, 8, 76));
+    sched.flush();
+    assert_eq!(sched.current_n(), 300);
+    let baseline = settled_census(usize::MAX - 1);
+
+    let cfg = OpenLoopConfig {
+        rate_per_s: 300.0,
+        duration_s: 0.4,
+        process: ArrivalProcess::Poisson,
+        seed: 19,
+        predict_batch: 48,
+        ingest_fraction: 0.1,
+        rows_per_ingest: 10,
+        dispatchers: 3,
+        record_outcomes: false,
+    };
+    let report = drive_open_loop(&sched, &cfg);
+    assert!(report.served() > 0, "the run must have served traffic");
+    assert_eq!(sched.staged_rows(), 0, "the final flush must drain staging");
+    assert_eq!(
+        sched.current_n() as u64,
+        300 + report.ingested_rows,
+        "every ingested row absorbed exactly once"
+    );
+
+    let after = settled_census(baseline);
+    assert!(
+        after <= baseline,
+        "open-loop run grew threads: baseline={baseline}, after={after}"
+    );
+}

@@ -62,6 +62,7 @@ fn racing_predicts_are_bitwise_sequential_for_their_version() {
         SchedulerConfig {
             refit_rows_threshold: 40,
             refit_staleness_s: 1e3,
+            max_pending: None,
         },
     );
     // retain version 0 — it must stay fully servable throughout
@@ -157,6 +158,7 @@ fn ingestion_stream_is_absorbed_exactly_once() {
         SchedulerConfig {
             refit_rows_threshold: 25,
             refit_staleness_s: 1e3,
+            max_pending: None,
         },
     );
     let mut sent = 0usize;
@@ -191,6 +193,7 @@ fn concurrent_storm_leaks_no_threads() {
         SchedulerConfig {
             refit_rows_threshold: 30,
             refit_staleness_s: 0.05,
+            max_pending: None,
         },
     );
     // warm up each path once (predict, ingest→background refit, flush)
