@@ -1,0 +1,367 @@
+//! Validate a `--trace` output file: well-formed JSON (checked by a
+//! hand-rolled parser — the offline toolchain has no serde), per-tid
+//! monotonic timestamps for the instant events, and presence of required
+//! event groups. CI runs this against a short `parlin serve --trace` run:
+//!
+//! ```bash
+//! cargo run --release --example check_trace -- trace.json \
+//!     --require job,epoch,publish,reject,drain
+//! ```
+//!
+//! Exits nonzero with a message on the first violation found.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("check_trace: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (path, required) = parse_args(&args)?;
+    let text = std::fs::read_to_string(&path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+
+    let root = Json::parse(&text)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("top-level object has no \"traceEvents\" array"))?;
+
+    let mut group_counts: HashMap<&'static str, u64> = HashMap::new();
+    let mut last_ts: HashMap<i64, f64> = HashMap::new();
+    let mut instants = 0u64;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event {i} has no \"ph\" phase"))?;
+        if ph != "i" {
+            continue; // metadata records ("M") carry no timestamp
+        }
+        instants += 1;
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("instant event {i} has no \"name\""))?;
+        let tid = ev
+            .get("tid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("instant event {i} ({name}) has no numeric \"tid\""))?;
+        let tid = tid as i64;
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("instant event {i} ({name}) has no numeric \"ts\""))?;
+        if let Some(prev) = last_ts.insert(tid, ts) {
+            if ts < prev {
+                bail!(
+                    "event {i} ({name}) on tid {tid} goes back in time: \
+                     ts {ts} after {prev} (per-thread streams must be FIFO)"
+                );
+            }
+        }
+        if let Some(group) = group_of(name) {
+            *group_counts.entry(group).or_insert(0) += 1;
+        }
+    }
+
+    for group in &required {
+        let n = group_counts.get(group.as_str()).copied().unwrap_or(0);
+        if n == 0 {
+            bail!(
+                "required event group '{group}' is absent \
+                 (groups seen: {group_counts:?})"
+            );
+        }
+    }
+
+    let mut groups: Vec<_> = group_counts.iter().collect();
+    groups.sort();
+    println!(
+        "check_trace: OK — {} instant events on {} threads, groups {groups:?}",
+        instants,
+        last_ts.len()
+    );
+    Ok(())
+}
+
+/// `<path> [--require a,b,c]` — the groups map onto the event vocabulary
+/// of `parlin::obs::EventKind` (see `docs/OBSERVABILITY.md`).
+fn parse_args(args: &[String]) -> Result<(String, Vec<String>)> {
+    let mut path = None;
+    let mut required = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--require" => {
+                let list = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--require needs a comma-separated group list"))?;
+                for g in list.split(',').filter(|g| !g.is_empty()) {
+                    if group_names().iter().all(|(_, name)| *name != g) {
+                        bail!("unknown group '{g}' (known: job, epoch, publish, reject, drain)");
+                    }
+                    required.push(g.to_string());
+                }
+                i += 2;
+            }
+            p if path.is_none() => {
+                path = Some(p.to_string());
+                i += 1;
+            }
+            other => bail!("unexpected argument '{other}'"),
+        }
+    }
+    let path = path.ok_or_else(|| {
+        anyhow!("usage: check_trace <trace.json> [--require job,epoch,publish,reject,drain]")
+    })?;
+    Ok((path, required))
+}
+
+fn group_names() -> &'static [(&'static str, &'static str)] {
+    &[
+        ("job_enqueue", "job"),
+        ("job_start", "job"),
+        ("job_finish", "job"),
+        ("epoch_begin", "epoch"),
+        ("epoch_end", "epoch"),
+        ("snapshot_publish", "publish"),
+        ("admission_reject", "reject"),
+        ("ingest_drain", "drain"),
+    ]
+}
+
+fn group_of(event_name: &str) -> Option<&'static str> {
+    group_names().iter().find(|(ev, _)| *ev == event_name).map(|(_, g)| *g)
+}
+
+// ---------------------------------------------------------------------------
+// Minimal strict JSON value + recursive-descent parser. Rejects trailing
+// garbage, unterminated strings, bad escapes and malformed numbers — the
+// "well-formedness" half of the trace check.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            other => bail!("unexpected {other:?} at byte {}", self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            fields.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => bail!("expected ',' or '}}' at byte {}, found {other:?}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => bail!("expected ',' or ']' at byte {}, found {other:?}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| anyhow!("invalid \\u{code:04x} escape"))?;
+                            out.push(ch);
+                            self.pos += 4;
+                        }
+                        other => bail!("bad escape {other:?} at byte {}", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                Some(c) if c < 0x20 => {
+                    bail!("unescaped control byte 0x{c:02x} in string at byte {}", self.pos)
+                }
+                Some(_) => {
+                    // multi-byte UTF-8 sequences pass through untouched
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.bytes.get(self.pos).is_some_and(|b| b & 0xC0 == 0x80) {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        match s.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(e) => bail!("malformed number '{s}' at byte {start}: {e}"),
+        }
+    }
+}

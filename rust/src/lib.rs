@@ -39,6 +39,7 @@ pub mod data;
 pub mod figures;
 pub mod glm;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod simcost;

@@ -5,6 +5,7 @@
 //!                [--threads N] [--lambda X] [--tol X] [--max-epochs N]
 //!                [--bucket auto|off|K] [--partition dynamic|static]
 //!                [--objective logistic|ridge|hinge] [--seed N] [--csv out.csv]
+//!                [--trace out.json] [--metrics-interval S]
 //! parlin serve   --dataset <kind|file.libsvm> [--requests <script|synthetic>]
 //!                [--count N] [--predict-batch N] [--refit-rows N]
 //!                [--arrival-rate R --duration S --arrival-process poisson|fixed
@@ -22,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
+use parlin::obs::{MetricsTicker, ObsConfig, TraceSession, DEFAULT_RING_CAPACITY};
 use parlin::serve::ArrivalProcess;
 use parlin::solver::{
     train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
@@ -29,6 +31,7 @@ use parlin::solver::{
 use parlin::sysinfo::Topology;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -84,6 +87,13 @@ TRAIN OPTIONS:
   --n / --d     synthetic dataset size overrides
   --seed        RNG seed                              (default 42)
   --csv         write the per-epoch log to a CSV file
+
+OBSERVABILITY OPTIONS (train and serve):
+  --trace             record per-thread event rings for the whole run and
+                      write chrome://tracing JSON to this path (open it at
+                      chrome://tracing or ui.perfetto.dev)
+  --metrics-interval  print a metrics-registry snapshot table to stderr
+                      every S seconds while the run is live (S finite, > 0)
 
 SERVE OPTIONS (plus the train options above):
   --requests       'synthetic' or a request-script path   (default synthetic)
@@ -228,6 +238,64 @@ fn get_optional_positive_usize(
     }
 }
 
+/// The observability flags `train` and `serve` share: `--trace <path>`
+/// wraps the whole run in a [`TraceSession`] and writes chrome://tracing
+/// JSON when the run finishes; `--metrics-interval <s>` starts a
+/// [`MetricsTicker`] that prints a registry snapshot table to stderr every
+/// interval. Both default to off, leaving the hot paths on their no-op
+/// branch.
+struct ObsCli {
+    trace_path: Option<String>,
+    session: Option<TraceSession>,
+    ticker: Option<MetricsTicker>,
+}
+
+impl ObsCli {
+    /// Validate the flags and start whatever they ask for.
+    fn start(flags: &HashMap<String, String>) -> Result<ObsCli> {
+        let trace_path = match flags.get("trace").map(String::as_str) {
+            None => None,
+            // a bare `--trace` parses to "true"; both it and `--trace=`
+            // mean the path is missing
+            Some("") | Some("true") => {
+                bail!("--trace needs an output path (e.g. --trace trace.json)")
+            }
+            Some(p) => Some(p.to_string()),
+        };
+        let ticker = if flags.contains_key("metrics-interval") {
+            let secs = get_positive_f64(flags, "metrics-interval", 1.0)?;
+            Some(MetricsTicker::start(
+                Duration::from_secs_f64(secs),
+                |snap| eprint!("metrics tick:\n{}", snap.render_table()),
+            ))
+        } else {
+            None
+        };
+        let session = trace_path
+            .is_some()
+            .then(|| TraceSession::start(ObsConfig::on(DEFAULT_RING_CAPACITY)));
+        Ok(ObsCli { trace_path, session, ticker })
+    }
+
+    /// Stop the ticker, finish the trace session and write the JSON file.
+    fn finish(self) -> Result<()> {
+        if let Some(t) = self.ticker {
+            let _ = t.stop();
+        }
+        if let (Some(s), Some(path)) = (self.session, self.trace_path) {
+            let dump = s.finish();
+            dump.save_chrome_json(&path).with_context(|| format!("writing trace {path}"))?;
+            eprintln!(
+                "trace: {} events across {} threads ({} dropped) -> {path}",
+                dump.total_events(),
+                dump.threads.len(),
+                dump.total_dropped()
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Parse `--arrival-process` for open-loop serve mode.
 fn parse_arrival_process(flags: &HashMap<String, String>) -> Result<ArrivalProcess> {
     match flags
@@ -338,6 +406,14 @@ fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<So
 }
 
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let obs = ObsCli::start(flags)?;
+    let run = cmd_train_inner(flags);
+    // write the trace even when the run failed (it shows *where*), but
+    // report the run's error first
+    run.and(obs.finish())
+}
+
+fn cmd_train_inner(flags: &HashMap<String, String>) -> Result<()> {
     let ds = load_dataset(flags)?;
     let n = ds.n();
     let cfg = solver_cfg_from_flags(flags, n)?;
@@ -379,6 +455,12 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
 /// Stand up a resident serving session and replay a request stream
 /// against it (closed loop), then print latency and pool-load statistics.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let obs = ObsCli::start(flags)?;
+    let run = cmd_serve_inner(flags);
+    run.and(obs.finish())
+}
+
+fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
     let ds = load_dataset(flags)?;
     let n = ds.n();
     let cfg = solver_cfg_from_flags(flags, n)?;
@@ -834,6 +916,47 @@ mod tests {
         }
         let f = parse_flags(&args(&["--requests=trace.txt"])).unwrap();
         assert!(check_concurrent_requests_flag(&f).is_err());
+    }
+
+    #[test]
+    fn trace_flag_requires_a_path() {
+        for bad in [&["--trace"][..], &["--trace="][..]] {
+            let f = parse_flags(&args(bad)).unwrap();
+            let err = ObsCli::start(&f).unwrap_err();
+            assert!(err.to_string().contains("--trace needs an output path"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn metrics_interval_must_be_finite_and_positive() {
+        for bad in [
+            "--metrics-interval=0",
+            "--metrics-interval=-1",
+            "--metrics-interval=NaN",
+            "--metrics-interval=soon",
+        ] {
+            let f = parse_flags(&args(&[bad])).unwrap();
+            assert!(ObsCli::start(&f).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn obs_flags_default_off_and_trace_runs_a_session() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        let obs = ObsCli::start(&empty).unwrap();
+        assert!(obs.session.is_none() && obs.ticker.is_none());
+        obs.finish().unwrap();
+
+        let path = "/tmp/parlin-cli-trace-flag-test.json";
+        let flag = format!("--trace={path}");
+        let f = parse_flags(&args(&[flag.as_str()])).unwrap();
+        let obs = ObsCli::start(&f).unwrap();
+        assert!(parlin::obs::tracing_enabled());
+        obs.finish().unwrap();
+        assert!(!parlin::obs::tracing_enabled());
+        let json = std::fs::read_to_string(path).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -56,26 +56,137 @@ impl RunRecord {
         }
     }
 
-    /// Render as CSV (`epoch,wall_s,rel_change,gap,primal`).
+    /// Render as CSV ([`RunRecord::CSV_HEADER`]). The solver label is
+    /// RFC 4180-quoted — real labels contain commas (e.g.
+    /// `numa(2n,bucket=4)`), which previously sheared the column grid.
+    /// `gap`/`primal` emit as *empty* cells (never `NaN`) when absent or
+    /// non-finite, so downstream tooling can parse every cell as a float.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("epoch,wall_s,rel_change,gap,primal\n");
+        let mut s = String::from(Self::CSV_HEADER);
+        s.push('\n');
+        let solver = csv_field(&self.solver);
         for e in &self.epochs {
             let _ = writeln!(
                 s,
-                "{},{:.6e},{:.6e},{},{}",
+                "{},{},{},{:.6e},{:.6e},{},{}",
+                solver,
+                self.threads,
                 e.epoch,
                 e.wall_s,
                 e.rel_change,
-                e.gap.map(|g| format!("{g:.6e}")).unwrap_or_default(),
-                e.primal.map(|p| format!("{p:.6e}")).unwrap_or_default(),
+                finite_cell(e.gap),
+                finite_cell(e.primal),
             );
         }
         s
     }
 
+    /// Column names emitted by [`RunRecord::to_csv`].
+    pub const CSV_HEADER: &str = "solver,threads,epoch,wall_s,rel_change,gap,primal";
+
+    /// Parse a [`RunRecord::to_csv`] dump back into a record. Fields the
+    /// CSV does not carry (`converged`, `diverged`, `total_wall_s`) come
+    /// back as their defaults; everything serialized round-trips, including
+    /// quoted solver labels and empty `gap`/`primal` cells.
+    pub fn from_csv(csv: &str) -> Option<RunRecord> {
+        let mut lines = csv.lines();
+        if lines.next()? != Self::CSV_HEADER {
+            return None;
+        }
+        let mut solver = String::new();
+        let mut threads = 0usize;
+        let mut epochs = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let cells = split_csv_row(line);
+            if cells.len() != 7 {
+                return None;
+            }
+            solver.clone_from(&cells[0]);
+            threads = cells[1].parse().ok()?;
+            epochs.push(EpochStats {
+                epoch: cells[2].parse().ok()?,
+                wall_s: cells[3].parse().ok()?,
+                rel_change: cells[4].parse().ok()?,
+                gap: parse_cell(&cells[5])?,
+                primal: parse_cell(&cells[6])?,
+            });
+        }
+        Some(RunRecord {
+            solver,
+            threads,
+            epochs,
+            converged: false,
+            diverged: false,
+            total_wall_s: 0.0,
+        })
+    }
+
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_csv())
     }
+}
+
+/// RFC 4180 field quoting: wrap in double quotes (doubling any embedded
+/// quote) when the value contains a comma, quote or newline.
+fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// A float cell that is empty when the value is absent **or** non-finite —
+/// `NaN`/`inf` never reach the file.
+fn finite_cell(x: Option<f64>) -> String {
+    match x {
+        Some(v) if v.is_finite() => format!("{v:.6e}"),
+        _ => String::new(),
+    }
+}
+
+/// `Some(None)` for an empty cell, `Some(Some(v))` for a float, `None` on
+/// garbage.
+fn parse_cell(cell: &str) -> Option<Option<f64>> {
+    if cell.is_empty() {
+        Some(None)
+    } else {
+        cell.parse().ok().map(Some)
+    }
+}
+
+/// Split one CSV row honoring RFC 4180 quoting (the inverse of
+/// [`csv_field`] over a joined row).
+fn split_csv_row(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => out.push(std::mem::take(&mut cur)),
+                c => cur.push(c),
+            }
+        }
+    }
+    out.push(cur);
+    out
 }
 
 /// Fixed-width table printer for the figure harnesses (`println!`-style
@@ -162,8 +273,41 @@ mod tests {
         let r = record();
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 3);
-        assert!(csv.lines().nth(1).unwrap().starts_with("1,"));
+        assert_eq!(csv.lines().next().unwrap(), RunRecord::CSV_HEADER);
+        assert!(csv.lines().nth(1).unwrap().starts_with("seq,1,1,"));
         assert!(csv.contains("1.000000e-1"));
+    }
+
+    #[test]
+    fn csv_roundtrips_comma_labels_and_empty_cells() {
+        // a real NUMA label — it contains a comma and must be quoted, and
+        // the non-finite primal must land as an empty cell, not NaN
+        let mut r = record();
+        r.solver = "numa(2n,bucket=4)".into();
+        r.threads = 8;
+        r.epochs[0].primal = Some(f64::NAN);
+        let csv = r.to_csv();
+        assert!(csv.contains("\"numa(2n,bucket=4)\",8,"));
+        assert!(!csv.contains("NaN"));
+        let back = RunRecord::from_csv(&csv).expect("own output must parse");
+        assert_eq!(back.solver, r.solver);
+        assert_eq!(back.threads, r.threads);
+        assert_eq!(back.epochs.len(), r.epochs.len());
+        assert_eq!(back.epochs[0].gap, Some(0.1));
+        assert_eq!(back.epochs[0].primal, None, "NaN round-trips as absent");
+        assert_eq!(back.to_csv(), csv, "serialize → parse → serialize is a fixpoint");
+    }
+
+    #[test]
+    fn csv_quoting_helpers() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("a\"b"), "\"a\"\"b\"");
+        assert_eq!(split_csv_row("\"a,b\",1,,x"), vec!["a,b", "1", "", "x"]);
+        assert_eq!(split_csv_row("\"a\"\"b\",2"), vec!["a\"b", "2"]);
+        assert_eq!(finite_cell(None), "");
+        assert_eq!(finite_cell(Some(f64::INFINITY)), "");
+        assert_eq!(finite_cell(Some(0.5)), "5.000000e-1");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Leveled diagnostics: the [`diag!`](crate::diag) macro, the `PARLIN_LOG`
+//! gate, and a capture sink so tests assert on diagnostic *events* instead
+//! of scraping stderr.
+//!
+//! Call sites are cold control points (pool rebuilds, layout-cache misses,
+//! warm-start shape mismatches) — the message is formatted on every call,
+//! which is fine there and keeps the macro trivial. Routing:
+//!
+//! 1. when a [`DiagCapture`] is live, the record goes to its buffer and
+//!    stderr stays quiet (tests);
+//! 2. otherwise the record prints to stderr iff its level passes the
+//!    `PARLIN_LOG` threshold (`error` | `warn` | `info` | `debug`;
+//!    `off`/`0`/`none` silences everything; unset defaults to `warn`, so
+//!    the pre-existing rebuild warnings keep appearing by default).
+//!
+//! The env var is re-read per call — again fine on cold paths, and it lets
+//! a long-lived serve process be turned up without a restart-and-reproduce
+//! dance.
+
+use std::fmt;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Severity, ordered: `Error < Warn < Info < Debug`. A record prints when
+/// its level is ≤ the configured threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// One captured diagnostic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DiagRecord {
+    pub level: Level,
+    pub message: String,
+}
+
+/// Threshold from `PARLIN_LOG`; `None` means fully silent.
+fn env_threshold() -> Option<Level> {
+    match std::env::var("PARLIN_LOG") {
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            "off" | "0" | "none" | "" => None,
+            // an unrecognized value keeps the default rather than hiding
+            // diagnostics behind a typo
+            _ => Some(Level::Warn),
+        },
+        Err(_) => Some(Level::Warn),
+    }
+}
+
+/// Capture buffer; `Some` while a [`DiagCapture`] is live.
+static CAPTURE: Mutex<Option<Vec<DiagRecord>>> = Mutex::new(None);
+
+/// Serializes captures so concurrently running tests cannot interleave
+/// their records.
+static CAPTURE_SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// RAII capture of every diagnostic emitted while it is alive, process-
+/// wide (captures are mutually exclusive, like trace sessions). While
+/// capturing, nothing is printed.
+pub struct DiagCapture {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl DiagCapture {
+    pub fn start() -> DiagCapture {
+        let serial = lock_ignore_poison(&CAPTURE_SERIAL);
+        *lock_ignore_poison(&CAPTURE) = Some(Vec::new());
+        DiagCapture { _serial: serial }
+    }
+
+    /// Records captured so far, draining the buffer.
+    pub fn take(&self) -> Vec<DiagRecord> {
+        lock_ignore_poison(&CAPTURE).as_mut().map(std::mem::take).unwrap_or_default()
+    }
+}
+
+impl Drop for DiagCapture {
+    fn drop(&mut self) {
+        *lock_ignore_poison(&CAPTURE) = None;
+    }
+}
+
+/// The macro's runtime. Not called directly — use
+/// [`obs::diag!`](crate::diag).
+pub fn dispatch(level: Level, args: fmt::Arguments<'_>) {
+    let message = args.to_string();
+    {
+        let mut cap = lock_ignore_poison(&CAPTURE);
+        if let Some(buf) = cap.as_mut() {
+            buf.push(DiagRecord { level, message });
+            return;
+        }
+    }
+    if env_threshold().is_some_and(|t| level <= t) {
+        eprintln!("{message}");
+    }
+}
+
+/// Leveled diagnostic, e.g. `obs::diag!(Warn, "rebuilding pool: {why}")`.
+/// Levels are the [`obs::diag::Level`](crate::obs::diag::Level) variant
+/// names. Routing (capture sink, then `PARLIN_LOG`-gated stderr) is
+/// documented on [`obs::diag`](mod@crate::obs::diag).
+#[macro_export]
+macro_rules! diag {
+    ($level:ident, $($arg:tt)*) => {
+        $crate::obs::diag::dispatch(
+            $crate::obs::diag::Level::$level,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_collects_and_silences() {
+        let cap = DiagCapture::start();
+        crate::diag!(Warn, "rebuild {}", 42);
+        crate::obs::diag!(Info, "note");
+        let recs = cap.take();
+        assert_eq!(
+            recs,
+            vec![
+                DiagRecord { level: Level::Warn, message: "rebuild 42".into() },
+                DiagRecord { level: Level::Info, message: "note".into() },
+            ]
+        );
+        // drained: a second take is empty
+        assert!(cap.take().is_empty());
+    }
+
+    #[test]
+    fn levels_order_error_to_debug() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::Debug.name(), "debug");
+    }
+}

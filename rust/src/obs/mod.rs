@@ -1,0 +1,42 @@
+//! Observability: lock-free per-thread event tracing, a named-metric
+//! registry, leveled diagnostics, and their exporters.
+//!
+//! The paper's method is *measure the system, then fix what the
+//! measurement shows* — this module is the measuring instrument, built so
+//! that using it cannot change what it measures:
+//!
+//! * **Event tracing** ([`trace`], [`ring`]): instrumented sites call
+//!   [`emit`], which with tracing off is a single relaxed atomic load.
+//!   With a [`TraceSession`] live, each emitting thread — every
+//!   [`WorkerPool`](crate::solver::WorkerPool) worker, the solver
+//!   coordinator, the scheduler's refit and dispatcher threads — owns a
+//!   bounded SPSC [`EventRing`](ring::EventRing) of fixed-size
+//!   [`TraceEvent`]s; overflow is counted and dropped, never blocked on.
+//!   The hot path takes zero locks either way, which is why the three
+//!   determinism arguments of `docs/ARCHITECTURE.md` survive under
+//!   observation (asserted bit-wise by `rust/tests/obs.rs`). Dumps export
+//!   as `chrome://tracing` JSON via [`TraceDump`].
+//! * **Metrics** ([`registry`](mod@registry)): named [`Counter`]s,
+//!   [`Gauge`]s and log-bucketed [`Histogram`]s behind lock-free handles;
+//!   [`MetricsSnapshot`] is the frozen view that serve reports stamp and
+//!   the periodic [`MetricsTicker`] feeds to `--metrics-interval` (and,
+//!   next, the SySCD-style auto-tuner of ROADMAP item 2).
+//! * **Diagnostics** ([`diag`](mod@diag)): the [`diag!`](crate::diag)
+//!   macro replaces ad-hoc `eprintln!` on cold control points — leveled,
+//!   `PARLIN_LOG`-gated, and capturable in tests via
+//!   [`DiagCapture`](diag::DiagCapture).
+
+pub mod diag;
+pub mod registry;
+pub mod ring;
+pub mod trace;
+
+pub use registry::{registry, Counter, Gauge, Histogram, MetricsSnapshot, MetricsTicker, Registry};
+pub use trace::{
+    emit, now_ns, ring_count, tracing_enabled, EventKind, ObsConfig, TraceDump, TraceEvent,
+    TraceSession, CLASS_NONE, CLASS_READER, CLASS_WRITER, DEFAULT_RING_CAPACITY, MIN_RING_CAPACITY,
+};
+
+// Re-export the `diag!` macro at `obs::diag!` (macros and modules live in
+// different namespaces, so this coexists with the `diag` module above).
+pub use crate::diag;

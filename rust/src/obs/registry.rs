@@ -1,0 +1,470 @@
+//! Named-metric registry: counters, gauges and log-bucketed histograms
+//! with lock-free updates, plus the [`MetricsSnapshot`] view and the
+//! periodic [`MetricsTicker`] — the in-process feed the SySCD-style
+//! auto-tuner (ROADMAP open item 2) will consume.
+//!
+//! Handles are `Arc`-backed: get-or-create takes a short registry lock
+//! (control-point setup, once per name), after which every `inc`/`set`/
+//! `record` is a single atomic RMW on shared storage. Instrumented sites
+//! cache their handle outside hot loops; the registry itself is never
+//! locked per update.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Monotonically increasing event count.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depths, pending readers).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two bucket index for `v`: 0 holds the value 0, bucket `i ≥ 1`
+/// holds `[2^(i-1), 2^i)`. 65 buckets cover the full `u64` range.
+const HIST_BUCKETS: usize = 65;
+
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Representative value reported for a bucket (midpoint of its range).
+fn bucket_mid(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        let lo = 1u64 << (i - 1);
+        let hi = if i >= 64 { u64::MAX } else { 1u64 << i };
+        lo + (hi - lo) / 2
+    }
+}
+
+struct HistInner {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Log₂-bucketed histogram of `u64` samples (latencies in ns/µs, batch
+/// sizes). Recording is three relaxed RMWs; quantiles are approximate
+/// (bucket midpoint), which is exactly enough for a tuner or a trend line
+/// — exact report percentiles stay on [`crate::util::Percentiles`].
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram(Arc::new(HistInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn record(&self, v: u64) {
+        self.0.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the midpoint of the bucket where
+    /// the cumulative count crosses `q · count`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(HIST_BUCKETS - 1)
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// The process-wide metric namespace. Always on — registration and
+/// snapshots are cold control-point operations; updates are lock-free
+/// through the returned handles.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = lock_ignore_poison(&self.inner);
+        g.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = lock_ignore_poison(&self.inner);
+        g.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut g = lock_ignore_poison(&self.inner);
+        g.hists.entry(name.to_string()).or_insert_with(Histogram::new).clone()
+    }
+
+    /// Consistent-enough point-in-time view of every registered metric
+    /// (each value is read atomically; the set is read under the registry
+    /// lock).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = lock_ignore_poison(&self.inner);
+        MetricsSnapshot {
+            counters: g.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: g.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            hists: g
+                .hists
+                .iter()
+                .map(|(k, h)| HistSummary {
+                    name: k.clone(),
+                    count: h.count(),
+                    sum: h.sum(),
+                    p50: h.quantile(0.50),
+                    p90: h.quantile(0.90),
+                    p99: h.quantile(0.99),
+                })
+                .collect(),
+        }
+    }
+
+    /// Zero every registered value (names survive, handles stay valid) —
+    /// lets tests assert exact counts against the shared global registry.
+    pub fn reset(&self) {
+        let g = lock_ignore_poison(&self.inner);
+        for c in g.counters.values() {
+            c.0.store(0, Ordering::Relaxed);
+        }
+        for v in g.gauges.values() {
+            v.0.store(0, Ordering::Relaxed);
+        }
+        for h in g.hists.values() {
+            for b in &h.0.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+            h.0.count.store(0, Ordering::Relaxed);
+            h.0.sum.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The process-wide registry every instrumented layer shares.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Approximate summary of one histogram at snapshot time.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub name: String,
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+/// A frozen view of the registry: what reports stamp, what `--trace`-less
+/// CLI runs dump, and what the future auto-tuner will diff between ticks.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` pairs, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` pairs, sorted by name.
+    pub gauges: Vec<(String, u64)>,
+    /// Histogram summaries, sorted by name.
+    pub hists: Vec<HistSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Look up a counter by name (test + tuner convenience).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Look up a gauge by name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Look up a histogram summary by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSummary> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// True when nothing has been registered.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// CSV dump: `kind,name,value,count,sum,p50,p90,p99` (counter/gauge
+    /// rows leave the histogram columns empty).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("kind,name,value,count,sum,p50,p90,p99\n");
+        for (k, v) in &self.counters {
+            let _ = writeln!(s, "counter,{k},{v},,,,,");
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(s, "gauge,{k},{v},,,,,");
+        }
+        for h in &self.hists {
+            let _ = writeln!(
+                s,
+                "hist,{},,{},{},{},{},{}",
+                h.name, h.count, h.sum, h.p50, h.p90, h.p99
+            );
+        }
+        s
+    }
+
+    /// Fixed-width table (same printer the figure harnesses use).
+    pub fn render_table(&self) -> String {
+        let mut t = crate::metrics::Table::new(&[
+            "kind", "name", "value", "count", "sum", "p50", "p90", "p99",
+        ]);
+        let blank = String::new;
+        for (k, v) in &self.counters {
+            t.row(&[
+                "counter".into(),
+                k.clone(),
+                v.to_string(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+            ]);
+        }
+        for (k, v) in &self.gauges {
+            t.row(&[
+                "gauge".into(),
+                k.clone(),
+                v.to_string(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+            ]);
+        }
+        for h in &self.hists {
+            t.row(&[
+                "hist".into(),
+                h.name.clone(),
+                blank(),
+                h.count.to_string(),
+                h.sum.to_string(),
+                h.p50.to_string(),
+                h.p90.to_string(),
+                h.p99.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Background thread that takes a [`MetricsSnapshot`] of the global
+/// registry every `interval` and hands it to a callback — the
+/// `--metrics-interval` CLI flag and the auto-tuner's sampling loop.
+/// Stop (or drop) joins the thread and returns every snapshot taken.
+pub struct MetricsTicker {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Vec<MetricsSnapshot>>>,
+}
+
+impl MetricsTicker {
+    /// Snapshot the global registry every `interval`, calling `on_tick`
+    /// with each snapshot as it is taken.
+    pub fn start<F>(interval: Duration, mut on_tick: F) -> MetricsTicker
+    where
+        F: FnMut(&MetricsSnapshot) + Send + 'static,
+    {
+        assert!(interval > Duration::ZERO, "metrics interval must be positive");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("parlin-metrics-ticker".into())
+            .spawn(move || {
+                let mut taken = Vec::new();
+                // sleep in short slices so stop() returns promptly even
+                // with multi-second intervals
+                let slice = interval.min(Duration::from_millis(20));
+                let mut elapsed = Duration::ZERO;
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(slice);
+                    elapsed += slice;
+                    if elapsed >= interval {
+                        elapsed = Duration::ZERO;
+                        let snap = registry().snapshot();
+                        on_tick(&snap);
+                        taken.push(snap);
+                    }
+                }
+                taken
+            })
+            .expect("spawning the metrics ticker thread");
+        MetricsTicker { stop, handle: Some(handle) }
+    }
+
+    /// Signal the thread, join it, and return every snapshot it took.
+    pub fn stop(mut self) -> Vec<MetricsSnapshot> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for MetricsTicker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("a.jobs");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("a.jobs").get(), 5, "handles share storage");
+        let g = reg.gauge("a.depth");
+        g.set(7);
+        g.set(3);
+        assert_eq!(reg.gauge("a.depth").get(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        let reg = Registry::new();
+        let h = reg.histogram("lat");
+        for v in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 9 + 1000);
+        // p50 falls in the bucket holding 1; p99 in the one holding 1000
+        assert_eq!(h.quantile(0.5), 1);
+        assert!(h.quantile(0.99) >= 512);
+        assert_eq!(reg.histogram("empty").quantile(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_csv_and_table_carry_every_metric() {
+        let reg = Registry::new();
+        reg.counter("pub").add(2);
+        reg.gauge("pending").set(1);
+        reg.histogram("h").record(8);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("pub"), Some(2));
+        assert_eq!(snap.gauge("pending"), Some(1));
+        assert_eq!(snap.hist("h").unwrap().count, 1);
+        let csv = snap.to_csv();
+        assert!(csv.starts_with("kind,name,value,count,sum,p50,p90,p99\n"));
+        assert!(csv.contains("counter,pub,2,,,,,"));
+        assert!(csv.contains("gauge,pending,1,,,,,"));
+        assert!(csv.lines().any(|l| l.starts_with("hist,h,,1,8,")));
+        let table = snap.render_table();
+        assert!(table.contains("pending"));
+        assert_eq!(table.lines().count(), 2 + 3);
+    }
+
+    #[test]
+    fn reset_zeroes_but_keeps_handles_live() {
+        let reg = Registry::new();
+        let c = reg.counter("x");
+        c.add(9);
+        reg.reset();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        assert_eq!(reg.snapshot().counter("x"), Some(1));
+    }
+
+    #[test]
+    fn ticker_collects_snapshots() {
+        registry().counter("ticker.test").inc();
+        let t = MetricsTicker::start(Duration::from_millis(5), |_| {});
+        std::thread::sleep(Duration::from_millis(40));
+        let snaps = t.stop();
+        assert!(!snaps.is_empty());
+        assert!(snaps[0].counter("ticker.test").is_some());
+    }
+}

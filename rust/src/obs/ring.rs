@@ -1,0 +1,164 @@
+//! Bounded lock-free single-producer / single-consumer event ring.
+//!
+//! Each tracing thread owns exactly one [`EventRing`]: the owning thread is
+//! the only producer, and the session finisher (which holds the tracer's
+//! ring list) is the only consumer. Under that discipline every operation
+//! is a handful of relaxed/acquire-release atomics — no locks, no
+//! allocation, no blocking. When the ring is full the producer drops the
+//! event and counts it; tracing can therefore never stall a worker, which
+//! is one leg of the argument that observation cannot perturb the
+//! determinism guarantees (see `docs/OBSERVABILITY.md`).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::obs::trace::TraceEvent;
+
+/// Fixed-capacity SPSC ring of [`TraceEvent`]s. Overflow is counted and
+/// dropped — `push` never blocks and never allocates.
+pub struct EventRing {
+    buf: Box<[UnsafeCell<MaybeUninit<TraceEvent>>]>,
+    /// Next write position (monotonically increasing, producer-owned).
+    head: AtomicUsize,
+    /// Next read position (monotonically increasing, consumer-owned).
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: the producer writes only slots in `[tail, tail + capacity)` that
+// it has observed free via an Acquire load of `tail`, and publishes them
+// with a Release store of `head`; the consumer reads only slots below the
+// `head` it Acquire-loaded and frees them with a Release store of `tail`.
+// With one producer and one consumer the two sides never touch the same
+// slot concurrently, and `TraceEvent` is `Copy` (no drops to run).
+unsafe impl Send for EventRing {}
+unsafe impl Sync for EventRing {}
+
+impl EventRing {
+    /// A ring holding at most `capacity` undrained events.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "EventRing capacity must be positive");
+        let buf = (0..capacity)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        EventRing {
+            buf,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side: append `ev`, or count it as dropped when the ring is
+    /// full. Must only be called from the ring's owning thread.
+    pub fn push(&self, ev: TraceEvent) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.buf.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = head % self.buf.len();
+        // SAFETY: slot `idx` is below `tail + capacity`, so the consumer
+        // has released it (see the Sync justification above).
+        unsafe { (*self.buf[idx].get()).write(ev) };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side: pop every published event in FIFO order. Safe to run
+    /// concurrently with the producer (it simply stops at the currently
+    /// published `head`), but callers must serialize drains among
+    /// themselves — the session tracer does so under its ring-list lock.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        let mut out = Vec::with_capacity(head.wrapping_sub(tail));
+        while tail != head {
+            let idx = tail % self.buf.len();
+            // SAFETY: slot `idx` is below the Acquire-loaded `head`, so the
+            // producer's write to it has been published.
+            out.push(unsafe { (*self.buf[idx].get()).assume_init_read() });
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+        out
+    }
+
+    /// Number of events currently buffered (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Acquire).wrapping_sub(self.tail.load(Ordering::Acquire))
+    }
+
+    /// True when no events are buffered (racy snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events rejected because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The fixed capacity this ring was built with.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::EventKind;
+
+    fn ev(arg: u64) -> TraceEvent {
+        TraceEvent {
+            ts_ns: arg,
+            kind: EventKind::JobStart,
+            class: 0,
+            node: 0,
+            arg,
+        }
+    }
+
+    #[test]
+    fn fifo_roundtrip() {
+        let r = EventRing::new(8);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 5);
+        let out = r.drain();
+        assert_eq!(out.iter().map(|e| e.arg).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_counts_and_drops_without_blocking() {
+        let r = EventRing::new(4);
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        // the first `capacity` events survive; the rest are counted
+        assert_eq!(r.dropped(), 6);
+        let out = r.drain();
+        assert_eq!(out.iter().map(|e| e.arg).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn wraps_around_after_drain() {
+        let r = EventRing::new(4);
+        for i in 0..3 {
+            r.push(ev(i));
+        }
+        r.drain();
+        for i in 10..14 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped(), 0);
+        let out = r.drain();
+        assert_eq!(out.iter().map(|e| e.arg).collect::<Vec<_>>(), vec![10, 11, 12, 13]);
+    }
+}

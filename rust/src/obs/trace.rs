@@ -1,0 +1,531 @@
+//! The tracing core: per-thread SPSC event rings behind one global
+//! enable flag, an RAII [`TraceSession`], and the chrome-trace exporter.
+//!
+//! # Hot-path contract
+//!
+//! [`emit`] is the single entry point every instrumented site calls. With
+//! tracing off it is one relaxed atomic load and a branch — no locks, no
+//! allocation, no time-stamping; the compiler sees a `#[cold]` tail and
+//! keeps the instrumented loops tight. With tracing on, the emitting
+//! thread looks up its cached ring in a thread-local (re-registering with
+//! the live session's tracer only when the session generation changed) and
+//! pushes one fixed-size [`TraceEvent`] into its own lock-free
+//! [`EventRing`]. A full ring drops the event and bumps the ring's drop
+//! counter; emission never blocks, so observation cannot reorder or stall
+//! the computation it watches (the determinism argument is spelled out in
+//! `docs/OBSERVABILITY.md` and `docs/ARCHITECTURE.md`).
+//!
+//! # Sessions
+//!
+//! [`TraceSession::start`] installs a fresh tracer and holds a global
+//! session mutex for its lifetime, so concurrently running tests cannot
+//! observe each other's events; [`TraceSession::finish`] disables tracing,
+//! drains every registered ring and returns a [`TraceDump`] that can be
+//! inspected in-process or written as `chrome://tracing` JSON.
+
+use std::cell::RefCell;
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::obs::ring::EventRing;
+
+/// Smallest ring the session will build — the determinism-under-overflow
+/// tests run at exactly this size to force drops.
+pub const MIN_RING_CAPACITY: usize = 8;
+
+/// Default per-thread ring capacity (fixed-size events, so this is
+/// `DEFAULT_RING_CAPACITY * size_of::<TraceEvent>()` bytes per thread).
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// `class` tag for events not tied to a job class.
+pub const CLASS_NONE: u8 = 0;
+/// `class` tag for reader (predict-side) jobs.
+pub const CLASS_READER: u8 = 1;
+/// `class` tag for writer (train/refit-side) jobs.
+pub const CLASS_WRITER: u8 = 2;
+
+/// What happened. The five groups the trace validator checks for are:
+/// job lifecycle (`JobEnqueue`/`JobStart`/`JobFinish`), epochs
+/// (`EpochBegin`/`EpochEnd`), snapshot publishes, admission rejects, and
+/// ingest drains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A job was appended to a worker's queue (`arg` = batch slot index).
+    JobEnqueue,
+    /// A worker dequeued a job and is about to run it (`arg` = queue wait
+    /// in nanoseconds).
+    JobStart,
+    /// A job's closure returned (`arg` = busy time in nanoseconds).
+    JobFinish,
+    /// A solver began an epoch (`arg` = epoch number, 1-based).
+    EpochBegin,
+    /// A solver finished an epoch (`arg` = epoch number, 1-based).
+    EpochEnd,
+    /// The scheduler published a new model snapshot (`arg` = version).
+    SnapshotPublish,
+    /// An arrival was shed by admission control (`arg` = pending readers).
+    AdmissionReject,
+    /// The staging buffer was drained into a refit (`arg` = rows drained).
+    IngestDrain,
+}
+
+impl EventKind {
+    /// Every kind, in declaration order — handy for tally tables.
+    pub const ALL: [EventKind; 8] = [
+        EventKind::JobEnqueue,
+        EventKind::JobStart,
+        EventKind::JobFinish,
+        EventKind::EpochBegin,
+        EventKind::EpochEnd,
+        EventKind::SnapshotPublish,
+        EventKind::AdmissionReject,
+        EventKind::IngestDrain,
+    ];
+
+    /// Stable snake_case name used in the chrome-trace export and checked
+    /// by `examples/check_trace.rs`.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::JobEnqueue => "job_enqueue",
+            EventKind::JobStart => "job_start",
+            EventKind::JobFinish => "job_finish",
+            EventKind::EpochBegin => "epoch_begin",
+            EventKind::EpochEnd => "epoch_end",
+            EventKind::SnapshotPublish => "snapshot_publish",
+            EventKind::AdmissionReject => "admission_reject",
+            EventKind::IngestDrain => "ingest_drain",
+        }
+    }
+}
+
+/// One fixed-size, `Copy` trace record. 24 bytes; no heap payload, so a
+/// ring push is a plain memcpy into preallocated storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic nanoseconds since the process's trace origin.
+    pub ts_ns: u64,
+    pub kind: EventKind,
+    /// [`CLASS_NONE`], [`CLASS_READER`] or [`CLASS_WRITER`].
+    pub class: u8,
+    /// NUMA node tag for pool events; 0 elsewhere.
+    pub node: u16,
+    /// Kind-specific payload — see the [`EventKind`] variant docs.
+    pub arg: u64,
+}
+
+/// Session-level observability switch. `off()` is the default: the entire
+/// layer reduces to one relaxed load per instrumented site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Master switch; when false no ring is ever built or registered.
+    pub enabled: bool,
+    /// Per-thread ring capacity, clamped to [`MIN_RING_CAPACITY`].
+    pub ring_capacity: usize,
+}
+
+impl ObsConfig {
+    /// Tracing disabled — the zero-cost no-op path.
+    pub fn off() -> Self {
+        ObsConfig { enabled: false, ring_capacity: 0 }
+    }
+
+    /// Tracing enabled with per-thread rings of (at least) `ring_capacity`
+    /// events.
+    pub fn on(ring_capacity: usize) -> Self {
+        ObsConfig {
+            enabled: true,
+            ring_capacity: ring_capacity.max(MIN_RING_CAPACITY),
+        }
+    }
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig::off()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global tracer state
+// ---------------------------------------------------------------------------
+
+/// The one flag the hot path reads. Relaxed is enough: a thread that races
+/// a session boundary either skips an event or writes it into a ring that
+/// is about to be (or was just) drained — both harmless by design.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Bumped on every session install/teardown; thread-local ring caches are
+/// keyed on it so stale rings from a previous session are never reused.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+/// The live session's tracer. Locked only on the registration slow path
+/// (once per thread per session) and at session teardown — never per event.
+static TRACER: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+/// Serializes sessions: tests that trace cannot contaminate each other.
+static SESSION: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// (generation, ring) cache — the fast path after a thread's first
+    /// event in a session.
+    static RING: RefCell<Option<(u64, Arc<EventRing>)>> = const { RefCell::new(None) };
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Monotonic nanoseconds since the first trace timestamp this process
+/// took. Shared across threads so per-thread streams are comparable.
+pub fn now_ns() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// True while a tracing-enabled session is live.
+pub fn tracing_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Number of per-thread rings registered with the live session (0 when no
+/// session is live or tracing is off) — the zero-cost pool test asserts
+/// this stays 0 after dispatching work with `ObsConfig::off()`.
+pub fn ring_count() -> usize {
+    lock_ignore_poison(&TRACER).as_ref().map_or(0, |t| lock_ignore_poison(&t.rings).len())
+}
+
+/// Record one event. **The** instrumentation entry point: with tracing off
+/// this is a relaxed load and a predictable branch; with tracing on it
+/// timestamps the event and pushes it into the calling thread's own SPSC
+/// ring (registering the ring on the thread's first event of the session).
+#[inline]
+pub fn emit(kind: EventKind, class: u8, node: u16, arg: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    emit_enabled(kind, class, node, arg);
+}
+
+#[cold]
+fn emit_enabled(kind: EventKind, class: u8, node: u16, arg: u64) {
+    let generation = GENERATION.load(Ordering::Acquire);
+    let ev = TraceEvent { ts_ns: now_ns(), kind, class, node, arg };
+    // A TLS access can fail only during thread teardown; no instrumented
+    // site runs from a destructor, but stay silent rather than panic.
+    let _ = RING.try_with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some((cached_gen, ring)) = slot.as_ref() {
+            if *cached_gen == generation {
+                ring.push(ev);
+                return;
+            }
+        }
+        // Slow path: first event of this thread in this session (or a
+        // stale cache from a finished one) — register a fresh ring.
+        let tracer = lock_ignore_poison(&TRACER);
+        let Some(tracer) = tracer.as_ref() else {
+            *slot = None;
+            return;
+        };
+        let ring = tracer.register(thread_label());
+        ring.push(ev);
+        *slot = Some((generation, ring));
+    });
+}
+
+fn thread_label() -> String {
+    let cur = std::thread::current();
+    match cur.name() {
+        Some(n) => n.to_string(),
+        None => format!("thread-{:?}", cur.id()),
+    }
+}
+
+struct Tracer {
+    cfg: ObsConfig,
+    /// (thread label, ring) pairs in registration order. Locked on
+    /// registration (once per thread) and at drain time only.
+    rings: Mutex<Vec<(String, Arc<EventRing>)>>,
+}
+
+impl Tracer {
+    fn register(&self, label: String) -> Arc<EventRing> {
+        let ring = Arc::new(EventRing::new(self.cfg.ring_capacity));
+        lock_ignore_poison(&self.rings).push((label, Arc::clone(&ring)));
+        ring
+    }
+
+    fn drain(&self) -> TraceDump {
+        let rings = lock_ignore_poison(&self.rings);
+        let mut threads: Vec<ThreadTrace> = rings
+            .iter()
+            .map(|(label, ring)| ThreadTrace {
+                name: label.clone(),
+                events: ring.drain(),
+                dropped: ring.dropped(),
+            })
+            .collect();
+        threads.sort_by(|a, b| a.name.cmp(&b.name));
+        TraceDump { threads }
+    }
+}
+
+/// RAII handle over one tracing session. Holds the global session mutex
+/// for its whole lifetime (sessions — traced *or* deliberately-off, as in
+/// the zero-cost assertions — are mutually exclusive process-wide), and
+/// guarantees tracing is disabled again on drop even if the traced code
+/// panics.
+pub struct TraceSession {
+    _serial: MutexGuard<'static, ()>,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl TraceSession {
+    /// Install `cfg` as the live observability configuration. With
+    /// `cfg.enabled == false` this still takes the session mutex (so a
+    /// test can assert the no-op path without another test racing it) but
+    /// builds no tracer and leaves the hot path on its one-load branch.
+    pub fn start(cfg: ObsConfig) -> TraceSession {
+        let serial = lock_ignore_poison(&SESSION);
+        let tracer = cfg.enabled.then(|| {
+            let t = Arc::new(Tracer { cfg, rings: Mutex::new(Vec::new()) });
+            *lock_ignore_poison(&TRACER) = Some(Arc::clone(&t));
+            GENERATION.fetch_add(1, Ordering::Release);
+            ENABLED.store(true, Ordering::Release);
+            t
+        });
+        TraceSession { _serial: serial, tracer }
+    }
+
+    /// Disable tracing, drain every registered ring and return the dump.
+    pub fn finish(mut self) -> TraceDump {
+        self.disable();
+        match self.tracer.take() {
+            Some(t) => t.drain(),
+            None => TraceDump::default(),
+        }
+    }
+
+    fn disable(&self) {
+        ENABLED.store(false, Ordering::Release);
+        *lock_ignore_poison(&TRACER) = None;
+        GENERATION.fetch_add(1, Ordering::Release);
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        self.disable();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dump + chrome-trace export
+// ---------------------------------------------------------------------------
+
+/// All events of one thread, in emission (and therefore timestamp) order.
+#[derive(Clone, Debug)]
+pub struct ThreadTrace {
+    /// The emitting thread's name (pool workers are named
+    /// `parlin-pool-n{node}-w{worker}` at spawn).
+    pub name: String,
+    pub events: Vec<TraceEvent>,
+    /// Events lost to ring overflow on this thread.
+    pub dropped: u64,
+}
+
+/// Everything a finished [`TraceSession`] recorded, grouped per thread and
+/// sorted by thread name for deterministic output.
+#[derive(Clone, Debug, Default)]
+pub struct TraceDump {
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl TraceDump {
+    /// Total recorded events across all threads.
+    pub fn total_events(&self) -> usize {
+        self.threads.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Total events lost to ring overflow across all threads.
+    pub fn total_dropped(&self) -> u64 {
+        self.threads.iter().map(|t| t.dropped).sum()
+    }
+
+    /// How many events of `kind` were recorded.
+    pub fn count_of(&self, kind: EventKind) -> u64 {
+        self.threads.iter().flat_map(|t| &t.events).filter(|e| e.kind == kind).count() as u64
+    }
+
+    /// Serialize as `chrome://tracing` / Perfetto-compatible JSON: one
+    /// metadata record naming each tid, then every event as an instant
+    /// event (`"ph":"i"`) with microsecond timestamps and the class/node/
+    /// arg payload under `"args"`.
+    pub fn write_chrome_json<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        writeln!(w, "{{\"traceEvents\":[")?;
+        let mut first = true;
+        for (tid, t) in self.threads.iter().enumerate() {
+            sep(w, &mut first)?;
+            write!(
+                w,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                tid,
+                escape_json(&t.name)
+            )?;
+        }
+        for (tid, t) in self.threads.iter().enumerate() {
+            for e in &t.events {
+                sep(w, &mut first)?;
+                write!(
+                    w,
+                    "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\
+                     \"ts\":{:.3},\"args\":{{\"class\":{},\"node\":{},\"arg\":{}}}}}",
+                    e.kind.name(),
+                    tid,
+                    e.ts_ns as f64 / 1000.0,
+                    e.class,
+                    e.node,
+                    e.arg
+                )?;
+            }
+        }
+        writeln!(w, "\n],\"displayTimeUnit\":\"ms\"}}")
+    }
+
+    /// [`write_chrome_json`](TraceDump::write_chrome_json) into a `String`.
+    pub fn to_chrome_json(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_chrome_json(&mut buf).expect("writing to a Vec cannot fail");
+        String::from_utf8(buf).expect("chrome trace JSON is ASCII-escaped UTF-8")
+    }
+
+    /// Write the chrome-trace JSON to `path` (what `--trace` uses).
+    pub fn save_chrome_json(&self, path: &str) -> io::Result<()> {
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_chrome_json(&mut f)
+    }
+}
+
+fn sep<W: Write>(w: &mut W, first: &mut bool) -> io::Result<()> {
+    if *first {
+        *first = false;
+        Ok(())
+    } else {
+        writeln!(w, ",")
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Other tests in this binary run concurrently and may emit while our
+    /// session is live; scope assertions to this test thread's own ring.
+    fn my_thread(dump: &TraceDump) -> (Vec<TraceEvent>, u64) {
+        let me = std::thread::current().name().unwrap_or("").to_string();
+        let mut events = Vec::new();
+        let mut dropped = 0;
+        for t in dump.threads.iter().filter(|t| t.name == me) {
+            events.extend(t.events.iter().copied());
+            dropped += t.dropped;
+        }
+        (events, dropped)
+    }
+
+    #[test]
+    fn emit_without_session_is_a_no_op() {
+        let _s = TraceSession::start(ObsConfig::off());
+        emit(EventKind::EpochBegin, CLASS_NONE, 0, 1);
+        assert!(!tracing_enabled());
+        assert_eq!(ring_count(), 0);
+    }
+
+    #[test]
+    fn session_records_and_finish_disables() {
+        let s = TraceSession::start(ObsConfig::on(64));
+        assert!(tracing_enabled());
+        emit(EventKind::SnapshotPublish, CLASS_NONE, 0, 7);
+        emit(EventKind::AdmissionReject, CLASS_READER, 0, 3);
+        let dump = s.finish();
+        assert!(!tracing_enabled());
+        let (events, dropped) = my_thread(&dump);
+        assert_eq!(
+            events.iter().map(|e| e.kind).collect::<Vec<_>>(),
+            vec![EventKind::SnapshotPublish, EventKind::AdmissionReject]
+        );
+        assert_eq!(events[0].arg, 7);
+        assert_eq!(events[1].class, CLASS_READER);
+        assert_eq!(dropped, 0);
+        // events from one thread carry nondecreasing timestamps
+        for t in &dump.threads {
+            for pair in t.events.windows(2) {
+                assert!(pair[0].ts_ns <= pair[1].ts_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_only_bumps_the_drop_counter() {
+        let s = TraceSession::start(ObsConfig::on(MIN_RING_CAPACITY));
+        for i in 0..(MIN_RING_CAPACITY as u64 + 5) {
+            emit(EventKind::EpochBegin, CLASS_NONE, 0, i);
+        }
+        let dump = s.finish();
+        let (events, dropped) = my_thread(&dump);
+        assert_eq!(events.len(), MIN_RING_CAPACITY);
+        assert_eq!(dropped, 5);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let s = TraceSession::start(ObsConfig::on(64));
+        emit(EventKind::EpochBegin, CLASS_NONE, 0, 1);
+        emit(EventKind::EpochEnd, CLASS_NONE, 0, 1);
+        let json = s.finish().to_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("\"epoch_begin\""));
+        assert!(json.contains("\"epoch_end\""));
+        assert!(json.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn stale_thread_cache_reregisters_on_new_session() {
+        {
+            let s = TraceSession::start(ObsConfig::on(64));
+            emit(EventKind::EpochBegin, CLASS_NONE, 0, 1);
+            let d = s.finish();
+            assert_eq!(my_thread(&d).0.len(), 1);
+        }
+        // the TLS cache still holds the old ring; a new session must not
+        // see events routed into it
+        let s = TraceSession::start(ObsConfig::on(64));
+        emit(EventKind::EpochEnd, CLASS_NONE, 0, 2);
+        let d = s.finish();
+        let (events, _) = my_thread(&d);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, EventKind::EpochEnd);
+    }
+
+    #[test]
+    fn json_escaping_handles_quotes_and_controls() {
+        assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+}

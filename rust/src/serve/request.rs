@@ -18,10 +18,11 @@
 //! signal.
 
 use crate::data::{synthetic, AppendExamples, CscMatrix, Dataset, DenseMatrix};
+use crate::obs;
 use crate::serve::scheduler::{PredictAdmission, SchedReport, Scheduler};
 use crate::serve::session::Session;
 use crate::solver::QueueDelayReport;
-use crate::util::{percentile, Rng, Timer};
+use crate::util::{Percentiles, Rng, Timer};
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -157,6 +158,9 @@ pub struct ServeReport {
     /// predict shards vs writer refit rounds) — the queueing that a
     /// closed-loop latency log alone cannot see.
     pub queue_delay: QueueDelayReport,
+    /// Frozen [`obs::registry`] view as of the end of the run — counters,
+    /// gauges and histogram summaries across pool, solver and scheduler.
+    pub metrics: obs::MetricsSnapshot,
 }
 
 impl ServeReport {
@@ -170,11 +174,12 @@ impl ServeReport {
             if xs.is_empty() {
                 return format!("  {name:<8} {:>6} reqs\n", 0);
             }
+            let p = Percentiles::of(xs);
             format!(
                 "  {name:<8} {:>6} reqs  p50 {:>9.3} ms  p99 {:>9.3} ms\n",
                 xs.len(),
-                percentile(xs, 50.0) * 1e3,
-                percentile(xs, 99.0) * 1e3
+                p.p50() * 1e3,
+                p.p99() * 1e3
             )
         }
         let mut s = String::new();
@@ -237,6 +242,7 @@ pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -
     }
     report.total_wall_s = total.elapsed_s();
     report.queue_delay = QueueDelayReport::from_stats(&sess.pool_stats()).since(&delay_mark);
+    report.metrics = obs::registry().snapshot();
     report
 }
 
@@ -329,6 +335,7 @@ where
     let mut report = sched.report();
     report.total_wall_s = total.elapsed_s();
     report.queue_delay = QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark);
+    report.metrics = obs::registry().snapshot();
     report
 }
 
@@ -470,17 +477,17 @@ impl OpenLoopKindStats {
 
     /// p50 total latency in seconds; 0 when no request completed.
     pub fn p50_s(&self) -> f64 {
-        percentile(&self.latency_s, 50.0)
+        Percentiles::of(&self.latency_s).p50()
     }
 
     /// p99 total latency in seconds; 0 when no request completed.
     pub fn p99_s(&self) -> f64 {
-        percentile(&self.latency_s, 99.0)
+        Percentiles::of(&self.latency_s).p99()
     }
 
     /// Worst total latency in seconds; 0 when no request completed.
     pub fn max_s(&self) -> f64 {
-        self.latency_s.iter().fold(0.0f64, |a, &b| a.max(b))
+        Percentiles::of(&self.latency_s).max()
     }
 
     fn merge(&mut self, other: OpenLoopKindStats) {
@@ -492,14 +499,15 @@ impl OpenLoopKindStats {
         if self.latency_s.is_empty() {
             return format!("  {name:<8} {:>6} reqs\n", 0);
         }
+        let lat = Percentiles::of(&self.latency_s);
         format!(
             "  {name:<8} {:>6} reqs  p50 {:>9.3} ms  p99 {:>9.3} ms  max {:>9.3} ms  \
              (dispatch delay p99 {:>8.3} ms)\n",
             self.count(),
-            self.p50_s() * 1e3,
-            self.p99_s() * 1e3,
-            self.max_s() * 1e3,
-            percentile(&self.dispatch_delay_s, 99.0) * 1e3
+            lat.p50() * 1e3,
+            lat.p99() * 1e3,
+            lat.max() * 1e3,
+            Percentiles::of(&self.dispatch_delay_s).p99() * 1e3
         )
     }
 }
@@ -540,6 +548,8 @@ pub struct OpenLoopReport {
     /// Per-class pool queue delay over the run window.
     pub queue_delay: QueueDelayReport,
     pub total_wall_s: f64,
+    /// Frozen [`obs::registry`] view as of the end of the run.
+    pub metrics: obs::MetricsSnapshot,
     /// Per-request records (only under [`OpenLoopConfig::record_outcomes`]).
     pub outcomes: Vec<OpenLoopOutcome>,
 }
@@ -723,6 +733,7 @@ where
         ingested_rows: all.ingested_rows,
         queue_delay: QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark),
         total_wall_s: wall.elapsed_s(),
+        metrics: obs::registry().snapshot(),
         outcomes: all.outcomes,
     }
 }

@@ -83,10 +83,11 @@
 
 use crate::data::{AppendExamples, Dataset};
 use crate::glm::GapReport;
+use crate::obs::{self, EventKind};
 use crate::serve::session::{RefitReport, Session};
 use crate::serve::snapshot::ModelSnapshot;
 use crate::solver::{PoolStats, QueueDelayReport, WorkerPool};
-use crate::util::percentile;
+use crate::util::Percentiles;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -204,6 +205,10 @@ pub struct SchedReport {
     pub queue_delay: QueueDelayReport,
     /// Filled by the closed-loop driver.
     pub total_wall_s: f64,
+    /// Frozen [`obs::registry`] view, stamped by the storm driver
+    /// ([`drive_concurrent`](crate::serve::drive_concurrent)); empty for a
+    /// bare `report()` call.
+    pub metrics: obs::MetricsSnapshot,
 }
 
 impl SchedReport {
@@ -211,21 +216,22 @@ impl SchedReport {
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for v in &self.per_version {
+            let lat = Percentiles::of(&v.predict_s);
             s.push_str(&format!(
                 "  version {:>3}: {:>6} predicts  p50 {:>9.3} ms  p99 {:>9.3} ms\n",
                 v.version,
                 v.predict_s.len(),
-                percentile(&v.predict_s, 50.0) * 1e3,
-                percentile(&v.predict_s, 99.0) * 1e3,
+                lat.p50() * 1e3,
+                lat.p99() * 1e3,
             ));
         }
         if !self.snapshot_age_s.is_empty() {
-            let max = self.snapshot_age_s.iter().fold(0.0f64, |a, &b| a.max(b));
+            let ages = Percentiles::of(&self.snapshot_age_s);
             s.push_str(&format!(
                 "  snapshot age: p50 {:>8.1} ms  p99 {:>8.1} ms  max {:>8.1} ms\n",
-                percentile(&self.snapshot_age_s, 50.0) * 1e3,
-                percentile(&self.snapshot_age_s, 99.0) * 1e3,
-                max * 1e3,
+                ages.p50() * 1e3,
+                ages.p99() * 1e3,
+                ages.max() * 1e3,
             ));
         }
         s.push_str(&format!(
@@ -341,6 +347,8 @@ impl<M: AppendExamples + Send> Shared<M> {
     fn run_staged_refit(&self) -> Option<RefitReport> {
         let mut sess = self.session.lock().unwrap();
         let batch = self.take_batch()?;
+        obs::emit(EventKind::IngestDrain, obs::CLASS_WRITER, 0, batch.n() as u64);
+        obs::registry().counter("sched.staged_drains").inc();
         let report = sess.partial_fit_rows(&batch);
         self.metrics.lock().unwrap().staged_drains += 1;
         self.publish(&sess, report.kind);
@@ -358,6 +366,8 @@ impl<M: AppendExamples + Send> Shared<M> {
         self.published_n.store(g.snap.n(), Ordering::Relaxed);
         drop(g);
         self.metrics.lock().unwrap().publishes += 1;
+        obs::emit(EventKind::SnapshotPublish, obs::CLASS_WRITER, 0, version);
+        obs::registry().counter("sched.publishes").inc();
         version
     }
 
@@ -490,6 +500,8 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         loop {
             if self.shared.cfg.max_pending.is_some_and(|cap| current >= cap) {
                 self.shared.metrics.lock().unwrap().rejected += 1;
+                obs::emit(EventKind::AdmissionReject, obs::CLASS_READER, 0, current as u64);
+                obs::registry().counter("sched.rejected").inc();
                 return PredictAdmission::Rejected { pending: current };
             }
             match gauge.compare_exchange(current, current + 1, Ordering::SeqCst, Ordering::SeqCst)
@@ -676,6 +688,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             rejected_predicts: m.rejected,
             queue_delay: QueueDelayReport::default(),
             total_wall_s: 0.0,
+            metrics: obs::MetricsSnapshot::default(),
         }
     }
 

@@ -243,7 +243,8 @@ impl<M: AppendExamples> Session<M> {
         cfg.topology = Some(self.topo.clone());
         let want = cfg.threads.max(1);
         if want != self.pool.workers() {
-            eprintln!(
+            crate::diag!(
+                Warn,
                 "parlin serve: retrain wants {want} workers, session pool has {}; \
                  rebuilding the resident pool",
                 self.pool.workers()
@@ -285,6 +286,11 @@ impl<M: AppendExamples> Session<M> {
             .as_ref()
             .is_some_and(|l| l.matches_nodes(n, d, nnz, bucket_size, &ranges));
         if !hit {
+            crate::diag!(
+                Info,
+                "parlin serve: per-node layout cache miss (n={n}, bucket={bucket_size}); \
+                 re-encoding {nnz} entries"
+            );
             self.node_layout = Some(Arc::new(ShardedLayout::for_nodes(
                 &self.ds.x,
                 &buckets,
@@ -514,13 +520,23 @@ mod tests {
 
     #[test]
     fn retrain_rebuilds_pool_on_thread_change() {
+        use crate::obs::diag::{DiagCapture, Level};
         let ds = synthetic::dense_classification(120, 5, 45);
         let mut sess = Session::new(ds, cfg(120, 2));
         assert_eq!(sess.workers(), 2);
+        let cap = DiagCapture::start();
         let r = sess.retrain(cfg(120, 3));
+        let recs = cap.take();
+        drop(cap);
         assert_eq!(sess.workers(), 3);
         assert!(r.converged);
         assert_eq!(sess.stats().retrains, 1);
+        // the rebuild announced itself through the diag channel, not by
+        // writing to stderr behind the capture's back
+        let hit = recs
+            .iter()
+            .any(|d| d.level == Level::Warn && d.message.contains("rebuilding the resident pool"));
+        assert!(hit, "expected a Warn diag about the pool rebuild, got {recs:?}");
         // the rebuilt pool serves predicts too
         assert_eq!(sess.predict(&[0, 1]).len(), 2);
     }

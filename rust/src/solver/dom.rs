@@ -21,6 +21,7 @@ use crate::data::shard::{RunLayout, Shard};
 use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::{ModelState, Objective};
 use crate::metrics::{EpochStats, RunRecord};
+use crate::obs::{self, EventKind};
 use crate::solver::exec::Executor;
 use crate::solver::seq::sdca_delta_at;
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
@@ -177,8 +178,11 @@ pub fn train_domesticated_exec<M: DataMatrix>(
     } else {
         0.0f64
     };
+    let epoch_ctr = obs::registry().counter("solver.epochs");
+    let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
+        obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
         // snapshot for possible backtracking
         let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
         let n_eff = ((n as f64 / sigma).round() as usize).max(1);
@@ -244,13 +248,17 @@ pub fn train_domesticated_exec<M: DataMatrix>(
         } else {
             None
         };
+        let wall_s = t.elapsed_s();
         epochs.push(EpochStats {
             epoch,
-            wall_s: t.elapsed_s(),
+            wall_s,
             rel_change: rel,
             gap,
             primal: None,
         });
+        epoch_ctr.inc();
+        epoch_wall_us.record((wall_s * 1e6) as u64);
+        obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
         if mon.converged() || gap.map(|g| g < cfg.gap_tol.unwrap()).unwrap_or(false) {
             converged = true;
             break;

@@ -153,7 +153,8 @@ impl ExecPolicy {
                 if pool.workers() == threads {
                     Executor::Shared(Arc::clone(pool))
                 } else {
-                    eprintln!(
+                    crate::diag!(
+                        Warn,
                         "parlin: shared pool has {} workers but the run wants {threads}; \
                          building a run-scoped pool (rebuild-on-mismatch)",
                         pool.workers()
@@ -246,6 +247,20 @@ mod tests {
             Executor::Pool(p) => assert_eq!(p.workers(), 2, "rebuilt pool must match the run"),
             other => panic!("expected a run-scoped rebuild, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn rebuild_on_mismatch_warns_through_diag() {
+        use crate::obs::diag::{DiagCapture, Level};
+        let cap = DiagCapture::start();
+        let topo = Topology::flat(4);
+        let pool = Arc::new(WorkerPool::new(4, &topo));
+        let _ = ExecPolicy::Shared(pool).build(2, &topo);
+        let recs = cap.take();
+        let hit = recs
+            .iter()
+            .any(|r| r.level == Level::Warn && r.message.contains("rebuild-on-mismatch"));
+        assert!(hit, "expected a Warn diag about the pool rebuild, got {recs:?}");
     }
 
     #[test]

@@ -270,12 +270,14 @@ impl SolverConfig {
 /// Resolve a run's starting [`ModelState`]: the configured warm start when
 /// its shape matches the dataset, otherwise a cold `α = 0` start. A
 /// mismatched warm state (e.g. examples were appended without extending
-/// `α`) is rejected loudly on stderr instead of corrupting the run.
+/// `α`) is rejected loudly (a `Warn`-level [`diag!`](crate::diag)) instead
+/// of corrupting the run.
 pub(crate) fn initial_state<M: DataMatrix>(cfg: &SolverConfig, ds: &Dataset<M>) -> ModelState {
     match &cfg.warm_start {
         Some(ws) if ws.alpha.len() == ds.n() && ws.v.len() == ds.d() => ws.clone(),
         Some(ws) => {
-            eprintln!(
+            crate::diag!(
+                Warn,
                 "parlin: warm-start shape ({} examples, {} features) does not match the \
                  dataset ({}, {}); cold-starting",
                 ws.alpha.len(),

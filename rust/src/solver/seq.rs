@@ -6,6 +6,7 @@ use crate::data::shard::RunLayout;
 use crate::data::{ColCursor, DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::Objective;
 use crate::metrics::{EpochStats, RunRecord};
+use crate::obs::{self, EventKind};
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::{Rng, Timer};
 
@@ -91,8 +92,11 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     let total = Timer::start();
     let mut epochs = Vec::new();
     let mut converged = false;
+    let epoch_ctr = obs::registry().counter("solver.epochs");
+    let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
+        obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
         rng.shuffle(&mut ids);
         for (i, &b) in ids.iter().enumerate() {
             // overlap the next bucket's memory fetch with this bucket's
@@ -136,13 +140,17 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
         } else {
             None
         };
+        let wall_s = t.elapsed_s();
         epochs.push(EpochStats {
             epoch,
-            wall_s: t.elapsed_s(),
+            wall_s,
             rel_change: rel,
             gap,
             primal: None,
         });
+        epoch_ctr.inc();
+        epoch_wall_us.record((wall_s * 1e6) as u64);
+        obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
         if mon.converged() || gap.map(|g| g < cfg.gap_tol.unwrap()).unwrap_or(false) {
             converged = true;
             break;

@@ -18,6 +18,7 @@ use crate::data::shard::RunLayout;
 use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
+use crate::obs::{self, EventKind};
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::atomic::{atomic_vec, padded_atomic_vec, snapshot, AtomicF64, PaddedAtomicF64};
 use crate::util::{Rng, Timer};
@@ -74,8 +75,11 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     let mut epochs = Vec::new();
     let mut converged = false;
     let mut diverged = false;
+    let epoch_ctr = obs::registry().counter("solver.epochs");
+    let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
+        obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
         // Sequential shuffle — deliberately so; its serial cost is one of
         // the scalability bottlenecks the paper measures (Fig. 2a).
         rng.shuffle(&mut perm);
@@ -135,13 +139,17 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         exec.run(jobs);
         let a_snap = snapshot(&alpha);
         let rel = mon.observe(&a_snap);
+        let wall_s = t.elapsed_s();
         epochs.push(EpochStats {
             epoch,
-            wall_s: t.elapsed_s(),
+            wall_s,
             rel_change: rel,
             gap: None,
             primal: None,
         });
+        epoch_ctr.inc();
+        epoch_wall_us.record((wall_s * 1e6) as u64);
+        obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
         if mon.diverged(&a_snap) {
             diverged = true;
             break;

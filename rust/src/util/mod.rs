@@ -12,7 +12,7 @@ pub mod timer;
 
 pub use atomic::{AtomicF64, PaddedAtomicF64};
 pub use rng::Rng;
-pub use stats::{geomean, mean, percentile, stddev};
+pub use stats::{geomean, mean, percentile, stddev, Percentiles};
 pub use timer::Timer;
 
 /// The ONE 4-chain dot reduction: `Σ x_k·y_k` over `n` product pairs

@@ -27,20 +27,74 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Linear-interpolated percentile, `p` in `[0, 100]`.
+/// Linear-interpolated percentile, `p` in `[0, 100]`. One-shot form of
+/// [`Percentiles`] — sorts per call, so use `Percentiles` when reading
+/// several quantiles of the same sample.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    Percentiles::of(xs).p(p)
+}
+
+/// A sorted sample supporting repeated percentile queries — **the** shared
+/// implementation behind every latency/age summary (closed-loop and
+/// open-loop serve reports, scheduler snapshot ages), replacing the
+/// previously duplicated per-report sorts. Sorts once at construction;
+/// each query is two index reads and a linear interpolation.
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Sort a copy of `xs` (NaNs must not be present — samples are wall
+    /// times and ages, which are finite by construction).
+    pub fn of(xs: &[f64]) -> Self {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles { sorted }
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (s.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        s[lo]
-    } else {
-        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+
+    /// Linear-interpolated percentile, `p` in `[0, 100]`; 0 when empty.
+    pub fn p(&self, p: f64) -> f64 {
+        let s = &self.sorted;
+        if s.is_empty() {
+            return 0.0;
+        }
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.p(50.0)
+    }
+
+    /// 99th percentile (the serving tail metric).
+    pub fn p99(&self) -> f64 {
+        self.p(99.0)
+    }
+
+    /// Smallest sample; 0 when empty.
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0)
+    }
+
+    /// Largest sample; 0 when empty.
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
     }
 }
 
@@ -74,5 +128,57 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_empty_input() {
+        let p = Percentiles::of(&[]);
+        assert!(p.is_empty());
+        assert_eq!(p.count(), 0);
+        assert_eq!(p.p(0.0), 0.0);
+        assert_eq!(p.p50(), 0.0);
+        assert_eq!(p.p99(), 0.0);
+        assert_eq!(p.min(), 0.0);
+        assert_eq!(p.max(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_single_element() {
+        let p = Percentiles::of(&[3.5]);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.p(0.0), 3.5);
+        assert_eq!(p.p50(), 3.5);
+        assert_eq!(p.p99(), 3.5);
+        assert_eq!(p.min(), 3.5);
+        assert_eq!(p.max(), 3.5);
+    }
+
+    #[test]
+    fn percentiles_even_length_interpolates() {
+        // unsorted on purpose — construction sorts
+        let p = Percentiles::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(p.min(), 1.0);
+        assert_eq!(p.max(), 4.0);
+        assert!((p.p50() - 2.5).abs() < 1e-12);
+        assert!((p.p(25.0) - 1.75).abs() < 1e-12);
+        // p99 sits between the last two order statistics
+        assert!((p.p99() - (3.0 + 0.97 * 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_odd_length_hits_middle_exactly() {
+        let p = Percentiles::of(&[5.0, 1.0, 3.0]);
+        assert_eq!(p.p50(), 3.0);
+        assert_eq!(p.p(0.0), 1.0);
+        assert_eq!(p.p(100.0), 5.0);
+    }
+
+    #[test]
+    fn percentiles_match_one_shot_percentile() {
+        let xs = [0.2, 0.9, 0.4, 0.7, 0.1];
+        let p = Percentiles::of(&xs);
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(p.p(q), percentile(&xs, q));
+        }
     }
 }

@@ -1,0 +1,127 @@
+//! Determinism under observation: turning the tracing layer on — even at
+//! the smallest possible ring size, where most events are dropped on the
+//! floor — must not change a single bit of the trained model. Observation
+//! is pull-only: workers push fixed-size events into their own SPSC rings
+//! and nothing on the training path ever waits on, reads from, or branches
+//! on observability state (beyond the one enable check). These tests are
+//! the pool_equivalence-style proof of that contract.
+//!
+//! Note on sharing: the trace session is process-global and tests in this
+//! binary run concurrently, so event-count assertions are lower bounds —
+//! a concurrently running test may emit into the live session. Model-bit
+//! assertions need no such care.
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::obs::{EventKind, ObsConfig, TraceSession, MIN_RING_CAPACITY};
+use parlin::solver::exec::Executor;
+use parlin::solver::pool::WorkerPool;
+use parlin::solver::{dom, numa, SolverConfig};
+use parlin::sysinfo::Topology;
+
+/// Fixed-epoch config so trajectories (not just fixed points) must agree.
+fn fixed_epochs(n: usize, threads: usize, epochs: usize) -> SolverConfig {
+    SolverConfig::new(Objective::Logistic { lambda: 1.0 / n as f64 })
+        .with_threads(threads)
+        .with_tol(0.0)
+        .with_max_epochs(epochs)
+}
+
+fn executor(kind: &str, threads: usize) -> Executor {
+    match kind {
+        "seq" => Executor::Sequential,
+        "threads" => Executor::Threads,
+        _ => Executor::Pool(WorkerPool::new(threads, &Topology::flat(threads))),
+    }
+}
+
+/// The headline guarantee: an untraced run and a run traced at
+/// [`MIN_RING_CAPACITY`] (rings so small they *must* overflow) produce
+/// bit-wise identical `α` and `v` under every executor.
+#[test]
+fn tracing_at_the_smallest_ring_is_bitwise_invisible_to_the_model() {
+    let ds = synthetic::dense_classification(400, 16, 21);
+    for kind in ["seq", "threads", "pool"] {
+        let cfg = fixed_epochs(400, 4, 12);
+        let baseline = dom::train_domesticated_exec(&ds, &cfg, &executor(kind, 4));
+
+        let session = TraceSession::start(ObsConfig::on(MIN_RING_CAPACITY));
+        let exec = executor(kind, 4);
+        let traced = dom::train_domesticated_exec(&ds, &cfg, &exec);
+        // join pool workers so their final post-job events land (or drop)
+        // before the rings are drained
+        drop(exec);
+        let dump = session.finish();
+
+        assert_eq!(baseline.state.alpha, traced.state.alpha, "{kind}: α changed under tracing");
+        assert_eq!(baseline.state.v, traced.state.v, "{kind}: v changed under tracing");
+        // 12 epochs of begin/end (+ job traffic) through 8-slot rings must
+        // overflow — and overflow may only bump the drop counter, never
+        // block or corrupt
+        assert!(
+            dump.total_dropped() > 0,
+            "{kind}: expected ring overflow at MIN_RING_CAPACITY, \
+             got {} events / {} dropped",
+            dump.total_events(),
+            dump.total_dropped()
+        );
+    }
+}
+
+/// Same guarantee for the hierarchical NUMA solver, whose node-tagged jobs
+/// exercise the per-node bucket queues (and their enqueue/start/finish
+/// instrumentation) rather than the flat round-robin path.
+#[test]
+fn numa_solver_traced_equals_untraced_bitwise() {
+    let ds = synthetic::dense_classification(360, 12, 23);
+    let topo = Topology::uniform(2, 4);
+    let cfg = fixed_epochs(360, 8, 10);
+    let baseline =
+        numa::train_numa_exec(&ds, &cfg, &topo, &Executor::Pool(WorkerPool::new(8, &topo)));
+
+    let session = TraceSession::start(ObsConfig::on(MIN_RING_CAPACITY));
+    let exec = Executor::Pool(WorkerPool::new(8, &topo));
+    let traced = numa::train_numa_exec(&ds, &cfg, &topo, &exec);
+    drop(exec);
+    let dump = session.finish();
+
+    assert_eq!(baseline.state.alpha, traced.state.alpha, "numa α changed under tracing");
+    assert_eq!(baseline.state.v, traced.state.v, "numa v changed under tracing");
+    assert!(dump.total_events() > 0, "the traced run must have recorded something");
+}
+
+/// A comfortably sized ring captures the full event vocabulary of a pool
+/// training run, per-thread streams come out time-ordered, and the
+/// chrome-trace export carries the events by their stable names.
+#[test]
+fn traced_pool_run_records_ordered_job_and_epoch_events() {
+    let ds = synthetic::dense_classification(300, 12, 33);
+    let cfg = fixed_epochs(300, 3, 6);
+
+    let session = TraceSession::start(ObsConfig::on(1 << 12));
+    let exec = Executor::Pool(WorkerPool::new(3, &Topology::flat(3)));
+    let _out = dom::train_domesticated_exec(&ds, &cfg, &exec);
+    drop(exec);
+    let dump = session.finish();
+
+    // 6 epochs from this thread; ≥ one 3-job merge round per epoch through
+    // the pool (lower bounds — see the module note on session sharing)
+    assert!(dump.count_of(EventKind::EpochBegin) >= 6);
+    assert!(dump.count_of(EventKind::EpochEnd) >= 6);
+    assert!(dump.count_of(EventKind::JobEnqueue) >= 18);
+    assert!(dump.count_of(EventKind::JobStart) >= 18);
+    assert!(dump.count_of(EventKind::JobFinish) >= 18);
+
+    // FIFO rings drained in push order ⇒ nondecreasing timestamps per thread
+    for t in &dump.threads {
+        for w in t.events.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns, "thread {} events out of time order", t.name);
+        }
+    }
+
+    let json = dump.to_chrome_json();
+    for name in ["job_enqueue", "job_start", "job_finish", "epoch_begin", "epoch_end"] {
+        assert!(json.contains(&format!("\"{name}\"")), "chrome trace is missing {name}");
+    }
+    assert!(json.contains("parlin-pool-n0-w0"), "worker thread names must be exported");
+}
