@@ -5,7 +5,7 @@
 //!
 //! ```bash
 //! cargo run --release --example check_trace -- trace.json \
-//!     --require job,epoch,publish,reject,drain
+//!     --require job,epoch,publish,reject,drain,rollback
 //! ```
 //!
 //! Exits nonzero with a message on the first violation found.
@@ -103,7 +103,10 @@ fn parse_args(args: &[String]) -> Result<(String, Vec<String>)> {
                     .ok_or_else(|| anyhow!("--require needs a comma-separated group list"))?;
                 for g in list.split(',').filter(|g| !g.is_empty()) {
                     if group_names().iter().all(|(_, name)| *name != g) {
-                        bail!("unknown group '{g}' (known: job, epoch, publish, reject, drain)");
+                        bail!(
+                            "unknown group '{g}' \
+                             (known: job, epoch, publish, reject, drain, rollback)"
+                        );
                     }
                     required.push(g.to_string());
                 }
@@ -117,7 +120,10 @@ fn parse_args(args: &[String]) -> Result<(String, Vec<String>)> {
         }
     }
     let path = path.ok_or_else(|| {
-        anyhow!("usage: check_trace <trace.json> [--require job,epoch,publish,reject,drain]")
+        anyhow!(
+            "usage: check_trace <trace.json> \
+             [--require job,epoch,publish,reject,drain,rollback]"
+        )
     })?;
     Ok((path, required))
 }
@@ -132,6 +138,7 @@ fn group_names() -> &'static [(&'static str, &'static str)] {
         ("snapshot_publish", "publish"),
         ("admission_reject", "reject"),
         ("ingest_drain", "drain"),
+        ("snapshot_rollback", "rollback"),
     ]
 }
 

@@ -72,8 +72,8 @@ fn main() {
 
     // ---- the core serving claim: warm refit ≪ cold retrain -------------
     let fresh = synthetic::dense_classification(n / 20, d, 9); // +5% rows
-    let warm = sess.partial_fit_rows(&fresh);
-    let cold = sess.retrain_same();
+    let warm = sess.partial_fit_rows(&fresh).expect("clean warm refit");
+    let cold = sess.retrain_same().expect("clean cold retrain");
     println!(
         "\nwarm refit after +5% rows: {:>3} epochs ({:.3}s)\n\
          cold retrain, same data:   {:>3} epochs ({:.3}s)\n\
@@ -103,6 +103,7 @@ fn main() {
         refit_rows_threshold: 256,
         refit_staleness_s: 0.05,
         max_pending: None,
+        ..SchedulerConfig::default()
     };
     let storm = StormConfig {
         readers: 4,
@@ -166,6 +167,7 @@ fn main() {
         refit_rows_threshold: 100_000,
         refit_staleness_s: 1e3,
         max_pending: Some(64),
+        ..SchedulerConfig::default()
     };
     let t = Timer::start();
     let sched = Scheduler::new(Session::new(ds, cfg), sched_cfg);

@@ -338,6 +338,25 @@ impl<M: DataMatrix> Dataset<M> {
             self.x.nnz() * 12
         }
     }
+
+    /// Are all labels and matrix values finite? The serve-tier ingest
+    /// gate ([`Scheduler::ingest`](crate::serve::Scheduler::ingest))
+    /// refuses batches that fail this — a single NaN arrival would
+    /// otherwise poison a whole refit and only be caught downstream by
+    /// the publish health gate.
+    pub fn is_finite(&self) -> bool {
+        if self.y.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        for j in 0..self.n() {
+            let mut ok = true;
+            self.x.for_each_col_entry(j, |_, v| ok &= v.is_finite());
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 impl<M: AppendExamples> Dataset<M> {
@@ -487,6 +506,25 @@ mod tests {
         assert_eq!(idx, &[1, 2]);
         assert_eq!(val, &[3.0, 4.0]);
         assert!((dsa.norm_sq(2) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn is_finite_catches_bad_labels_and_values() {
+        let m = DenseMatrix::from_columns(2, &[&[1.0, 2.0], &[3.0, 4.0]]);
+        let clean = Dataset::new(m.clone(), vec![1.0, -1.0]);
+        assert!(clean.is_finite());
+
+        let mut bad_label = Dataset::new(m, vec![1.0, -1.0]);
+        bad_label.y[0] = f64::NAN;
+        assert!(!bad_label.is_finite());
+
+        let poisoned = DenseMatrix::from_columns(2, &[&[1.0, f64::INFINITY]]);
+        let bad_value = Dataset::new(poisoned, vec![1.0]);
+        assert!(!bad_value.is_finite());
+
+        let sparse = CscMatrix::from_examples(3, &[vec![(1, f64::NEG_INFINITY)]]);
+        let bad_sparse = Dataset::new(sparse, vec![1.0]);
+        assert!(!bad_sparse.is_finite());
     }
 
     #[test]

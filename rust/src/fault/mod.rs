@@ -1,0 +1,411 @@
+//! Deterministic fault injection for the serve tier.
+//!
+//! A [`FaultPlan`] names *where* ([`FaultSite`]) and *when* (the k-th hit
+//! of that site) a failure fires, and *what* fires ([`FaultAction`]):
+//! a panic, a typed error, NaN-poisoned weights, or a delay. Plans are
+//! parsed from a compact spec (`--fault-plan` on the CLI, see the grammar
+//! on [`FaultPlan::parse`]) and armed process-wide with
+//! [`FaultPlan::arm`]; the returned [`FaultGuard`] disarms on drop.
+//!
+//! Determinism: hit counters are plain per-site sequence numbers — the
+//! k-th time the process reaches a site is the k-th hit, independent of
+//! wall clock — and the plan's `seed` fixes any value choice the injected
+//! fault makes (today: which weight coordinate a `nan` action poisons).
+//! The same plan against the same request stream reproduces the same
+//! failure.
+//!
+//! Zero cost when off, by the same discipline as [`crate::obs`]: every
+//! [`poke`] is ONE relaxed atomic load of the `ARMED` flag when no plan is
+//! armed; the counter bump, rule match, and action dispatch live in a
+//! `#[cold]` slow path that is never entered while disarmed (the pool
+//! unit test `faults_disarmed_cost_one_relaxed_load` locks this in, the
+//! same pattern as `tracing_off_builds_no_rings`).
+//!
+//! Arming is test-serialized exactly like trace sessions: `arm()` holds a
+//! process-wide mutex for the guard's lifetime, so two armed-plan tests
+//! in one binary cannot interleave, and [`disarmed`] lets a test hold the
+//! same exclusion *without* arming anything.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::lock_recover;
+
+/// Named injection points, in the order the serve tier reaches them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Top of every solver epoch (all four variants), on the thread that
+    /// called `train` — a mid-refit failure inside the optimizer.
+    Epoch,
+    /// Entry of the background drain thread's body, before it takes the
+    /// staged batch — a drain-thread death.
+    Drain,
+    /// Just before a freshly trained model is installed in the session —
+    /// the last instant a divergent/poisoned model could slip past the
+    /// health gate.
+    Publish,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 3] = [FaultSite::Epoch, FaultSite::Drain, FaultSite::Publish];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Epoch => "epoch",
+            FaultSite::Drain => "drain",
+            FaultSite::Publish => "publish",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Epoch => 0,
+            FaultSite::Drain => 1,
+            FaultSite::Publish => 2,
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        match s {
+            "epoch" | "solver-epoch" => Ok(FaultSite::Epoch),
+            "drain" => Ok(FaultSite::Drain),
+            "publish" => Ok(FaultSite::Publish),
+            other => bail!("unknown fault site '{other}' (known: epoch, drain, publish)"),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What fires when a rule matches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// `panic!` with a message — models a genuine bug in the refit path.
+    Panic,
+    /// `panic_any(InjectedFault)` — an unwinding failure the containment
+    /// layer recognizes and maps to `ServeError::Injected` instead of
+    /// `RefitPanicked`, so tests can tell "injected" from "real".
+    Error,
+    /// Poison one weight coordinate (picked by the plan seed) with NaN
+    /// just before install — must be caught by the publish health gate.
+    /// Only meaningful at [`FaultSite::Publish`]; rejected elsewhere at
+    /// parse time.
+    Nan,
+    /// Sleep in place — models a stuck (not dead) stage for watchdog
+    /// tests.
+    Delay(Duration),
+}
+
+/// One `action@site[#k][xN]` clause: fire `action` on hits `k..k+n` of
+/// `site` (both default to 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub action: FaultAction,
+    /// 1-based hit index of the first firing.
+    pub at: u64,
+    /// How many consecutive hits fire (so a retried operation can be made
+    /// to exhaust its retry budget deterministically).
+    pub count: u64,
+}
+
+impl FaultRule {
+    fn matches(&self, site: FaultSite, hit: u64) -> bool {
+        self.site == site && hit >= self.at && hit < self.at + self.count
+    }
+}
+
+/// A parsed, seeded fault plan. Inert until [`FaultPlan::arm`]ed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a spec: clauses separated by `;` or `,`, each
+    /// `action@site[#k][xN]`.
+    ///
+    /// * actions — `panic`, `error`, `nan` (publish site only),
+    ///   `delay:<ms>`
+    /// * sites — `epoch` (alias `solver-epoch`), `drain`, `publish`
+    /// * `#k` — fire on the k-th hit of the site (1-based, default 1)
+    /// * `xN` — keep firing for N consecutive hits (default 1; use this
+    ///   to outlast a retry budget, e.g. `panic@epoch#1x8`)
+    ///
+    /// `seed` fixes any value choice an action makes (the NaN coordinate).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for clause in spec.split([';', ',']).map(str::trim).filter(|c| !c.is_empty()) {
+            let (action_s, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}' has no '@site'"))?;
+            let action = match action_s {
+                "panic" => FaultAction::Panic,
+                "error" => FaultAction::Error,
+                "nan" => FaultAction::Nan,
+                other => match other.strip_prefix("delay:") {
+                    Some(ms) => {
+                        let ms: u64 = ms
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad delay '{other}': {e}"))?;
+                        FaultAction::Delay(Duration::from_millis(ms))
+                    }
+                    None => bail!(
+                        "unknown fault action '{other}' (known: panic, error, nan, delay:<ms>)"
+                    ),
+                },
+            };
+            let (site_s, at, count) = match rest.split_once('#') {
+                None => (rest, 1, 1),
+                Some((site_s, tail)) => {
+                    let (at_s, count_s) = match tail.split_once('x') {
+                        None => (tail, None),
+                        Some((a, c)) => (a, Some(c)),
+                    };
+                    let at: u64 = at_s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad hit index in '{clause}': {e}"))?;
+                    if at == 0 {
+                        bail!("hit index in '{clause}' is 1-based, got #0");
+                    }
+                    let count: u64 = match count_s {
+                        None => 1,
+                        Some(c) => c
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad repeat count in '{clause}': {e}"))?,
+                    };
+                    if count == 0 {
+                        bail!("repeat count in '{clause}' must be >= 1");
+                    }
+                    (site_s, at, count)
+                }
+            };
+            let site = FaultSite::parse(site_s)?;
+            if action == FaultAction::Nan && site != FaultSite::Publish {
+                bail!("'nan' only injects at the publish site (got '{clause}')");
+            }
+            rules.push(FaultRule { site, action, at, count });
+        }
+        if rules.is_empty() {
+            bail!("fault plan '{spec}' contains no clauses");
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Arm this plan process-wide. Holds the fault session (a mutex, like
+    /// trace sessions) until the guard drops, which disarms and clears
+    /// the plan.
+    pub fn arm(self) -> FaultGuard {
+        let serial = lock_recover(&SESSION);
+        *lock_recover(&PLAN) = Some(Arc::new(PlanState {
+            plan: self,
+            hits: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+        }));
+        ARMED.store(true, Ordering::SeqCst);
+        FaultGuard { _serial: serial }
+    }
+}
+
+/// The marker payload `FaultAction::Error` unwinds with; the containment
+/// layer downcasts for it to classify the failure as injected.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFault {
+    pub site: &'static str,
+}
+
+struct PlanState {
+    plan: FaultPlan,
+    /// Per-site hit counters (indexed by `FaultSite::index`).
+    hits: [AtomicU64; 3],
+}
+
+/// One relaxed load on every hot-path [`poke`]; flipped only by
+/// [`FaultPlan::arm`] / [`FaultGuard`] drop.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<PlanState>>> = Mutex::new(None);
+/// Serializes armed sessions (and [`disarmed`] exclusions) across tests.
+static SESSION: Mutex<()> = Mutex::new(());
+
+/// RAII armed-plan session; disarms and clears the plan on drop.
+pub struct FaultGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        *lock_recover(&PLAN) = None;
+    }
+}
+
+/// Hold the fault session **without** arming a plan — the analogue of
+/// `TraceSession::start(ObsConfig::off())`: a test asserting the disarmed
+/// path takes this so an armed-plan test in the same binary cannot race
+/// it.
+pub fn disarmed() -> FaultGuard {
+    FaultGuard { _serial: lock_recover(&SESSION) }
+}
+
+/// Is a plan currently armed?
+pub fn armed() -> bool {
+    ARMED.load(Ordering::SeqCst)
+}
+
+/// Hits recorded at `site` by the armed plan (0 when disarmed — disarmed
+/// pokes never reach the counter, which is what the zero-cost-off test
+/// asserts).
+pub fn hits(site: FaultSite) -> u64 {
+    match lock_recover(&PLAN).as_ref() {
+        Some(state) => state.hits[site.index()].load(Ordering::SeqCst),
+        None => 0,
+    }
+}
+
+/// Which weight coordinate a `nan` action poisons: fixed by the plan
+/// seed. 0 when no plan is armed (callers only ask after a `Nan` poke).
+pub fn poison_index(d: usize) -> usize {
+    let seed = lock_recover(&PLAN).as_ref().map(|s| s.plan.seed).unwrap_or(0);
+    (seed % d.max(1) as u64) as usize
+}
+
+/// The injection point: call at a [`FaultSite`]. Disarmed this is one
+/// relaxed atomic load. Armed, it bumps the site's hit counter and, when
+/// a rule matches, fires: `Panic`/`Error` unwind from here, `Delay`
+/// sleeps in place and returns `None`, and `Nan` returns
+/// `Some(FaultAction::Nan)` for the caller (the session's install path)
+/// to apply — the poke itself cannot reach the weights.
+#[inline]
+pub fn poke(site: FaultSite) -> Option<FaultAction> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    poke_armed(site)
+}
+
+#[cold]
+fn poke_armed(site: FaultSite) -> Option<FaultAction> {
+    let state = match lock_recover(&PLAN).as_ref() {
+        Some(state) => Arc::clone(state),
+        // a guard is mid-drop: ARMED read raced the plan clear
+        None => return None,
+    };
+    let hit = state.hits[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+    let rule = state.plan.rules.iter().find(|r| r.matches(site, hit))?;
+    match rule.action {
+        FaultAction::Panic => panic!("fault injection: panic@{site}#{hit}"),
+        FaultAction::Error => {
+            std::panic::panic_any(InjectedFault { site: site.name() })
+        }
+        FaultAction::Delay(d) => {
+            std::thread::sleep(d);
+            None
+        }
+        FaultAction::Nan => Some(FaultAction::Nan),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_full_grammar() {
+        let plan = FaultPlan::parse("panic@epoch#2x3; delay:50@drain, nan@publish#1x8", 9).unwrap();
+        assert_eq!(plan.seed(), 9);
+        assert_eq!(
+            plan.rules(),
+            &[
+                FaultRule {
+                    site: FaultSite::Epoch,
+                    action: FaultAction::Panic,
+                    at: 2,
+                    count: 3
+                },
+                FaultRule {
+                    site: FaultSite::Drain,
+                    action: FaultAction::Delay(Duration::from_millis(50)),
+                    at: 1,
+                    count: 1
+                },
+                FaultRule { site: FaultSite::Publish, action: FaultAction::Nan, at: 1, count: 8 },
+            ]
+        );
+        // the solver-epoch alias maps to the same site
+        let alias = FaultPlan::parse("error@solver-epoch", 0).unwrap();
+        assert_eq!(alias.rules()[0].site, FaultSite::Epoch);
+        assert_eq!(alias.rules()[0].action, FaultAction::Error);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",                // no site
+            "panic@nowhere",        // unknown site
+            "explode@epoch",        // unknown action
+            "panic@epoch#0",        // hit indices are 1-based
+            "panic@epoch#1x0",      // zero repeat
+            "delay:abc@drain",      // bad millis
+            "nan@epoch",            // nan only makes sense at publish
+        ] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn hits_sequence_and_rule_windows_fire_deterministically() {
+        let _g = {
+            // fire on publish hits 2 and 3 only
+            FaultPlan::parse("nan@publish#2x2", 4).unwrap().arm()
+        };
+        assert!(armed());
+        assert_eq!(poke(FaultSite::Publish), None, "hit 1 is before the window");
+        assert_eq!(poke(FaultSite::Publish), Some(FaultAction::Nan), "hit 2 fires");
+        assert_eq!(poke(FaultSite::Publish), Some(FaultAction::Nan), "hit 3 fires");
+        assert_eq!(poke(FaultSite::Publish), None, "hit 4 is past the window");
+        assert_eq!(hits(FaultSite::Publish), 4);
+        // other sites keep independent counters and never match this rule
+        assert_eq!(poke(FaultSite::Epoch), None);
+        assert_eq!(hits(FaultSite::Epoch), 1);
+        assert_eq!(poison_index(7), 4 % 7);
+    }
+
+    #[test]
+    fn injected_error_panics_with_a_downcastable_payload() {
+        let _g = FaultPlan::parse("error@drain#1", 0).unwrap().arm();
+        let payload = std::panic::catch_unwind(|| poke(FaultSite::Drain))
+            .expect_err("the error action must unwind");
+        let injected =
+            payload.downcast_ref::<InjectedFault>().expect("payload must be InjectedFault");
+        assert_eq!(injected.site, "drain");
+    }
+
+    #[test]
+    fn guard_drop_disarms_and_clears() {
+        {
+            let _g = FaultPlan::parse("panic@drain#100", 0).unwrap().arm();
+            assert!(armed());
+            assert_eq!(poke(FaultSite::Drain), None);
+            assert_eq!(hits(FaultSite::Drain), 1);
+        }
+        assert!(!armed());
+        assert_eq!(hits(FaultSite::Drain), 0, "the plan (and its counters) are gone");
+        assert_eq!(poke(FaultSite::Drain), None);
+    }
+}

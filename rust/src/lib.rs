@@ -36,6 +36,7 @@
 
 pub mod baselines;
 pub mod data;
+pub mod fault;
 pub mod figures;
 pub mod glm;
 pub mod metrics;

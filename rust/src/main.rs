@@ -21,10 +21,11 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use parlin::data::{loader, AnyDataset};
+use parlin::fault::FaultPlan;
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
 use parlin::obs::{MetricsTicker, ObsConfig, TraceSession, DEFAULT_RING_CAPACITY};
-use parlin::serve::ArrivalProcess;
+use parlin::serve::{ArrivalProcess, ServeHealth};
 use parlin::solver::{
     train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
 };
@@ -142,6 +143,26 @@ OPEN-LOOP SERVE OPTIONS (open-loop mode, enabled by --arrival-rate):
   scheduled arrival, shed count and per-class pool queue delay.
   (--max-pending parses in every serve mode, but only the open loop's
   try_predict admission path sheds on it.)
+
+ROBUSTNESS OPTIONS (serve, scheduler modes):
+  --drain-retries    background drain attempts after the first failure,
+                     with exponential backoff between attempts (0 means
+                     fail fast)                               (default 2)
+  --drain-stall      seconds without a drain heartbeat before the run is
+                     flagged Degraded as stuck                (default 30)
+  --dead-letter-rows bound on quarantined rows kept after refits are
+                     rolled back; oldest batches are evicted  (default 1024)
+  --fault-plan       deterministic fault injection, armed only after the
+                     session and scheduler are built. Spec: clauses
+                     'action@site[#k][xN]' separated by ';' — actions
+                     panic | error | nan | delay:<ms>; sites epoch |
+                     drain | publish (nan is publish-only); '#k' fires on
+                     the k-th hit, 'xN' for N consecutive hits. Example:
+                     --fault-plan 'panic@epoch#1x8;nan@publish#2'
+  A failed refit never unpublishes the serving model: the last-known-good
+  snapshot keeps answering predicts, the offending rows are quarantined,
+  and the run is marked Degraded until a later refit publishes cleanly.
+  `parlin serve` exits nonzero unless the final health is Healthy.
 ";
 
 /// Flag parser accepting `--key value` and `--key=value` (flags without a
@@ -235,6 +256,39 @@ fn get_optional_positive_usize(
         Ok(Some(get_positive_usize(flags, key, 1)?))
     } else {
         Ok(None)
+    }
+}
+
+/// Parse `--fault-plan` (deterministic fault injection; grammar on
+/// [`FaultPlan::parse`], taxonomy in `docs/ROBUSTNESS.md`). The plan is
+/// returned *unarmed*: the serve drivers arm it only after the session
+/// and scheduler are built, so the construction-time initial train is
+/// never injected.
+fn parse_fault_plan(flags: &HashMap<String, String>, seed: u64) -> Result<Option<FaultPlan>> {
+    match flags.get("fault-plan").map(String::as_str) {
+        None => Ok(None),
+        // a bare `--fault-plan` parses to "true"; both it and
+        // `--fault-plan=` mean the spec is missing
+        Some("") | Some("true") => {
+            bail!("--fault-plan needs a spec (e.g. --fault-plan 'panic@epoch#1')")
+        }
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec, seed)
+                .map_err(|e| anyhow!("--fault-plan '{spec}': {e}"))?;
+            Ok(Some(plan))
+        }
+    }
+}
+
+/// `parlin serve` exits 0 only when the run's final health is Healthy.
+/// A rollback the system later recovered from is fine; ending the run
+/// degraded (quarantined rows never re-published cleanly, a dead drain
+/// thread, a stalled watchdog) must fail scripts and CI, not just leave
+/// a line in the report.
+fn check_final_health(health: &ServeHealth) -> Result<()> {
+    match health {
+        ServeHealth::Healthy => Ok(()),
+        ServeHealth::Degraded { reason } => bail!("serve finished degraded: {reason}"),
     }
 }
 
@@ -472,7 +526,13 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
         refit_rows_threshold: get_positive_usize(flags, "refit-rows-threshold", 64)?,
         refit_staleness_s: get_positive_f64(flags, "refit-staleness", 0.25)?,
         max_pending: get_optional_positive_usize(flags, "max-pending")?,
+        // 0 retries is legitimate (fail fast); stall budget and dead-letter
+        // capacity must be positive to mean anything
+        drain_max_retries: get_parse(flags, "drain-retries", 2usize)?,
+        drain_stall_s: get_positive_f64(flags, "drain-stall", 30.0)?,
+        dead_letter_rows: get_positive_usize(flags, "dead-letter-rows", 1024)?,
     };
+    let fault_plan = parse_fault_plan(flags, seed)?;
     if flags.contains_key("arrival-rate") {
         check_concurrent_requests_flag(flags)?;
         let ol_cfg = parlin::serve::OpenLoopConfig {
@@ -505,7 +565,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
             sched_cfg.max_pending
         );
         return parlin::figures::with_ds!(ds, d => {
-            run_serve_open_loop(d, cfg, sched_cfg, ol_cfg)
+            run_serve_open_loop(d, cfg, sched_cfg, ol_cfg, fault_plan)
         });
     }
     if concurrency > 1 {
@@ -530,7 +590,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
             sched_cfg.refit_staleness_s
         );
         return parlin::figures::with_ds!(ds, d => {
-            run_serve_concurrent(d, cfg, sched_cfg, storm, seed)
+            run_serve_concurrent(d, cfg, sched_cfg, storm, seed, fault_plan)
         });
     }
     let reqs = match flags.get("requests").map(String::as_str) {
@@ -552,7 +612,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
         cfg.threads,
         reqs.len()
     );
-    parlin::figures::with_ds!(ds, d => run_serve(d, cfg, &reqs, seed))
+    parlin::figures::with_ds!(ds, d => run_serve(d, cfg, &reqs, seed, fault_plan))
 }
 
 fn run_serve<M>(
@@ -560,6 +620,7 @@ fn run_serve<M>(
     cfg: SolverConfig,
     reqs: &[parlin::serve::Request],
     seed: u64,
+    fault_plan: Option<FaultPlan>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows,
@@ -572,6 +633,8 @@ where
         sess.workers(),
         sess.gap().gap
     );
+    // arm only now: the initial train above must never be injected
+    let _fault = fault_plan.map(FaultPlan::arm);
     let report = parlin::serve::drive(&mut sess, reqs, seed);
     print!("{}", report.summary());
     let ps = sess.pool_stats();
@@ -600,7 +663,7 @@ where
         sess.n(),
         sess.gap().gap
     );
-    Ok(())
+    check_final_health(&report.health)
 }
 
 /// Stand up a scheduler over a resident session and run the concurrent
@@ -613,6 +676,7 @@ fn run_serve_concurrent<M>(
     sched_cfg: parlin::serve::SchedulerConfig,
     storm: parlin::serve::StormConfig,
     seed: u64,
+    fault_plan: Option<FaultPlan>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows + Send + 'static,
@@ -626,6 +690,8 @@ where
         sess.gap().gap
     );
     let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    // arm only now: construction-time refits must never be injected
+    let _fault = fault_plan.map(FaultPlan::arm);
     let report = parlin::serve::drive_concurrent(&sched, &storm, seed);
     print!("{}", report.summary());
     let ps = sched.pool_stats();
@@ -641,7 +707,7 @@ where
         sched.current_n(),
         sched.gap().gap
     );
-    Ok(())
+    check_final_health(&report.health)
 }
 
 /// Stand up a scheduler over a resident session and push a pre-generated
@@ -653,6 +719,7 @@ fn run_serve_open_loop<M>(
     cfg: SolverConfig,
     sched_cfg: parlin::serve::SchedulerConfig,
     ol_cfg: parlin::serve::OpenLoopConfig,
+    fault_plan: Option<FaultPlan>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows + Send + 'static,
@@ -666,6 +733,8 @@ where
         sess.gap().gap
     );
     let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    // arm only now: construction-time refits must never be injected
+    let _fault = fault_plan.map(FaultPlan::arm);
     let report = parlin::serve::drive_open_loop(&sched, &ol_cfg);
     print!("{}", report.summary());
     let ps = sched.pool_stats();
@@ -681,7 +750,7 @@ where
         sched.current_n(),
         sched.gap().gap
     );
-    Ok(())
+    check_final_health(&report.health)
 }
 
 fn cmd_figures(flags: &HashMap<String, String>) -> Result<()> {
@@ -957,6 +1026,53 @@ mod tests {
         let json = std::fs::read_to_string(path).unwrap();
         assert!(json.starts_with("{\"traceEvents\":["));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fault_plan_flag_parses_and_requires_a_spec() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert!(parse_fault_plan(&empty, 42).unwrap().is_none());
+        let ok =
+            parse_flags(&args(&["--fault-plan=panic@epoch#1x8;nan@publish#2"])).unwrap();
+        assert!(parse_fault_plan(&ok, 42).unwrap().is_some());
+        for bad in [&["--fault-plan"][..], &["--fault-plan="][..]] {
+            let f = parse_flags(&args(bad)).unwrap();
+            let err = parse_fault_plan(&f, 42).unwrap_err();
+            assert!(err.to_string().contains("--fault-plan needs a spec"), "{bad:?}: {err}");
+        }
+        // a malformed spec reports through the flag, not a bare parse error
+        let garbage = parse_flags(&args(&["--fault-plan=explode@everywhere"])).unwrap();
+        let err = parse_fault_plan(&garbage, 42).unwrap_err();
+        assert!(err.to_string().contains("--fault-plan"), "{err}");
+    }
+
+    #[test]
+    fn degraded_final_health_fails_the_run() {
+        assert!(check_final_health(&ServeHealth::Healthy).is_ok());
+        let err =
+            check_final_health(&ServeHealth::degraded("drain failed: injected")).unwrap_err();
+        assert!(
+            err.to_string().contains("serve finished degraded: drain failed: injected"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn drain_robustness_flags_validate() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert_eq!(get_parse(&empty, "drain-retries", 2usize).unwrap(), 2);
+        assert!((get_positive_f64(&empty, "drain-stall", 30.0).unwrap() - 30.0).abs() < 1e-12);
+        assert_eq!(get_positive_usize(&empty, "dead-letter-rows", 1024).unwrap(), 1024);
+        // zero retries is a legitimate fail-fast setting…
+        let zero = parse_flags(&args(&["--drain-retries=0"])).unwrap();
+        assert_eq!(get_parse(&zero, "drain-retries", 2usize).unwrap(), 0);
+        // …but a zero-capacity dead letter or non-positive stall budget is not
+        let f = parse_flags(&args(&["--dead-letter-rows=0"])).unwrap();
+        assert!(get_positive_usize(&f, "dead-letter-rows", 1024).is_err());
+        for bad in ["--drain-stall=0", "--drain-stall=-1", "--drain-stall=NaN"] {
+            let f = parse_flags(&args(&[bad])).unwrap();
+            assert!(get_positive_f64(&f, "drain-stall", 30.0).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! dance.
 
 use std::fmt;
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Mutex, MutexGuard};
 
 /// Severity, ordered: `Error < Warn < Info < Debug`. A record prints when
 /// its level is ≤ the configured threshold.
@@ -74,7 +74,8 @@ static CAPTURE: Mutex<Option<Vec<DiagRecord>>> = Mutex::new(None);
 static CAPTURE_SERIAL: Mutex<()> = Mutex::new(());
 
 fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    // the crate-wide poison policy: see util::lock_recover
+    crate::util::lock_recover(m)
 }
 
 /// RAII capture of every diagnostic emitted while it is alive, process-

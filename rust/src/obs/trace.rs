@@ -26,7 +26,7 @@
 use std::cell::RefCell;
 use std::io::{self, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
 use crate::obs::ring::EventRing;
@@ -46,10 +46,10 @@ pub const CLASS_READER: u8 = 1;
 /// `class` tag for writer (train/refit-side) jobs.
 pub const CLASS_WRITER: u8 = 2;
 
-/// What happened. The five groups the trace validator checks for are:
+/// What happened. The six groups the trace validator checks for are:
 /// job lifecycle (`JobEnqueue`/`JobStart`/`JobFinish`), epochs
-/// (`EpochBegin`/`EpochEnd`), snapshot publishes, admission rejects, and
-/// ingest drains.
+/// (`EpochBegin`/`EpochEnd`), snapshot publishes, admission rejects,
+/// ingest drains, and snapshot rollbacks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum EventKind {
@@ -70,11 +70,15 @@ pub enum EventKind {
     AdmissionReject,
     /// The staging buffer was drained into a refit (`arg` = rows drained).
     IngestDrain,
+    /// A writer attempt failed: its publish was refused or its refit
+    /// rolled back, and the session was restored to last-known-good
+    /// (`arg` = the snapshot version that kept serving).
+    SnapshotRollback,
 }
 
 impl EventKind {
     /// Every kind, in declaration order — handy for tally tables.
-    pub const ALL: [EventKind; 8] = [
+    pub const ALL: [EventKind; 9] = [
         EventKind::JobEnqueue,
         EventKind::JobStart,
         EventKind::JobFinish,
@@ -83,6 +87,7 @@ impl EventKind {
         EventKind::SnapshotPublish,
         EventKind::AdmissionReject,
         EventKind::IngestDrain,
+        EventKind::SnapshotRollback,
     ];
 
     /// Stable snake_case name used in the chrome-trace export and checked
@@ -97,6 +102,7 @@ impl EventKind {
             EventKind::SnapshotPublish => "snapshot_publish",
             EventKind::AdmissionReject => "admission_reject",
             EventKind::IngestDrain => "ingest_drain",
+            EventKind::SnapshotRollback => "snapshot_rollback",
         }
     }
 }
@@ -175,7 +181,8 @@ thread_local! {
 }
 
 fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    // the crate-wide poison policy: see util::lock_recover
+    crate::util::lock_recover(m)
 }
 
 /// Monotonic nanoseconds since the first trace timestamp this process

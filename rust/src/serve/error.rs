@@ -1,0 +1,106 @@
+//! Typed writer-path failures and the serve-tier health state.
+//!
+//! Every writer entry point (`Session::{partial_fit_rows,
+//! partial_fit_lambda, retrain}` and the scheduler methods built on them)
+//! returns `Result<RefitReport, ServeError>` instead of panicking: a
+//! failed refit is an *outcome*, recovered to the last-known-good model,
+//! not a poisoned mutex. [`ServeHealth`] is the scheduler-level summary
+//! stamped on every report — `Healthy` after a successful publish,
+//! `Degraded` while the most recent writer attempt failed or the drain
+//! thread is dead/stalled.
+
+/// Why a refit/retrain did not publish. The session is already restored
+/// to its last-known-good state when one of these is returned.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The training body panicked (a genuine bug or a `panic` fault
+    /// injection); `message` is the panic payload when it was a string.
+    RefitPanicked { kind: &'static str, message: String },
+    /// An armed [`FaultPlan`](crate::fault::FaultPlan) `error` action
+    /// fired at `site` — distinguishable from [`ServeError::RefitPanicked`]
+    /// so tests can tell injected failures from real ones.
+    Injected { site: &'static str },
+    /// The refit finished but produced a non-finite model (`what` names
+    /// the first check that failed: weights, duals, or probe margins) —
+    /// the publish health gate refused it.
+    NonFinite { kind: &'static str, what: &'static str },
+    /// Appended rows disagree with the session's feature dimension.
+    ShapeMismatch { expected: usize, got: usize },
+    /// `partial_fit_lambda` with a non-finite or non-positive λ (1/(λn)
+    /// would poison the model).
+    InvalidLambda { lambda: f64 },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::RefitPanicked { kind, message } => {
+                write!(f, "{kind} panicked: {message}")
+            }
+            ServeError::Injected { site } => write!(f, "injected fault at {site}"),
+            ServeError::NonFinite { kind, what } => {
+                write!(f, "{kind} produced a non-finite model ({what})")
+            }
+            ServeError::ShapeMismatch { expected, got } => {
+                write!(f, "appended rows have d={got}, session serves d={expected}")
+            }
+            ServeError::InvalidLambda { lambda } => {
+                write!(f, "refit lambda must be finite and positive, got {lambda}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Scheduler-level health, stamped on `SchedReport`/`OpenLoopReport`
+/// (and `ServeReport` for the single-session driver). `parlin serve`
+/// exits 0 only when the final state is `Healthy`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum ServeHealth {
+    /// The most recent writer outcome was a successful publish (or no
+    /// writer has run yet — the initial train published version 0).
+    #[default]
+    Healthy,
+    /// The most recent writer attempt failed, rows sit quarantined, or
+    /// the background drain is dead/stalled. Readers keep serving the
+    /// last-known-good version throughout.
+    Degraded { reason: String },
+}
+
+impl ServeHealth {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, ServeHealth::Healthy)
+    }
+
+    pub fn degraded(reason: impl Into<String>) -> ServeHealth {
+        ServeHealth::Degraded { reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for ServeHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeHealth::Healthy => f.write_str("Healthy"),
+            ServeHealth::Degraded { reason } => write!(f, "Degraded ({reason})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_the_diagnosis() {
+        let e = ServeError::NonFinite { kind: "refit-rows", what: "weights" };
+        assert_eq!(e.to_string(), "refit-rows produced a non-finite model (weights)");
+        let e = ServeError::ShapeMismatch { expected: 8, got: 5 };
+        assert!(e.to_string().contains("d=5"));
+        assert_eq!(ServeHealth::default(), ServeHealth::Healthy);
+        assert!(ServeHealth::Healthy.is_healthy());
+        let d = ServeHealth::degraded("drain failed");
+        assert!(!d.is_healthy());
+        assert_eq!(d.to_string(), "Degraded (drain failed)");
+    }
+}

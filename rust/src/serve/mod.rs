@@ -73,11 +73,13 @@
 //! one epoch. The same resident pool executes the refit — no worker is
 //! spawned or torn down on the request path.
 
+pub mod error;
 pub mod request;
 pub mod scheduler;
 pub mod session;
 pub mod snapshot;
 
+pub use error::{ServeError, ServeHealth};
 pub use request::{
     arrival_schedule, drive, drive_concurrent, drive_open_loop, parse_script, synthetic_mix,
     Arrival, ArrivalKind, ArrivalProcess, OpenLoopConfig, OpenLoopKindStats, OpenLoopOutcome,

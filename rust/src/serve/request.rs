@@ -19,6 +19,7 @@
 
 use crate::data::{synthetic, AppendExamples, CscMatrix, Dataset, DenseMatrix};
 use crate::obs;
+use crate::serve::error::ServeHealth;
 use crate::serve::scheduler::{PredictAdmission, SchedReport, Scheduler};
 use crate::serve::session::Session;
 use crate::solver::QueueDelayReport;
@@ -158,6 +159,12 @@ pub struct ServeReport {
     /// predict shards vs writer refit rounds) — the queueing that a
     /// closed-loop latency log alone cannot see.
     pub queue_delay: QueueDelayReport,
+    /// Writer requests that failed and were rolled back to the session's
+    /// last-known-good model (the session kept serving throughout).
+    pub failed_refits: u64,
+    /// Health after the final request: `Healthy` iff the most recent
+    /// writer succeeded (or none ran).
+    pub health: ServeHealth,
     /// Frozen [`obs::registry`] view as of the end of the run — counters,
     /// gauges and histogram summaries across pool, solver and scheduler.
     pub metrics: obs::MetricsSnapshot,
@@ -192,6 +199,13 @@ impl ServeReport {
             self.total_wall_s,
             self.requests() as f64 / self.total_wall_s.max(1e-9)
         ));
+        if self.failed_refits > 0 {
+            s.push_str(&format!(
+                "  faults: {} writer request(s) failed and rolled back\n",
+                self.failed_refits
+            ));
+        }
+        s.push_str(&format!("  health: {}\n", self.health));
         if self.queue_delay.reader.jobs + self.queue_delay.writer.jobs > 0 {
             s.push_str(&self.queue_delay.summary_line());
         }
@@ -200,7 +214,10 @@ impl ServeReport {
 }
 
 /// Replay `reqs` against the session, closed-loop (next request issues
-/// when the previous one completes), recording per-request latency.
+/// when the previous one completes), recording per-request latency. A
+/// writer request that fails is contained by the session (rolled back to
+/// last-known-good) and counted in [`ServeReport::failed_refits`]; the
+/// run keeps going — one poisoned request must not abort the replay.
 pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -> ServeReport {
     let mut report = ServeReport::default();
     let delay_mark = QueueDelayReport::from_stats(&sess.pool_stats());
@@ -222,21 +239,48 @@ pub fn drive<M: SynthRows>(sess: &mut Session<M>, reqs: &[Request], seed: u64) -
                 row_seed = row_seed.wrapping_add(1);
                 let fresh = M::synth_rows(sess.d(), sess.avg_nnz(), (*rows).max(1), row_seed);
                 let t = Timer::start();
-                let r = sess.partial_fit_rows(&fresh);
-                report.refit_s.push(t.elapsed_s());
-                report.refit_epochs += r.epochs as u64;
+                match sess.partial_fit_rows(&fresh) {
+                    Ok(r) => {
+                        report.refit_s.push(t.elapsed_s());
+                        report.refit_epochs += r.epochs as u64;
+                        report.health = ServeHealth::Healthy;
+                    }
+                    Err(err) => {
+                        report.failed_refits += 1;
+                        report.health = ServeHealth::degraded(err.to_string());
+                        crate::diag!(Warn, "refit-rows request failed (contained): {}", err);
+                    }
+                }
             }
             Request::RefitLambda { lambda } => {
                 let t = Timer::start();
-                let r = sess.partial_fit_lambda(*lambda);
-                report.refit_s.push(t.elapsed_s());
-                report.refit_epochs += r.epochs as u64;
+                match sess.partial_fit_lambda(*lambda) {
+                    Ok(r) => {
+                        report.refit_s.push(t.elapsed_s());
+                        report.refit_epochs += r.epochs as u64;
+                        report.health = ServeHealth::Healthy;
+                    }
+                    Err(err) => {
+                        report.failed_refits += 1;
+                        report.health = ServeHealth::degraded(err.to_string());
+                        crate::diag!(Warn, "refit-lambda request failed (contained): {}", err);
+                    }
+                }
             }
             Request::Retrain => {
                 let t = Timer::start();
-                let r = sess.retrain_same();
-                report.retrain_s.push(t.elapsed_s());
-                report.retrain_epochs += r.epochs as u64;
+                match sess.retrain_same() {
+                    Ok(r) => {
+                        report.retrain_s.push(t.elapsed_s());
+                        report.retrain_epochs += r.epochs as u64;
+                        report.health = ServeHealth::Healthy;
+                    }
+                    Err(err) => {
+                        report.failed_refits += 1;
+                        report.health = ServeHealth::degraded(err.to_string());
+                        crate::diag!(Warn, "retrain request failed (contained): {}", err);
+                    }
+                }
             }
         }
     }
@@ -331,7 +375,9 @@ where
             sched.ingest(fresh);
         }
     });
-    sched.flush();
+    // a failed final drain is already accounted (rollbacks, quarantine,
+    // health) by the scheduler — the report below carries it
+    let _ = sched.flush();
     let mut report = sched.report();
     report.total_wall_s = total.elapsed_s();
     report.queue_delay = QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark);
@@ -548,6 +594,8 @@ pub struct OpenLoopReport {
     /// Per-class pool queue delay over the run window.
     pub queue_delay: QueueDelayReport,
     pub total_wall_s: f64,
+    /// Scheduler health after the final flush.
+    pub health: ServeHealth,
     /// Frozen [`obs::registry`] view as of the end of the run.
     pub metrics: obs::MetricsSnapshot,
     /// Per-request records (only under [`OpenLoopConfig::record_outcomes`]).
@@ -581,6 +629,7 @@ impl OpenLoopReport {
         ));
         s.push_str(&self.predict.line("predict"));
         s.push_str(&self.ingest.line("ingest"));
+        s.push_str(&format!("  health: {}\n", self.health));
         s.push_str(&self.queue_delay.summary_line());
         if self.total_wall_s > 0.0 {
             s.push_str(&format!("  wall {:.3}s\n", self.total_wall_s));
@@ -721,7 +770,9 @@ where
             });
         }
     });
-    sched.flush();
+    // failure accounting (rollbacks, quarantine, health) lives in the
+    // scheduler; the health stamp below carries the final state
+    let _ = sched.flush();
     let all = merged.into_inner().unwrap();
     OpenLoopReport {
         offered_rate_per_s: cfg.rate_per_s,
@@ -733,6 +784,7 @@ where
         ingested_rows: all.ingested_rows,
         queue_delay: QueueDelayReport::from_stats(&sched.pool_stats()).since(&delay_mark),
         total_wall_s: wall.elapsed_s(),
+        health: sched.health(),
         metrics: obs::registry().snapshot(),
         outcomes: all.outcomes,
     }

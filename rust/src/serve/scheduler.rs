@@ -80,25 +80,56 @@
 //! determinism contract above. [`Scheduler::predict`] stays
 //! unconditional (closed-loop drivers and tests want every request
 //! served) but maintains the same pending gauge.
+//!
+//! ## Fault containment and self-healing
+//!
+//! The serve path assumes writers *will* fail — a panicking solver, a
+//! refit that trains to NaN, a drain thread that dies — and contains each
+//! failure to the request that caused it (see `docs/ROBUSTNESS.md`):
+//!
+//! * Writer failures are **outcomes**, not panics: every writer entry
+//!   point returns `Result<RefitReport, ServeError>`, and the session has
+//!   already rolled back to its last-known-good state when an `Err` comes
+//!   out. A failed writer never poisons the session mutex (and every
+//!   scheduler lock recovers from poisoning via
+//!   [`lock_recover`](crate::util::lock_recover) anyway).
+//! * The drain retries with exponential backoff
+//!   ([`SchedulerConfig::drain_max_retries`]); a batch that still fails is
+//!   **quarantined** to a bounded dead-letter buffer
+//!   ([`SchedulerConfig::dead_letter_rows`]) so one poisoned batch cannot
+//!   wedge the staging pipeline forever.
+//! * A dead background drain thread is detected (its panic-guard flags
+//!   it) and respawned by the next request that finds work; a *stuck*
+//!   drain is flagged by a heartbeat watchdog
+//!   ([`SchedulerConfig::drain_stall_s`]) and reported as degraded — an
+//!   OS thread cannot be safely killed, so stuck is detected and
+//!   surfaced, never silently ignored.
+//! * Every report carries a [`ServeHealth`]: `Healthy` after a
+//!   successful publish, `Degraded { reason }` while the most recent
+//!   writer failed or the drain is dead/stalled. `parlin serve` exits
+//!   nonzero unless the final state is `Healthy`.
 
 use crate::data::{AppendExamples, Dataset};
+use crate::fault::{self, FaultSite};
 use crate::glm::GapReport;
 use crate::obs::{self, EventKind};
+use crate::serve::error::{ServeError, ServeHealth};
 use crate::serve::session::{RefitReport, Session};
 use crate::serve::snapshot::ModelSnapshot;
 use crate::solver::{PoolStats, QueueDelayReport, WorkerPool};
-use crate::util::Percentiles;
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::{lock_recover, Percentiles};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Streaming-ingestion thresholds (the serve CLI's `--refit-rows-threshold`
-/// and `--refit-staleness`). Validated in [`Scheduler::new`]: both must be
-/// positive (and the staleness finite) — a zero row threshold would refit
-/// on every arrival and an infinite staleness would never drain a
-/// below-threshold buffer.
+/// and `--refit-staleness`) plus the robustness knobs (`--drain-retries`,
+/// `--drain-stall`, `--dead-letter-rows`). Validated in [`Scheduler::new`]:
+/// thresholds must be positive (and the staleness/stall budgets finite) — a
+/// zero row threshold would refit on every arrival and an infinite
+/// staleness would never drain a below-threshold buffer.
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Staged rows that trigger a background refit.
@@ -115,6 +146,21 @@ pub struct SchedulerConfig {
     /// reader; `Some(k)` sheds arrivals once `k` readers are in flight.
     /// Validated in [`Scheduler::new`]: `Some(0)` would shed everything.
     pub max_pending: Option<usize>,
+    /// Extra attempts a drain gets after its first refit fails (each
+    /// preceded by an exponential backoff: 10 ms, 20 ms, … capped at
+    /// 200 ms). `0` quarantines on the first failure. Transient failures
+    /// (an injected single-shot fault, a racing allocator hiccup) recover
+    /// without losing the batch; persistent ones hit the dead letter.
+    pub drain_max_retries: usize,
+    /// Heartbeat-staleness budget for the drain watchdog, in seconds: a
+    /// drain attempt whose heartbeat is older than this is flagged as
+    /// stalled and the scheduler reports `Degraded`. Must be finite and
+    /// positive.
+    pub drain_stall_s: f64,
+    /// Row capacity of the dead-letter buffer holding quarantined batches
+    /// (oldest whole batches are evicted past the cap, never a partial
+    /// batch; the newest batch is always kept). Must be >= 1.
+    pub dead_letter_rows: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -123,6 +169,9 @@ impl Default for SchedulerConfig {
             refit_rows_threshold: 64,
             refit_staleness_s: 0.25,
             max_pending: None,
+            drain_max_retries: 2,
+            drain_stall_s: 30.0,
+            dead_letter_rows: 1024,
         }
     }
 }
@@ -199,6 +248,31 @@ pub struct SchedReport {
     /// Predicts shed by admission control ([`Scheduler::try_predict`]
     /// against a full [`SchedulerConfig::max_pending`] budget).
     pub rejected_predicts: u64,
+    /// Writer attempts that failed and were rolled back to the
+    /// last-known-good model (the published version never changed).
+    pub rollbacks: u64,
+    /// Publishes refused by the health gate (the refit finished but its
+    /// model was non-finite). A subset of `rollbacks`.
+    pub publish_rejected: u64,
+    /// Rows quarantined to the dead-letter buffer after a drain exhausted
+    /// its retries.
+    pub quarantined_rows: u64,
+    /// Rows refused at [`Scheduler::ingest`] for carrying non-finite
+    /// values (never staged, never counted in `ingested_rows`).
+    pub ingest_rejected_rows: u64,
+    /// Backoff retries taken by drain refits after a failed attempt.
+    pub drain_retries: u64,
+    /// Times the background drain thread died (its panic-guard fired).
+    pub drain_deaths: u64,
+    /// Times a dead drain thread was respawned by a later request.
+    pub drain_respawns: u64,
+    /// Times the watchdog flagged a stuck drain (heartbeat older than
+    /// [`SchedulerConfig::drain_stall_s`]).
+    pub drain_stalls: u64,
+    /// Health at report time: `Healthy` after a successful publish,
+    /// `Degraded` while the most recent writer failed or the drain is
+    /// dead/stalled.
+    pub health: ServeHealth,
     /// Per-class pool queue delay over the driven window (enqueue→start
     /// of reader predict shards vs writer refit rounds). Stamped by the
     /// closed- and open-loop drivers; zero for a bare `report()` call.
@@ -244,6 +318,29 @@ impl SchedReport {
             self.publishes,
             self.staged_drains,
         ));
+        let fault_total = self.rollbacks
+            + self.publish_rejected
+            + self.quarantined_rows
+            + self.ingest_rejected_rows
+            + self.drain_retries
+            + self.drain_deaths
+            + self.drain_respawns
+            + self.drain_stalls;
+        if fault_total > 0 {
+            s.push_str(&format!(
+                "  faults: {} rollbacks ({} publish-rejected), {} rows quarantined, \
+                 {} rows rejected at ingest, drain retries {} / deaths {} / respawns {} / stalls {}\n",
+                self.rollbacks,
+                self.publish_rejected,
+                self.quarantined_rows,
+                self.ingest_rejected_rows,
+                self.drain_retries,
+                self.drain_deaths,
+                self.drain_respawns,
+                self.drain_stalls,
+            ));
+        }
+        s.push_str(&format!("  health: {}\n", self.health));
         if self.queue_delay.reader.jobs + self.queue_delay.writer.jobs > 0 {
             s.push_str(&self.queue_delay.summary_line());
         }
@@ -272,6 +369,42 @@ impl<M: AppendExamples> Staging<M> {
     }
 }
 
+/// Bounded quarantine for batches a drain could not absorb: the refit
+/// failed every retry, so the rows are parked here — visible for
+/// inspection ([`Scheduler::dead_letter`]), never re-staged — instead of
+/// wedging the staging pipeline by failing forever. Capacity is
+/// row-counted; past it the *oldest whole batches* are evicted (the
+/// newest batch always stays, even if it alone exceeds the cap) and the
+/// evicted rows are counted in `dropped_rows`.
+struct DeadLetter<M: AppendExamples> {
+    batches: VecDeque<Dataset<M>>,
+    rows: usize,
+    cap_rows: usize,
+    dropped_rows: u64,
+}
+
+impl<M: AppendExamples> DeadLetter<M> {
+    fn new(cap_rows: usize) -> Self {
+        DeadLetter {
+            batches: VecDeque::new(),
+            rows: 0,
+            cap_rows,
+            dropped_rows: 0,
+        }
+    }
+
+    fn push(&mut self, batch: Dataset<M>) {
+        self.rows += batch.n();
+        self.batches.push_back(batch);
+        while self.rows > self.cap_rows && self.batches.len() > 1 {
+            if let Some(old) = self.batches.pop_front() {
+                self.rows -= old.n();
+                self.dropped_rows += old.n() as u64;
+            }
+        }
+    }
+}
+
 /// The published read state: the current snapshot plus the pool readers
 /// shard on. Locked only to clone/swap the `Arc`s — never across compute.
 struct Published<M: AppendExamples> {
@@ -290,6 +423,14 @@ struct SchedMetrics {
     publishes: u64,
     staged_drains: u64,
     rejected: u64,
+    rollbacks: u64,
+    publish_rejected: u64,
+    quarantined_rows: u64,
+    ingest_rejected_rows: u64,
+    drain_retries: u64,
+    drain_deaths: u64,
+    drain_respawns: u64,
+    drain_stalls: u64,
 }
 
 struct Shared<M: AppendExamples> {
@@ -316,6 +457,21 @@ struct Shared<M: AppendExamples> {
     /// Readers currently in flight (admitted, not yet completed) — the
     /// gauge [`SchedulerConfig::max_pending`] admission checks against.
     pending_readers: AtomicUsize,
+    /// Quarantined batches (drains that exhausted their retries).
+    dead_letter: Mutex<DeadLetter<M>>,
+    /// Current serve-tier health, stamped by every writer outcome.
+    health: Mutex<ServeHealth>,
+    /// `obs::now_ns()` stamped at the start of each drain attempt, `0`
+    /// while no drain is working — the watchdog's liveness signal. A
+    /// foreground `flush` stamps and clears it through the same drain
+    /// path.
+    drain_heartbeat_ns: AtomicU64,
+    /// Set by the drain thread's panic-guard when the thread dies; the
+    /// next spawner swaps it back off and counts a respawn.
+    drain_died: AtomicBool,
+    /// Latches the stall diagnosis so the watchdog warns once per stuck
+    /// drain, not once per predict.
+    stall_flagged: AtomicBool,
     metrics: Mutex<SchedMetrics>,
 }
 
@@ -329,11 +485,39 @@ impl Drop for PendingSlot<'_> {
     }
 }
 
+/// Panic-guard of the background drain thread: always clears the
+/// heartbeat and the in-flight flag (a stuck `true` would disable
+/// background refits forever and leave `flush()` spinning); when the
+/// thread is actually dying of a panic it additionally flags the death
+/// so the next request respawns the drain, and degrades health so the
+/// outage is visible until the respawned drain publishes.
+struct DrainGuard<'a, M: AppendExamples> {
+    shared: &'a Shared<M>,
+}
+
+impl<M: AppendExamples> Drop for DrainGuard<'_, M> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.shared.drain_died.store(true, Ordering::SeqCst);
+            lock_recover(&self.shared.metrics).drain_deaths += 1;
+            obs::registry().counter("sched.drain_deaths").inc();
+            *lock_recover(&self.shared.health) =
+                ServeHealth::degraded("background drain thread died");
+            crate::diag!(
+                Warn,
+                "background drain thread died; the next request that finds staged rows respawns it"
+            );
+        }
+        self.shared.drain_heartbeat_ns.store(0, Ordering::Relaxed);
+        self.shared.refit_running.store(false, Ordering::SeqCst);
+    }
+}
+
 impl<M: AppendExamples + Send> Shared<M> {
     /// Atomically remove everything staged (resetting the fast-path
     /// counter with it).
     fn take_batch(&self) -> Option<Dataset<M>> {
-        let mut g = self.staging.lock().unwrap();
+        let mut g = lock_recover(&self.staging);
         self.staged_count.store(0, Ordering::Relaxed);
         g.since = None;
         g.rows.take()
@@ -344,28 +528,116 @@ impl<M: AppendExamples + Send> Shared<M> {
     /// and the foreground [`Scheduler::flush`]. The session lock is held
     /// for the whole training request; readers are unaffected (they hold
     /// snapshots), other writers queue behind the lock.
-    fn run_staged_refit(&self) -> Option<RefitReport> {
-        let mut sess = self.session.lock().unwrap();
+    ///
+    /// A failed refit (the session has already rolled back) is retried
+    /// with exponential backoff up to
+    /// [`SchedulerConfig::drain_max_retries`] extra attempts; a batch
+    /// that fails them all is quarantined to the dead-letter buffer and
+    /// the failure is returned — `Some(Err(_))` means "rows were staged
+    /// and could not be absorbed", never a lost batch.
+    fn drain_staged(&self) -> Option<Result<RefitReport, ServeError>> {
+        let mut sess = lock_recover(&self.session);
         let batch = self.take_batch()?;
         obs::emit(EventKind::IngestDrain, obs::CLASS_WRITER, 0, batch.n() as u64);
         obs::registry().counter("sched.staged_drains").inc();
-        let report = sess.partial_fit_rows(&batch);
-        self.metrics.lock().unwrap().staged_drains += 1;
-        self.publish(&sess, report.kind);
-        Some(report)
+        lock_recover(&self.metrics).staged_drains += 1;
+        let mut last_err: Option<ServeError> = None;
+        for attempt in 0..=self.cfg.drain_max_retries {
+            if attempt > 0 {
+                lock_recover(&self.metrics).drain_retries += 1;
+                obs::registry().counter("sched.drain_retries").inc();
+                std::thread::sleep(Duration::from_millis((10u64 << (attempt - 1)).min(200)));
+            }
+            self.drain_heartbeat_ns.store(obs::now_ns().max(1), Ordering::Relaxed);
+            match sess.partial_fit_rows(&batch) {
+                Ok(report) => {
+                    self.publish(&sess, report.kind);
+                    *lock_recover(&self.health) = ServeHealth::Healthy;
+                    self.stall_flagged.store(false, Ordering::SeqCst);
+                    self.drain_heartbeat_ns.store(0, Ordering::Relaxed);
+                    return Some(Ok(report));
+                }
+                Err(err) => {
+                    self.note_rollback(&err);
+                    last_err = Some(err);
+                }
+            }
+        }
+        let err = last_err.expect("drain loop runs at least one attempt");
+        let quarantined = batch.n();
+        lock_recover(&self.dead_letter).push(batch);
+        lock_recover(&self.metrics).quarantined_rows += quarantined as u64;
+        obs::registry()
+            .counter("sched.quarantined_rows")
+            .add(quarantined as u64);
+        crate::diag!(
+            Warn,
+            "drain refit failed {} attempt(s); quarantined {} rows to the dead letter: {}",
+            self.cfg.drain_max_retries + 1,
+            quarantined,
+            err
+        );
+        *lock_recover(&self.health) = ServeHealth::degraded(format!("drain failed: {err}"));
+        self.drain_heartbeat_ns.store(0, Ordering::Relaxed);
+        Some(Err(err))
+    }
+
+    /// Record a writer attempt that failed and was rolled back: the
+    /// published version is retained (readers never saw anything), the
+    /// rollback counters tick, and a `snapshot_rollback` trace event
+    /// carries the version that kept serving. A health-gate refusal
+    /// ([`ServeError::NonFinite`]) additionally counts as a rejected
+    /// publish.
+    fn note_rollback(&self, err: &ServeError) {
+        let version = lock_recover(&self.published).snap.version();
+        {
+            let mut m = lock_recover(&self.metrics);
+            m.rollbacks += 1;
+            if matches!(err, ServeError::NonFinite { .. }) {
+                m.publish_rejected += 1;
+            }
+        }
+        obs::registry().counter("sched.rollbacks").inc();
+        if matches!(err, ServeError::NonFinite { .. }) {
+            obs::registry().counter("sched.publish_rejected").inc();
+        }
+        obs::emit(EventKind::SnapshotRollback, obs::CLASS_WRITER, 0, version);
+        crate::diag!(Warn, "writer rolled back, v{} keeps serving: {}", version, err);
+    }
+
+    /// Shared tail of the foreground writers ([`Scheduler::refit_lambda`],
+    /// [`Scheduler::retrain`]): publish on success, account the rollback
+    /// and degrade on failure.
+    fn finish_foreground(
+        &self,
+        sess: &Session<M>,
+        r: Result<RefitReport, ServeError>,
+    ) -> Result<RefitReport, ServeError> {
+        match r {
+            Ok(report) => {
+                self.publish(sess, report.kind);
+                *lock_recover(&self.health) = ServeHealth::Healthy;
+                Ok(report)
+            }
+            Err(err) => {
+                self.note_rollback(&err);
+                *lock_recover(&self.health) = ServeHealth::degraded(err.to_string());
+                Err(err)
+            }
+        }
     }
 
     /// Install the session's current model as the next snapshot version.
     /// One `Arc` swap under the publish lock: readers that already cloned
     /// version `k` keep it; the next reader gets `k+1` whole.
     fn publish(&self, sess: &Session<M>, kind: &'static str) -> u64 {
-        let mut g = self.published.lock().unwrap();
+        let mut g = lock_recover(&self.published);
         let version = g.snap.version() + 1;
         g.snap = Arc::new(sess.snapshot(version, kind));
         g.pool = sess.pool_arc();
         self.published_n.store(g.snap.n(), Ordering::Relaxed);
         drop(g);
-        self.metrics.lock().unwrap().publishes += 1;
+        lock_recover(&self.metrics).publishes += 1;
         obs::emit(EventKind::SnapshotPublish, obs::CLASS_WRITER, 0, version);
         obs::registry().counter("sched.publishes").inc();
         version
@@ -377,7 +649,7 @@ impl<M: AppendExamples + Send> Shared<M> {
     /// and the `Drop` impl so the subtle loop exists exactly once.
     fn join_background_writer(&self) {
         loop {
-            let prev = self.refit_handle.lock().unwrap().take();
+            let prev = lock_recover(&self.refit_handle).take();
             match prev {
                 Some(h) => {
                     let _ = h.join();
@@ -403,10 +675,11 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// Wrap a trained session and publish its model as snapshot version 0.
     ///
     /// Panics on a non-positive rows threshold, a non-finite /
-    /// non-positive staleness, or a zero pending budget (the same
-    /// loud-at-the-door treatment `refit-lambda` gets): a zero threshold
-    /// would refit per arrival, a bad staleness would either spin or
-    /// never drain, and a zero budget would shed every request.
+    /// non-positive staleness or stall budget, a zero pending budget, or
+    /// a zero dead-letter capacity (the same loud-at-the-door treatment
+    /// `refit-lambda` gets): a zero threshold would refit per arrival, a
+    /// bad staleness would either spin or never drain, and a zero budget
+    /// would shed every request.
     pub fn new(session: Session<M>, cfg: SchedulerConfig) -> Self {
         assert!(
             cfg.refit_rows_threshold >= 1,
@@ -421,9 +694,19 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         if let Some(budget) = cfg.max_pending {
             assert!(budget >= 1, "max pending readers must be >= 1, got 0");
         }
+        assert!(
+            cfg.drain_stall_s.is_finite() && cfg.drain_stall_s > 0.0,
+            "drain stall budget must be finite and positive, got {}",
+            cfg.drain_stall_s
+        );
+        assert!(
+            cfg.dead_letter_rows >= 1,
+            "dead letter capacity must be >= 1 row, got 0"
+        );
         let snap = Arc::new(session.snapshot(0, "initial-train"));
         let pool = session.pool_arc();
         let published_n = AtomicUsize::new(snap.n());
+        let dead_letter = Mutex::new(DeadLetter::new(cfg.dead_letter_rows));
         Scheduler {
             shared: Arc::new(Shared {
                 cfg,
@@ -438,6 +721,11 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
                 refit_running: AtomicBool::new(false),
                 refit_handle: Mutex::new(None),
                 pending_readers: AtomicUsize::new(0),
+                dead_letter,
+                health: Mutex::new(ServeHealth::Healthy),
+                drain_heartbeat_ns: AtomicU64::new(0),
+                drain_died: AtomicBool::new(false),
+                stall_flagged: AtomicBool::new(false),
                 metrics: Mutex::new(SchedMetrics::default()),
             }),
         }
@@ -447,7 +735,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// Holding the returned `Arc` pins that version — it stays fully
     /// servable no matter how many writers publish after it.
     pub fn snapshot(&self) -> Arc<ModelSnapshot<M>> {
-        self.shared.published.lock().unwrap().snap.clone()
+        lock_recover(&self.shared.published).snap.clone()
     }
 
     /// Version of the currently published snapshot.
@@ -469,6 +757,30 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
 
     pub fn avg_nnz(&self) -> f64 {
         self.snapshot().avg_nnz()
+    }
+
+    /// Current serve-tier health: `Healthy` after a successful publish,
+    /// `Degraded { reason }` while the most recent writer failed or the
+    /// background drain is dead/stalled. Readers serve the last published
+    /// version in either state.
+    pub fn health(&self) -> ServeHealth {
+        lock_recover(&self.shared.health).clone()
+    }
+
+    /// Rows currently held in the dead-letter buffer (quarantined by
+    /// drains that exhausted their retries).
+    pub fn dead_letter_rows(&self) -> usize {
+        lock_recover(&self.shared.dead_letter).rows
+    }
+
+    /// The quarantined batches themselves (cloned; diagnostics and
+    /// offline triage — the scheduler never re-stages them).
+    pub fn dead_letter(&self) -> Vec<Dataset<M>> {
+        lock_recover(&self.shared.dead_letter)
+            .batches
+            .iter()
+            .cloned()
+            .collect()
     }
 
     /// Serve a read-only predict concurrently: grab the current snapshot,
@@ -499,7 +811,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         let mut current = gauge.load(Ordering::SeqCst);
         loop {
             if self.shared.cfg.max_pending.is_some_and(|cap| current >= cap) {
-                self.shared.metrics.lock().unwrap().rejected += 1;
+                lock_recover(&self.shared.metrics).rejected += 1;
                 obs::emit(EventKind::AdmissionReject, obs::CLASS_READER, 0, current as u64);
                 obs::registry().counter("sched.rejected").inc();
                 return PredictAdmission::Rejected { pending: current };
@@ -524,7 +836,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// runs, so both entry points are bit-wise identical per version.
     fn serve_predict(&self, idx: &[usize]) -> PredictOutcome {
         let (snap, pool) = {
-            let g = self.shared.published.lock().unwrap();
+            let g = lock_recover(&self.shared.published);
             (g.snap.clone(), g.pool.clone())
         };
         let overlapped_at_start = self.shared.refit_running.load(Ordering::Relaxed);
@@ -534,7 +846,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         let dt = t.elapsed_s();
         let overlapped = overlapped_at_start || self.shared.refit_running.load(Ordering::Relaxed);
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = lock_recover(&self.shared.metrics);
             m.per_version.entry(snap.version()).or_default().push(dt);
             m.ages.push(age);
             m.predicts += 1;
@@ -556,11 +868,25 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// no training on this path) and kick a background refit if a
     /// threshold tripped. Readers keep serving the previous snapshot
     /// until the refit publishes.
+    ///
+    /// Rows carrying non-finite values are refused at the door — counted
+    /// in [`SchedReport::ingest_rejected_rows`], never staged — so a
+    /// poisoned arrival cannot reach training at all (defense in depth:
+    /// the publish health gate would also catch the NaN model such rows
+    /// could produce).
     pub fn ingest(&self, rows: Dataset<M>) {
         assert_eq!(rows.d(), self.d(), "ingested rows must match d");
         let k = rows.n();
+        if !rows.is_finite() {
+            lock_recover(&self.shared.metrics).ingest_rejected_rows += k as u64;
+            obs::registry()
+                .counter("sched.ingest_rejected_rows")
+                .add(k as u64);
+            crate::diag!(Warn, "rejected {}-row ingest batch: non-finite values", k);
+            return;
+        }
         {
-            let mut g = self.shared.staging.lock().unwrap();
+            let mut g = lock_recover(&self.shared.staging);
             match g.rows.take() {
                 Some(mut acc) => {
                     acc.append(&rows);
@@ -573,7 +899,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             }
             self.shared.staged_count.store(g.staged(), Ordering::Relaxed);
         }
-        self.shared.metrics.lock().unwrap().ingested_rows += k as u64;
+        lock_recover(&self.shared.metrics).ingested_rows += k as u64;
         self.maybe_spawn_refit();
     }
 
@@ -590,7 +916,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         if self.shared.staged_count.load(Ordering::Relaxed) == 0 {
             return false;
         }
-        let g = self.shared.staging.lock().unwrap();
+        let g = lock_recover(&self.shared.staging);
         let staged = g.staged();
         staged >= self.shared.cfg.refit_rows_threshold
             || (staged > 0
@@ -599,19 +925,60 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
                     .unwrap_or(false))
     }
 
+    /// Watchdog half of the self-healing drain: a live drain attempt
+    /// stamps `drain_heartbeat_ns`; if that stamp grows older than
+    /// [`SchedulerConfig::drain_stall_s`] the drain is stuck inside a
+    /// refit (not dead — death clears the heartbeat via its panic-guard).
+    /// An OS thread cannot be killed safely, so a stuck drain is
+    /// *flagged* — counted, warned, health degraded — exactly once per
+    /// incident rather than silently waited on.
+    fn check_drain_watchdog(&self) {
+        let hb = self.shared.drain_heartbeat_ns.load(Ordering::Relaxed);
+        if hb == 0 {
+            return;
+        }
+        let age_s = obs::now_ns().saturating_sub(hb) as f64 / 1e9;
+        if age_s < self.shared.cfg.drain_stall_s {
+            return;
+        }
+        if !self.shared.stall_flagged.swap(true, Ordering::SeqCst) {
+            lock_recover(&self.shared.metrics).drain_stalls += 1;
+            obs::registry().counter("sched.drain_stalls").inc();
+            *lock_recover(&self.shared.health) = ServeHealth::degraded(format!(
+                "background drain stalled ({age_s:.1}s since last heartbeat)"
+            ));
+            crate::diag!(
+                Warn,
+                "background drain heartbeat is {:.1}s old (budget {}s) — flagging a stall",
+                age_s,
+                self.shared.cfg.drain_stall_s
+            );
+        }
+    }
+
     /// Spawn the background writer if a threshold tripped and none is in
-    /// flight. Returns whether a refit was started.
+    /// flight. Returns whether a refit was started. Also runs the stall
+    /// watchdog and, when the previous drain thread died, counts the
+    /// respawn — this is the "self-healing" half: any later request that
+    /// finds staged work brings the drain back.
     fn maybe_spawn_refit(&self) -> bool {
+        self.check_drain_watchdog();
         if !self.refit_due() {
             return false;
         }
         if self.shared.refit_running.swap(true, Ordering::SeqCst) {
             return false; // one background writer at a time
         }
+        if self.shared.drain_died.swap(false, Ordering::SeqCst) {
+            lock_recover(&self.shared.metrics).drain_respawns += 1;
+            obs::registry().counter("sched.drain_respawns").inc();
+            self.shared.stall_flagged.store(false, Ordering::SeqCst);
+            crate::diag!(Info, "respawning background drain thread after a death");
+        }
         // the handle slot is held across reap → spawn → store so a slow
         // spawner can never clobber (and thereby detach) a newer writer's
         // handle — whoever joins the stored handle joins the latest writer
-        let mut slot = self.shared.refit_handle.lock().unwrap();
+        let mut slot = lock_recover(&self.shared.refit_handle);
         if let Some(h) = slot.take() {
             // previous writer already cleared refit_running, so it has
             // finished its work; the join is a formality
@@ -621,54 +988,54 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         let handle = std::thread::Builder::new()
             .name("parlin-sched-refit".to_string())
             .spawn(move || {
-                // clear the in-flight flag even if the refit panics (e.g.
-                // a poisoned session lock) — a stuck `true` would disable
-                // background refits forever and leave flush() spinning
-                struct Reset<'a>(&'a AtomicBool);
-                impl Drop for Reset<'_> {
-                    fn drop(&mut self) {
-                        self.0.store(false, Ordering::SeqCst);
-                    }
-                }
-                let _reset = Reset(&shared.refit_running);
-                let _ = shared.run_staged_refit();
+                let _guard = DrainGuard { shared: &shared };
+                shared
+                    .drain_heartbeat_ns
+                    .store(obs::now_ns().max(1), Ordering::Relaxed);
+                fault::poke(FaultSite::Drain);
+                let _ = shared.drain_staged();
             })
             .expect("spawn background refit writer");
         *slot = Some(handle);
         true
     }
 
-    /// Foreground writer: change λ and warm-refit, then publish.
+    /// Foreground writer: change λ and warm-refit, then publish. An
+    /// invalid λ or a contained failure comes back as `Err` — the session
+    /// has already rolled back and the published version keeps serving.
     /// Serializes with every other writer on the session lock.
-    pub fn refit_lambda(&self, lambda: f64) -> RefitReport {
-        let mut sess = self.shared.session.lock().unwrap();
+    pub fn refit_lambda(&self, lambda: f64) -> Result<RefitReport, ServeError> {
+        let mut sess = lock_recover(&self.shared.session);
         let r = sess.partial_fit_lambda(lambda);
-        self.shared.publish(&sess, r.kind);
-        r
+        self.shared.finish_foreground(&sess, r)
     }
 
     /// Foreground writer: cold retrain with the session's current config,
-    /// then publish.
-    pub fn retrain(&self) -> RefitReport {
-        let mut sess = self.shared.session.lock().unwrap();
+    /// then publish. A contained failure comes back as `Err` — the
+    /// session has already rolled back and the published version keeps
+    /// serving.
+    pub fn retrain(&self) -> Result<RefitReport, ServeError> {
+        let mut sess = lock_recover(&self.shared.session);
         let r = sess.retrain_same();
-        self.shared.publish(&sess, r.kind);
-        r
+        self.shared.finish_foreground(&sess, r)
     }
 
     /// Wait out any in-flight background refit, then synchronously drain
-    /// whatever is still staged (ignoring thresholds). Returns the drain
-    /// refit's report, if rows were staged.
-    pub fn flush(&self) -> Option<RefitReport> {
+    /// whatever is still staged (ignoring thresholds). `None` when
+    /// nothing was staged; `Some(Err(_))` when staged rows could not be
+    /// absorbed (they are quarantined in the dead letter).
+    pub fn flush(&self) -> Option<Result<RefitReport, ServeError>> {
         self.shared.join_background_writer();
-        self.shared.run_staged_refit()
+        self.shared.drain_staged()
     }
 
     /// Snapshot of the accumulated metrics (per-version latencies,
-    /// snapshot ages, overlap counters). `total_wall_s` is left 0 — the
-    /// closed-loop driver stamps it.
+    /// snapshot ages, overlap counters, fault/recovery counters, health).
+    /// `total_wall_s` is left 0 — the closed-loop driver stamps it.
     pub fn report(&self) -> SchedReport {
-        let m = self.shared.metrics.lock().unwrap();
+        // health is read before the metrics lock — never hold two guards
+        let health = self.health();
+        let m = lock_recover(&self.shared.metrics);
         SchedReport {
             per_version: m
                 .per_version
@@ -686,6 +1053,15 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             publishes: m.publishes,
             staged_drains: m.staged_drains,
             rejected_predicts: m.rejected,
+            rollbacks: m.rollbacks,
+            publish_rejected: m.publish_rejected,
+            quarantined_rows: m.quarantined_rows,
+            ingest_rejected_rows: m.ingest_rejected_rows,
+            drain_retries: m.drain_retries,
+            drain_deaths: m.drain_deaths,
+            drain_respawns: m.drain_respawns,
+            drain_stalls: m.drain_stalls,
+            health,
             queue_delay: QueueDelayReport::default(),
             total_wall_s: 0.0,
             metrics: obs::MetricsSnapshot::default(),
@@ -695,13 +1071,13 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// Busy-time census of the resident pool (locks the writer state
     /// briefly; diagnostics only).
     pub fn pool_stats(&self) -> PoolStats {
-        self.shared.session.lock().unwrap().pool_stats()
+        lock_recover(&self.shared.session).pool_stats()
     }
 
     /// Duality gap of the model the *writer* currently holds (may be one
     /// publish ahead of the read side; diagnostics only).
     pub fn gap(&self) -> GapReport {
-        self.shared.session.lock().unwrap().gap()
+        lock_recover(&self.shared.session).gap()
     }
 }
 
@@ -747,6 +1123,7 @@ mod tests {
         let report = sched.report();
         assert_eq!((report.predicts, report.publishes), (1, 0));
         assert_eq!(report.per_version.len(), 1);
+        assert!(report.health.is_healthy());
     }
 
     #[test]
@@ -756,7 +1133,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 10,
                 refit_staleness_s: 1e6, // rows, not time, must trip this
-                max_pending: None,
+                ..SchedulerConfig::default()
             },
         );
         sched.ingest(synthetic::dense_classification(4, 6, 73));
@@ -786,7 +1163,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 1_000_000, // time, not rows, must trip
                 refit_staleness_s: 0.02,
-                max_pending: None,
+                ..SchedulerConfig::default()
             },
         );
         sched.ingest(synthetic::dense_classification(3, 6, 76));
@@ -810,12 +1187,15 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 1_000_000,
                 refit_staleness_s: 1e6,
-                max_pending: None,
+                ..SchedulerConfig::default()
             },
         );
         sched.ingest(synthetic::dense_classification(5, 6, 78));
         assert_eq!(sched.version(), 0);
-        let r = sched.flush().expect("staged rows must force a drain refit");
+        let r = sched
+            .flush()
+            .expect("staged rows must force a drain refit")
+            .expect("a clean drain refit must succeed");
         assert_eq!(r.kind, "refit-rows");
         assert_eq!((sched.version(), sched.current_n()), (1, 105));
         assert!(sched.flush().is_none(), "nothing staged, nothing to drain");
@@ -824,9 +1204,9 @@ mod tests {
     #[test]
     fn foreground_writers_publish_in_sequence() {
         let sched = Scheduler::new(session(110, 79), SchedulerConfig::default());
-        let r1 = sched.refit_lambda(0.02);
+        let r1 = sched.refit_lambda(0.02).expect("clean λ refit");
         assert_eq!((r1.kind, sched.version()), ("refit-lambda", 1));
-        let r2 = sched.retrain();
+        let r2 = sched.retrain().expect("clean retrain");
         assert_eq!((r2.kind, sched.version()), ("retrain", 2));
         // the published snapshot serves the post-retrain weights
         let snap = sched.snapshot();
@@ -834,6 +1214,38 @@ mod tests {
         let out = sched.predict(&[1, 2, 3]);
         assert_eq!(out.version, 2);
         assert_eq!(out.margins, snap.predict(&[1, 2, 3]));
+        assert!(sched.health().is_healthy());
+    }
+
+    #[test]
+    fn invalid_lambda_degrades_health_without_publishing() {
+        let sched = Scheduler::new(session(90, 95), SchedulerConfig::default());
+        let err = sched.refit_lambda(-1.0).expect_err("λ <= 0 must be refused");
+        assert_eq!(err, ServeError::InvalidLambda { lambda: -1.0 });
+        assert_eq!(sched.version(), 0, "a refused writer publishes nothing");
+        assert!(!sched.health().is_healthy());
+        let report = sched.report();
+        assert_eq!(report.rollbacks, 1);
+        // a later clean writer restores health
+        sched.refit_lambda(0.02).expect("clean λ refit");
+        assert!(sched.health().is_healthy());
+        assert_eq!(sched.version(), 1);
+    }
+
+    #[test]
+    fn dead_letter_keeps_newest_batches_within_cap() {
+        let mut dl = DeadLetter::<crate::data::DenseMatrix>::new(10);
+        dl.push(synthetic::dense_classification(6, 4, 1));
+        dl.push(synthetic::dense_classification(6, 4, 2));
+        // 12 rows > cap 10: the oldest batch is evicted
+        assert_eq!(dl.rows, 6);
+        assert_eq!(dl.batches.len(), 1);
+        assert_eq!(dl.dropped_rows, 6);
+        // a single over-cap batch is kept anyway (never drop the newest)
+        dl.push(synthetic::dense_classification(25, 4, 3));
+        assert_eq!(dl.rows, 25);
+        assert_eq!(dl.batches.len(), 1);
+        assert_eq!(dl.dropped_rows, 12);
     }
 
     #[test]
@@ -844,7 +1256,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 0,
                 refit_staleness_s: 1.0,
-                max_pending: None,
+                ..SchedulerConfig::default()
             },
         );
     }
@@ -857,7 +1269,7 @@ mod tests {
             SchedulerConfig {
                 refit_rows_threshold: 8,
                 refit_staleness_s: f64::INFINITY,
-                max_pending: None,
+                ..SchedulerConfig::default()
             },
         );
     }
@@ -871,6 +1283,31 @@ mod tests {
                 refit_rows_threshold: 8,
                 refit_staleness_s: 1.0,
                 max_pending: Some(0),
+                ..SchedulerConfig::default()
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_drain_stall() {
+        let _ = Scheduler::new(
+            session(60, 96),
+            SchedulerConfig {
+                drain_stall_s: 0.0,
+                ..SchedulerConfig::default()
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_dead_letter_capacity() {
+        let _ = Scheduler::new(
+            session(60, 97),
+            SchedulerConfig {
+                dead_letter_rows: 0,
+                ..SchedulerConfig::default()
             },
         );
     }
@@ -883,6 +1320,7 @@ mod tests {
                 refit_rows_threshold: 1_000_000,
                 refit_staleness_s: 1e6,
                 max_pending: Some(4),
+                ..SchedulerConfig::default()
             },
         );
         let idx = [0usize, 3, 89];

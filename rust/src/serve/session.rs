@@ -18,13 +18,25 @@
 //! tail re-encode ([`ShardedLayout::append_tail`]); the resident
 //! *encoding* still copies under `Arc::make_mut` when a snapshot shares
 //! it (see the note on [`Session::partial_fit_rows`]).
+//!
+//! Writer requests are **fault-contained**: every refit/retrain runs
+//! between a checkpoint of the served state and a publish health gate,
+//! inside `catch_unwind`. A panic (genuine or injected via
+//! [`crate::fault`]) or a non-finite result restores the checkpoint and
+//! returns a typed [`ServeError`] — the session keeps serving the
+//! last-known-good model and no mutex above it is ever poisoned (see
+//! `docs/ROBUSTNESS.md` and the "Why a failed writer cannot corrupt a
+//! reader" section of `docs/ARCHITECTURE.md`).
 
 use crate::data::{AppendExamples, Dataset, LayoutPolicy, ShardedLayout};
+use crate::fault::{self, FaultAction, FaultSite, InjectedFault};
 use crate::glm::{self, GapReport, ModelState, Objective};
+use crate::serve::error::ServeError;
 use crate::serve::snapshot::{sharded_margins, ModelSnapshot};
 use crate::solver::{train, Buckets, ExecPolicy, PoolStats, SolverConfig, Variant, WorkerPool};
 use crate::sysinfo::Topology;
 use crate::util::Timer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 /// Outcome of one training-shaped request (initial train, partial refit,
@@ -97,6 +109,23 @@ pub struct Session<M: AppendExamples> {
     stats: SessionStats,
 }
 
+/// Everything a writer request may mutate, captured (by `Arc` clone —
+/// cheap) at writer entry. A session *between* writer requests is by
+/// construction healthy (its last writer either published or was rolled
+/// back), so the entry checkpoint IS the last-known-good model; restoring
+/// it after a panic or a refused publish returns the session to exactly
+/// the state readers are being served from.
+struct Checkpoint<M: AppendExamples> {
+    ds: Arc<Dataset<M>>,
+    ds_epoch: u64,
+    state: ModelState,
+    weights: Arc<Vec<f64>>,
+    layout: Option<Arc<ShardedLayout>>,
+    node_layout: Option<Arc<ShardedLayout>>,
+    cfg: SolverConfig,
+    pool: Arc<WorkerPool>,
+}
+
 impl<M: AppendExamples> Session<M> {
     /// Build the resident pool from `cfg.threads` on the (detected or
     /// configured) topology, then train the initial model on it.
@@ -121,7 +150,94 @@ impl<M: AppendExamples> Session<M> {
         };
         sess.rebuild_layout();
         sess.fit(None, "initial-train");
+        assert!(
+            sess.health_violation().is_none(),
+            "initial train produced a non-finite model — refusing to serve it"
+        );
         sess
+    }
+
+    /// Capture the served state at writer entry (Arc clones + one
+    /// `ModelState` clone — the α/v copy is O(n+d), noise next to the
+    /// training pass that follows).
+    fn checkpoint(&self) -> Checkpoint<M> {
+        Checkpoint {
+            ds: Arc::clone(&self.ds),
+            ds_epoch: self.ds_epoch,
+            state: self.state.clone(),
+            weights: Arc::clone(&self.weights),
+            layout: self.layout.clone(),
+            node_layout: self.node_layout.clone(),
+            cfg: self.cfg.clone(),
+            pool: Arc::clone(&self.pool),
+        }
+    }
+
+    /// Put the session back exactly where [`Session::checkpoint`] found
+    /// it. Overwrites every field a writer body may have touched, so it
+    /// is safe to call even after that body panicked halfway through.
+    fn restore(&mut self, cp: Checkpoint<M>) {
+        self.ds = cp.ds;
+        self.ds_epoch = cp.ds_epoch;
+        self.state = cp.state;
+        self.weights = cp.weights;
+        self.layout = cp.layout;
+        self.node_layout = cp.node_layout;
+        self.cfg = cp.cfg;
+        self.pool = cp.pool;
+    }
+
+    /// First health-gate violation in the served model, if any: the
+    /// primal weights, the dual state (α and the shared vector v), and
+    /// the margins of a small probe batch must all be finite. `None`
+    /// means the model is publishable.
+    fn health_violation(&self) -> Option<&'static str> {
+        if !self.weights.iter().all(|w| w.is_finite()) {
+            return Some("weights");
+        }
+        if !self.state.alpha.iter().all(|a| a.is_finite())
+            || !self.state.v.iter().all(|v| v.is_finite())
+        {
+            return Some("duals");
+        }
+        // end-to-end probe: a handful of margins through the real predict
+        // math catches poison the element-wise scans cannot see (e.g. a
+        // layout that decodes garbage)
+        let probe: Vec<usize> = (0..self.ds.n().min(4)).collect();
+        let margins = glm::model::margins(&self.ds, &self.weights, &probe);
+        if !margins.iter().all(|m| m.is_finite()) {
+            return Some("probe margins");
+        }
+        None
+    }
+
+    /// Run a writer body between a checkpoint and the publish health
+    /// gate, inside `catch_unwind`. On a panic (genuine or injected) or a
+    /// non-finite result the checkpoint is restored — the session keeps
+    /// serving the last-known-good model — and the failure comes back as
+    /// a typed [`ServeError`].
+    fn guarded(
+        &mut self,
+        kind: &'static str,
+        body: impl FnOnce(&mut Self) -> RefitReport,
+    ) -> Result<RefitReport, ServeError> {
+        let cp = self.checkpoint();
+        // AssertUnwindSafe: on the Err path `restore` overwrites every
+        // field the body may have left half-mutated, so the "broken
+        // invariant" unwind safety protects against cannot escape
+        match catch_unwind(AssertUnwindSafe(|| body(self))) {
+            Ok(report) => match self.health_violation() {
+                None => Ok(report),
+                Some(what) => {
+                    self.restore(cp);
+                    Err(ServeError::NonFinite { kind, what })
+                }
+            },
+            Err(payload) => {
+                self.restore(cp);
+                Err(classify_panic(kind, payload))
+            }
+        }
     }
 
     /// (Re)materialize the resident interleaved layout from the current
@@ -203,65 +319,77 @@ impl<M: AppendExamples> Session<M> {
     /// the unconditional functional build is deliberate — the `O(n)`
     /// label copy is noise next to the refit's training pass, and the
     /// append cost model stays identical with and without readers.)
-    pub fn partial_fit_rows(&mut self, rows: &Dataset<M>) -> RefitReport {
-        assert_eq!(rows.d(), self.ds.d(), "appended rows must match d");
+    /// A non-matching feature dimension, a panicking solver, or a
+    /// non-finite result all come back as `Err` with the session restored
+    /// to the last-known-good model (see [`Session::guarded`]).
+    pub fn partial_fit_rows(&mut self, rows: &Dataset<M>) -> Result<RefitReport, ServeError> {
+        if rows.d() != self.ds.d() {
+            return Err(ServeError::ShapeMismatch { expected: self.ds.d(), got: rows.d() });
+        }
         self.stats.refits += 1;
-        self.ds = Arc::new(self.ds.appended(rows));
-        self.ds_epoch += 1;
-        self.refresh_layout_after_append();
-        let mut warm = self.state.extended(self.ds.n());
-        warm.rebuild_v(&self.ds);
-        self.fit(Some(warm), "refit-rows")
+        self.guarded("refit-rows", |sess| {
+            sess.ds = Arc::new(sess.ds.appended(rows));
+            sess.ds_epoch += 1;
+            sess.refresh_layout_after_append();
+            let mut warm = sess.state.extended(sess.ds.n());
+            warm.rebuild_v(&sess.ds);
+            sess.fit(Some(warm), "refit-rows")
+        })
     }
 
     /// Change the regularization strength and warm-start refit from the
     /// current state (`α` stays dual-feasible under a new λ; `v` does not
     /// depend on λ at all).
     ///
-    /// Panics on a non-finite or non-positive λ — `1/(λn)` would poison
-    /// every coordinate update and the session would silently serve NaN
-    /// margins afterwards.
-    pub fn partial_fit_lambda(&mut self, lambda: f64) -> RefitReport {
-        assert!(
-            lambda.is_finite() && lambda > 0.0,
-            "refit lambda must be finite and positive, got {lambda}"
-        );
+    /// A non-finite or non-positive λ is a typed
+    /// [`ServeError::InvalidLambda`] — `1/(λn)` would poison every
+    /// coordinate update and the session would silently serve NaN margins
+    /// afterwards.
+    pub fn partial_fit_lambda(&mut self, lambda: f64) -> Result<RefitReport, ServeError> {
+        if !(lambda.is_finite() && lambda > 0.0) {
+            return Err(ServeError::InvalidLambda { lambda });
+        }
         self.stats.refits += 1;
-        self.cfg.obj = self.cfg.obj.with_lambda(lambda);
-        let mut warm = self.state.clone();
-        warm.rebuild_v(&self.ds);
-        self.fit(Some(warm), "refit-lambda")
+        self.guarded("refit-lambda", |sess| {
+            sess.cfg.obj = sess.cfg.obj.with_lambda(lambda);
+            let mut warm = sess.state.clone();
+            warm.rebuild_v(&sess.ds);
+            sess.fit(Some(warm), "refit-lambda")
+        })
     }
 
     /// Cold retrain under a new configuration, reusing the resident pool.
     /// If the new config asks for a different worker count the session
     /// pool is rebuilt to match (logged) — the one situation where workers
-    /// are respawned mid-session.
-    pub fn retrain(&mut self, cfg: SolverConfig) -> RefitReport {
+    /// are respawned mid-session. A failed retrain restores the previous
+    /// config, pool and model ([`Session::guarded`]).
+    pub fn retrain(&mut self, cfg: SolverConfig) -> Result<RefitReport, ServeError> {
         self.stats.retrains += 1;
-        let mut cfg = cfg;
-        cfg.topology = Some(self.topo.clone());
-        let want = cfg.threads.max(1);
-        if want != self.pool.workers() {
-            crate::diag!(
-                Warn,
-                "parlin serve: retrain wants {want} workers, session pool has {}; \
-                 rebuilding the resident pool",
-                self.pool.workers()
-            );
-            self.pool = Arc::new(WorkerPool::new(want, &self.topo));
-        }
-        cfg.exec = ExecPolicy::Shared(Arc::clone(&self.pool));
-        cfg.warm_start = None;
-        self.cfg = cfg;
-        // a retrain may change the layout policy or bucket geometry
-        self.rebuild_layout();
-        self.fit(None, "retrain")
+        self.guarded("retrain", move |sess| {
+            let mut cfg = cfg;
+            cfg.topology = Some(sess.topo.clone());
+            let want = cfg.threads.max(1);
+            if want != sess.pool.workers() {
+                crate::diag!(
+                    Warn,
+                    "parlin serve: retrain wants {want} workers, session pool has {}; \
+                     rebuilding the resident pool",
+                    sess.pool.workers()
+                );
+                sess.pool = Arc::new(WorkerPool::new(want, &sess.topo));
+            }
+            cfg.exec = ExecPolicy::Shared(Arc::clone(&sess.pool));
+            cfg.warm_start = None;
+            sess.cfg = cfg;
+            // a retrain may change the layout policy or bucket geometry
+            sess.rebuild_layout();
+            sess.fit(None, "retrain")
+        })
     }
 
     /// Cold retrain with the session's current configuration (the baseline
     /// warm refits are measured against).
-    pub fn retrain_same(&mut self) -> RefitReport {
+    pub fn retrain_same(&mut self) -> Result<RefitReport, ServeError> {
         let cfg = self.cfg.clone();
         self.retrain(cfg)
     }
@@ -323,7 +451,16 @@ impl<M: AppendExamples> Session<M> {
             wall_s: t.elapsed_s(),
             n: self.ds.n(),
         };
-        self.weights = Arc::new(out.state.w(&self.cfg.obj));
+        let mut w = out.state.w(&self.cfg.obj);
+        // fault site "publish": the last instant before the freshly
+        // trained model is installed. A `nan` action poisons one seeded
+        // coordinate here — the publish health gate above must refuse it.
+        if matches!(fault::poke(FaultSite::Publish), Some(FaultAction::Nan)) {
+            if let Some(wi) = w.get_mut(fault::poison_index(self.ds.d())) {
+                *wi = f64::NAN;
+            }
+        }
+        self.weights = Arc::new(w);
         self.state = out.state;
         report
     }
@@ -403,6 +540,25 @@ impl<M: AppendExamples> Session<M> {
     }
 }
 
+/// Map a caught panic payload to a [`ServeError`]: an
+/// [`InjectedFault`] marker (the fault harness's `error` action) becomes
+/// [`ServeError::Injected`]; anything else is a genuine
+/// [`ServeError::RefitPanicked`] with the panic message when it carried
+/// one.
+fn classify_panic(kind: &'static str, payload: Box<dyn std::any::Any + Send>) -> ServeError {
+    if let Some(injected) = payload.downcast_ref::<InjectedFault>() {
+        return ServeError::Injected { site: injected.site };
+    }
+    let message = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    ServeError::RefitPanicked { kind, message }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,18 +594,72 @@ mod tests {
     fn lambda_refit_updates_objective() {
         let ds = synthetic::dense_classification(150, 6, 42);
         let mut sess = Session::new(ds, cfg(150, 2));
-        let r = sess.partial_fit_lambda(0.05);
+        let r = sess.partial_fit_lambda(0.05).expect("valid λ refit");
         assert_eq!(r.kind, "refit-lambda");
         assert!(r.converged);
         assert!((sess.objective().lambda() - 0.05).abs() < 1e-15);
     }
 
     #[test]
-    #[should_panic]
-    fn lambda_refit_rejects_nonpositive() {
+    fn lambda_refit_rejects_nonpositive_as_typed_error() {
         let ds = synthetic::dense_classification(80, 4, 48);
         let mut sess = Session::new(ds, cfg(80, 2));
-        let _ = sess.partial_fit_lambda(0.0);
+        let before = sess.objective().lambda();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            match sess.partial_fit_lambda(bad) {
+                Err(ServeError::InvalidLambda { lambda }) => {
+                    assert!(lambda == bad || (lambda.is_nan() && bad.is_nan()))
+                }
+                other => panic!("λ={bad} must be InvalidLambda, got {other:?}"),
+            }
+        }
+        // the rejection mutated nothing: same objective, still serving
+        assert_eq!(sess.objective().lambda(), before);
+        assert_eq!(sess.predict(&[0, 1]).len(), 2);
+    }
+
+    #[test]
+    fn rows_refit_rejects_shape_mismatch_without_mutating() {
+        let ds = synthetic::dense_classification(90, 5, 58);
+        let mut sess = Session::new(ds, cfg(90, 2));
+        let wrong = synthetic::dense_classification(10, 4, 59);
+        match sess.partial_fit_rows(&wrong) {
+            Err(ServeError::ShapeMismatch { expected: 5, got: 4 }) => {}
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        assert_eq!(sess.n(), 90, "rejected rows must not be absorbed");
+        assert_eq!(sess.ds_epoch(), 0);
+        assert_eq!(sess.predict(&[0, 89]).len(), 2);
+    }
+
+    /// The tentpole claim at the session level: a panic mid-refit (here
+    /// injected at the first solver epoch) is contained, the session is
+    /// restored to the last-known-good model bit-for-bit, and a later
+    /// clean refit succeeds.
+    #[test]
+    fn injected_panic_is_contained_and_restored() {
+        use crate::fault::FaultPlan;
+        let ds = synthetic::dense_classification(100, 6, 65);
+        let mut sess = Session::new(ds, cfg(100, 2));
+        let before = sess.predict(&[0, 1, 2, 3]);
+        let w_before = sess.weights().to_vec();
+        {
+            let _fault = FaultPlan::parse("panic@epoch#1", 2).unwrap().arm();
+            let fresh = synthetic::dense_classification(10, 6, 66);
+            match sess.partial_fit_rows(&fresh) {
+                Err(ServeError::RefitPanicked { kind: "refit-rows", .. }) => {}
+                other => panic!("expected RefitPanicked, got {other:?}"),
+            }
+        }
+        // restored: dataset, epoch counter and weights exactly as before
+        assert_eq!(sess.n(), 100);
+        assert_eq!(sess.ds_epoch(), 0);
+        assert_eq!(sess.weights(), &w_before[..]);
+        assert_eq!(sess.predict(&[0, 1, 2, 3]), before, "bit-wise last-known-good");
+        // the failure left nothing broken behind: a clean refit works
+        let fresh = synthetic::dense_classification(10, 6, 67);
+        let r = sess.partial_fit_rows(&fresh).expect("post-recovery refit");
+        assert_eq!((r.n, sess.n()), (110, 110));
     }
 
     #[test]
@@ -457,7 +667,7 @@ mod tests {
         let ds = synthetic::dense_classification(100, 5, 43);
         let mut sess = Session::new(ds, cfg(100, 2));
         let fresh = synthetic::dense_classification(10, 5, 44);
-        let r = sess.partial_fit_rows(&fresh);
+        let r = sess.partial_fit_rows(&fresh).expect("clean refit");
         assert_eq!((r.n, sess.n()), (110, 110));
         assert!(r.converged);
         assert!(sess.state().v_drift(sess.dataset()) < 1e-6);
@@ -482,7 +692,7 @@ mod tests {
         for round in 0..3u64 {
             let fresh = synthetic::dense_classification(8, 6, 78 + round);
             let fresh_ptr = fresh.x.col(0).as_ptr();
-            sess.partial_fit_rows(&fresh);
+            sess.partial_fit_rows(&fresh).expect("clean refit");
             let x = &sess.dataset().x;
             // segment census: original head + one sealed segment per append
             assert_eq!(x.num_segments(), 2 + round as usize);
@@ -508,7 +718,7 @@ mod tests {
         let mut sess = Session::new(ds, cfg(120, 2));
         for round in 0..3u64 {
             let fresh = synthetic::sparse_classification(9, 40, 0.1, 52 + round);
-            sess.partial_fit_rows(&fresh);
+            sess.partial_fit_rows(&fresh).expect("clean refit");
             let idx: Vec<usize> = (0..sess.n()).step_by(7).collect();
             let got = sess.predict(&idx);
             let want = glm::model::margins(sess.dataset(), &sess.weights().to_vec(), &idx);
@@ -525,7 +735,7 @@ mod tests {
         let mut sess = Session::new(ds, cfg(120, 2));
         assert_eq!(sess.workers(), 2);
         let cap = DiagCapture::start();
-        let r = sess.retrain(cfg(120, 3));
+        let r = sess.retrain(cfg(120, 3)).expect("clean retrain");
         let recs = cap.take();
         drop(cap);
         assert_eq!(sess.workers(), 3);
@@ -546,7 +756,7 @@ mod tests {
         let ds = synthetic::sparse_classification(300, 80, 0.05, 46);
         let mut sess = Session::new(ds, cfg(300, 2));
         let fresh = synthetic::sparse_classification(15, 80, 0.05, 47);
-        let r = sess.partial_fit_rows(&fresh);
+        let r = sess.partial_fit_rows(&fresh).expect("clean refit");
         assert_eq!(sess.n(), 315);
         assert!(r.converged);
         assert_eq!(sess.predict(&[0, 314]).len(), 2);
@@ -566,7 +776,7 @@ mod tests {
         assert!(sess.node_layout.is_some(), "numa train must seed the cache");
         let first = Arc::as_ptr(sess.node_layout.as_ref().unwrap());
         // λ refit keeps the dataset: the cache must be reused, not rebuilt
-        let r = sess.partial_fit_lambda(0.01);
+        let r = sess.partial_fit_lambda(0.01).expect("clean refit");
         assert!(r.epochs >= 1);
         assert_eq!(
             Arc::as_ptr(sess.node_layout.as_ref().unwrap()),
@@ -575,7 +785,7 @@ mod tests {
         );
         // an append changes (n, nnz): the key misses and the cache rolls
         let fresh = synthetic::dense_classification(12, 9, 50);
-        sess.partial_fit_rows(&fresh);
+        sess.partial_fit_rows(&fresh).expect("clean refit");
         assert_ne!(Arc::as_ptr(sess.node_layout.as_ref().unwrap()), first);
         let idx: Vec<usize> = (0..sess.n()).collect();
         let got = sess.predict(&idx);

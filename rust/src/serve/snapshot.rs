@@ -263,7 +263,7 @@ mod tests {
         let w_before = snap.weights().to_vec();
         // the writer appends + refits; version-0 readers must be unaffected
         let fresh = synthetic::dense_classification(16, 7, 62);
-        let r = sess.partial_fit_rows(&fresh);
+        let r = sess.partial_fit_rows(&fresh).expect("clean refit");
         assert_eq!(r.n, 176);
         assert_eq!(snap.n(), 160, "snapshot keeps its dataset version");
         assert_eq!(snap.weights(), &w_before[..]);

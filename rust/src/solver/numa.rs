@@ -169,6 +169,9 @@ pub fn train_numa_exec<M: DataMatrix>(
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
         obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
+        // armed fault plans fire here (coordinator thread, before any
+        // dispatch) so an injected panic unwinds cleanly through the epoch
+        crate::fault::poke(crate::fault::FaultSite::Epoch);
         let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
         let n_eff = ((n as f64 / sigma).round() as usize).max(1);
         // per-node epoch assignments (bucket ids relative to node range)

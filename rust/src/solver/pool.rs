@@ -865,6 +865,35 @@ mod tests {
         assert_eq!(obs::ring_count(), 0);
     }
 
+    /// The fault-injection analogue of `tracing_off_builds_no_rings`:
+    /// with no plan armed, every `fault::poke` site reduces to one
+    /// relaxed atomic load — no hit counters tick, no plan is consulted,
+    /// and pool work that crosses the sites observes nothing.
+    #[test]
+    fn faults_disarmed_cost_one_relaxed_load() {
+        let _guard = crate::fault::disarmed();
+        assert!(!crate::fault::armed());
+        let pool = WorkerPool::new(2, &Topology::flat(2));
+        let out = pool.run(
+            (0..8)
+                .map(|i| {
+                    move || {
+                        // the solver-epoch site, exercised from pool jobs
+                        assert!(crate::fault::poke(crate::fault::FaultSite::Epoch).is_none());
+                        i
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        assert!(crate::fault::poke(crate::fault::FaultSite::Epoch).is_none());
+        assert_eq!(
+            crate::fault::hits(crate::fault::FaultSite::Epoch),
+            0,
+            "disarmed pokes must not even count hits"
+        );
+    }
+
     /// With tracing on, every job yields an enqueue event on the
     /// dispatcher's ring and start/finish events on its worker's ring,
     /// tagged with the dispatched class.

@@ -97,6 +97,9 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
         obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
+        // armed fault plans fire here (coordinator thread, before any
+        // dispatch) so an injected panic unwinds cleanly through the epoch
+        crate::fault::poke(crate::fault::FaultSite::Epoch);
         rng.shuffle(&mut ids);
         for (i, &b) in ids.iter().enumerate() {
             // overlap the next bucket's memory fetch with this bucket's

@@ -80,6 +80,9 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     for epoch in 1..=cfg.max_epochs {
         let t = Timer::start();
         obs::emit(EventKind::EpochBegin, obs::CLASS_NONE, 0, epoch as u64);
+        // armed fault plans fire here (coordinator thread, before any
+        // dispatch) so an injected panic unwinds cleanly through the epoch
+        crate::fault::poke(crate::fault::FaultSite::Epoch);
         // Sequential shuffle — deliberately so; its serial cost is one of
         // the scalability bottlenecks the paper measures (Fig. 2a).
         rng.shuffle(&mut perm);

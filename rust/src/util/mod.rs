@@ -15,6 +15,18 @@ pub use rng::Rng;
 pub use stats::{geomean, mean, percentile, stddev, Percentiles};
 pub use timer::Timer;
 
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking. The ONE poison policy for the crate's supervision-style
+/// locks (scheduler/session state, trace and diag sinks, the fault
+/// plan): a writer that panicked has already been contained and rolled
+/// back by `catch_unwind` above it — or crashed a worker thread that
+/// held no partial invariant — so the data under the mutex is
+/// consistent, and refusing to serve forever because a thread once died
+/// would turn one contained failure into a permanent outage.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// The ONE 4-chain dot reduction: `Σ x_k·y_k` over `n` product pairs
 /// produced by `pair(k)`, accumulated in four independent chains folded
 /// as `(s0+s1)+(s2+s3)` with a sequential tail.

@@ -1,0 +1,298 @@
+//! Fault-containment guarantees of the self-healing serve path, driven
+//! end-to-end through the deterministic injection harness
+//! (`parlin::fault`):
+//!
+//! (a) **Containment** — a panic injected mid-refit is caught, the
+//!     session rolls back to the last-known-good model, and predicts are
+//!     bit-wise identical to the pre-fault answers; a later clean refit
+//!     publishes normally (no poisoned mutex, no wedged writer).
+//! (b) **Self-healing drain** — a background drain thread killed at its
+//!     entry is detected, counted, and respawned by the next request that
+//!     finds staged rows; the respawned drain absorbs and publishes.
+//! (c) **Health-gated publish** — a refit whose model comes out NaN is
+//!     refused at the publish gate on every retry; the offending batch is
+//!     quarantined to the dead letter (holding exactly those rows) and
+//!     the serving version never changes.
+//! (d) **No thread leaks** — repeated kill-and-recover cycles leave the
+//!     process thread census flat (shared `/proc/self/status` census).
+//!
+//! The tests serialize on a mutex: (d) counts OS threads, and armed fault
+//! plans are process-wide state.
+
+use parlin::data::synthetic;
+use parlin::data::DenseMatrix;
+use parlin::fault::FaultPlan;
+use parlin::glm::Objective;
+use parlin::obs::diag::{DiagCapture, Level};
+use parlin::serve::{Scheduler, SchedulerConfig, ServeError, Session};
+use parlin::solver::{SolverConfig, Variant};
+use parlin::sysinfo::Topology;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+#[path = "common/census.rs"]
+mod census;
+use census::settled_census;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn session(n: usize, seed: u64) -> Session<DenseMatrix> {
+    let ds = synthetic::dense_classification(n, 6, seed);
+    let cfg = SolverConfig::new(Objective::Logistic {
+        lambda: 1.0 / n as f64,
+    })
+    .with_variant(Variant::Domesticated)
+    .with_threads(2)
+    .with_topology(Topology::flat(2))
+    .with_tol(1e-3)
+    .with_max_epochs(200);
+    Session::new(ds, cfg)
+}
+
+/// Poll `f` until it holds; panic with `what` after ~10s. The drain
+/// thread's death and respawn are asynchronous, so these tests wait on
+/// observable counters instead of sleeping fixed amounts.
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    for _ in 0..2000 {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// (a) An injected mid-refit panic must be contained: version 0 keeps
+/// serving bit-identical answers, the batch is quarantined, and — the
+/// no-poisoned-mutex half — a later clean refit publishes version 1.
+#[test]
+fn injected_refit_panic_leaves_last_good_serving() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(150, 21),
+        SchedulerConfig {
+            // thresholds out of reach: this test drives drains via flush
+            refit_rows_threshold: 1_000_000,
+            refit_staleness_s: 1e6,
+            max_pending: None,
+            drain_max_retries: 0,
+            ..SchedulerConfig::default()
+        },
+    );
+    let idx: Vec<usize> = (0..40).map(|i| (i * 7) % 150).collect();
+    let before = sched.predict(&idx);
+    assert_eq!(before.version, 0);
+
+    // x8 so the panic outlasts any retry budget changes
+    let guard = FaultPlan::parse("panic@epoch#1x8", 7).unwrap().arm();
+    sched.ingest(synthetic::dense_classification(20, 6, 22));
+    let failed = sched.flush().expect("rows were staged");
+    match failed {
+        Err(ServeError::RefitPanicked { kind: "refit-rows", .. }) => {}
+        other => panic!("expected a contained refit panic, got {other:?}"),
+    }
+    drop(guard);
+
+    let after = sched.predict(&idx);
+    assert_eq!(after.version, 0, "the failed refit must not have published");
+    assert_eq!(after.margins, before.margins, "v0 must serve bit-identical answers");
+    let report = sched.report();
+    assert!(!report.health.is_healthy());
+    assert_eq!(report.rollbacks, 1);
+    assert_eq!(report.quarantined_rows, 20);
+    assert_eq!(sched.dead_letter_rows(), 20);
+
+    // the writer path survived: a clean refit absorbs and publishes
+    sched.ingest(synthetic::dense_classification(10, 6, 23));
+    let clean = sched.flush().expect("rows were staged").expect("clean refit");
+    assert_eq!(clean.kind, "refit-rows");
+    assert_eq!(clean.n, 160);
+    assert_eq!(sched.version(), 1);
+    assert!(sched.health().is_healthy(), "a clean publish must restore health");
+}
+
+/// (b) A drain thread killed at its entry leaves the staged batch in
+/// place; the next request that finds it respawns the drain, which then
+/// absorbs and publishes.
+#[test]
+fn dead_drain_thread_is_respawned_and_publishes() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(140, 71),
+        SchedulerConfig {
+            refit_rows_threshold: 10,
+            refit_staleness_s: 1e6,
+            max_pending: None,
+            ..SchedulerConfig::default()
+        },
+    );
+    let guard = FaultPlan::parse("panic@drain#1", 3).unwrap().arm();
+    // crossing the threshold spawns the (doomed) background drain
+    sched.ingest(synthetic::dense_classification(10, 6, 72));
+    wait_until("the injected drain death", || sched.report().drain_deaths >= 1);
+    assert_eq!(sched.staged_rows(), 10, "the dead drain must not have taken the batch");
+    assert_eq!(sched.version(), 0);
+    assert!(!sched.health().is_healthy());
+    drop(guard);
+
+    // any request that sees the staged rows brings the drain back
+    wait_until("the drain respawn", || {
+        let _ = sched.predict(&[0, 1, 2]);
+        sched.report().drain_respawns >= 1
+    });
+    let _ = sched.flush(); // join the respawned writer
+    assert_eq!(sched.staged_rows(), 0);
+    assert_eq!(sched.version(), 1);
+    assert_eq!(sched.current_n(), 150);
+    let report = sched.report();
+    assert_eq!(report.drain_deaths, 1);
+    assert_eq!(report.drain_respawns, 1);
+    assert!(report.health.is_healthy(), "a recovered drain must restore health");
+}
+
+/// (c) A refit that trains to a NaN model is refused by the publish
+/// health gate on the first attempt *and* its retry; the batch lands in
+/// the dead letter holding exactly those rows, and the serving version
+/// never moves.
+#[test]
+fn nan_refit_never_publishes_and_quarantines() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(150, 31),
+        SchedulerConfig {
+            refit_rows_threshold: 1_000_000,
+            refit_staleness_s: 1e6,
+            max_pending: None,
+            drain_max_retries: 1,
+            ..SchedulerConfig::default()
+        },
+    );
+    let idx: Vec<usize> = (0..32).map(|i| (i * 11) % 150).collect();
+    let before = sched.predict(&idx);
+
+    // x4 covers the initial attempt plus the retry (hits 1 and 2)
+    let guard = FaultPlan::parse("nan@publish#1x4", 5).unwrap().arm();
+    sched.ingest(synthetic::dense_classification(12, 6, 32));
+    let failed = sched.flush().expect("rows were staged");
+    assert!(
+        matches!(failed, Err(ServeError::NonFinite { .. })),
+        "a NaN model must be refused by the health gate, got {failed:?}"
+    );
+    drop(guard);
+
+    let after = sched.predict(&idx);
+    assert_eq!(after.version, 0);
+    assert_eq!(after.margins, before.margins);
+    let report = sched.report();
+    assert_eq!(report.rollbacks, 2, "the initial attempt and its retry both roll back");
+    assert_eq!(report.publish_rejected, 2);
+    assert_eq!(report.drain_retries, 1);
+    assert_eq!(report.quarantined_rows, 12);
+
+    // the dead letter holds exactly the quarantined batch
+    let letters = sched.dead_letter();
+    assert_eq!(letters.len(), 1);
+    assert_eq!(letters[0].n(), 12);
+    assert_eq!(letters[0].y, synthetic::dense_classification(12, 6, 32).y);
+
+    // a clean batch afterwards publishes normally
+    sched.ingest(synthetic::dense_classification(8, 6, 33));
+    let clean = sched.flush().expect("rows were staged").expect("clean refit");
+    assert_eq!(clean.n, 158);
+    assert_eq!(sched.version(), 1);
+    assert!(sched.health().is_healthy());
+}
+
+/// (d) Three kill-and-recover cycles leave the thread census flat: every
+/// dead drain is joined before its replacement spawns, and the respawned
+/// writers exit after publishing.
+#[test]
+fn recoveries_leak_no_threads() {
+    let _g = gate();
+    let sched = Scheduler::new(
+        session(140, 41),
+        SchedulerConfig {
+            refit_rows_threshold: 12,
+            refit_staleness_s: 1e6,
+            max_pending: None,
+            ..SchedulerConfig::default()
+        },
+    );
+    // warm the drain path once, then take the baseline census
+    sched.ingest(synthetic::dense_classification(12, 6, 42));
+    let _ = sched.flush();
+    assert_eq!(sched.staged_rows(), 0);
+    let baseline = settled_census(usize::MAX - 1);
+
+    for round in 0..3u64 {
+        let guard = FaultPlan::parse("panic@drain#1", round).unwrap().arm();
+        sched.ingest(synthetic::dense_classification(12, 6, 43 + round));
+        wait_until("the injected drain death", || {
+            sched.report().drain_deaths >= round + 1
+        });
+        drop(guard);
+        wait_until("the drain respawn", || {
+            let _ = sched.predict(&[0, 1, 2]);
+            sched.report().drain_respawns >= round + 1
+        });
+        let _ = sched.flush(); // join this round's respawned writer
+        assert_eq!(sched.staged_rows(), 0);
+    }
+
+    let report = sched.report();
+    assert_eq!(report.drain_deaths, 3);
+    assert_eq!(report.drain_respawns, 3);
+    assert!(report.health.is_healthy());
+    assert_eq!(sched.current_n(), 140 + 4 * 12, "every batch absorbed exactly once");
+    let after = settled_census(baseline);
+    assert!(
+        after <= baseline,
+        "kill-and-recover cycles grew threads: baseline={baseline}, after={after}"
+    );
+}
+
+/// An invalid λ is a typed error from the session, before any state is
+/// touched — not a panic, not a silent NaN model.
+#[test]
+fn invalid_lambda_is_a_typed_error_not_a_panic() {
+    let _g = gate();
+    let mut sess = session(130, 51);
+    let w0 = sess.weights().to_vec();
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        match sess.partial_fit_lambda(bad) {
+            Err(ServeError::InvalidLambda { .. }) => {}
+            other => panic!("λ={bad} must be a typed error, got {other:?}"),
+        }
+        assert_eq!(sess.weights(), &w0[..], "a rejected λ must not touch the model");
+    }
+    let ok = sess.partial_fit_lambda(1.0 / 130.0).expect("clean λ refit");
+    assert!(ok.epochs >= 1);
+}
+
+/// Satellite: rows carrying non-finite values are refused at `ingest` —
+/// counted, diagnosed at Warn, and never staged.
+#[test]
+fn nonfinite_ingest_is_rejected_at_the_door() {
+    let _g = gate();
+    let sched = Scheduler::new(session(120, 61), SchedulerConfig::default());
+    let mut bad = synthetic::dense_classification(6, 6, 62);
+    bad.y[2] = f64::NAN;
+    let cap = DiagCapture::start();
+    sched.ingest(bad);
+    let recs = cap.take();
+    drop(cap);
+    assert!(
+        recs.iter()
+            .any(|r| r.level == Level::Warn && r.message.contains("non-finite")),
+        "the rejection must be diagnosed: {recs:?}"
+    );
+    assert_eq!(sched.staged_rows(), 0);
+    let report = sched.report();
+    assert_eq!(report.ingest_rejected_rows, 6);
+    assert_eq!(report.ingested_rows, 0);
+    assert!(sched.flush().is_none(), "nothing may have been staged");
+}

@@ -143,6 +143,7 @@ fn open_loop_predicts_replay_bitwise_for_their_version() {
             refit_rows_threshold: 40,
             refit_staleness_s: 1e3,
             max_pending: None,
+            ..SchedulerConfig::default()
         },
     );
     // retain version 0 — it must stay fully servable throughout
@@ -170,7 +171,7 @@ fn open_loop_predicts_replay_bitwise_for_their_version() {
     });
     // the driver flushes on exit; this one is a no-op unless the ingest
     // raced past that flush on a heavily loaded box
-    sched.flush();
+    let _ = sched.flush();
     let snap1 = sched.snapshot();
     assert_eq!(snap1.version(), 1, "the ingested rows must have published v1");
     assert_eq!(snap1.n(), 340);
@@ -226,6 +227,7 @@ fn admission_control_sheds_excess_readers_and_counts_them() {
             refit_rows_threshold: 1_000_000,
             refit_staleness_s: 1e6,
             max_pending: Some(1),
+            ..SchedulerConfig::default()
         },
     );
     let started = AtomicBool::new(false);
@@ -297,12 +299,13 @@ fn open_loop_run_leaks_no_threads() {
             refit_rows_threshold: 30,
             refit_staleness_s: 0.05,
             max_pending: Some(8),
+            ..SchedulerConfig::default()
         },
     );
     // warm up each path once (predict, ingest→background refit, flush)
     let _ = sched.predict(&[0, 1, 2]);
     sched.ingest(synthetic::dense_classification(30, 8, 76));
-    sched.flush();
+    let _ = sched.flush();
     assert_eq!(sched.current_n(), 300);
     let baseline = settled_census(usize::MAX - 1);
 

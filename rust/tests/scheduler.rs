@@ -63,6 +63,7 @@ fn racing_predicts_are_bitwise_sequential_for_their_version() {
             refit_rows_threshold: 40,
             refit_staleness_s: 1e3,
             max_pending: None,
+            ..SchedulerConfig::default()
         },
     );
     // retain version 0 — it must stay fully servable throughout
@@ -87,7 +88,7 @@ fn racing_predicts_are_bitwise_sequential_for_their_version() {
         let fresh = synthetic::dense_classification(40, 8, 92);
         sched.ingest(fresh);
     });
-    sched.flush();
+    let _ = sched.flush();
     let snap1 = sched.snapshot();
     assert_eq!(snap1.version(), 1, "the ingested rows must have published v1");
     assert_eq!(snap1.n(), 340);
@@ -142,7 +143,7 @@ fn predict_storm_completes_while_writer_retrains() {
             };
             assert_eq!(out.margins, expect, "storm predict {k}");
         }
-        let r = writer.join().expect("writer panicked");
+        let r = writer.join().expect("writer panicked").expect("clean retrain");
         assert_eq!(r.kind, "retrain");
     });
     assert_eq!(sched.version(), 1);
@@ -159,6 +160,7 @@ fn ingestion_stream_is_absorbed_exactly_once() {
             refit_rows_threshold: 25,
             refit_staleness_s: 1e3,
             max_pending: None,
+            ..SchedulerConfig::default()
         },
     );
     let mut sent = 0usize;
@@ -167,7 +169,7 @@ fn ingestion_stream_is_absorbed_exactly_once() {
         sent += rows;
         sched.ingest(synthetic::dense_classification(rows, 8, 95 + burst));
     }
-    sched.flush();
+    let _ = sched.flush();
     assert_eq!(sched.staged_rows(), 0, "flush must drain the buffer");
     assert_eq!(sched.current_n(), 200 + sent, "no row lost or duplicated");
     let report = sched.report();
@@ -194,12 +196,13 @@ fn concurrent_storm_leaks_no_threads() {
             refit_rows_threshold: 30,
             refit_staleness_s: 0.05,
             max_pending: None,
+            ..SchedulerConfig::default()
         },
     );
     // warm up each path once (predict, ingest→background refit, flush)
     let _ = sched.predict(&[0, 1, 2]);
     sched.ingest(synthetic::dense_classification(30, 8, 97));
-    sched.flush();
+    let _ = sched.flush();
     let baseline = settled_census(usize::MAX - 1);
 
     let storm = StormConfig {

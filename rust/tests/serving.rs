@@ -84,12 +84,12 @@ fn warm_refit_beats_cold_retrain_in_epochs() {
 
     // append 5% new rows and warm-start refit
     let fresh = synthetic::dense_classification(20, 15, 33);
-    let warm = sess.partial_fit_rows(&fresh);
+    let warm = sess.partial_fit_rows(&fresh).expect("clean warm refit");
     assert_eq!(warm.n, 420);
     assert!(warm.converged, "warm refit must converge");
 
     // cold retrain of the *same* (appended) dataset on the same pool
-    let cold = sess.retrain_same();
+    let cold = sess.retrain_same().expect("clean cold retrain");
     assert!(cold.converged, "cold retrain must converge");
     assert!(
         warm.epochs < cold.epochs,
@@ -168,18 +168,20 @@ fn fifty_interleaved_requests_leak_no_threads() {
     // warm-up one request of each kind, then take the baseline census
     let _ = sess.predict(&[0, 1, 2]);
     let warm = synthetic::dense_classification(5, 10, 99);
-    let _ = sess.partial_fit_rows(&warm);
+    let _ = sess.partial_fit_rows(&warm).expect("clean warm-up refit");
     let baseline = settled_census(usize::MAX - 1);
 
     for i in 0..50usize {
         match i % 5 {
             0 => {
                 let fresh = synthetic::dense_classification(5, 10, 100 + i as u64);
-                let r = sess.partial_fit_rows(&fresh);
+                let r = sess.partial_fit_rows(&fresh).expect("clean rows refit");
                 assert!(r.epochs >= 1);
             }
             3 => {
-                let r = sess.partial_fit_lambda(1.0 / sess.n() as f64);
+                let r = sess
+                    .partial_fit_lambda(1.0 / sess.n() as f64)
+                    .expect("clean λ refit");
                 assert!(r.epochs >= 1);
             }
             _ => {
