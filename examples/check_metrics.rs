@@ -1,0 +1,236 @@
+//! Scrape a live `--metrics-addr` endpoint and validate what it serves:
+//! `/metrics` must be well-formed Prometheus text exposition (checked by a
+//! hand-rolled line validator — the offline toolchain has no client
+//! library) and `/health` must answer with a recognizable health line and
+//! a matching status code. CI points this at a backgrounded
+//! `parlin serve --metrics-addr 127.0.0.1:0` run:
+//!
+//! ```bash
+//! cargo run --release --example check_metrics -- 127.0.0.1:9184 \
+//!     --require sched,pool,solver
+//! ```
+//!
+//! `--require` lists registry families (the dotted prefix before the
+//! first `.`, e.g. `sched` for `sched.publishes`) that must each have at
+//! least one sample — i.e. a `parlin_<family>_…` metric. Exits nonzero
+//! with a message on the first violation found.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("check_metrics: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (addr, required) = parse_args(&args)?;
+
+    let (status, body) = http_get(&addr, "/metrics")?;
+    if status != 200 {
+        bail!("/metrics answered {status}, expected 200");
+    }
+    let (samples, families) = validate_prometheus(&body)?;
+    for fam in &required {
+        let name = format!("parlin_{fam}_");
+        if !families.iter().any(|f| f.starts_with(&name)) {
+            bail!(
+                "required metric family '{fam}' has no samples \
+                 (families seen: {families:?})"
+            );
+        }
+    }
+
+    let (status, health) = http_get(&addr, "/health")?;
+    let health = health.trim_end();
+    match (status, health) {
+        (200, "Healthy") => {}
+        (503, h) if h.starts_with("Degraded (") && h.ends_with(')') => {}
+        _ => bail!(
+            "/health answered {status} {health:?} — expected \
+             200 \"Healthy\" or 503 \"Degraded (<reason>)\""
+        ),
+    }
+
+    println!(
+        "check_metrics: OK — {} samples across {} metrics on {}, health {status} {health}",
+        samples,
+        families.len(),
+        addr
+    );
+    Ok(())
+}
+
+/// `<host:port> [--require sched,pool,solver]`.
+fn parse_args(args: &[String]) -> Result<(String, Vec<String>)> {
+    let mut addr = None;
+    let mut required = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--require" => {
+                let list = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--require needs a comma-separated family list"))?;
+                for f in list.split(',').filter(|f| !f.is_empty()) {
+                    if !f.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                        bail!("family '{f}' is not a bare registry prefix (e.g. sched)");
+                    }
+                    required.push(f.to_string());
+                }
+                i += 2;
+            }
+            a if addr.is_none() => {
+                addr = Some(a.to_string());
+                i += 1;
+            }
+            other => bail!("unexpected argument '{other}'"),
+        }
+    }
+    let addr = addr.ok_or_else(|| {
+        anyhow!("usage: check_metrics <host:port> [--require sched,pool,solver]")
+    })?;
+    Ok((addr, required))
+}
+
+/// One plain HTTP/1.0 GET — the endpoint closes the connection after the
+/// response, so "read to EOF" is the framing.
+fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr).map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    s.set_write_timeout(Some(Duration::from_secs(5)))?;
+    write!(s, "GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n")?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)
+        .map_err(|e| anyhow!("reading {path} from {addr}: {e}"))?;
+    let status: u16 = text
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("{path}: malformed status line in {text:?}"))?;
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .ok_or_else(|| anyhow!("{path}: response has no header/body separator"))?;
+    Ok((status, body))
+}
+
+/// Validate Prometheus text exposition (version 0.0.4) line by line:
+/// comments are `# TYPE` / `# HELP`, every other non-empty line is
+/// `name[{labels}] value` — one value, clean charsets, parseable number.
+/// Returns (sample count, distinct sample names).
+fn validate_prometheus(body: &str) -> Result<(usize, BTreeSet<String>)> {
+    let mut samples = 0usize;
+    let mut names = BTreeSet::new();
+    for (lineno, line) in body.lines().enumerate() {
+        let lineno = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let mut words = comment.split_whitespace();
+            match words.next() {
+                Some("TYPE") => {
+                    let name = words
+                        .next()
+                        .ok_or_else(|| anyhow!("line {lineno}: # TYPE without a name"))?;
+                    check_name(name, lineno)?;
+                    match words.next() {
+                        Some("counter" | "gauge" | "summary" | "histogram" | "untyped") => {}
+                        other => bail!("line {lineno}: bad TYPE kind {other:?}"),
+                    }
+                }
+                Some("HELP") => {}
+                other => bail!("line {lineno}: unknown comment {other:?}"),
+            }
+            continue;
+        }
+        let (metric, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow!("line {lineno}: no space before the sample value"))?;
+        if value.parse::<f64>().is_err() && !matches!(value, "+Inf" | "-Inf" | "NaN") {
+            bail!("line {lineno}: sample value {value:?} is not a number");
+        }
+        let name = match metric.split_once('{') {
+            None => metric,
+            Some((name, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| anyhow!("line {lineno}: unterminated label set"))?;
+                check_labels(labels, lineno)?;
+                name
+            }
+        };
+        check_name(name, lineno)?;
+        samples += 1;
+        names.insert(name.to_string());
+    }
+    Ok((samples, names))
+}
+
+fn check_name(name: &str, lineno: usize) -> Result<()> {
+    let mut chars = name.chars();
+    let ok_first = chars
+        .next()
+        .is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':');
+    if !ok_first || !chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':') {
+        bail!("line {lineno}: bad metric name {name:?}");
+    }
+    Ok(())
+}
+
+/// `key="value",key="value"` — quoted values with `\\`, `\"` and `\n`
+/// escapes, label names in `[a-zA-Z_][a-zA-Z0-9_]*`.
+fn check_labels(labels: &str, lineno: usize) -> Result<()> {
+    let b = labels.as_bytes();
+    let mut i = 0;
+    loop {
+        let start = i;
+        while i < b.len() && b[i] != b'=' {
+            i += 1;
+        }
+        let key = &labels[start..i];
+        let mut chars = key.chars();
+        let ok_first = chars.next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+        if !ok_first || !chars.all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            bail!("line {lineno}: bad label name {key:?}");
+        }
+        if i >= b.len() {
+            bail!("line {lineno}: label {key:?} has no value");
+        }
+        i += 1; // '='
+        if b.get(i) != Some(&b'"') {
+            bail!("line {lineno}: label {key:?} value is not quoted");
+        }
+        i += 1;
+        loop {
+            match b.get(i) {
+                None => bail!("line {lineno}: unterminated label value for {key:?}"),
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(b'\\') => match b.get(i + 1) {
+                    Some(b'\\' | b'"' | b'n') => i += 2,
+                    other => bail!("line {lineno}: bad escape {other:?} in label {key:?}"),
+                },
+                Some(_) => i += 1,
+            }
+        }
+        match b.get(i) {
+            None => return Ok(()),
+            Some(b',') => i += 1,
+            Some(&c) => bail!(
+                "line {lineno}: expected ',' or end of labels, found {:?}",
+                c as char
+            ),
+        }
+    }
+}

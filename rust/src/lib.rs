@@ -41,6 +41,7 @@ pub mod figures;
 pub mod glm;
 pub mod metrics;
 pub mod obs;
+pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod simcost;

@@ -13,7 +13,14 @@
 //! parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
 //! parlin inspect               # host topology, cache geometry, artifacts
 //! parlin eval    --dataset <kind> --artifacts DIR   # HLO-path evaluation demo
+//! parlin report  --baseline <artifact> --current <artifact> [--threshold X]
 //! ```
+//!
+//! Telemetry flags shared by `train` and `serve`: `--metrics-addr` starts
+//! the pull-only `/metrics` exposition endpoint, `--flight-dir` arms the
+//! degradation flight recorder, `--convergence-log` (train) and
+//! `--bench-json` (serve) persist run artifacts that `parlin report` can
+//! diff against a committed baseline.
 //!
 //! The argument parser is hand-rolled: the offline toolchain ships only the
 //! `xla` crate closure (no clap). Both `--flag value` and `--flag=value`
@@ -24,7 +31,10 @@ use parlin::data::{loader, AnyDataset};
 use parlin::fault::FaultPlan;
 use parlin::figures::{run_figure, DsKind, FigOpts};
 use parlin::glm::Objective;
-use parlin::obs::{MetricsTicker, ObsConfig, TraceSession, DEFAULT_RING_CAPACITY};
+use parlin::obs::{
+    ExportServer, ExportSources, MetricsTicker, ObsConfig, TraceSession, DEFAULT_RING_CAPACITY,
+};
+use parlin::report::BenchRecord;
 use parlin::serve::{ArrivalProcess, ServeHealth};
 use parlin::solver::{
     train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
@@ -32,6 +42,7 @@ use parlin::solver::{
 use parlin::sysinfo::Topology;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 fn main() {
@@ -49,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("figures") => cmd_figures(&parse_flags(&args[1..])?),
         Some("inspect") => cmd_inspect(),
         Some("eval") => cmd_eval(&parse_flags(&args[1..])?),
+        Some("report") => cmd_report(&parse_flags(&args[1..])?),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{USAGE}");
             Ok(())
@@ -66,6 +78,7 @@ USAGE:
   parlin figures [--fig 1|2|3|4|5|6|all] [--quick] [--out DIR]
   parlin inspect
   parlin eval --dataset <kind> [--artifacts DIR]
+  parlin report --baseline <artifact> --current <artifact> [--threshold X]
 
 Flags accept both `--flag value` and `--flag=value`.
 
@@ -95,6 +108,25 @@ OBSERVABILITY OPTIONS (train and serve):
                       chrome://tracing or ui.perfetto.dev)
   --metrics-interval  print a metrics-registry snapshot table to stderr
                       every S seconds while the run is live (S finite, > 0)
+  --metrics-addr      bind a pull-only exposition endpoint on HOST:PORT
+                      (port 0 picks a free one; the bound address is
+                      printed to stderr). Routes: /metrics (Prometheus
+                      text), /health (200 Healthy / 503 Degraded; live
+                      scheduler health in the concurrent and open-loop
+                      serve modes, permanently Healthy otherwise),
+                      /trace (live chrome://tracing JSON, 404 without a
+                      tracing session)
+  --flight-dir        arm the degradation flight recorder: every health
+                      degradation, snapshot rollback or drain-watchdog
+                      stall dumps the last 30s of trace events plus a
+                      metrics delta into this directory (starts a tracing
+                      session even without --trace)
+  --convergence-log   write the solver's per-epoch convergence trace
+                      (epoch, wall clock, rel-change, duality gap, worker
+                      imbalance) as CSV                       (train only)
+  --bench-json        write the run's headline numbers (throughput,
+                      p50/p99, gap, wall, final health) as a bench-record
+                      JSON artifact for `parlin report`       (serve only)
 
 SERVE OPTIONS (plus the train options above):
   --requests       'synthetic' or a request-script path   (default synthetic)
@@ -163,6 +195,16 @@ ROBUSTNESS OPTIONS (serve, scheduler modes):
   snapshot keeps answering predicts, the offending rows are quarantined,
   and the run is marked Degraded until a later refit publishes cleanly.
   `parlin serve` exits nonzero unless the final health is Healthy.
+
+REPORT OPTIONS:
+  --baseline / --current  artifacts to diff: a bench-record JSON
+                          (--bench-json), a convergence-trace CSV
+                          (--convergence-log) or a per-epoch CSV (--csv);
+                          formats are sniffed by content and may be mixed
+  --threshold             worseness ratio that fails the diff; must be
+                          > 1, e.g. 1.5 means 50% worse     (default 1.5)
+  Prints a side-by-side metric table and exits nonzero when any metric
+  regressed past the threshold or a healthy baseline turned degraded.
 ";
 
 /// Flag parser accepting `--key value` and `--key=value` (flags without a
@@ -259,6 +301,17 @@ fn get_optional_positive_usize(
     }
 }
 
+/// Parse a flag whose value is a path or address: absent is fine, but a
+/// bare `--key` (which the flag parser records as "true") or `--key=` is
+/// a missing value, not a value named "true".
+fn get_path_flag(flags: &HashMap<String, String>, key: &str) -> Result<Option<String>> {
+    match flags.get(key).map(String::as_str) {
+        None => Ok(None),
+        Some("") | Some("true") => bail!("--{key} needs a value (e.g. --{key} <path>)"),
+        Some(v) => Ok(Some(v.to_string())),
+    }
+}
+
 /// Parse `--fault-plan` (deterministic fault injection; grammar on
 /// [`FaultPlan::parse`], taxonomy in `docs/ROBUSTNESS.md`). The plan is
 /// returned *unarmed*: the serve drivers arm it only after the session
@@ -292,16 +345,44 @@ fn check_final_health(health: &ServeHealth) -> Result<()> {
     }
 }
 
+/// Late-bound `/health` answer for the exposition endpoint. The endpoint
+/// starts before the scheduler exists (binding the port early is what
+/// lets CI poll it), so the server holds this slot and the scheduler
+/// serve modes bind their live health into it once constructed. Unbound,
+/// it answers permanently-Healthy — correct for `train` and the
+/// single-request serve mode, which have no live health to report.
+#[derive(Clone, Default)]
+struct LiveHealth(Arc<Mutex<Option<Arc<dyn Fn() -> (bool, String) + Send + Sync>>>>);
+
+impl LiveHealth {
+    fn bind(&self, f: impl Fn() -> (bool, String) + Send + Sync + 'static) {
+        *parlin::util::lock_recover(&self.0) = Some(Arc::new(f));
+    }
+
+    fn read(&self) -> (bool, String) {
+        match parlin::util::lock_recover(&self.0).as_ref() {
+            Some(f) => f(),
+            None => (true, "Healthy".to_string()),
+        }
+    }
+}
+
 /// The observability flags `train` and `serve` share: `--trace <path>`
 /// wraps the whole run in a [`TraceSession`] and writes chrome://tracing
 /// JSON when the run finishes; `--metrics-interval <s>` starts a
 /// [`MetricsTicker`] that prints a registry snapshot table to stderr every
-/// interval. Both default to off, leaving the hot paths on their no-op
-/// branch.
+/// interval; `--metrics-addr <host:port>` binds the pull-only exposition
+/// endpoint; `--flight-dir <dir>` arms the degradation flight recorder
+/// (and starts a tracing session even without `--trace`, since dumps are
+/// drained from the live rings). All default to off, leaving the hot
+/// paths on their no-op branch.
 struct ObsCli {
     trace_path: Option<String>,
     session: Option<TraceSession>,
     ticker: Option<MetricsTicker>,
+    exporter: Option<ExportServer>,
+    flight: Option<parlin::obs::flight::FlightGuard>,
+    health: LiveHealth,
 }
 
 impl ObsCli {
@@ -316,6 +397,8 @@ impl ObsCli {
             }
             Some(p) => Some(p.to_string()),
         };
+        let flight_dir = get_path_flag(flags, "flight-dir")?;
+        let metrics_addr = get_path_flag(flags, "metrics-addr")?;
         let ticker = if flags.contains_key("metrics-interval") {
             let secs = get_positive_f64(flags, "metrics-interval", 1.0)?;
             Some(MetricsTicker::start(
@@ -325,26 +408,66 @@ impl ObsCli {
         } else {
             None
         };
-        let session = trace_path
-            .is_some()
+        // lock order: the trace session first, then the flight recorder
+        // (the flight guard documents this order)
+        let session = (trace_path.is_some() || flight_dir.is_some())
             .then(|| TraceSession::start(ObsConfig::on(DEFAULT_RING_CAPACITY)));
-        Ok(ObsCli { trace_path, session, ticker })
+        let flight = match &flight_dir {
+            Some(dir) => {
+                let guard =
+                    parlin::obs::flight::install(dir, parlin::obs::flight::DEFAULT_WINDOW_S)
+                        .with_context(|| format!("arming flight recorder in {dir}"))?;
+                eprintln!("flight recorder: armed, dumps -> {dir}");
+                Some(guard)
+            }
+            None => None,
+        };
+        let health = LiveHealth::default();
+        let exporter = match &metrics_addr {
+            Some(addr) => {
+                let h = health.clone();
+                let srv = ExportServer::start(addr, ExportSources::with_health(move || h.read()))
+                    .with_context(|| format!("binding metrics endpoint {addr}"))?;
+                // CI and scripts poll this line for the resolved port
+                eprintln!(
+                    "metrics: listening on http://{} (/metrics /health /trace)",
+                    srv.local_addr()
+                );
+                Some(srv)
+            }
+            None => None,
+        };
+        Ok(ObsCli { trace_path, session, ticker, exporter, flight, health })
     }
 
-    /// Stop the ticker, finish the trace session and write the JSON file.
+    /// Stop the ticker and exposition endpoint, disarm the flight
+    /// recorder, finish the trace session and write the JSON file.
     fn finish(self) -> Result<()> {
         if let Some(t) = self.ticker {
             let _ = t.stop();
         }
-        if let (Some(s), Some(path)) = (self.session, self.trace_path) {
-            let dump = s.finish();
-            dump.save_chrome_json(&path).with_context(|| format!("writing trace {path}"))?;
-            eprintln!(
-                "trace: {} events across {} threads ({} dropped) -> {path}",
-                dump.total_events(),
-                dump.threads.len(),
-                dump.total_dropped()
-            );
+        if let Some(srv) = self.exporter {
+            srv.shutdown();
+        }
+        // disarm before the trace session ends (reverse install order)
+        drop(self.flight);
+        if let Some(s) = self.session {
+            match &self.trace_path {
+                Some(path) => {
+                    let dump = s.finish();
+                    dump.save_chrome_json(path)
+                        .with_context(|| format!("writing trace {path}"))?;
+                    eprintln!(
+                        "trace: {} events across {} threads ({} dropped) -> {path}",
+                        dump.total_events(),
+                        dump.threads.len(),
+                        dump.total_dropped()
+                    );
+                }
+                // a --flight-dir session without --trace: the rings only
+                // existed to feed dumps, nothing to save on a clean exit
+                None => drop(s.finish()),
+            }
         }
         Ok(())
     }
@@ -503,6 +626,19 @@ fn cmd_train_inner(flags: &HashMap<String, String>) -> Result<()> {
         out.record.write_csv(Path::new(csv))?;
         println!("per-epoch log -> {csv}");
     }
+    if let Some(path) = get_path_flag(flags, "convergence-log")? {
+        out.convergence
+            .write_csv(Path::new(&path))
+            .with_context(|| format!("writing convergence trace {path}"))?;
+        println!(
+            "convergence trace: {} epochs ({}) -> {path}",
+            out.convergence.len(),
+            match out.convergence.last_gap() {
+                Some(g) => format!("last gap {g:.3e}"),
+                None => "no gap evaluations".to_string(),
+            }
+        );
+    }
     Ok(())
 }
 
@@ -510,11 +646,18 @@ fn cmd_train_inner(flags: &HashMap<String, String>) -> Result<()> {
 /// against it (closed loop), then print latency and pool-load statistics.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let obs = ObsCli::start(flags)?;
-    let run = cmd_serve_inner(flags);
+    let run = cmd_serve_inner(flags, obs.health.clone());
     run.and(obs.finish())
 }
 
-fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
+fn cmd_serve_inner(flags: &HashMap<String, String>, health: LiveHealth) -> Result<()> {
+    if flags.contains_key("convergence-log") {
+        bail!(
+            "--convergence-log applies to `parlin train` (serve refits expose \
+             their traces on RefitReport; use --bench-json for serve artifacts)"
+        );
+    }
+    let bench = get_path_flag(flags, "bench-json")?.map(PathBuf::from);
     let ds = load_dataset(flags)?;
     let n = ds.n();
     let cfg = solver_cfg_from_flags(flags, n)?;
@@ -565,7 +708,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
             sched_cfg.max_pending
         );
         return parlin::figures::with_ds!(ds, d => {
-            run_serve_open_loop(d, cfg, sched_cfg, ol_cfg, fault_plan)
+            run_serve_open_loop(d, cfg, sched_cfg, ol_cfg, fault_plan, health.clone(), bench.clone())
         });
     }
     if concurrency > 1 {
@@ -590,7 +733,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
             sched_cfg.refit_staleness_s
         );
         return parlin::figures::with_ds!(ds, d => {
-            run_serve_concurrent(d, cfg, sched_cfg, storm, seed, fault_plan)
+            run_serve_concurrent(d, cfg, sched_cfg, storm, seed, fault_plan, health.clone(), bench.clone())
         });
     }
     let reqs = match flags.get("requests").map(String::as_str) {
@@ -612,7 +755,7 @@ fn cmd_serve_inner(flags: &HashMap<String, String>) -> Result<()> {
         cfg.threads,
         reqs.len()
     );
-    parlin::figures::with_ds!(ds, d => run_serve(d, cfg, &reqs, seed, fault_plan))
+    parlin::figures::with_ds!(ds, d => run_serve(d, cfg, &reqs, seed, fault_plan, bench.clone()))
 }
 
 fn run_serve<M>(
@@ -621,6 +764,7 @@ fn run_serve<M>(
     reqs: &[parlin::serve::Request],
     seed: u64,
     fault_plan: Option<FaultPlan>,
+    bench: Option<PathBuf>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows,
@@ -663,7 +807,28 @@ where
         sess.n(),
         sess.gap().gap
     );
+    if let Some(path) = &bench {
+        let lat = parlin::util::Percentiles::of(&report.predict_s);
+        let mut rec = BenchRecord::new("serve");
+        rec.throughput_rps =
+            Some(report.requests() as f64 / report.total_wall_s.max(1e-9));
+        rec.p50_ms = Some(lat.p50() * 1e3);
+        rec.p99_ms = Some(lat.p99() * 1e3);
+        rec.epochs = Some((report.refit_epochs + report.retrain_epochs) as f64);
+        rec.gap = Some(sess.gap().gap);
+        rec.wall_s = Some(report.total_wall_s);
+        rec.healthy = matches!(report.health, ServeHealth::Healthy);
+        write_bench(&rec, path)?;
+    }
     check_final_health(&report.health)
+}
+
+/// Persist a serve run's bench record and say where it went.
+fn write_bench(rec: &BenchRecord, path: &Path) -> Result<()> {
+    rec.write_json(path)
+        .with_context(|| format!("writing bench record {}", path.display()))?;
+    println!("bench record ({}) -> {}", rec.kind, path.display());
+    Ok(())
 }
 
 /// Stand up a scheduler over a resident session and run the concurrent
@@ -677,6 +842,8 @@ fn run_serve_concurrent<M>(
     storm: parlin::serve::StormConfig,
     seed: u64,
     fault_plan: Option<FaultPlan>,
+    health: LiveHealth,
+    bench: Option<PathBuf>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows + Send + 'static,
@@ -689,7 +856,8 @@ where
         sess.workers(),
         sess.gap().gap
     );
-    let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    let sched = std::sync::Arc::new(parlin::serve::Scheduler::new(sess, sched_cfg));
+    bind_scheduler_health(&health, &sched);
     // arm only now: construction-time refits must never be injected
     let _fault = fault_plan.map(FaultPlan::arm);
     let report = parlin::serve::drive_concurrent(&sched, &storm, seed);
@@ -707,7 +875,38 @@ where
         sched.current_n(),
         sched.gap().gap
     );
+    if let Some(path) = &bench {
+        let all: Vec<f64> = report
+            .per_version
+            .iter()
+            .flat_map(|v| v.predict_s.iter().copied())
+            .collect();
+        let lat = parlin::util::Percentiles::of(&all);
+        let mut rec = BenchRecord::new("serve-concurrent");
+        rec.throughput_rps =
+            Some(report.predicts as f64 / report.total_wall_s.max(1e-9));
+        rec.p50_ms = Some(lat.p50() * 1e3);
+        rec.p99_ms = Some(lat.p99() * 1e3);
+        rec.gap = Some(sched.gap().gap);
+        rec.wall_s = Some(report.total_wall_s);
+        rec.healthy = matches!(report.health, ServeHealth::Healthy);
+        write_bench(&rec, path)?;
+    }
     check_final_health(&report.health)
+}
+
+/// Point the exposition endpoint's `/health` at the live scheduler. The
+/// closure holds its own `Arc` on the scheduler, so a scrape arriving
+/// after the drive loop returned still answers from real state.
+fn bind_scheduler_health<M>(health: &LiveHealth, sched: &std::sync::Arc<parlin::serve::Scheduler<M>>)
+where
+    M: parlin::serve::SynthRows + Send + 'static,
+{
+    let sched = std::sync::Arc::clone(sched);
+    health.bind(move || {
+        let h = sched.health();
+        (matches!(h, ServeHealth::Healthy), h.to_string())
+    });
 }
 
 /// Stand up a scheduler over a resident session and push a pre-generated
@@ -720,6 +919,8 @@ fn run_serve_open_loop<M>(
     sched_cfg: parlin::serve::SchedulerConfig,
     ol_cfg: parlin::serve::OpenLoopConfig,
     fault_plan: Option<FaultPlan>,
+    health: LiveHealth,
+    bench: Option<PathBuf>,
 ) -> Result<()>
 where
     M: parlin::serve::SynthRows + Send + 'static,
@@ -732,7 +933,8 @@ where
         sess.workers(),
         sess.gap().gap
     );
-    let sched = parlin::serve::Scheduler::new(sess, sched_cfg);
+    let sched = std::sync::Arc::new(parlin::serve::Scheduler::new(sess, sched_cfg));
+    bind_scheduler_health(&health, &sched);
     // arm only now: construction-time refits must never be injected
     let _fault = fault_plan.map(FaultPlan::arm);
     let report = parlin::serve::drive_open_loop(&sched, &ol_cfg);
@@ -750,6 +952,16 @@ where
         sched.current_n(),
         sched.gap().gap
     );
+    if let Some(path) = &bench {
+        let mut rec = BenchRecord::new("serve-open-loop");
+        rec.throughput_rps = Some(report.achieved_rate_per_s());
+        rec.p50_ms = Some(report.predict.p50_s() * 1e3);
+        rec.p99_ms = Some(report.predict.p99_s() * 1e3);
+        rec.gap = Some(sched.gap().gap);
+        rec.wall_s = Some(report.total_wall_s);
+        rec.healthy = matches!(report.health, ServeHealth::Healthy);
+        write_bench(&rec, path)?;
+    }
     check_final_health(&report.health)
 }
 
@@ -832,6 +1044,46 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
         m.count, m.mean_loss, m.accuracy, out.epochs_run, out.final_gap
     );
     Ok(())
+}
+
+/// Diff two run artifacts (`--bench-json` JSON, `--convergence-log` CSV
+/// or `--csv` per-epoch CSV — formats sniffed by content) and exit
+/// nonzero when any metric regressed past `--threshold`, or when a
+/// healthy baseline turned degraded. This is the CI gate: the committed
+/// baseline lives in `ci/`, the current run's artifact comes fresh from
+/// the workflow.
+fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
+    let baseline_path = get_path_flag(flags, "baseline")?
+        .ok_or_else(|| anyhow!("--baseline is required (bench json or csv artifact)"))?;
+    let current_path = get_path_flag(flags, "current")?
+        .ok_or_else(|| anyhow!("--current is required (bench json or csv artifact)"))?;
+    let threshold = get_positive_f64(flags, "threshold", 1.5)?;
+    if threshold <= 1.0 {
+        bail!(
+            "--threshold is a worseness ratio and must be > 1 \
+             (e.g. 1.5 fails anything 50% worse), got {threshold}"
+        );
+    }
+    let baseline = BenchRecord::load(Path::new(&baseline_path))
+        .map_err(|e| anyhow!("--baseline: {e}"))?;
+    let current = BenchRecord::load(Path::new(&current_path))
+        .map_err(|e| anyhow!("--current: {e}"))?;
+    print!("{}", parlin::report::render_comparison(&baseline, &current, threshold));
+    let regressions = parlin::report::compare(&baseline, &current, threshold);
+    if regressions.is_empty() {
+        println!("report: ok — no metric more than {threshold}x worse than baseline");
+        return Ok(());
+    }
+    for r in &regressions {
+        eprintln!(
+            "report: {} regressed — baseline {:.4}, current {:.4} ({:.2}x worse)",
+            r.metric, r.baseline, r.current, r.ratio
+        );
+    }
+    bail!(
+        "{} metric(s) regressed beyond {threshold}x vs {baseline_path}",
+        regressions.len()
+    )
 }
 
 #[cfg(test)]
@@ -1073,6 +1325,108 @@ mod tests {
             let f = parse_flags(&args(&[bad])).unwrap();
             assert!(get_positive_f64(&f, "drain-stall", 30.0).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn path_flags_require_a_value() {
+        for key in ["metrics-addr", "flight-dir", "bench-json", "convergence-log"] {
+            let empty = parse_flags(&args(&[])).unwrap();
+            assert_eq!(get_path_flag(&empty, key).unwrap(), None);
+            let bare = format!("--{key}");
+            let eq = format!("--{key}=");
+            for bad in [bare.as_str(), eq.as_str()] {
+                let f = parse_flags(&args(&[bad])).unwrap();
+                let err = get_path_flag(&f, key).unwrap_err();
+                assert!(err.to_string().contains("needs a value"), "{bad}: {err}");
+            }
+            let good = parse_flags(&args(&[&format!("--{key}=some/where")])).unwrap();
+            assert_eq!(
+                get_path_flag(&good, key).unwrap().as_deref(),
+                Some("some/where")
+            );
+        }
+    }
+
+    #[test]
+    fn live_health_defaults_healthy_and_follows_the_binding() {
+        let h = LiveHealth::default();
+        assert_eq!(h.read(), (true, "Healthy".to_string()));
+        let shared = h.clone();
+        shared.bind(|| (false, "Degraded (drain died)".to_string()));
+        // clones share the slot, exactly how the export server sees it
+        assert_eq!(h.read(), (false, "Degraded (drain died)".to_string()));
+    }
+
+    #[test]
+    fn serve_rejects_convergence_log() {
+        let f = parse_flags(&args(&["--convergence-log=conv.csv"])).unwrap();
+        let err = cmd_serve_inner(&f, LiveHealth::default()).unwrap_err();
+        assert!(err.to_string().contains("applies to `parlin train`"), "{err}");
+    }
+
+    #[test]
+    fn report_requires_both_artifacts_and_a_sane_threshold() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        let err = cmd_report(&empty).unwrap_err();
+        assert!(err.to_string().contains("--baseline is required"), "{err}");
+
+        let half = parse_flags(&args(&["--baseline=a.json"])).unwrap();
+        let err = cmd_report(&half).unwrap_err();
+        assert!(err.to_string().contains("--current is required"), "{err}");
+
+        // the threshold is validated before the artifacts are touched
+        let f =
+            parse_flags(&args(&["--baseline=a.json", "--current=b.json", "--threshold=0.9"]))
+                .unwrap();
+        let err = cmd_report(&f).unwrap_err();
+        assert!(err.to_string().contains("must be > 1"), "{err}");
+    }
+
+    #[test]
+    fn report_diffs_bench_artifacts_end_to_end() {
+        let dir = std::env::temp_dir();
+        let base_path = dir.join(format!("parlin-cli-report-base-{}.json", std::process::id()));
+        let cur_path = dir.join(format!("parlin-cli-report-cur-{}.json", std::process::id()));
+        let mut base = BenchRecord::new("serve-open-loop");
+        base.throughput_rps = Some(900.0);
+        base.p99_ms = Some(4.0);
+        base.write_json(&base_path).unwrap();
+
+        // same numbers: the gate passes
+        base.write_json(&cur_path).unwrap();
+        let f = parse_flags(&args(&[
+            &format!("--baseline={}", base_path.display()),
+            &format!("--current={}", cur_path.display()),
+        ]))
+        .unwrap();
+        cmd_report(&f).expect("identical artifacts must pass");
+
+        // a 10x tail: the gate fails and names the metric
+        let mut cur = base.clone();
+        cur.p99_ms = Some(40.0);
+        cur.write_json(&cur_path).unwrap();
+        let err = cmd_report(&f).unwrap_err();
+        assert!(err.to_string().contains("regressed"), "{err}");
+
+        let _ = std::fs::remove_file(&base_path);
+        let _ = std::fs::remove_file(&cur_path);
+    }
+
+    #[test]
+    fn flight_dir_flag_arms_the_recorder_and_starts_tracing() {
+        let dir = std::env::temp_dir()
+            .join(format!("parlin-cli-flight-flag-{}", std::process::id()));
+        let flag = format!("--flight-dir={}", dir.display());
+        let f = parse_flags(&args(&[flag.as_str()])).unwrap();
+        let obs = ObsCli::start(&f).unwrap();
+        // no --trace, yet the rings are live: dumps need events to drain
+        assert!(parlin::obs::tracing_enabled());
+        assert!(parlin::obs::flight::armed());
+        assert!(obs.trace_path.is_none());
+        obs.finish().unwrap();
+        assert!(!parlin::obs::tracing_enabled());
+        assert!(!parlin::obs::flight::armed());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -130,8 +130,9 @@ impl RunRecord {
 }
 
 /// RFC 4180 field quoting: wrap in double quotes (doubling any embedded
-/// quote) when the value contains a comma, quote or newline.
-fn csv_field(s: &str) -> String {
+/// quote) when the value contains a comma, quote or newline. Shared with
+/// the convergence-trace CSV in [`crate::obs::convergence`].
+pub(crate) fn csv_field(s: &str) -> String {
     if s.contains([',', '"', '\n', '\r']) {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
@@ -150,7 +151,7 @@ fn finite_cell(x: Option<f64>) -> String {
 
 /// `Some(None)` for an empty cell, `Some(Some(v))` for a float, `None` on
 /// garbage.
-fn parse_cell(cell: &str) -> Option<Option<f64>> {
+pub(crate) fn parse_cell(cell: &str) -> Option<Option<f64>> {
     if cell.is_empty() {
         Some(None)
     } else {
@@ -160,7 +161,7 @@ fn parse_cell(cell: &str) -> Option<Option<f64>> {
 
 /// Split one CSV row honoring RFC 4180 quoting (the inverse of
 /// [`csv_field`] over a joined row).
-fn split_csv_row(line: &str) -> Vec<String> {
+pub(crate) fn split_csv_row(line: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut cur = String::new();
     let mut in_quotes = false;

@@ -1,0 +1,227 @@
+//! Per-epoch convergence traces: duality gap / model change vs wall
+//! clock, the curves the source paper's Figures 5–7 are built on and the
+//! measurement feed the SySCD-style auto-tuner (ROADMAP item 2) consumes.
+//!
+//! Every solver records one [`ConvergencePoint`] per epoch into a
+//! [`ConvergenceTrace`], which is stamped on
+//! [`TrainOutput`](crate::solver::TrainOutput) and
+//! [`RefitReport`](crate::serve::RefitReport) and exported by the CLI via
+//! `--convergence-log <csv>`.
+//!
+//! # Non-perturbation contract
+//!
+//! Recording *reuses* values the solver epoch loop already computed — the
+//! relative change from the convergence monitor, the duality gap only on
+//! the epochs the gap checker already evaluated it, and the per-epoch
+//! wall time from the timer read the epoch log already takes. The
+//! recorder itself reads no clock, computes no gap, and takes no lock:
+//! it is a `Vec` push per epoch. `rust/tests/obs.rs` locks this in by
+//! asserting the trace is an exact mirror of the epoch log (same length,
+//! bit-identical gaps, prefix-sum wall clock).
+
+use std::path::Path;
+
+use crate::metrics::{csv_field, parse_cell, split_csv_row};
+
+/// One epoch's worth of convergence telemetry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvergencePoint {
+    /// Epoch number, 1-based.
+    pub epoch: usize,
+    /// Wall-clock seconds since training started (cumulative: the sum of
+    /// the per-epoch times the solver already measured).
+    pub wall_s: f64,
+    /// Relative model change vs the previous epoch (the paper's stopping
+    /// criterion; `inf` marks an adaptive-σ reverted epoch).
+    pub rel_change: f64,
+    /// Duality gap, only on epochs where the monitor computed it.
+    pub gap: Option<f64>,
+    /// Per-worker busy imbalance (max/mean) at the end of this epoch;
+    /// absent for non-pool executors.
+    pub imbalance: Option<f64>,
+    /// Total worker busy seconds (cumulative) at the end of this epoch;
+    /// absent for non-pool executors.
+    pub busy_s: Option<f64>,
+}
+
+/// The convergence-vs-time curve of one training run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConvergenceTrace {
+    /// Solver label, same vocabulary as `RunRecord::solver`.
+    pub solver: String,
+    pub threads: usize,
+    pub points: Vec<ConvergencePoint>,
+}
+
+impl ConvergenceTrace {
+    pub fn new(solver: impl Into<String>, threads: usize) -> Self {
+        ConvergenceTrace { solver: solver.into(), threads, points: Vec::new() }
+    }
+
+    /// Record one epoch. `epoch_wall_s` is the per-epoch wall time the
+    /// solver's existing timer read produced; the stored value is its
+    /// running sum, so the recorder adds no clock read of its own.
+    pub fn record(
+        &mut self,
+        epoch: usize,
+        epoch_wall_s: f64,
+        rel_change: f64,
+        gap: Option<f64>,
+        imbalance: Option<f64>,
+        busy_s: Option<f64>,
+    ) {
+        let wall_s = self.points.last().map_or(0.0, |p| p.wall_s) + epoch_wall_s;
+        self.points.push(ConvergencePoint { epoch, wall_s, rel_change, gap, imbalance, busy_s });
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The last gap the monitor computed, if any epoch had one.
+    pub fn last_gap(&self) -> Option<f64> {
+        self.points.iter().rev().find_map(|p| p.gap)
+    }
+
+    /// Epochs until the gap first dropped below `tol` (what `parlin
+    /// report` diffs as "epochs-to-gap"); `None` if it never did.
+    pub fn epochs_to_gap(&self, tol: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.gap.is_some_and(|g| g <= tol)).map(|p| p.epoch)
+    }
+
+    /// Column names emitted by [`ConvergenceTrace::to_csv`].
+    pub const CSV_HEADER: &'static str =
+        "solver,threads,epoch,wall_s,rel_change,gap,imbalance,busy_s";
+
+    /// Render as CSV. Floats use Rust's shortest round-trippable `{}`
+    /// formatting (so [`ConvergenceTrace::from_csv`] is exact, including
+    /// `inf` rel-change markers); absent optionals are empty cells.
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::from(Self::CSV_HEADER);
+        s.push('\n');
+        let solver = csv_field(&self.solver);
+        let opt = |x: Option<f64>| x.map(|v| v.to_string()).unwrap_or_default();
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{}",
+                solver,
+                self.threads,
+                p.epoch,
+                p.wall_s,
+                p.rel_change,
+                opt(p.gap),
+                opt(p.imbalance),
+                opt(p.busy_s),
+            );
+        }
+        s
+    }
+
+    /// Parse a [`ConvergenceTrace::to_csv`] dump back. `None` on a wrong
+    /// header, a short row, or a malformed cell.
+    pub fn from_csv(csv: &str) -> Option<ConvergenceTrace> {
+        let mut lines = csv.lines();
+        if lines.next()? != Self::CSV_HEADER {
+            return None;
+        }
+        let mut trace = ConvergenceTrace::default();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let cells = split_csv_row(line);
+            if cells.len() != 8 {
+                return None;
+            }
+            trace.solver.clone_from(&cells[0]);
+            trace.threads = cells[1].parse().ok()?;
+            trace.points.push(ConvergencePoint {
+                epoch: cells[2].parse().ok()?,
+                wall_s: cells[3].parse().ok()?,
+                rel_change: cells[4].parse().ok()?,
+                gap: parse_cell(&cells[5])?,
+                imbalance: parse_cell(&cells[6])?,
+                busy_s: parse_cell(&cells[7])?,
+            });
+        }
+        Some(trace)
+    }
+
+    /// Gap-only view for plotting: `epoch,wall_s,gap` rows restricted to
+    /// the epochs where the monitor computed a gap.
+    pub fn gap_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::from("epoch,wall_s,gap\n");
+        for p in &self.points {
+            if let Some(g) = p.gap {
+                let _ = writeln!(s, "{},{},{}", p.epoch, p.wall_s, g);
+            }
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> ConvergenceTrace {
+        let mut t = ConvergenceTrace::new("numa(2n,bucket=4)", 8);
+        t.record(1, 0.5, 0.8, Some(0.25), Some(1.5), Some(3.5));
+        t.record(2, 0.25, f64::INFINITY, None, None, None);
+        t.record(3, 0.25, 0.01, Some(1e-4), Some(1.1), Some(7.25));
+        t
+    }
+
+    #[test]
+    fn record_accumulates_wall_clock() {
+        let t = trace();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.points[0].wall_s, 0.5);
+        assert_eq!(t.points[1].wall_s, 0.75);
+        assert_eq!(t.points[2].wall_s, 1.0);
+        assert_eq!(t.last_gap(), Some(1e-4));
+        assert_eq!(t.epochs_to_gap(1e-3), Some(3));
+        assert_eq!(t.epochs_to_gap(1e-9), None);
+    }
+
+    #[test]
+    fn csv_roundtrips_exactly_including_inf_and_empty_cells() {
+        let t = trace();
+        let csv = t.to_csv();
+        assert!(csv.starts_with(ConvergenceTrace::CSV_HEADER));
+        assert!(csv.contains("\"numa(2n,bucket=4)\",8,"), "comma labels must quote");
+        let back = ConvergenceTrace::from_csv(&csv).expect("own output must parse");
+        assert_eq!(back, t, "shortest-float formatting round-trips bit-exactly");
+        assert_eq!(back.to_csv(), csv);
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(ConvergenceTrace::from_csv("nope\n1,2,3").is_none());
+        let short = format!("{}\nseq,1,1,0.5\n", ConvergenceTrace::CSV_HEADER);
+        assert!(ConvergenceTrace::from_csv(&short).is_none());
+        let bad = format!("{}\nseq,1,one,0.5,0.1,,,\n", ConvergenceTrace::CSV_HEADER);
+        assert!(ConvergenceTrace::from_csv(&bad).is_none());
+    }
+
+    #[test]
+    fn gap_csv_keeps_only_evaluated_epochs() {
+        let g = trace().gap_csv();
+        let lines: Vec<_> = g.lines().collect();
+        assert_eq!(lines[0], "epoch,wall_s,gap");
+        assert_eq!(lines.len(), 3, "epoch 2 had no gap evaluation");
+        assert!(lines[1].starts_with("1,0.5,"));
+        assert!(lines[2].starts_with("3,1,"));
+    }
+}

@@ -13,11 +13,14 @@
 //!    `off`/`0`/`none` silences everything; unset defaults to `warn`, so
 //!    the pre-existing rebuild warnings keep appearing by default).
 //!
-//! The env var is re-read per call — again fine on cold paths, and it lets
-//! a long-lived serve process be turned up without a restart-and-reproduce
-//! dance.
+//! The env var used to be re-read (and re-parsed) on every call; it is now
+//! parsed once into an atomic cache, so the steady-state cost of a gated
+//! call is one relaxed load. Embedders that change `PARLIN_LOG` from
+//! within the process (tests do) call [`reload_threshold`] to drop the
+//! cache.
 
 use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 /// Severity, ordered: `Error < Warn < Info < Debug`. A record prints when
@@ -47,6 +50,41 @@ impl Level {
 pub struct DiagRecord {
     pub level: Level,
     pub message: String,
+}
+
+/// Cached parse of `PARLIN_LOG`: [`Level`] as `u8`, [`THRESHOLD_SILENT`]
+/// for "print nothing", [`THRESHOLD_UNINIT`] before the first call.
+static THRESHOLD: AtomicU8 = AtomicU8::new(THRESHOLD_UNINIT);
+const THRESHOLD_UNINIT: u8 = u8::MAX;
+const THRESHOLD_SILENT: u8 = 4;
+
+/// The effective threshold: one relaxed load once the cache is warm
+/// (`dispatch` is on cold paths, but "cold" multiplied by every pool
+/// rebuild in a long serve run still should not re-parse an env var).
+fn threshold() -> Option<Level> {
+    match THRESHOLD.load(Ordering::Relaxed) {
+        THRESHOLD_UNINIT => init_threshold(),
+        THRESHOLD_SILENT => None,
+        0 => Some(Level::Error),
+        1 => Some(Level::Warn),
+        2 => Some(Level::Info),
+        _ => Some(Level::Debug),
+    }
+}
+
+#[cold]
+fn init_threshold() -> Option<Level> {
+    let t = env_threshold();
+    THRESHOLD.store(t.map_or(THRESHOLD_SILENT, |l| l as u8), Ordering::Relaxed);
+    t
+}
+
+/// Drop the cached threshold so the next diagnostic re-reads `PARLIN_LOG`.
+/// For tests and embedders that set the variable from within the process —
+/// nothing external can mutate another process's environment anyway, so
+/// the cache loses no real flexibility.
+pub fn reload_threshold() {
+    THRESHOLD.store(THRESHOLD_UNINIT, Ordering::Relaxed);
 }
 
 /// Threshold from `PARLIN_LOG`; `None` means fully silent.
@@ -107,16 +145,16 @@ impl Drop for DiagCapture {
 /// The macro's runtime. Not called directly — use
 /// [`obs::diag!`](crate::diag).
 pub fn dispatch(level: Level, args: fmt::Arguments<'_>) {
-    let message = args.to_string();
     {
         let mut cap = lock_ignore_poison(&CAPTURE);
         if let Some(buf) = cap.as_mut() {
-            buf.push(DiagRecord { level, message });
+            buf.push(DiagRecord { level, message: args.to_string() });
             return;
         }
     }
-    if env_threshold().is_some_and(|t| level <= t) {
-        eprintln!("{message}");
+    // gate before formatting: a silenced record costs one relaxed load
+    if threshold().is_some_and(|t| level <= t) {
+        eprintln!("{args}");
     }
 }
 
@@ -153,6 +191,35 @@ mod tests {
         );
         // drained: a second take is empty
         assert!(cap.take().is_empty());
+    }
+
+    #[test]
+    fn threshold_parses_once_then_costs_one_relaxed_load() {
+        // the capture serial doubles as the env-var serial: no other test
+        // in this binary touches PARLIN_LOG while we hold it
+        let _serial = lock_ignore_poison(&CAPTURE_SERIAL);
+        std::env::set_var("PARLIN_LOG", "debug");
+        reload_threshold();
+        assert_eq!(threshold(), Some(Level::Debug));
+        assert_eq!(THRESHOLD.load(Ordering::Relaxed), Level::Debug as u8);
+
+        // changing the env var is NOT observed — the cache is the point
+        std::env::set_var("PARLIN_LOG", "error");
+        assert_eq!(threshold(), Some(Level::Debug), "cached, not re-parsed");
+
+        // an explicit reload re-parses
+        reload_threshold();
+        assert_eq!(threshold(), Some(Level::Error));
+
+        // the silent spelling caches too (distinct from uninitialized)
+        std::env::set_var("PARLIN_LOG", "off");
+        reload_threshold();
+        assert_eq!(threshold(), None);
+        assert_eq!(THRESHOLD.load(Ordering::Relaxed), THRESHOLD_SILENT);
+
+        std::env::remove_var("PARLIN_LOG");
+        reload_threshold();
+        assert_eq!(threshold(), Some(Level::Warn), "unset defaults to warn");
     }
 
     #[test]

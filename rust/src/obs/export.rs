@@ -1,0 +1,291 @@
+//! The `/metrics` exposition endpoint: a dependency-free HTTP/1.0 server
+//! over [`std::net::TcpListener`], started by `--metrics-addr HOST:PORT`.
+//!
+//! # Routes
+//!
+//! | route      | body                                             | status |
+//! |------------|--------------------------------------------------|--------|
+//! | `/metrics` | the registry in Prometheus text format           | 200    |
+//! | `/health`  | the current [`ServeHealth`] line                 | 200 healthy / 503 degraded |
+//! | `/trace`   | the live session's chrome://tracing JSON so far  | 200, or 404 with no session |
+//!
+//! # Why pull-only, and why one accept thread
+//!
+//! The observation-without-perturbation argument (`docs/OBSERVABILITY.md`)
+//! rests on the instrumented side never waiting on the observer. This
+//! endpoint keeps that intact by being strictly pull-based: a scrape reads
+//! the same lock-free counters and SPSC rings the registry and tracer
+//! already maintain — nothing on the training or serving path knows the
+//! server exists, and `rust/tests/obs.rs` asserts a scrape loop leaves
+//! models and served margins bit-wise identical. Connections are handled
+//! *inline on the single accept thread* (the "bounded handler" model): a
+//! slow or hostile scraper can only delay other scrapers, never spawn
+//! unbounded handler threads or touch a worker. Read/write timeouts bound
+//! each connection's hold on that thread.
+//!
+//! `ServeHealth` lives in [`crate::serve`], which depends on this module's
+//! parent — the server therefore takes its health answer as an injected
+//! closure ([`ExportSources::health`]) rather than importing the type.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::obs::registry::registry;
+use crate::obs::trace;
+
+/// Per-connection read/write budget: bounds how long one scraper can hold
+/// the accept thread.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Where the endpoint's answers come from. [`Default`] serves the global
+/// registry and reports permanently-healthy — enough for `train` runs and
+/// tests; `parlin serve` injects the scheduler's live health.
+#[derive(Clone)]
+pub struct ExportSources {
+    /// `(healthy, detail)` for `/health`: the detail line is the body
+    /// (`Healthy` or `Degraded (reason)`), the flag picks 200 vs 503.
+    pub health: Arc<dyn Fn() -> (bool, String) + Send + Sync>,
+}
+
+impl Default for ExportSources {
+    fn default() -> Self {
+        ExportSources { health: Arc::new(|| (true, "Healthy".to_string())) }
+    }
+}
+
+impl ExportSources {
+    /// Sources with an injected health closure.
+    pub fn with_health<F>(health: F) -> Self
+    where
+        F: Fn() -> (bool, String) + Send + Sync + 'static,
+    {
+        ExportSources { health: Arc::new(health) }
+    }
+}
+
+/// RAII handle over the running endpoint; shuts down and joins the accept
+/// thread on [`ExportServer::shutdown`] or drop.
+pub struct ExportServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExportServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, or port `0` for an ephemeral
+    /// port — read it back via [`ExportServer::local_addr`]) and start the
+    /// accept thread.
+    pub fn start(addr: &str, sources: ExportSources) -> io::Result<ExportServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("parlin-metrics-export".into())
+            .spawn(move || accept_loop(listener, sources, stop2))
+            .map_err(|e| io::Error::new(e.kind(), "spawning the metrics export thread"))?;
+        Ok(ExportServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The address actually bound (resolves port `0` requests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop blocks in accept(); a throwaway self-connection
+        // wakes it so it can observe the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExportServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, sources: ExportSources, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn {
+            Ok(stream) => {
+                if let Err(e) = handle_conn(stream, &sources) {
+                    // a scraper disconnecting mid-response is routine
+                    crate::diag!(Debug, "metrics scrape connection failed: {}", e);
+                }
+            }
+            Err(e) => crate::diag!(Warn, "metrics export accept failed: {}", e),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, sources: &ExportSources) -> io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let path = read_request_path(&mut stream)?;
+    let (status, ctype, body) = respond(&path, sources);
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        _ => "Bad Request",
+    };
+    write!(
+        stream,
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Route one request path to `(status, content-type, body)`.
+fn respond(path: &str, sources: &ExportSources) -> (u16, &'static str, String) {
+    // ignore any query string — scrapers commonly append cache-busters
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/metrics" => (
+            200,
+            "text/plain; version=0.0.4",
+            registry().snapshot().render_prometheus(),
+        ),
+        "/health" => {
+            let (healthy, detail) = (sources.health)();
+            let status = if healthy { 200 } else { 503 };
+            (status, "text/plain", format!("{detail}\n"))
+        }
+        "/trace" => match trace::live_dump() {
+            Some(dump) => (200, "application/json", dump.to_chrome_json()),
+            None => (
+                404,
+                "text/plain",
+                "no tracing session is live (run with --trace or --flight-dir)\n".to_string(),
+            ),
+        },
+        _ => (
+            404,
+            "text/plain",
+            "unknown path (routes: /metrics, /health, /trace)\n".to_string(),
+        ),
+    }
+}
+
+/// Read up to the end of the HTTP request line and return its path.
+/// Anything after the first line (headers, body) is ignored — every route
+/// is a parameterless GET.
+fn read_request_path(stream: &mut TcpStream) -> io::Result<String> {
+    let mut buf = [0u8; 1024];
+    let mut n = 0;
+    while n < buf.len() {
+        let read = stream.read(&mut buf[n..])?;
+        if read == 0 {
+            break;
+        }
+        n += read;
+        if buf[..n].windows(2).any(|w| w == b"\r\n") {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf[..n]);
+    let line = text.lines().next().unwrap_or("");
+    // "GET /metrics HTTP/1.0" — the middle token is the path
+    let mut parts = line.split_whitespace();
+    let _method = parts.next().unwrap_or("");
+    match parts.next() {
+        Some(path) if path.starts_with('/') => Ok(path.to_string()),
+        _ => Ok(String::new()), // routed to the 404 arm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ObsConfig, TraceSession};
+
+    /// Minimal scrape client (the same shape examples/check_metrics.rs
+    /// uses): one GET, read to EOF, split status line from body.
+    fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).expect("connecting to the export server");
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).expect("reading the response");
+        let status: u16 = text
+            .lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|c| c.parse().ok())
+            .expect("status line");
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_metrics_health_and_404() {
+        registry().counter("export.test.requests").inc();
+        let srv = ExportServer::start("127.0.0.1:0", ExportSources::default()).unwrap();
+        let addr = srv.local_addr();
+
+        let (status, body) = http_get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("parlin_export_test_requests"), "{body}");
+
+        let (status, body) = http_get(addr, "/health");
+        assert_eq!(status, 200);
+        assert_eq!(body, "Healthy\n");
+
+        let (status, _) = http_get(addr, "/nope");
+        assert_eq!(status, 404);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn degraded_health_maps_to_503() {
+        let srv = ExportServer::start(
+            "127.0.0.1:0",
+            ExportSources::with_health(|| (false, "Degraded (drain died)".to_string())),
+        )
+        .unwrap();
+        let (status, body) = http_get(srv.local_addr(), "/health");
+        assert_eq!(status, 503);
+        assert_eq!(body, "Degraded (drain died)\n");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn trace_route_serves_the_live_session_or_404() {
+        let srv = ExportServer::start("127.0.0.1:0", ExportSources::default()).unwrap();
+        let addr = srv.local_addr();
+        {
+            let session = TraceSession::start(ObsConfig::on(64));
+            crate::obs::emit(crate::obs::EventKind::EpochBegin, crate::obs::CLASS_NONE, 0, 1);
+            let (status, body) = http_get(addr, "/trace");
+            assert_eq!(status, 200);
+            assert!(body.starts_with("{\"traceEvents\":["), "{body}");
+            assert!(body.contains("\"epoch_begin\""), "{body}");
+            drop(session.finish());
+        }
+        // outside a session the route reports, it does not invent a dump —
+        // serialize against other traced tests via an off session
+        let _off = TraceSession::start(ObsConfig::off());
+        let (status, _) = http_get(addr, "/trace");
+        assert_eq!(status, 404);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,300 @@
+//! Black-box flight recorder: when a serve run degrades, dump the last
+//! N seconds of trace events plus the metrics movement since the previous
+//! dump, so every PR-8 recovery event leaves forensic evidence on disk.
+//!
+//! # Triggers
+//!
+//! [`trip`] is called by the scheduler at every health-relevant moment:
+//! a `snapshot_rollback` (writer failure contained), any transition of
+//! [`ServeHealth`](crate::serve::ServeHealth) to `Degraded` (drain death,
+//! exhausted drain retries, failed foreground refit), and the drain
+//! watchdog flagging a stall. The trigger sites emit their trace event
+//! *before* tripping on the same thread, so the event is already in that
+//! thread's ring when the dump drains it.
+//!
+//! # Cost discipline
+//!
+//! The same pattern as [`crate::fault`]: un-installed, every [`trip`] is
+//! ONE relaxed atomic load of the `ARMED` flag; the dump path is
+//! `#[cold]` and never entered while disarmed. Installed, tripping is
+//! still only reached on failure paths — never on the per-request or
+//! per-epoch hot path — so the observation-without-perturbation argument
+//! is untouched. Dump I/O errors are reported via `diag!` and swallowed:
+//! a broken disk must not take down a serving process that just proved it
+//! can survive a refit failure.
+//!
+//! # Dump format
+//!
+//! Each trip writes two timestamped files into the `--flight-dir`
+//! directory (`flight-<unix-secs>-<seq>-<reason>.json` + `.metrics.txt`):
+//! the windowed chrome://tracing JSON (same format as `--trace`, parseable
+//! by `examples/check_trace.rs`) and a metrics table whose counters are
+//! deltas since install (or the previous dump) — "what moved during the
+//! failure window". See `docs/OBSERVABILITY.md`.
+
+use std::io::{self, BufWriter};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::obs::registry::{registry, MetricsSnapshot};
+use crate::obs::trace;
+use crate::util::lock_recover;
+
+/// Default event-retention window for dumps, seconds.
+pub const DEFAULT_WINDOW_S: f64 = 30.0;
+
+/// One relaxed load on every [`trip`]; flipped only by [`install`] /
+/// [`FlightGuard`] drop.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static RECORDER: Mutex<Option<Arc<FlightRecorder>>> = Mutex::new(None);
+/// Serializes installed recorders across tests, like trace and fault
+/// sessions.
+static SESSION: Mutex<()> = Mutex::new(());
+
+struct FlightRecorder {
+    dir: PathBuf,
+    window_ns: u64,
+    /// Per-install dump sequence number (several trips in one second must
+    /// not collide on the timestamped filename).
+    seq: AtomicU64,
+    /// Counter baseline for the next dump's delta: the registry at
+    /// install time, advanced to the current snapshot after every dump.
+    baseline: Mutex<MetricsSnapshot>,
+}
+
+/// RAII handle over an installed recorder; uninstalls on drop. Holds the
+/// flight session mutex for its lifetime (lock order when combined with
+/// tracing: start the [`TraceSession`](crate::obs::TraceSession) first,
+/// as the CLI does).
+pub struct FlightGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FlightGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        *lock_recover(&RECORDER) = None;
+    }
+}
+
+/// Install a recorder dumping into `dir` (created if missing) with a
+/// `window_s`-second event-retention window. Events only flow if a
+/// tracing session is live — `--flight-dir` on the CLI starts one even
+/// without `--trace` for exactly that reason.
+pub fn install(dir: impl Into<PathBuf>, window_s: f64) -> io::Result<FlightGuard> {
+    let dir = dir.into();
+    std::fs::create_dir_all(&dir)?;
+    let serial = lock_recover(&SESSION);
+    *lock_recover(&RECORDER) = Some(Arc::new(FlightRecorder {
+        dir,
+        window_ns: (window_s.max(1e-3) * 1e9) as u64,
+        seq: AtomicU64::new(0),
+        baseline: Mutex::new(registry().snapshot()),
+    }));
+    ARMED.store(true, Ordering::SeqCst);
+    Ok(FlightGuard { _serial: serial })
+}
+
+/// Is a recorder currently installed?
+pub fn armed() -> bool {
+    ARMED.load(Ordering::SeqCst)
+}
+
+/// Fire the recorder: dump the trailing event window and the metrics
+/// delta, tagged with `reason` (it lands in the filenames). One relaxed
+/// load and a branch when nothing is installed.
+#[inline]
+pub fn trip(reason: &str) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    trip_armed(reason);
+}
+
+#[cold]
+fn trip_armed(reason: &str) {
+    let rec = match lock_recover(&RECORDER).as_ref() {
+        Some(r) => Arc::clone(r),
+        // a guard is mid-drop: ARMED read raced the recorder clear
+        None => return,
+    };
+    match rec.dump(reason) {
+        Ok(path) => crate::diag!(
+            Warn,
+            "flight recorder tripped ({}): dump -> {}",
+            reason,
+            path.display()
+        ),
+        Err(e) => crate::diag!(Warn, "flight recorder dump failed ({}): {}", reason, e),
+    }
+}
+
+/// Filename-safe slug of a trip reason.
+fn slug(reason: &str) -> String {
+    let mut out = String::new();
+    for c in reason.chars().take(48) {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.ends_with('-') {
+            out.push('-');
+        }
+    }
+    let trimmed = out.trim_matches('-');
+    if trimmed.is_empty() { "trip".to_string() } else { trimmed.to_string() }
+}
+
+impl FlightRecorder {
+    /// Write one dump pair; returns the trace JSON path.
+    fn dump(&self, reason: &str) -> io::Result<PathBuf> {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let base = format!("flight-{stamp}-{seq}-{}", slug(reason));
+
+        // the trailing window of the live trace (empty dump when no
+        // tracing session is live — still a valid, parseable file)
+        let cutoff = trace::now_ns().saturating_sub(self.window_ns);
+        let mut dump = trace::live_dump().unwrap_or_default();
+        for t in &mut dump.threads {
+            t.events.retain(|e| e.ts_ns >= cutoff);
+        }
+        let trace_path = self.dir.join(format!("{base}.json"));
+        let mut f = BufWriter::new(std::fs::File::create(&trace_path)?);
+        dump.write_chrome_json(&mut f)?;
+
+        // counters as deltas since the previous dump (or install);
+        // advance the baseline so consecutive dumps partition time
+        let delta = {
+            let mut baseline = lock_recover(&self.baseline);
+            let snap = registry().snapshot();
+            let delta = snap.delta_from(&baseline);
+            *baseline = snap;
+            delta
+        };
+        let metrics_path = self.dir.join(format!("{base}.metrics.txt"));
+        std::fs::write(
+            &metrics_path,
+            format!(
+                "flight dump: {reason}\n\
+                 window: last {:.3}s of trace events ({} kept)\n\
+                 counters are deltas since the previous dump; gauges and\n\
+                 histogram summaries are current values\n\n{}",
+                self.window_ns as f64 / 1e9,
+                dump.total_events(),
+                delta.render_table()
+            ),
+        )?;
+        Ok(trace_path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{emit, EventKind, ObsConfig, TraceSession, CLASS_WRITER};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("parlin-flight-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn dumps_in(dir: &PathBuf, ext: &str) -> Vec<PathBuf> {
+        let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| p.to_string_lossy().ends_with(ext))
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn disarmed_trip_is_a_no_op() {
+        // hold the flight session so an installed-recorder test in this
+        // binary cannot race the disarmed assertion
+        let _serial = lock_recover(&SESSION);
+        assert!(!ARMED.load(Ordering::SeqCst));
+        trip("nobody listening");
+    }
+
+    #[test]
+    fn trip_dumps_windowed_trace_and_metrics_delta() {
+        let dir = temp_dir("dump");
+        // lock order: trace session first, then the recorder (the CLI's
+        // order); both are held for the whole test
+        let session = TraceSession::start(ObsConfig::on(256));
+        let guard = install(&dir, DEFAULT_WINDOW_S).unwrap();
+        assert!(armed());
+
+        registry().counter("flight.test.rollbacks").inc();
+        emit(EventKind::SnapshotRollback, CLASS_WRITER, 0, 7);
+        trip("unit test degraded");
+
+        let traces = dumps_in(&dir, ".json");
+        assert_eq!(traces.len(), 1, "one trip -> one trace dump");
+        let json = std::fs::read_to_string(&traces[0]).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["), "chrome-trace shape");
+        assert!(json.contains("\"snapshot_rollback\""), "{json}");
+        assert!(
+            traces[0].to_string_lossy().contains("unit-test-degraded"),
+            "reason lands in the filename: {traces:?}"
+        );
+
+        let metrics = dumps_in(&dir, ".metrics.txt");
+        assert_eq!(metrics.len(), 1);
+        let table = std::fs::read_to_string(&metrics[0]).unwrap();
+        assert!(table.contains("flight.test.rollbacks"), "{table}");
+
+        // a second trip reports only what moved since the first
+        registry().counter("flight.test.rollbacks").add(2);
+        trip("second");
+        let metrics = dumps_in(&dir, ".metrics.txt");
+        assert_eq!(metrics.len(), 2);
+        let second = std::fs::read_to_string(&metrics[1]).unwrap();
+        let row = second
+            .lines()
+            .find(|l| l.contains("flight.test.rollbacks"))
+            .expect("counter row present");
+        assert!(row.trim_end().ends_with(" 2"), "delta, not absolute: {row:?}");
+
+        drop(guard);
+        assert!(!armed());
+        drop(session.finish());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn window_filter_drops_stale_events() {
+        let dir = temp_dir("window");
+        let session = TraceSession::start(ObsConfig::on(256));
+        // a 1 ms window: the event emitted now is stale after the sleep
+        let guard = install(&dir, 0.001).unwrap();
+        emit(EventKind::EpochBegin, crate::obs::CLASS_NONE, 0, 1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        trip("stale");
+        let traces = dumps_in(&dir, ".json");
+        assert_eq!(traces.len(), 1);
+        let json = std::fs::read_to_string(&traces[0]).unwrap();
+        assert!(
+            !json.contains("\"epoch_begin\""),
+            "events older than the window must be filtered: {json}"
+        );
+        drop(guard);
+        drop(session.finish());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reason_slugs_are_filename_safe() {
+        assert_eq!(slug("drain failed: injected #3"), "drain-failed-injected-3");
+        assert_eq!(slug(""), "trip");
+        assert_eq!(slug("///"), "trip");
+    }
+}

@@ -25,16 +25,33 @@
 //!   macro replaces ad-hoc `eprintln!` on cold control points — leveled,
 //!   `PARLIN_LOG`-gated, and capturable in tests via
 //!   [`DiagCapture`](diag::DiagCapture).
+//! * **Exposition** ([`export`]): `--metrics-addr` starts a pull-only,
+//!   dependency-free HTTP endpoint serving `/metrics` (Prometheus text),
+//!   `/health` and `/trace` — scrapers read the same lock-free state the
+//!   instruments already maintain, so scraping cannot perturb a run.
+//! * **Convergence traces** ([`convergence`]): every solver records a
+//!   [`ConvergencePoint`] per epoch (gap / model change / wall clock /
+//!   pool imbalance), reusing values the epoch loop already computed;
+//!   exported via `--convergence-log`.
+//! * **Flight recorder** ([`flight`]): `--flight-dir` arms a black box
+//!   that dumps the trailing event window plus a metrics delta whenever
+//!   serve health degrades or a snapshot rolls back.
 
+pub mod convergence;
 pub mod diag;
+pub mod export;
+pub mod flight;
 pub mod registry;
 pub mod ring;
 pub mod trace;
 
+pub use convergence::{ConvergencePoint, ConvergenceTrace};
+pub use export::{ExportServer, ExportSources};
 pub use registry::{registry, Counter, Gauge, Histogram, MetricsSnapshot, MetricsTicker, Registry};
 pub use trace::{
-    emit, now_ns, ring_count, tracing_enabled, EventKind, ObsConfig, TraceDump, TraceEvent,
-    TraceSession, CLASS_NONE, CLASS_READER, CLASS_WRITER, DEFAULT_RING_CAPACITY, MIN_RING_CAPACITY,
+    emit, live_dump, now_ns, ring_count, tracing_enabled, EventKind, ObsConfig, TraceDump,
+    TraceEvent, TraceSession, CLASS_NONE, CLASS_READER, CLASS_WRITER, DEFAULT_RING_CAPACITY,
+    MIN_RING_CAPACITY,
 };
 
 // Re-export the `diag!` macro at `obs::diag!` (macros and modules live in

@@ -282,6 +282,65 @@ impl MetricsSnapshot {
         s
     }
 
+    /// Prometheus text exposition (version 0.0.4), what `/metrics` serves.
+    /// Registry names are dotted (`sched.publishes`); Prometheus names
+    /// allow `[a-zA-Z0-9_:]`, so every other character maps to `_` and
+    /// everything is prefixed `parlin_`. Histograms export as summaries:
+    /// three `quantile`-labelled lines plus `_sum`/`_count`.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut out = String::with_capacity(name.len() + 7);
+            out.push_str("parlin_");
+            for c in name.chars() {
+                if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                    out.push(c);
+                } else {
+                    out.push('_');
+                }
+            }
+            out
+        }
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            let n = sanitize(k);
+            let _ = writeln!(s, "# TYPE {n} counter");
+            let _ = writeln!(s, "{n} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let n = sanitize(k);
+            let _ = writeln!(s, "# TYPE {n} gauge");
+            let _ = writeln!(s, "{n} {v}");
+        }
+        for h in &self.hists {
+            let n = sanitize(&h.name);
+            let _ = writeln!(s, "# TYPE {n} summary");
+            let _ = writeln!(s, "{n}{{quantile=\"0.5\"}} {}", h.p50);
+            let _ = writeln!(s, "{n}{{quantile=\"0.9\"}} {}", h.p90);
+            let _ = writeln!(s, "{n}{{quantile=\"0.99\"}} {}", h.p99);
+            let _ = writeln!(s, "{n}_sum {}", h.sum);
+            let _ = writeln!(s, "{n}_count {}", h.count);
+        }
+        s
+    }
+
+    /// Difference view against an earlier snapshot: counters report how
+    /// much they advanced since `baseline` (a name absent from the
+    /// baseline counts from zero); gauges and histogram summaries are
+    /// instantaneous, so they pass through at their current values. This
+    /// is what the flight recorder writes next to each dump — "what moved
+    /// during the failure window".
+    pub fn delta_from(&self, baseline: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.saturating_sub(baseline.counter(k).unwrap_or(0))))
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self.hists.clone(),
+        }
+    }
+
     /// Fixed-width table (same printer the figure harnesses use).
     pub fn render_table(&self) -> String {
         let mut t = crate::metrics::Table::new(&[
@@ -446,6 +505,51 @@ mod tests {
         let table = snap.render_table();
         assert!(table.contains("pending"));
         assert_eq!(table.lines().count(), 2 + 3);
+    }
+
+    #[test]
+    fn prometheus_rendering_sanitizes_names_and_types_every_family() {
+        let reg = Registry::new();
+        reg.counter("sched.publishes").add(3);
+        reg.gauge("pool.jobs").set(7);
+        reg.histogram("solver.epoch_wall_us").record(100);
+        let text = reg.snapshot().render_prometheus();
+        assert!(text.contains("# TYPE parlin_sched_publishes counter\n"));
+        assert!(text.contains("parlin_sched_publishes 3\n"));
+        assert!(text.contains("# TYPE parlin_pool_jobs gauge\n"));
+        assert!(text.contains("parlin_pool_jobs 7\n"));
+        assert!(text.contains("# TYPE parlin_solver_epoch_wall_us summary\n"));
+        assert!(text.contains("parlin_solver_epoch_wall_us{quantile=\"0.5\"}"));
+        assert!(text.contains("parlin_solver_epoch_wall_us_sum 100\n"));
+        assert!(text.contains("parlin_solver_epoch_wall_us_count 1\n"));
+        // every non-comment line is `name[{labels}] value` with a clean
+        // charset — the same validation examples/check_metrics.rs applies
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.split_once(' ').expect("one space per sample line");
+            let bare = name.split('{').next().unwrap();
+            assert!(
+                bare.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name {bare:?}"
+            );
+            value.parse::<f64>().expect("sample value must be numeric");
+        }
+    }
+
+    #[test]
+    fn delta_from_diffs_counters_and_passes_gauges_through() {
+        let reg = Registry::new();
+        let c = reg.counter("evts");
+        let g = reg.gauge("depth");
+        c.add(5);
+        g.set(2);
+        let base = reg.snapshot();
+        c.add(4);
+        g.set(9);
+        reg.histogram("lat").record(8);
+        let delta = reg.snapshot().delta_from(&base);
+        assert_eq!(delta.counter("evts"), Some(4), "counters diff against the baseline");
+        assert_eq!(delta.gauge("depth"), Some(9), "gauges are instantaneous");
+        assert_eq!(delta.hist("lat").unwrap().count, 1);
     }
 
     #[test]

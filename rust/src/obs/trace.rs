@@ -254,8 +254,14 @@ fn thread_label() -> String {
 struct Tracer {
     cfg: ObsConfig,
     /// (thread label, ring) pairs in registration order. Locked on
-    /// registration (once per thread) and at drain time only.
+    /// registration (once per thread) and at collect time only.
     rings: Mutex<Vec<(String, Arc<EventRing>)>>,
+    /// Events already pulled out of the rings by earlier collects, indexed
+    /// parallel to `rings` (registration order, so duplicate thread labels
+    /// cannot merge streams). This mutex doubles as the consumer-side
+    /// serialization `EventRing::drain` requires: every collect — live
+    /// dump or session finish — holds it for the whole ring walk.
+    collected: Mutex<Vec<ThreadTrace>>,
 }
 
 impl Tracer {
@@ -265,19 +271,59 @@ impl Tracer {
         ring
     }
 
-    fn drain(&self) -> TraceDump {
+    /// Move every currently published event into the accumulator and
+    /// return the guard over it. Lock order is collected → rings;
+    /// `register` takes only the rings lock, so a thread emitting its
+    /// first event mid-collect cannot deadlock against us. Draining here
+    /// also frees ring space, so periodic live dumps extend the effective
+    /// coverage of small rings on long runs.
+    fn collect(&self) -> MutexGuard<'_, Vec<ThreadTrace>> {
+        let mut collected = lock_ignore_poison(&self.collected);
         let rings = lock_ignore_poison(&self.rings);
-        let mut threads: Vec<ThreadTrace> = rings
-            .iter()
-            .map(|(label, ring)| ThreadTrace {
-                name: label.clone(),
-                events: ring.drain(),
-                dropped: ring.dropped(),
-            })
-            .collect();
+        for (i, (label, ring)) in rings.iter().enumerate() {
+            if collected.len() <= i {
+                collected.push(ThreadTrace {
+                    name: label.clone(),
+                    events: Vec::new(),
+                    dropped: 0,
+                });
+            }
+            collected[i].events.extend(ring.drain());
+            // the ring's drop counter is cumulative — overwrite, not add
+            collected[i].dropped = ring.dropped();
+        }
+        drop(rings);
+        collected
+    }
+
+    fn drain(&self) -> TraceDump {
+        let mut collected = self.collect();
+        let mut threads = std::mem::take(&mut *collected);
+        drop(collected);
         threads.sort_by(|a, b| a.name.cmp(&b.name));
         TraceDump { threads }
     }
+
+    /// Snapshot everything recorded so far without ending the session —
+    /// the `/trace` endpoint and the flight recorder's data source.
+    fn live_dump(&self) -> TraceDump {
+        let collected = self.collect();
+        let mut threads = collected.clone();
+        drop(collected);
+        threads.sort_by(|a, b| a.name.cmp(&b.name));
+        TraceDump { threads }
+    }
+}
+
+/// Mid-session snapshot of everything the live tracing session has
+/// recorded so far (events stay attributed to the session: a later
+/// [`TraceSession::finish`] still returns them). `None` when no
+/// tracing-enabled session is live. The tracer `Arc` is cloned out of the
+/// global slot before any ring is walked, so a thread registering its
+/// first ring never waits on a dump in progress.
+pub fn live_dump() -> Option<TraceDump> {
+    let tracer = lock_ignore_poison(&TRACER).as_ref().map(Arc::clone)?;
+    Some(tracer.live_dump())
 }
 
 /// RAII handle over one tracing session. Holds the global session mutex
@@ -298,7 +344,11 @@ impl TraceSession {
     pub fn start(cfg: ObsConfig) -> TraceSession {
         let serial = lock_ignore_poison(&SESSION);
         let tracer = cfg.enabled.then(|| {
-            let t = Arc::new(Tracer { cfg, rings: Mutex::new(Vec::new()) });
+            let t = Arc::new(Tracer {
+                cfg,
+                rings: Mutex::new(Vec::new()),
+                collected: Mutex::new(Vec::new()),
+            });
             *lock_ignore_poison(&TRACER) = Some(Arc::clone(&t));
             GENERATION.fetch_add(1, Ordering::Release);
             ENABLED.store(true, Ordering::Release);
@@ -458,10 +508,13 @@ mod tests {
 
     #[test]
     fn emit_without_session_is_a_no_op() {
+        // holding the (off) session serializes us against every traced
+        // test in the binary, so the no-tracer state is deterministic here
         let _s = TraceSession::start(ObsConfig::off());
         emit(EventKind::EpochBegin, CLASS_NONE, 0, 1);
         assert!(!tracing_enabled());
         assert_eq!(ring_count(), 0);
+        assert!(live_dump().is_none(), "no live session -> no live dump");
     }
 
     #[test]
@@ -534,5 +587,41 @@ mod tests {
     #[test]
     fn json_escaping_handles_quotes_and_controls() {
         assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+
+    #[test]
+    fn live_dump_snapshots_without_ending_the_session() {
+        let s = TraceSession::start(ObsConfig::on(64));
+        emit(EventKind::EpochBegin, CLASS_NONE, 0, 1);
+        let live = live_dump().expect("a tracing session is live");
+        assert_eq!(my_thread(&live).0.len(), 1);
+        assert!(tracing_enabled(), "a live dump must not end the session");
+        // the drained event stays attributed to the session: finish still
+        // returns it, followed by anything emitted after the dump
+        emit(EventKind::EpochEnd, CLASS_NONE, 0, 1);
+        let dump = s.finish();
+        let (events, _) = my_thread(&dump);
+        assert_eq!(
+            events.iter().map(|e| e.kind).collect::<Vec<_>>(),
+            vec![EventKind::EpochBegin, EventKind::EpochEnd]
+        );
+    }
+
+    #[test]
+    fn live_dump_frees_ring_space_for_later_events() {
+        let s = TraceSession::start(ObsConfig::on(MIN_RING_CAPACITY));
+        for i in 0..MIN_RING_CAPACITY as u64 {
+            emit(EventKind::EpochBegin, CLASS_NONE, 0, i);
+        }
+        let live = live_dump().expect("session is live");
+        assert_eq!(my_thread(&live).0.len(), MIN_RING_CAPACITY);
+        // the ring was emptied by the dump: a second full round fits
+        for i in 0..MIN_RING_CAPACITY as u64 {
+            emit(EventKind::EpochEnd, CLASS_NONE, 0, i);
+        }
+        let dump = s.finish();
+        let (events, dropped) = my_thread(&dump);
+        assert_eq!(events.len(), 2 * MIN_RING_CAPACITY);
+        assert_eq!(dropped, 0, "draining mid-session must free ring slots");
     }
 }

@@ -1,0 +1,549 @@
+//! `parlin report` — regression diffing of run artifacts.
+//!
+//! A CI run (or a human) saves a [`BenchRecord`] per serve run via
+//! `--bench-json`; `parlin report --baseline a.json --current b.json`
+//! diffs the two and exits nonzero when any metric regressed past the
+//! threshold. The point is a *stable, file-based* contract: the committed
+//! baseline in `ci/` is a plain JSON file anyone can read and regenerate,
+//! and the comparison logic lives here where unit tests can pin it, not
+//! in a shell pipeline.
+//!
+//! Inputs are deliberately liberal: a `BenchRecord` JSON, a
+//! [`ConvergenceTrace`] CSV (`--convergence-log` output) or a
+//! [`RunRecord`](crate::metrics::RunRecord) CSV (`train --csv` output)
+//! all load — the CSVs map onto the epochs/gap/wall subset of the
+//! metrics, so convergence artifacts can be diffed with the same command.
+//!
+//! The JSON dialect is a single flat object with string / number / bool /
+//! null values, written and parsed by this module with no dependencies —
+//! same spirit as the strict chrome-trace parser in
+//! `examples/check_trace.rs`.
+
+use std::path::Path;
+
+use crate::metrics::{RunRecord, Table};
+use crate::obs::ConvergenceTrace;
+
+/// Schema tag embedded in every [`BenchRecord`] JSON artifact.
+pub const SCHEMA: &str = "parlin-bench-v1";
+
+/// One run's headline numbers, as persisted by `--bench-json`. Metrics a
+/// given run kind does not produce are `None` (and `null` on disk) — the
+/// comparison only diffs metrics present on both sides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// What produced this ("serve-open-loop", "serve-concurrent",
+    /// "serve", "train-csv", "convergence-csv", …).
+    pub kind: String,
+    /// Completed requests per second (serve runs).
+    pub throughput_rps: Option<f64>,
+    /// Median / tail predict latency, milliseconds (serve runs).
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+    /// Solver epochs consumed (training-shaped runs).
+    pub epochs: Option<f64>,
+    /// Final duality gap of the model.
+    pub gap: Option<f64>,
+    /// Total wall clock, seconds.
+    pub wall_s: Option<f64>,
+    /// Final [`ServeHealth`](crate::serve::ServeHealth): a healthy
+    /// baseline vs a degraded current run is always a regression.
+    pub healthy: bool,
+}
+
+impl BenchRecord {
+    /// An empty record of the given kind (all metrics absent, healthy).
+    pub fn new(kind: impl Into<String>) -> Self {
+        BenchRecord {
+            kind: kind.into(),
+            throughput_rps: None,
+            p50_ms: None,
+            p99_ms: None,
+            epochs: None,
+            gap: None,
+            wall_s: None,
+            healthy: true,
+        }
+    }
+
+    /// Render as the flat JSON object [`BenchRecord::from_json`] parses.
+    /// Absent or non-finite metrics emit as `null` (JSON has no inf/nan).
+    pub fn to_json(&self) -> String {
+        let num = |x: Option<f64>| match x {
+            Some(v) if v.is_finite() => format!("{v}"),
+            _ => "null".to_string(),
+        };
+        format!(
+            "{{\"schema\":\"{}\",\"kind\":\"{}\",\"healthy\":{},\
+             \"throughput_rps\":{},\"p50_ms\":{},\"p99_ms\":{},\
+             \"epochs\":{},\"gap\":{},\"wall_s\":{}}}\n",
+            SCHEMA,
+            escape_json(&self.kind),
+            self.healthy,
+            num(self.throughput_rps),
+            num(self.p50_ms),
+            num(self.p99_ms),
+            num(self.epochs),
+            num(self.gap),
+            num(self.wall_s),
+        )
+    }
+
+    /// Parse a [`BenchRecord::to_json`] artifact. Strict about shape
+    /// (flat object, known value types, matching schema tag, no trailing
+    /// garbage), tolerant about *unknown keys* so older binaries can read
+    /// artifacts from newer ones.
+    pub fn from_json(text: &str) -> Result<BenchRecord, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        p.eat(b'{')?;
+        let mut rec = BenchRecord::new("");
+        let mut schema_seen = false;
+        p.ws();
+        if p.peek() == Some(b'}') {
+            p.i += 1;
+        } else {
+            loop {
+                p.ws();
+                let key = p.string()?;
+                p.ws();
+                p.eat(b':')?;
+                p.ws();
+                let val = p.value()?;
+                let num = |v: Value| -> Result<Option<f64>, String> {
+                    match v {
+                        Value::Num(x) => Ok(Some(x)),
+                        Value::Null => Ok(None),
+                        other => Err(format!("key {key:?}: expected number or null, got {other:?}")),
+                    }
+                };
+                match key.as_str() {
+                    "schema" => match val {
+                        Value::Str(s) if s == SCHEMA => schema_seen = true,
+                        Value::Str(s) => return Err(format!("unsupported schema {s:?}")),
+                        other => return Err(format!("schema must be a string, got {other:?}")),
+                    },
+                    "kind" => match val {
+                        Value::Str(s) => rec.kind = s,
+                        other => return Err(format!("kind must be a string, got {other:?}")),
+                    },
+                    "healthy" => match val {
+                        Value::Bool(b) => rec.healthy = b,
+                        other => return Err(format!("healthy must be a bool, got {other:?}")),
+                    },
+                    "throughput_rps" => rec.throughput_rps = num(val)?,
+                    "p50_ms" => rec.p50_ms = num(val)?,
+                    "p99_ms" => rec.p99_ms = num(val)?,
+                    "epochs" => rec.epochs = num(val)?,
+                    "gap" => rec.gap = num(val)?,
+                    "wall_s" => rec.wall_s = num(val)?,
+                    _ => {} // forward compatibility: unknown keys skip
+                }
+                p.ws();
+                match p.next()? {
+                    b',' => continue,
+                    b'}' => break,
+                    c => return Err(format!("expected ',' or '}}', got {:?}", c as char)),
+                }
+            }
+        }
+        p.ws();
+        if p.i != p.b.len() {
+            return Err("trailing garbage after the bench object".to_string());
+        }
+        if !schema_seen {
+            return Err(format!("missing \"schema\":\"{SCHEMA}\" tag"));
+        }
+        Ok(rec)
+    }
+
+    /// Derive the training-shaped subset from a convergence trace.
+    pub fn from_convergence(trace: &ConvergenceTrace) -> BenchRecord {
+        let mut rec = BenchRecord::new("convergence-csv");
+        rec.epochs = Some(trace.len() as f64);
+        rec.gap = trace.last_gap();
+        rec.wall_s = trace.points.last().map(|p| p.wall_s);
+        rec
+    }
+
+    /// Derive the training-shaped subset from a run-record CSV.
+    pub fn from_run_record(record: &RunRecord) -> BenchRecord {
+        let mut rec = BenchRecord::new("train-csv");
+        rec.epochs = Some(record.epochs_run() as f64);
+        rec.gap = record.epochs.iter().rev().find_map(|e| e.gap);
+        rec.wall_s = Some(record.epochs.iter().map(|e| e.wall_s).sum());
+        rec
+    }
+
+    /// Load any supported artifact: bench JSON, convergence-trace CSV or
+    /// run-record CSV, sniffed by content, with the file named in errors.
+    pub fn load(path: &Path) -> Result<BenchRecord, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let in_file = |msg: String| format!("{}: {msg}", path.display());
+        if text.trim_start().starts_with('{') {
+            return BenchRecord::from_json(&text).map_err(in_file);
+        }
+        match text.lines().next() {
+            Some(ConvergenceTrace::CSV_HEADER) => ConvergenceTrace::from_csv(&text)
+                .map(|t| BenchRecord::from_convergence(&t))
+                .ok_or_else(|| in_file("malformed convergence-trace csv".to_string())),
+            Some(RunRecord::CSV_HEADER) => RunRecord::from_csv(&text)
+                .map(|r| BenchRecord::from_run_record(&r))
+                .ok_or_else(|| in_file("malformed run-record csv".to_string())),
+            _ => Err(in_file(
+                "not a bench json, convergence-trace csv or run-record csv".to_string(),
+            )),
+        }
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// One metric that moved past the threshold.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// Worseness ratio, normalized so > 1 is always worse (inverted for
+    /// throughput, where lower is worse).
+    pub ratio: f64,
+}
+
+/// Diff `current` against `baseline`: any metric present and positive on
+/// both sides whose worseness ratio exceeds `threshold` is a regression;
+/// a healthy→degraded flip always is. `threshold` is a ratio (e.g. `1.5`
+/// = "50% worse fails") — CI uses a deliberately loose one so shared-
+/// runner variance cannot flake the gate.
+pub fn compare(baseline: &BenchRecord, current: &BenchRecord, threshold: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    {
+        let mut check = |metric: &'static str, b: Option<f64>, c: Option<f64>, higher_worse: bool| {
+            let (Some(b), Some(c)) = (b, c) else { return };
+            if !(b.is_finite() && c.is_finite() && b > 0.0 && c > 0.0) {
+                return;
+            }
+            let ratio = if higher_worse { c / b } else { b / c };
+            if ratio > threshold {
+                out.push(Regression { metric, baseline: b, current: c, ratio });
+            }
+        };
+        check("throughput_rps", baseline.throughput_rps, current.throughput_rps, false);
+        check("p50_ms", baseline.p50_ms, current.p50_ms, true);
+        check("p99_ms", baseline.p99_ms, current.p99_ms, true);
+        check("epochs", baseline.epochs, current.epochs, true);
+        check("gap", baseline.gap, current.gap, true);
+        check("wall_s", baseline.wall_s, current.wall_s, true);
+    }
+    if baseline.healthy && !current.healthy {
+        out.push(Regression {
+            metric: "healthy",
+            baseline: 1.0,
+            current: 0.0,
+            ratio: f64::INFINITY,
+        });
+    }
+    out.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
+    out
+}
+
+/// Human-readable side-by-side table of every metric both records carry,
+/// with the worseness ratio and a verdict column.
+pub fn render_comparison(
+    baseline: &BenchRecord,
+    current: &BenchRecord,
+    threshold: f64,
+) -> String {
+    let regressions = compare(baseline, current, threshold);
+    let mut t = Table::new(&["metric", "baseline", "current", "worse x", "verdict"]);
+    let rows: [(&str, Option<f64>, Option<f64>, bool); 6] = [
+        ("throughput_rps", baseline.throughput_rps, current.throughput_rps, false),
+        ("p50_ms", baseline.p50_ms, current.p50_ms, true),
+        ("p99_ms", baseline.p99_ms, current.p99_ms, true),
+        ("epochs", baseline.epochs, current.epochs, true),
+        ("gap", baseline.gap, current.gap, true),
+        ("wall_s", baseline.wall_s, current.wall_s, true),
+    ];
+    let cell = |x: Option<f64>| x.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".to_string());
+    for (metric, b, c, higher_worse) in rows {
+        let ratio = match (b, c) {
+            (Some(b), Some(c)) if b > 0.0 && c > 0.0 => {
+                Some(if higher_worse { c / b } else { b / c })
+            }
+            _ => None,
+        };
+        let verdict = if regressions.iter().any(|r| r.metric == metric) {
+            "REGRESSED"
+        } else if ratio.is_some() {
+            "ok"
+        } else {
+            "-"
+        };
+        t.row(&[
+            metric.to_string(),
+            cell(b),
+            cell(c),
+            cell(ratio),
+            verdict.to_string(),
+        ]);
+    }
+    let health_verdict = if baseline.healthy && !current.healthy { "REGRESSED" } else { "ok" };
+    t.row(&[
+        "healthy".to_string(),
+        baseline.healthy.to_string(),
+        current.healthy.to_string(),
+        "-".to_string(),
+        health_verdict.to_string(),
+    ]);
+    format!(
+        "baseline: {} | current: {} | threshold: {threshold}x\n{}",
+        baseline.kind, current.kind, t.render()
+    )
+}
+
+/// Minimal JSON string escaping for the writer (the reader undoes it).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[derive(Debug)]
+enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Byte-walking parser for the flat bench object (the full recursive
+/// dialect lives in `examples/check_trace.rs`; this one only needs
+/// scalars).
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Result<u8, String> {
+        let c = self.peek().ok_or("unexpected end of input")?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn eat(&mut self, want: u8) -> Result<(), String> {
+        match self.next()? {
+            c if c == want => Ok(()),
+            c => Err(format!("expected {:?}, got {:?}", want as char, c as char)),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.next()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    c => return Err(format!("unsupported escape \\{}", c as char)),
+                },
+                c => out.push(c as char),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.peek().ok_or("unexpected end of input")? {
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true").map(|_| Value::Bool(true)),
+            b'f' => self.literal("false").map(|_| Value::Bool(false)),
+            b'n' => self.literal("null").map(|_| Value::Null),
+            b'-' | b'0'..=b'9' => self.number().map(Value::Num),
+            c => Err(format!("unexpected value start {:?}", c as char)),
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Result<(), String> {
+        for &w in word.as_bytes() {
+            self.eat(w)?;
+        }
+        Ok(())
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| "malformed number".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_record() -> BenchRecord {
+        let mut r = BenchRecord::new("serve-open-loop");
+        r.throughput_rps = Some(900.0);
+        r.p50_ms = Some(1.5);
+        r.p99_ms = Some(4.0);
+        r.epochs = Some(40.0);
+        r.gap = Some(1e-4);
+        r.wall_s = Some(2.5);
+        r
+    }
+
+    #[test]
+    fn json_roundtrips_including_null_metrics() {
+        let mut r = serve_record();
+        r.p99_ms = None;
+        r.healthy = false;
+        let json = r.to_json();
+        assert!(json.contains("\"schema\":\"parlin-bench-v1\""));
+        assert!(json.contains("\"p99_ms\":null"));
+        let back = BenchRecord::from_json(&json).expect("own output must parse");
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn non_finite_metrics_serialize_as_null() {
+        let mut r = BenchRecord::new("serve");
+        r.gap = Some(f64::NAN);
+        r.wall_s = Some(f64::INFINITY);
+        let back = BenchRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.gap, None);
+        assert_eq!(back.wall_s, None);
+    }
+
+    #[test]
+    fn parser_rejects_garbage_and_wrong_schema() {
+        assert!(BenchRecord::from_json("").is_err());
+        assert!(BenchRecord::from_json("{}").is_err(), "schema tag is required");
+        assert!(BenchRecord::from_json("{\"schema\":\"parlin-bench-v9\"}").is_err());
+        let good = serve_record().to_json();
+        assert!(BenchRecord::from_json(&format!("{good}x")).is_err(), "trailing garbage");
+        assert!(BenchRecord::from_json("{\"schema\":\"parlin-bench-v1\",\"epochs\":\"40\"}")
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_tolerated() {
+        let json = "{\"schema\":\"parlin-bench-v1\",\"kind\":\"serve\",\
+                    \"future_metric\":1.25,\"note\":\"hi\",\"epochs\":7}";
+        let r = BenchRecord::from_json(json).expect("unknown keys must not fail");
+        assert_eq!(r.epochs, Some(7.0));
+    }
+
+    #[test]
+    fn compare_flags_each_direction_correctly() {
+        let base = serve_record();
+        let mut cur = serve_record();
+        assert!(compare(&base, &cur, 1.5).is_empty(), "identical runs never regress");
+
+        cur.p99_ms = Some(base.p99_ms.unwrap() * 2.0); // higher is worse
+        cur.throughput_rps = Some(base.throughput_rps.unwrap() / 3.0); // lower is worse
+        let regs = compare(&base, &cur, 1.5);
+        let metrics: Vec<_> = regs.iter().map(|r| r.metric).collect();
+        assert!(metrics.contains(&"p99_ms"), "{metrics:?}");
+        assert!(metrics.contains(&"throughput_rps"), "{metrics:?}");
+        assert_eq!(regs[0].metric, "throughput_rps", "sorted worst-first: {metrics:?}");
+
+        // better-than-baseline never flags
+        cur = serve_record();
+        cur.p99_ms = Some(0.1);
+        cur.throughput_rps = Some(9000.0);
+        assert!(compare(&base, &cur, 1.5).is_empty());
+    }
+
+    #[test]
+    fn health_flip_is_always_a_regression() {
+        let base = serve_record();
+        let mut cur = serve_record();
+        cur.healthy = false;
+        let regs = compare(&base, &cur, 1000.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "healthy");
+    }
+
+    #[test]
+    fn metrics_missing_on_either_side_are_skipped() {
+        let mut base = serve_record();
+        base.p99_ms = None;
+        let mut cur = serve_record();
+        cur.p99_ms = Some(1e9);
+        assert!(compare(&base, &cur, 1.5).is_empty(), "no baseline → no verdict");
+    }
+
+    #[test]
+    fn loads_convergence_and_run_record_csvs() {
+        let dir = std::env::temp_dir();
+        let mut trace = ConvergenceTrace::new("seq(bucket=4)", 1);
+        trace.record(1, 0.5, 0.9, None, None, None);
+        trace.record(2, 0.5, 0.1, Some(1e-3), None, None);
+        let conv_path = dir.join(format!("parlin-report-conv-{}.csv", std::process::id()));
+        trace.write_csv(&conv_path).unwrap();
+        let rec = BenchRecord::load(&conv_path).expect("convergence csv loads");
+        assert_eq!(rec.kind, "convergence-csv");
+        assert_eq!(rec.epochs, Some(2.0));
+        assert_eq!(rec.gap, Some(1e-3));
+        assert_eq!(rec.wall_s, Some(1.0));
+        let _ = std::fs::remove_file(&conv_path);
+
+        let csv = format!("{}\nseq,1,1,5.000000e-1,1.000000e-1,1.000000e-3,\n", RunRecord::CSV_HEADER);
+        let run_path = dir.join(format!("parlin-report-run-{}.csv", std::process::id()));
+        std::fs::write(&run_path, csv).unwrap();
+        let rec = BenchRecord::load(&run_path).expect("run-record csv loads");
+        assert_eq!(rec.kind, "train-csv");
+        assert_eq!(rec.epochs, Some(1.0));
+        assert_eq!(rec.gap, Some(1e-3));
+        let _ = std::fs::remove_file(&run_path);
+    }
+
+    #[test]
+    fn comparison_renders_a_table_with_verdicts() {
+        let base = serve_record();
+        let mut cur = serve_record();
+        cur.p99_ms = Some(100.0);
+        let text = render_comparison(&base, &cur, 1.5);
+        assert!(text.contains("REGRESSED"), "{text}");
+        assert!(text.contains("throughput_rps"), "{text}");
+        let ok_rows = text.lines().filter(|l| l.trim_end().ends_with(" ok")).count();
+        assert!(ok_rows >= 5, "{text}");
+    }
+}

@@ -503,6 +503,7 @@ impl<M: AppendExamples> Drop for DrainGuard<'_, M> {
             obs::registry().counter("sched.drain_deaths").inc();
             *lock_recover(&self.shared.health) =
                 ServeHealth::degraded("background drain thread died");
+            crate::obs::flight::trip("background drain thread died");
             crate::diag!(
                 Warn,
                 "background drain thread died; the next request that finds staged rows respawns it"
@@ -578,6 +579,7 @@ impl<M: AppendExamples + Send> Shared<M> {
             err
         );
         *lock_recover(&self.health) = ServeHealth::degraded(format!("drain failed: {err}"));
+        crate::obs::flight::trip("drain retries exhausted");
         self.drain_heartbeat_ns.store(0, Ordering::Relaxed);
         Some(Err(err))
     }
@@ -602,6 +604,9 @@ impl<M: AppendExamples + Send> Shared<M> {
             obs::registry().counter("sched.publish_rejected").inc();
         }
         obs::emit(EventKind::SnapshotRollback, obs::CLASS_WRITER, 0, version);
+        // the emit above runs on this same thread, so the rollback event
+        // is already in its ring when the flight dump drains it
+        crate::obs::flight::trip("snapshot_rollback");
         crate::diag!(Warn, "writer rolled back, v{} keeps serving: {}", version, err);
     }
 
@@ -622,6 +627,7 @@ impl<M: AppendExamples + Send> Shared<M> {
             Err(err) => {
                 self.note_rollback(&err);
                 *lock_recover(&self.health) = ServeHealth::degraded(err.to_string());
+                crate::obs::flight::trip("foreground writer failed");
                 Err(err)
             }
         }
@@ -947,6 +953,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
             *lock_recover(&self.shared.health) = ServeHealth::degraded(format!(
                 "background drain stalled ({age_s:.1}s since last heartbeat)"
             ));
+            crate::obs::flight::trip("drain watchdog stall");
             crate::diag!(
                 Warn,
                 "background drain heartbeat is {:.1}s old (budget {}s) — flagging a stall",

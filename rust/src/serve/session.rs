@@ -55,6 +55,10 @@ pub struct RefitReport {
     pub wall_s: f64,
     /// Dataset size after the request.
     pub n: usize,
+    /// Per-epoch convergence telemetry of the run that produced this
+    /// model (see [`ConvergenceTrace`](crate::obs::ConvergenceTrace)) —
+    /// what `--convergence-log` exports for serve-side refits.
+    pub convergence: crate::obs::ConvergenceTrace,
 }
 
 /// Lifetime counters of one session.
@@ -450,6 +454,7 @@ impl<M: AppendExamples> Session<M> {
             gap: out.final_gap,
             wall_s: t.elapsed_s(),
             n: self.ds.n(),
+            convergence: out.convergence,
         };
         let mut w = out.state.w(&self.cfg.obj);
         // fault site "publish": the last instant before the freshly

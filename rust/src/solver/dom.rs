@@ -178,6 +178,16 @@ pub fn train_domesticated_exec<M: DataMatrix>(
     } else {
         0.0f64
     };
+    let label = format!(
+        "dom-{}(bucket={bucket_size})",
+        match cfg.partition {
+            Partitioning::Static => "static",
+            Partitioning::Dynamic => "dynamic",
+        }
+    );
+    // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
+    // no clock read or gap computation of its own
+    let mut conv = obs::ConvergenceTrace::new(label.clone(), t_workers);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -259,6 +269,15 @@ pub fn train_domesticated_exec<M: DataMatrix>(
             gap,
             primal: None,
         });
+        let pool_stats = exec.stats();
+        conv.record(
+            epoch,
+            wall_s,
+            rel,
+            gap,
+            pool_stats.as_ref().map(|s| s.imbalance()),
+            pool_stats.as_ref().map(|s| s.total_busy_s()),
+        );
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -273,20 +292,14 @@ pub fn train_domesticated_exec<M: DataMatrix>(
         v: v_global,
     };
     let record = RunRecord {
-        solver: format!(
-            "dom-{}(bucket={bucket_size})",
-            match cfg.partition {
-                Partitioning::Static => "static",
-                Partitioning::Dynamic => "dynamic",
-            }
-        ),
+        solver: label,
         threads: t_workers,
         epochs,
         converged,
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record)
+    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
 }
 
 /// `round`-th of `rounds` near-equal segments of a worker's bucket list.

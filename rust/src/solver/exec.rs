@@ -95,6 +95,18 @@ impl Executor {
             other => other.run(jobs.into_iter().map(|(_, f)| f).collect()),
         }
     }
+
+    /// Per-worker busy/job statistics when a resident pool backs this
+    /// executor; `None` for `Threads`/`Sequential` (no persistent workers
+    /// to account). Feeds the imbalance column of the per-epoch
+    /// [`ConvergenceTrace`](crate::obs::ConvergenceTrace).
+    pub fn stats(&self) -> Option<crate::solver::pool::PoolStats> {
+        match self {
+            Executor::Pool(pool) => Some(pool.stats()),
+            Executor::Shared(pool) => Some(pool.stats()),
+            Executor::Threads | Executor::Sequential => None,
+        }
+    }
 }
 
 /// Which executor a `train()` call should build — the config knob carried
@@ -212,6 +224,22 @@ mod tests {
             let mut got = exec.run(jobs);
             got.sort_unstable();
             assert_eq!(got, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn stats_available_exactly_for_pool_backed_executors() {
+        for exec in executors() {
+            let jobs: Vec<_> = (0..4).map(|i| move || i * 2).collect();
+            let _ = exec.run(jobs);
+            match &exec {
+                Executor::Pool(_) | Executor::Shared(_) => {
+                    let stats = exec.stats().expect("pool executors report stats");
+                    assert_eq!(stats.per_worker.len(), 4);
+                    assert!(stats.total_jobs() >= 4);
+                }
+                Executor::Threads | Executor::Sequential => assert!(exec.stats().is_none()),
+            }
         }
     }
 

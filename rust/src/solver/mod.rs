@@ -300,6 +300,10 @@ pub struct TrainOutput {
     pub final_gap: f64,
     /// Primal objective at the final model (scale reference for the gap).
     pub final_primal: f64,
+    /// Per-epoch convergence telemetry (gap / model change / wall clock /
+    /// pool imbalance), an exact mirror of `record.epochs` — see
+    /// [`crate::obs::ConvergenceTrace`]'s non-perturbation contract.
+    pub convergence: crate::obs::ConvergenceTrace,
 }
 
 impl TrainOutput {
@@ -315,9 +319,17 @@ impl TrainOutput {
             converged: record.converged,
             final_gap: gap,
             final_primal: primal,
+            convergence: crate::obs::ConvergenceTrace::new(record.solver.clone(), record.threads),
             state,
             record,
         }
+    }
+
+    /// Stamp the convergence trace a solver recorded (see
+    /// [`TrainOutput::convergence`]).
+    pub(crate) fn with_convergence(mut self, trace: crate::obs::ConvergenceTrace) -> Self {
+        self.convergence = trace;
+        self
     }
 
     /// Primal weight vector of the trained model.

@@ -164,6 +164,11 @@ pub fn train_numa_exec<M: DataMatrix>(
     } else {
         0.0f64
     };
+    let active = placement.iter().filter(|&&p| p > 0).count();
+    let label = format!("numa({active}n,bucket={bucket_size})");
+    // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
+    // no clock read or gap computation of its own
+    let mut conv = obs::ConvergenceTrace::new(label.clone(), threads);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -314,6 +319,15 @@ pub fn train_numa_exec<M: DataMatrix>(
             gap,
             primal: None,
         });
+        let pool_stats = exec.stats();
+        conv.record(
+            epoch,
+            wall_s,
+            rel,
+            gap,
+            pool_stats.as_ref().map(|s| s.imbalance()),
+            pool_stats.as_ref().map(|s| s.total_busy_s()),
+        );
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -327,16 +341,15 @@ pub fn train_numa_exec<M: DataMatrix>(
         alpha: snapshot(&alpha),
         v: v_global,
     };
-    let active = placement.iter().filter(|&&p| p > 0).count();
     let record = RunRecord {
-        solver: format!("numa({active}n,bucket={bucket_size})"),
+        solver: label,
         threads,
         epochs,
         converged,
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record)
+    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
 }
 
 #[cfg(test)]

@@ -92,6 +92,10 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     let total = Timer::start();
     let mut epochs = Vec::new();
     let mut converged = false;
+    let label = format!("seq(bucket={bucket_size})");
+    // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
+    // no clock read or gap computation of its own (no pool → no imbalance)
+    let mut conv = obs::ConvergenceTrace::new(label.clone(), 1);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -151,6 +155,7 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
             gap,
             primal: None,
         });
+        conv.record(epoch, wall_s, rel, gap, None, None);
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -160,14 +165,14 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
         }
     }
     let record = RunRecord {
-        solver: format!("seq(bucket={bucket_size})"),
+        solver: label,
         threads: 1,
         epochs,
         converged,
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record)
+    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
 }
 
 #[cfg(test)]

@@ -75,6 +75,9 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     let mut epochs = Vec::new();
     let mut converged = false;
     let mut diverged = false;
+    // per-epoch convergence telemetry: reuses rel/wall_s below, adds no
+    // clock read of its own (wild never evaluates the duality gap)
+    let mut conv = obs::ConvergenceTrace::new("wild", t_threads);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -150,6 +153,15 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
             gap: None,
             primal: None,
         });
+        let pool_stats = exec.stats();
+        conv.record(
+            epoch,
+            wall_s,
+            rel,
+            None,
+            pool_stats.as_ref().map(|s| s.imbalance()),
+            pool_stats.as_ref().map(|s| s.total_busy_s()),
+        );
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -179,7 +191,7 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         diverged,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record)
+    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
 }
 
 #[cfg(test)]

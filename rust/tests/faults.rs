@@ -296,3 +296,72 @@ fn nonfinite_ingest_is_rejected_at_the_door() {
     assert_eq!(report.ingested_rows, 0);
     assert!(sched.flush().is_none(), "nothing may have been staged");
 }
+
+/// Flight forensics: with a tracing session live and the flight recorder
+/// armed, the contained refit panic of test (a) leaves a dump pair on
+/// disk — a chrome-trace JSON whose trailing window holds the
+/// `snapshot_rollback` event, plus a metrics-delta sidecar counting the
+/// rollback. CI re-parses the same dump from the outside with
+/// `examples/check_trace.rs --require rollback`.
+#[test]
+fn injected_panic_leaves_a_flight_dump_with_rollback_and_metrics_delta() {
+    use parlin::obs::{ObsConfig, TraceSession, DEFAULT_RING_CAPACITY};
+    let _g = gate();
+    // lock order as the CLI takes it: trace session first, then flight
+    let trace = TraceSession::start(ObsConfig::on(DEFAULT_RING_CAPACITY));
+    let dir = std::env::temp_dir().join(format!("parlin-flight-faults-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let flight =
+        parlin::obs::flight::install(&dir, 30.0).expect("arming the flight recorder");
+
+    let sched = Scheduler::new(
+        session(150, 81),
+        SchedulerConfig {
+            refit_rows_threshold: 1_000_000,
+            refit_staleness_s: 1e6,
+            max_pending: None,
+            drain_max_retries: 0,
+            ..SchedulerConfig::default()
+        },
+    );
+    let guard = FaultPlan::parse("panic@epoch#1x8", 9).unwrap().arm();
+    sched.ingest(synthetic::dense_classification(20, 6, 82));
+    let failed = sched.flush().expect("rows were staged");
+    assert!(failed.is_err(), "the injected panic must fail the refit: {failed:?}");
+    drop(guard);
+    assert_eq!(sched.report().rollbacks, 1);
+
+    drop(flight); // disarm before the tracing session ends
+    drop(trace.finish());
+
+    let files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .expect("the dump directory must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    let dump = files
+        .iter()
+        .find(|p| {
+            p.extension().and_then(|e| e.to_str()) == Some("json")
+                && p.to_string_lossy().contains("snapshot-rollback")
+        })
+        .unwrap_or_else(|| panic!("no rollback dump among {files:?}"));
+    let json = std::fs::read_to_string(dump).unwrap();
+    assert!(
+        json.trim_start().starts_with("{\"traceEvents\""),
+        "the dump must be a chrome trace check_trace.rs can parse"
+    );
+    assert!(
+        json.contains("\"snapshot_rollback\""),
+        "the dump window must hold the rollback event"
+    );
+
+    let sidecar = dump.to_string_lossy().replace(".json", ".metrics.txt");
+    let metrics = std::fs::read_to_string(&sidecar).expect("metrics delta sidecar");
+    assert!(metrics.starts_with("flight dump: snapshot_rollback"), "{metrics}");
+    assert!(
+        metrics.lines().any(|l| l.contains("sched.rollbacks")),
+        "the delta must carry the rollback counter:\n{metrics}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

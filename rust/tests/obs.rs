@@ -125,3 +125,192 @@ fn traced_pool_run_records_ordered_job_and_epoch_events() {
     }
     assert!(json.contains("parlin-pool-n0-w0"), "worker thread names must be exported");
 }
+
+mod scrape {
+    //! Scrape-determinism: the `/metrics`+`/health` endpoint is pull-only,
+    //! so a client hammering it concurrently with training and serving
+    //! must not move a single bit of the model or the served margins.
+
+    use super::{executor, fixed_epochs};
+    use parlin::data::synthetic;
+    use parlin::obs::{ExportServer, ExportSources};
+    use parlin::serve::{ServeHealth, Session};
+    use parlin::solver::dom;
+    use std::io::{Read as _, Write as _};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).expect("connecting to the export server");
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).expect("reading the response");
+        let status: u16 = text
+            .lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|c| c.parse().ok())
+            .expect("status line");
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    /// Train under every executor and serve a prediction pass, first with
+    /// no endpoint running, then under a scraper thread looping over
+    /// `/metrics` and `/health` the whole time. α, v, and the served
+    /// margins must be bit-wise identical; the scraper must actually have
+    /// scraped while the work ran.
+    #[test]
+    fn scraping_under_load_is_bitwise_invisible_to_training_and_serving() {
+        let ds = synthetic::dense_classification(400, 16, 29);
+        let cfg = fixed_epochs(400, 4, 10);
+        let idx: Vec<usize> = (0..ds.n()).collect();
+
+        // unobserved baselines
+        let kinds = ["seq", "threads", "pool"];
+        let baselines: Vec<_> = kinds
+            .iter()
+            .map(|&k| dom::train_domesticated_exec(&ds, &cfg, &executor(k, 4)))
+            .collect();
+        let baseline_margins = Session::new(ds.clone(), cfg.clone()).predict(&idx);
+
+        // same work under continuous scraping
+        let srv = ExportServer::start(
+            "127.0.0.1:0",
+            ExportSources::with_health(|| (true, "Healthy".to_string())),
+        )
+        .expect("binding the export server");
+        let addr = srv.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let scrapes = Arc::new(AtomicUsize::new(0));
+        let scraper = {
+            let (stop, scrapes) = (Arc::clone(&stop), Arc::clone(&scrapes));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let (status, _) = http_get(addr, "/metrics");
+                    assert_eq!(status, 200, "/metrics under load");
+                    let (status, body) = http_get(addr, "/health");
+                    assert_eq!(status, 200, "/health under load");
+                    assert_eq!(body.trim_end(), "Healthy");
+                    scrapes.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        };
+
+        for (&kind, baseline) in kinds.iter().zip(&baselines) {
+            let scraped = dom::train_domesticated_exec(&ds, &cfg, &executor(kind, 4));
+            assert_eq!(
+                baseline.state.alpha, scraped.state.alpha,
+                "{kind}: α changed under scraping"
+            );
+            assert_eq!(baseline.state.v, scraped.state.v, "{kind}: v changed under scraping");
+        }
+        let scraped_margins = Session::new(ds.clone(), cfg).predict(&idx);
+
+        stop.store(true, Ordering::Relaxed);
+        scraper.join().expect("the scraper thread must not have panicked");
+
+        assert_eq!(baseline_margins.len(), scraped_margins.len());
+        for (i, (a, b)) in baseline_margins.iter().zip(&scraped_margins).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "served margin {i} changed under scraping");
+        }
+        assert!(
+            scrapes.load(Ordering::Relaxed) > 0,
+            "the scraper never completed a pass — the determinism claim was not exercised"
+        );
+        srv.shutdown();
+    }
+
+    /// `/health` serves [`ServeHealth`]'s `Display` strings verbatim with
+    /// the matching status code — the contract docs/ROBUSTNESS.md states
+    /// and examples/check_metrics.rs re-validates from the outside.
+    #[test]
+    fn health_route_serves_serve_health_display_strings_verbatim() {
+        let state = Arc::new(Mutex::new(ServeHealth::Healthy));
+        let srv = {
+            let state = Arc::clone(&state);
+            ExportServer::start(
+                "127.0.0.1:0",
+                ExportSources::with_health(move || {
+                    let h = parlin::util::lock_recover(&state).clone();
+                    (h.is_healthy(), h.to_string())
+                }),
+            )
+            .expect("binding the export server")
+        };
+        let addr = srv.local_addr();
+
+        let (status, body) = http_get(addr, "/health");
+        assert_eq!((status, body.trim_end()), (200, "Healthy"));
+
+        *parlin::util::lock_recover(&state) = ServeHealth::degraded("drain failed: injected");
+        let (status, body) = http_get(addr, "/health");
+        assert_eq!(status, 503);
+        assert_eq!(body.trim_end(), "Degraded (drain failed: injected)");
+        srv.shutdown();
+    }
+}
+
+/// The non-perturbation contract of [`parlin::obs::ConvergenceTrace`]:
+/// the trace stamped on `TrainOutput` is an exact mirror of the epoch
+/// log the solver already keeps — same length, bit-identical rel-change
+/// and gaps (the recorder reuses the monitor's evaluations instead of
+/// recomputing), and a wall clock that is precisely the prefix sum of
+/// the per-epoch timer reads (the recorder reads no clock of its own).
+#[test]
+fn convergence_trace_mirrors_the_epoch_log_bit_for_bit() {
+    use parlin::solver::Variant;
+    let ds = synthetic::dense_classification(300, 10, 37);
+    for variant in [Variant::Sequential, Variant::Wild, Variant::Domesticated, Variant::Numa] {
+        let cfg = SolverConfig::new(Objective::Logistic { lambda: 1.0 / 300.0 })
+            .with_variant(variant)
+            .with_threads(4)
+            .with_topology(Topology::uniform(2, 2))
+            .with_tol(1e-6)
+            .with_max_epochs(40);
+        let out = parlin::solver::train(&ds, &cfg);
+        assert_eq!(
+            out.convergence.len(),
+            out.epochs_run,
+            "{variant:?}: one trace point per epoch run"
+        );
+        assert_eq!(out.convergence.solver, out.record.solver);
+        assert_eq!(out.convergence.threads, out.record.threads);
+        let mut wall = 0.0f64;
+        let mut gap_epochs = 0usize;
+        for (p, e) in out.convergence.points.iter().zip(&out.record.epochs) {
+            assert_eq!(p.epoch, e.epoch, "{variant:?}: epoch numbering");
+            assert_eq!(
+                p.rel_change.to_bits(),
+                e.rel_change.to_bits(),
+                "{variant:?} epoch {}: rel_change is not the monitor's value",
+                e.epoch
+            );
+            match (p.gap, e.gap) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{variant:?} epoch {}: gap is not the monitor's evaluation",
+                        e.epoch
+                    );
+                    gap_epochs += 1;
+                }
+                (None, None) => {}
+                (a, b) => panic!(
+                    "{variant:?} epoch {}: trace gap {a:?} disagrees with epoch log {b:?}",
+                    e.epoch
+                ),
+            }
+            wall += e.wall_s;
+            assert_eq!(
+                p.wall_s.to_bits(),
+                wall.to_bits(),
+                "{variant:?} epoch {}: wall clock must be the prefix sum of epoch times",
+                e.epoch
+            );
+        }
+        assert!(gap_epochs > 0, "{variant:?}: the gap checker never ran — nothing was mirrored");
+    }
+}

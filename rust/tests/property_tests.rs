@@ -617,3 +617,62 @@ fn prop_layout_append_tail_matches_rebuild() {
         }
     }
 }
+
+/// The log₂-bucket histogram quantile is the midpoint of the bucket
+/// holding the exact k-th smallest sample (k = ⌈q·n⌉): the approximation
+/// never leaves the exact percentile's bucket, so it stays within a
+/// factor of two of the true value.
+#[test]
+fn prop_histogram_quantile_stays_in_the_exact_percentiles_bucket() {
+    // local mirror of the bucket geometry in obs::registry (bucket 0
+    // holds the value 0; bucket i ≥ 1 holds [2^(i-1), 2^i), reported as
+    // its midpoint)
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+    fn bucket_mid(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            let lo = 1u64 << (i - 1);
+            let hi = if i >= 64 { u64::MAX } else { 1u64 << i };
+            lo + (hi - lo) / 2
+        }
+    }
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0x5eed_0000 + seed);
+        let n = 1 + rng.next_below(400) as usize;
+        let reg = parlin::obs::Registry::new();
+        let h = reg.histogram("lat");
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            // draw the magnitude first so samples spread over ~40 buckets
+            // instead of clustering at the top of a uniform range
+            let mag = rng.next_below(40) as u32;
+            let v = rng.next_below(1u64 << (mag + 1));
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            let k = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = samples[k - 1];
+            let approx = h.quantile(q);
+            assert_eq!(
+                approx,
+                bucket_mid(bucket_of(exact)),
+                "seed {seed} n {n} q {q}: approx {approx} left the bucket of exact {exact}"
+            );
+            if exact > 0 {
+                assert!(
+                    approx >= exact / 2 && approx <= exact.saturating_mul(2),
+                    "seed {seed} q {q}: {approx} not within 2x of {exact}"
+                );
+            }
+        }
+    }
+}
