@@ -14,6 +14,12 @@
 //! first `.`, e.g. `sched` for `sched.publishes`) that must each have at
 //! least one sample — i.e. a `parlin_<family>_…` metric. Exits nonzero
 //! with a message on the first violation found.
+//!
+//! Labelled series (`name{key="value"} value`) are held to the same
+//! 0.0.4 rules: label names in `[a-zA-Z_][a-zA-Z0-9_]*`, values quoted
+//! with only `\\`/`\"`/`\n` escapes, and — the part a registry bug would
+//! actually break — at most ONE sample per (name, label-set) pair, with
+//! label order canonicalised before comparing.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeSet;
@@ -36,7 +42,7 @@ fn run() -> Result<()> {
     if status != 200 {
         bail!("/metrics answered {status}, expected 200");
     }
-    let (samples, families) = validate_prometheus(&body)?;
+    let (samples, labelled, families) = validate_prometheus(&body)?;
     for fam in &required {
         let name = format!("parlin_{fam}_");
         if !families.iter().any(|f| f.starts_with(&name)) {
@@ -59,8 +65,10 @@ fn run() -> Result<()> {
     }
 
     println!(
-        "check_metrics: OK — {} samples across {} metrics on {}, health {status} {health}",
+        "check_metrics: OK — {} samples ({} labelled) across {} metrics on {}, \
+         health {status} {health}",
         samples,
+        labelled,
         families.len(),
         addr
     );
@@ -124,11 +132,14 @@ fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
 
 /// Validate Prometheus text exposition (version 0.0.4) line by line:
 /// comments are `# TYPE` / `# HELP`, every other non-empty line is
-/// `name[{labels}] value` — one value, clean charsets, parseable number.
-/// Returns (sample count, distinct sample names).
-fn validate_prometheus(body: &str) -> Result<(usize, BTreeSet<String>)> {
+/// `name[{labels}] value` — one value, clean charsets, parseable number,
+/// and at most one sample per (name, canonicalised label-set) series.
+/// Returns (sample count, labelled sample count, distinct sample names).
+fn validate_prometheus(body: &str) -> Result<(usize, usize, BTreeSet<String>)> {
     let mut samples = 0usize;
+    let mut labelled = 0usize;
     let mut names = BTreeSet::new();
+    let mut series: BTreeSet<(String, Vec<(String, String)>)> = BTreeSet::new();
     for (lineno, line) in body.lines().enumerate() {
         let lineno = lineno + 1;
         if line.is_empty() {
@@ -158,21 +169,32 @@ fn validate_prometheus(body: &str) -> Result<(usize, BTreeSet<String>)> {
         if value.parse::<f64>().is_err() && !matches!(value, "+Inf" | "-Inf" | "NaN") {
             bail!("line {lineno}: sample value {value:?} is not a number");
         }
-        let name = match metric.split_once('{') {
-            None => metric,
+        let (name, pairs) = match metric.split_once('{') {
+            None => (metric, Vec::new()),
             Some((name, rest)) => {
                 let labels = rest
                     .strip_suffix('}')
                     .ok_or_else(|| anyhow!("line {lineno}: unterminated label set"))?;
-                check_labels(labels, lineno)?;
-                name
+                labelled += 1;
+                (name, check_labels(labels, lineno)?)
             }
         };
         check_name(name, lineno)?;
+        // label order is presentation, identity is the sorted pair list:
+        // a second sample for the same series means the scrape would be
+        // ingested as two conflicting writes
+        let mut key = pairs;
+        key.sort();
+        if !series.insert((name.to_string(), key)) {
+            bail!(
+                "line {lineno}: duplicate series {metric:?} — \
+                 one sample per (name, label set)"
+            );
+        }
         samples += 1;
         names.insert(name.to_string());
     }
-    Ok((samples, names))
+    Ok((samples, labelled, names))
 }
 
 fn check_name(name: &str, lineno: usize) -> Result<()> {
@@ -187,9 +209,12 @@ fn check_name(name: &str, lineno: usize) -> Result<()> {
 }
 
 /// `key="value",key="value"` — quoted values with `\\`, `\"` and `\n`
-/// escapes, label names in `[a-zA-Z_][a-zA-Z0-9_]*`.
-fn check_labels(labels: &str, lineno: usize) -> Result<()> {
+/// escapes, label names in `[a-zA-Z_][a-zA-Z0-9_]*`. Returns the parsed
+/// (name, raw quoted value) pairs so the caller can canonicalise the
+/// label set for duplicate-series detection.
+fn check_labels(labels: &str, lineno: usize) -> Result<Vec<(String, String)>> {
     let b = labels.as_bytes();
+    let mut pairs = Vec::new();
     let mut i = 0;
     loop {
         let start = i;
@@ -210,6 +235,7 @@ fn check_labels(labels: &str, lineno: usize) -> Result<()> {
             bail!("line {lineno}: label {key:?} value is not quoted");
         }
         i += 1;
+        let vstart = i;
         loop {
             match b.get(i) {
                 None => bail!("line {lineno}: unterminated label value for {key:?}"),
@@ -224,8 +250,9 @@ fn check_labels(labels: &str, lineno: usize) -> Result<()> {
                 Some(_) => i += 1,
             }
         }
+        pairs.push((key.to_string(), labels[vstart..i - 1].to_string()));
         match b.get(i) {
-            None => return Ok(()),
+            None => return Ok(pairs),
             Some(b',') => i += 1,
             Some(&c) => bail!(
                 "line {lineno}: expected ',' or end of labels, found {:?}",

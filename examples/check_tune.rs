@@ -1,0 +1,131 @@
+//! Validate a `--tune-log` output file with the library's own reader:
+//! the file must carry the `# parlin-tune-v1` magic, parse back into a
+//! [`TuneLog`], and re-render byte-for-byte identical CSV. With the
+//! matching `--convergence-log` trace supplied, the trace is replayed
+//! through a fresh tuner and every recorded decision must be reproduced
+//! — the "decisions are a pure function of (seed, observation stream)"
+//! contract, checked from outside the process that made them. CI runs
+//! this against a short tuned `parlin train` run:
+//!
+//! ```bash
+//! cargo run --release --example check_tune -- TUNE_train.csv \
+//!     --trace CONV_train.csv
+//! ```
+//!
+//! Exits nonzero with a message naming the first divergence found.
+
+use anyhow::{anyhow, bail, Result};
+use parlin::obs::ConvergenceTrace;
+use parlin::solver::{TuneLog, TUNE_LOG_MAGIC};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("check_tune: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (log_path, trace_path) = parse_args(&args)?;
+
+    let text =
+        std::fs::read_to_string(&log_path).map_err(|e| anyhow!("reading {log_path}: {e}"))?;
+    if !text.starts_with(TUNE_LOG_MAGIC) {
+        bail!("{log_path} does not start with the `{TUNE_LOG_MAGIC}` magic — not a tune log");
+    }
+    let log = TuneLog::from_csv(&text)
+        .ok_or_else(|| anyhow!("{log_path}: malformed tune-log csv (header or row failed to parse)"))?;
+
+    // Round trip: parse → re-render must reproduce the file byte-for-byte.
+    // Anything else means the reader and writer disagree, and a replayed
+    // log could no longer be diffed against the original with `cmp`.
+    let round = log.to_csv();
+    if round != text {
+        let diverged = text
+            .lines()
+            .zip(round.lines())
+            .enumerate()
+            .find(|(_, (a, b))| a != b);
+        match diverged {
+            Some((i, (file, render))) => bail!(
+                "{log_path}: csv does not round-trip — line {} reads {file:?} \
+                 but re-renders as {render:?}",
+                i + 1
+            ),
+            None => bail!(
+                "{log_path}: csv does not round-trip — file has {} line(s), \
+                 re-render has {}",
+                text.lines().count(),
+                round.lines().count()
+            ),
+        }
+    }
+
+    let mut replayed = String::new();
+    if let Some(trace_path) = trace_path {
+        let ttext = std::fs::read_to_string(&trace_path)
+            .map_err(|e| anyhow!("reading {trace_path}: {e}"))?;
+        let trace = ConvergenceTrace::from_csv(&ttext)
+            .ok_or_else(|| anyhow!("{trace_path}: malformed convergence-trace csv"))?;
+        if trace.solver != log.solver {
+            bail!(
+                "solver mismatch: {log_path} was recorded by {:?} but {trace_path} \
+                 traces {:?} — these artifacts are not from the same run",
+                log.solver,
+                trace.solver
+            );
+        }
+        log.verify_replay(&trace.points).map_err(|e| {
+            anyhow!("{log_path}: replay against {trace_path} diverged — {e}")
+        })?;
+        replayed = format!(", replayed {} trace point(s) exactly", trace.points.len());
+    }
+
+    let caps = &log.init.caps;
+    let caps_str = ["bucket", "layout", "workers"]
+        .iter()
+        .zip([caps.bucket, caps.layout, caps.workers])
+        .filter_map(|(n, on)| on.then_some(*n))
+        .collect::<Vec<_>>()
+        .join(",");
+    println!(
+        "check_tune: OK — {} decision(s) by {} (seed {}, window {}, caps [{}]){}",
+        log.decisions.len(),
+        log.solver,
+        log.init.seed,
+        log.init.window,
+        if caps_str.is_empty() { "none" } else { &caps_str },
+        replayed
+    );
+    Ok(())
+}
+
+/// `<tune-log.csv> [--trace <convergence.csv>]`.
+fn parse_args(args: &[String]) -> Result<(String, Option<String>)> {
+    let mut log_path = None;
+    let mut trace_path = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--trace" => {
+                let p = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--trace needs a convergence-log csv path"))?;
+                if trace_path.replace(p.to_string()).is_some() {
+                    bail!("--trace given twice");
+                }
+                i += 2;
+            }
+            p if log_path.is_none() => {
+                log_path = Some(p.to_string());
+                i += 1;
+            }
+            other => bail!("unexpected argument '{other}'"),
+        }
+    }
+    let log_path = log_path.ok_or_else(|| {
+        anyhow!("usage: check_tune <tune-log.csv> [--trace <convergence.csv>]")
+    })?;
+    Ok((log_path, trace_path))
+}

@@ -37,7 +37,8 @@ use parlin::obs::{
 use parlin::report::BenchRecord;
 use parlin::serve::{ArrivalProcess, ServeHealth};
 use parlin::solver::{
-    train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, Variant,
+    train, BucketPolicy, ExecPolicy, LayoutPolicy, Partitioning, SolverConfig, TunePolicy,
+    Variant,
 };
 use parlin::sysinfo::Topology;
 use std::collections::HashMap;
@@ -101,6 +102,12 @@ TRAIN OPTIONS:
   --n / --d     synthetic dataset size overrides
   --seed        RNG seed                              (default 42)
   --csv         write the per-epoch log to a CSV file
+  --tune        off | on | on:<seed>                  (default off)
+                online auto-tuner for bucket size, layout and worker
+                count; `off` keeps every run bit-wise identical to the
+                untuned solver, `on` seeds the tuner from --seed
+  --tune-log    write the tuner's decision log (replayable CSV) to this
+                path; requires --tune on              (train only)
 
 OBSERVABILITY OPTIONS (train and serve):
   --trace             record per-thread event rings for the whole run and
@@ -570,6 +577,8 @@ fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<So
         "csc" | "native" => LayoutPolicy::Csc,
         other => bail!("unknown layout '{other}'"),
     };
+    let seed = get_parse(flags, "seed", 42u64)?;
+    let tune = parse_tune_policy(flags, seed)?;
     Ok(SolverConfig::new(obj)
         .with_variant(variant)
         .with_threads(get_parse(flags, "threads", 1usize)?)
@@ -579,7 +588,29 @@ fn solver_cfg_from_flags(flags: &HashMap<String, String>, n: usize) -> Result<So
         .with_partition(partition)
         .with_exec(exec)
         .with_layout(layout)
-        .with_seed(get_parse(flags, "seed", 42u64)?))
+        .with_tune(tune)
+        .with_seed(seed))
+}
+
+/// Parse `--tune off|on|on:<seed>` into a [`TunePolicy`]. A bare `on`
+/// seeds the tuner from `--seed`, so one flag reproduces a run; `on:<s>`
+/// decouples the tuner's probe order from the solver's data shuffles.
+fn parse_tune_policy(flags: &HashMap<String, String>, seed: u64) -> Result<TunePolicy> {
+    let Some(v) = flags.get("tune") else {
+        return Ok(TunePolicy::Off);
+    };
+    match v.as_str() {
+        // a bare `--tune` parses to "true": insist on an explicit policy
+        "" | "true" => bail!("--tune needs a policy (off | on | on:<seed>)"),
+        "off" => Ok(TunePolicy::Off),
+        "on" => Ok(TunePolicy::On { seed }),
+        other => match other.strip_prefix("on:") {
+            Some(s) => Ok(TunePolicy::On {
+                seed: s.parse().map_err(|e| anyhow!("--tune on:{s}: {e}"))?,
+            }),
+            None => bail!("unknown tune policy '{other}' (expected off | on | on:<seed>)"),
+        },
+    }
 }
 
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
@@ -639,6 +670,18 @@ fn cmd_train_inner(flags: &HashMap<String, String>) -> Result<()> {
             }
         );
     }
+    if let Some(path) = get_path_flag(flags, "tune-log")? {
+        let Some(log) = &out.tune_log else {
+            bail!("--tune-log requires --tune on (the run was not tuned, so there is no log)");
+        };
+        log.write_csv(Path::new(&path))
+            .with_context(|| format!("writing tune log {path}"))?;
+        println!(
+            "tune log: {} decision(s), seed {} -> {path}",
+            log.decisions.len(),
+            log.init.seed
+        );
+    }
     Ok(())
 }
 
@@ -655,6 +698,12 @@ fn cmd_serve_inner(flags: &HashMap<String, String>, health: LiveHealth) -> Resul
         bail!(
             "--convergence-log applies to `parlin train` (serve refits expose \
              their traces on RefitReport; use --bench-json for serve artifacts)"
+        );
+    }
+    if flags.contains_key("tune-log") {
+        bail!(
+            "--tune-log applies to `parlin train` (serve refits expose their \
+             tune logs on RefitReport; use --bench-json for serve artifacts)"
         );
     }
     let bench = get_path_flag(flags, "bench-json")?.map(PathBuf::from);
@@ -1329,7 +1378,7 @@ mod tests {
 
     #[test]
     fn path_flags_require_a_value() {
-        for key in ["metrics-addr", "flight-dir", "bench-json", "convergence-log"] {
+        for key in ["metrics-addr", "flight-dir", "bench-json", "convergence-log", "tune-log"] {
             let empty = parse_flags(&args(&[])).unwrap();
             assert_eq!(get_path_flag(&empty, key).unwrap(), None);
             let bare = format!("--{key}");
@@ -1362,6 +1411,52 @@ mod tests {
         let f = parse_flags(&args(&["--convergence-log=conv.csv"])).unwrap();
         let err = cmd_serve_inner(&f, LiveHealth::default()).unwrap_err();
         assert!(err.to_string().contains("applies to `parlin train`"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_tune_log() {
+        let f = parse_flags(&args(&["--tune-log=tune.csv"])).unwrap();
+        let err = cmd_serve_inner(&f, LiveHealth::default()).unwrap_err();
+        assert!(err.to_string().contains("--tune-log applies to `parlin train`"), "{err}");
+    }
+
+    #[test]
+    fn tune_policy_parses_and_defaults_off() {
+        let empty = parse_flags(&args(&[])).unwrap();
+        assert_eq!(parse_tune_policy(&empty, 42).unwrap(), TunePolicy::Off);
+        let off = parse_flags(&args(&["--tune=off"])).unwrap();
+        assert_eq!(parse_tune_policy(&off, 42).unwrap(), TunePolicy::Off);
+        // a bare `on` inherits the solver seed…
+        let on = parse_flags(&args(&["--tune=on"])).unwrap();
+        assert_eq!(parse_tune_policy(&on, 7).unwrap(), TunePolicy::On { seed: 7 });
+        // …and `on:<seed>` decouples the tuner seed from --seed
+        let seeded = parse_flags(&args(&["--tune=on:99"])).unwrap();
+        assert_eq!(parse_tune_policy(&seeded, 7).unwrap(), TunePolicy::On { seed: 99 });
+        // the parse threads all the way through the builder chain
+        let cfg = solver_cfg_from_flags(
+            &parse_flags(&args(&["--tune=on", "--seed=13"])).unwrap(),
+            100,
+        )
+        .unwrap();
+        assert_eq!(cfg.tune, TunePolicy::On { seed: 13 });
+
+        for bad in [&["--tune"][..], &["--tune="][..]] {
+            let f = parse_flags(&args(bad)).unwrap();
+            let err = parse_tune_policy(&f, 42).unwrap_err();
+            assert!(
+                err.to_string().contains("--tune needs a policy (off | on | on:<seed>)"),
+                "{bad:?}: {err}"
+            );
+        }
+        let unk = parse_flags(&args(&["--tune=sometimes"])).unwrap();
+        let err = parse_tune_policy(&unk, 42).unwrap_err();
+        assert!(
+            err.to_string()
+                .contains("unknown tune policy 'sometimes' (expected off | on | on:<seed>)"),
+            "{err}"
+        );
+        let bad_seed = parse_flags(&args(&["--tune=on:not-a-seed"])).unwrap();
+        assert!(parse_tune_policy(&bad_seed, 42).is_err());
     }
 
     #[test]

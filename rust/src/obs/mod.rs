@@ -47,7 +47,9 @@ pub mod trace;
 
 pub use convergence::{ConvergencePoint, ConvergenceTrace};
 pub use export::{ExportServer, ExportSources};
-pub use registry::{registry, Counter, Gauge, Histogram, MetricsSnapshot, MetricsTicker, Registry};
+pub use registry::{
+    registry, Counter, Gauge, Histogram, LabelledValue, MetricsSnapshot, MetricsTicker, Registry,
+};
 pub use trace::{
     emit, live_dump, now_ns, ring_count, tracing_enabled, EventKind, ObsConfig, TraceDump,
     TraceEvent, TraceSession, CLASS_NONE, CLASS_READER, CLASS_WRITER, DEFAULT_RING_CAPACITY,

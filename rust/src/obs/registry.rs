@@ -131,6 +131,17 @@ struct RegistryInner {
     counters: BTreeMap<String, Counter>,
     gauges: BTreeMap<String, Gauge>,
     hists: BTreeMap<String, Histogram>,
+    /// Labelled counters, keyed by `(name, sorted label pairs)` — one
+    /// storage cell per distinct label set ("one series per label set").
+    labelled: BTreeMap<(String, Vec<(String, String)>), Counter>,
+}
+
+/// Canonical (sorted-by-key) owned form of a label set.
+fn canonical_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut owned: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    owned.sort();
+    owned
 }
 
 /// The process-wide metric namespace. Always on — registration and
@@ -169,6 +180,18 @@ impl Registry {
         g.hists.entry(name.to_string()).or_insert_with(Histogram::new).clone()
     }
 
+    /// Get-or-create the counter named `name` carrying `labels` — one
+    /// series (storage cell) per distinct label set. Label order is
+    /// irrelevant: pairs are canonicalized by sorting on the key, so
+    /// `&[("a","1"),("b","2")]` and `&[("b","2"),("a","1")]` share a
+    /// handle. Don't reuse a plain-counter name for a labelled family
+    /// (the exposition would emit two `# TYPE` lines for it).
+    pub fn labelled_counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = (name.to_string(), canonical_labels(labels));
+        let mut g = lock_ignore_poison(&self.inner);
+        g.labelled.entry(key).or_default().clone()
+    }
+
     /// Consistent-enough point-in-time view of every registered metric
     /// (each value is read atomically; the set is read under the registry
     /// lock).
@@ -187,6 +210,15 @@ impl Registry {
                     p50: h.quantile(0.50),
                     p90: h.quantile(0.90),
                     p99: h.quantile(0.99),
+                })
+                .collect(),
+            labelled: g
+                .labelled
+                .iter()
+                .map(|((name, labels), c)| LabelledValue {
+                    name: name.clone(),
+                    labels: labels.clone(),
+                    value: c.get(),
                 })
                 .collect(),
         }
@@ -209,6 +241,9 @@ impl Registry {
             h.0.count.store(0, Ordering::Relaxed);
             h.0.sum.store(0, Ordering::Relaxed);
         }
+        for c in g.labelled.values() {
+            c.0.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -229,6 +264,25 @@ pub struct HistSummary {
     pub p99: u64,
 }
 
+/// One labelled-counter series at snapshot time: `name{labels} = value`.
+/// `labels` are the canonical sorted-by-key pairs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LabelledValue {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: u64,
+}
+
+impl LabelledValue {
+    /// Flat display form, `name{k=v;k2=v2}` — semicolon-separated so the
+    /// decorated name stays a single unquoted CSV cell.
+    pub fn decorated(&self) -> String {
+        let pairs: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{}{{{}}}", self.name, pairs.join(";"))
+    }
+}
+
 /// A frozen view of the registry: what reports stamp, what `--trace`-less
 /// CLI runs dump, and what the future auto-tuner will diff between ticks.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -239,6 +293,8 @@ pub struct MetricsSnapshot {
     pub gauges: Vec<(String, u64)>,
     /// Histogram summaries, sorted by name.
     pub hists: Vec<HistSummary>,
+    /// Labelled-counter series, sorted by `(name, labels)`.
+    pub labelled: Vec<LabelledValue>,
 }
 
 impl MetricsSnapshot {
@@ -257,9 +313,21 @@ impl MetricsSnapshot {
         self.hists.iter().find(|h| h.name == name)
     }
 
+    /// Look up one labelled-counter series; label order is irrelevant.
+    pub fn labelled(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let want = canonical_labels(labels);
+        self.labelled
+            .iter()
+            .find(|l| l.name == name && l.labels == want)
+            .map(|l| l.value)
+    }
+
     /// True when nothing has been registered.
     pub fn is_empty(&self) -> bool {
-        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.hists.is_empty()
+            && self.labelled.is_empty()
     }
 
     /// CSV dump: `kind,name,value,count,sum,p50,p90,p99` (counter/gauge
@@ -268,6 +336,9 @@ impl MetricsSnapshot {
         let mut s = String::from("kind,name,value,count,sum,p50,p90,p99\n");
         for (k, v) in &self.counters {
             let _ = writeln!(s, "counter,{k},{v},,,,,");
+        }
+        for l in &self.labelled {
+            let _ = writeln!(s, "counter,{},{},,,,,", l.decorated(), l.value);
         }
         for (k, v) in &self.gauges {
             let _ = writeln!(s, "gauge,{k},{v},,,,,");
@@ -300,11 +371,46 @@ impl MetricsSnapshot {
             }
             out
         }
+        // Label keys allow `[a-zA-Z0-9_]` (no ':'); values are free text
+        // with `\`, `"` and newline escaped per the exposition format.
+        fn label_key(k: &str) -> String {
+            k.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+                .collect()
+        }
+        fn label_value(v: &str) -> String {
+            let mut out = String::with_capacity(v.len());
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    _ => out.push(c),
+                }
+            }
+            out
+        }
         let mut s = String::new();
         for (k, v) in &self.counters {
             let n = sanitize(k);
             let _ = writeln!(s, "# TYPE {n} counter");
             let _ = writeln!(s, "{n} {v}");
+        }
+        // labelled families: one `# TYPE` per name (the vec is sorted by
+        // (name, labels), so series of a family are contiguous)
+        let mut last_family: Option<&str> = None;
+        for l in &self.labelled {
+            let n = sanitize(&l.name);
+            if last_family != Some(l.name.as_str()) {
+                let _ = writeln!(s, "# TYPE {n} counter");
+                last_family = Some(l.name.as_str());
+            }
+            let pairs: Vec<String> = l
+                .labels
+                .iter()
+                .map(|(k, v)| format!("{}=\"{}\"", label_key(k), label_value(v)))
+                .collect();
+            let _ = writeln!(s, "{n}{{{}}} {}", pairs.join(","), l.value);
         }
         for (k, v) in &self.gauges {
             let n = sanitize(k);
@@ -338,6 +444,22 @@ impl MetricsSnapshot {
                 .collect(),
             gauges: self.gauges.clone(),
             hists: self.hists.clone(),
+            labelled: self
+                .labelled
+                .iter()
+                .map(|l| {
+                    let before = baseline
+                        .labelled
+                        .iter()
+                        .find(|b| b.name == l.name && b.labels == l.labels)
+                        .map_or(0, |b| b.value);
+                    LabelledValue {
+                        name: l.name.clone(),
+                        labels: l.labels.clone(),
+                        value: l.value.saturating_sub(before),
+                    }
+                })
+                .collect(),
         }
     }
 
@@ -352,6 +474,18 @@ impl MetricsSnapshot {
                 "counter".into(),
                 k.clone(),
                 v.to_string(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+                blank(),
+            ]);
+        }
+        for l in &self.labelled {
+            t.row(&[
+                "counter".into(),
+                l.decorated(),
+                l.value.to_string(),
                 blank(),
                 blank(),
                 blank(),
@@ -561,6 +695,77 @@ mod tests {
         assert_eq!(c.get(), 0);
         c.inc();
         assert_eq!(reg.snapshot().counter("x"), Some(1));
+    }
+
+    #[test]
+    fn labelled_counters_are_one_series_per_label_set() {
+        let reg = Registry::new();
+        let a = reg.labelled_counter("tuner.decisions", &[("knob", "layout")]);
+        let b = reg.labelled_counter("tuner.decisions", &[("knob", "bucket")]);
+        a.inc();
+        a.inc();
+        b.inc();
+        // label order is canonicalized, so the permuted set shares storage
+        let c = reg.labelled_counter("multi", &[("a", "1"), ("b", "2")]);
+        c.add(5);
+        reg.labelled_counter("multi", &[("b", "2"), ("a", "1")]).inc();
+        let snap = reg.snapshot();
+        assert_eq!(snap.labelled("tuner.decisions", &[("knob", "layout")]), Some(2));
+        assert_eq!(snap.labelled("tuner.decisions", &[("knob", "bucket")]), Some(1));
+        assert_eq!(snap.labelled("multi", &[("b", "2"), ("a", "1")]), Some(6));
+        assert_eq!(snap.labelled("multi", &[("a", "9")]), None);
+        assert_eq!(snap.labelled.len(), 3, "three distinct series");
+        assert!(!snap.is_empty());
+    }
+
+    #[test]
+    fn labelled_counters_render_expose_diff_and_reset() {
+        let reg = Registry::new();
+        reg.labelled_counter("tuner.decisions", &[("knob", "layout")]).add(3);
+        reg.labelled_counter("tuner.decisions", &[("knob", "bucket")]).inc();
+        let snap = reg.snapshot();
+        let text = snap.render_prometheus();
+        // exactly one TYPE line for the family, one sample per label set
+        assert_eq!(
+            text.matches("# TYPE parlin_tuner_decisions counter\n").count(),
+            1,
+            "one TYPE line per labelled family:\n{text}"
+        );
+        assert!(text.contains("parlin_tuner_decisions{knob=\"layout\"} 3\n"));
+        assert!(text.contains("parlin_tuner_decisions{knob=\"bucket\"} 1\n"));
+        // CSV and table carry the decorated name
+        assert!(snap.to_csv().contains("counter,tuner.decisions{knob=layout},3,,,,,"));
+        assert!(snap.render_table().contains("tuner.decisions{knob=bucket}"));
+        // deltas diff per series; a series absent from the baseline counts
+        // from zero
+        reg.labelled_counter("tuner.decisions", &[("knob", "layout")]).add(2);
+        reg.labelled_counter("tuner.decisions", &[("knob", "workers")]).inc();
+        let delta = reg.snapshot().delta_from(&snap);
+        assert_eq!(delta.labelled("tuner.decisions", &[("knob", "layout")]), Some(2));
+        assert_eq!(delta.labelled("tuner.decisions", &[("knob", "bucket")]), Some(0));
+        assert_eq!(delta.labelled("tuner.decisions", &[("knob", "workers")]), Some(1));
+        // reset zeroes values but keeps the series and handles live
+        let h = reg.labelled_counter("tuner.decisions", &[("knob", "layout")]);
+        reg.reset();
+        assert_eq!(h.get(), 0);
+        h.inc();
+        assert_eq!(
+            reg.snapshot().labelled("tuner.decisions", &[("knob", "layout")]),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn labelled_exposition_escapes_values_and_sanitizes_keys() {
+        let reg = Registry::new();
+        reg.labelled_counter("odd.family", &[("bad-key", "a\"b\\c\nd")]).inc();
+        let text = reg.snapshot().render_prometheus();
+        assert!(
+            text.contains("parlin_odd_family{bad_key=\"a\\\"b\\\\c\\nd\"} 1\n"),
+            "escaped exposition line missing:\n{text}"
+        );
+        // still one sample per line: the raw newline must not survive
+        assert!(!text.contains("d\"} 1\n\n"));
     }
 
     #[test]

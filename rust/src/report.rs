@@ -42,6 +42,10 @@ pub struct BenchRecord {
     pub p99_ms: Option<f64>,
     /// Solver epochs consumed (training-shaped runs).
     pub epochs: Option<f64>,
+    /// Auto-tuner decisions taken (`--tune on` runs and tune-log
+    /// artifacts): a run that suddenly needs far more knob moves to reach
+    /// the same gap is drifting, so higher is worse.
+    pub decisions: Option<f64>,
     /// Final duality gap of the model.
     pub gap: Option<f64>,
     /// Total wall clock, seconds.
@@ -60,6 +64,7 @@ impl BenchRecord {
             p50_ms: None,
             p99_ms: None,
             epochs: None,
+            decisions: None,
             gap: None,
             wall_s: None,
             healthy: true,
@@ -76,7 +81,7 @@ impl BenchRecord {
         format!(
             "{{\"schema\":\"{}\",\"kind\":\"{}\",\"healthy\":{},\
              \"throughput_rps\":{},\"p50_ms\":{},\"p99_ms\":{},\
-             \"epochs\":{},\"gap\":{},\"wall_s\":{}}}\n",
+             \"epochs\":{},\"decisions\":{},\"gap\":{},\"wall_s\":{}}}\n",
             SCHEMA,
             escape_json(&self.kind),
             self.healthy,
@@ -84,6 +89,7 @@ impl BenchRecord {
             num(self.p50_ms),
             num(self.p99_ms),
             num(self.epochs),
+            num(self.decisions),
             num(self.gap),
             num(self.wall_s),
         )
@@ -135,6 +141,7 @@ impl BenchRecord {
                     "p50_ms" => rec.p50_ms = num(val)?,
                     "p99_ms" => rec.p99_ms = num(val)?,
                     "epochs" => rec.epochs = num(val)?,
+                    "decisions" => rec.decisions = num(val)?,
                     "gap" => rec.gap = num(val)?,
                     "wall_s" => rec.wall_s = num(val)?,
                     _ => {} // forward compatibility: unknown keys skip
@@ -175,14 +182,27 @@ impl BenchRecord {
         rec
     }
 
-    /// Load any supported artifact: bench JSON, convergence-trace CSV or
-    /// run-record CSV, sniffed by content, with the file named in errors.
+    /// Derive the decision-count subset from an auto-tuner log.
+    pub fn from_tune_log(log: &crate::solver::TuneLog) -> BenchRecord {
+        let mut rec = BenchRecord::new("tune-log");
+        rec.decisions = Some(log.decisions.len() as f64);
+        rec
+    }
+
+    /// Load any supported artifact: bench JSON, convergence-trace CSV,
+    /// run-record CSV or tune-log CSV, sniffed by content, with the file
+    /// named in errors.
     pub fn load(path: &Path) -> Result<BenchRecord, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         let in_file = |msg: String| format!("{}: {msg}", path.display());
         if text.trim_start().starts_with('{') {
             return BenchRecord::from_json(&text).map_err(in_file);
+        }
+        if text.starts_with(crate::solver::tune::TUNE_LOG_MAGIC) {
+            return crate::solver::TuneLog::from_csv(&text)
+                .map(|l| BenchRecord::from_tune_log(&l))
+                .ok_or_else(|| in_file("malformed tune-log csv".to_string()));
         }
         match text.lines().next() {
             Some(ConvergenceTrace::CSV_HEADER) => ConvergenceTrace::from_csv(&text)
@@ -192,7 +212,8 @@ impl BenchRecord {
                 .map(|r| BenchRecord::from_run_record(&r))
                 .ok_or_else(|| in_file("malformed run-record csv".to_string())),
             _ => Err(in_file(
-                "not a bench json, convergence-trace csv or run-record csv".to_string(),
+                "not a bench json, convergence-trace csv, run-record csv or tune-log csv"
+                    .to_string(),
             )),
         }
     }
@@ -235,6 +256,7 @@ pub fn compare(baseline: &BenchRecord, current: &BenchRecord, threshold: f64) ->
         check("p50_ms", baseline.p50_ms, current.p50_ms, true);
         check("p99_ms", baseline.p99_ms, current.p99_ms, true);
         check("epochs", baseline.epochs, current.epochs, true);
+        check("decisions", baseline.decisions, current.decisions, true);
         check("gap", baseline.gap, current.gap, true);
         check("wall_s", baseline.wall_s, current.wall_s, true);
     }
@@ -259,11 +281,12 @@ pub fn render_comparison(
 ) -> String {
     let regressions = compare(baseline, current, threshold);
     let mut t = Table::new(&["metric", "baseline", "current", "worse x", "verdict"]);
-    let rows: [(&str, Option<f64>, Option<f64>, bool); 6] = [
+    let rows: [(&str, Option<f64>, Option<f64>, bool); 7] = [
         ("throughput_rps", baseline.throughput_rps, current.throughput_rps, false),
         ("p50_ms", baseline.p50_ms, current.p50_ms, true),
         ("p99_ms", baseline.p99_ms, current.p99_ms, true),
         ("epochs", baseline.epochs, current.epochs, true),
+        ("decisions", baseline.decisions, current.decisions, true),
         ("gap", baseline.gap, current.gap, true),
         ("wall_s", baseline.wall_s, current.wall_s, true),
     ];
@@ -533,6 +556,39 @@ mod tests {
         assert_eq!(rec.epochs, Some(1.0));
         assert_eq!(rec.gap, Some(1e-3));
         let _ = std::fs::remove_file(&run_path);
+    }
+
+    #[test]
+    fn loads_tune_log_csv_as_decision_count() {
+        use crate::solver::{Knob, TuneCaps, TuneDecision, TuneInit, TuneLog};
+        let log = TuneLog {
+            solver: "dom".to_string(),
+            init: TuneInit::new(7, TuneCaps { bucket: true, layout: true, workers: true })
+                .with_knobs(64, false, 2, false),
+            decisions: vec![TuneDecision {
+                epoch: 8,
+                knob: Knob::Layout,
+                from: "csc".to_string(),
+                to: "interleaved".to_string(),
+                reason: "probe".to_string(),
+            }],
+        };
+        let path =
+            std::env::temp_dir().join(format!("parlin-report-tune-{}.csv", std::process::id()));
+        log.write_csv(&path).unwrap();
+        let rec = BenchRecord::load(&path).expect("tune-log csv loads");
+        assert_eq!(rec.kind, "tune-log");
+        assert_eq!(rec.decisions, Some(1.0));
+        let _ = std::fs::remove_file(&path);
+        // the decision count rides the bench-json round trip too
+        let back = BenchRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.decisions, Some(1.0));
+        // and diffs like any higher-is-worse metric
+        let mut cur = rec.clone();
+        cur.decisions = Some(9.0);
+        let regs = compare(&rec, &cur, 1.5);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "decisions");
     }
 
     #[test]

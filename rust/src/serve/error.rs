@@ -24,6 +24,11 @@ pub enum ServeError {
     /// the first check that failed: weights, duals, or probe margins) —
     /// the publish health gate refused it.
     NonFinite { kind: &'static str, what: &'static str },
+    /// The refit was cooperatively cancelled at the epoch-`epoch`
+    /// checkpoint — the drain watchdog (or a caller) tripped the session's
+    /// [`CancelToken`](crate::solver::CancelToken). Distinguishable from
+    /// panics and injected faults so force-recovery shows up as itself.
+    Cancelled { kind: &'static str, epoch: usize },
     /// Appended rows disagree with the session's feature dimension.
     ShapeMismatch { expected: usize, got: usize },
     /// `partial_fit_lambda` with a non-finite or non-positive λ (1/(λn)
@@ -38,6 +43,9 @@ impl std::fmt::Display for ServeError {
                 write!(f, "{kind} panicked: {message}")
             }
             ServeError::Injected { site } => write!(f, "injected fault at {site}"),
+            ServeError::Cancelled { kind, epoch } => {
+                write!(f, "{kind} cancelled at epoch {epoch}")
+            }
             ServeError::NonFinite { kind, what } => {
                 write!(f, "{kind} produced a non-finite model ({what})")
             }
@@ -97,6 +105,8 @@ mod tests {
         assert_eq!(e.to_string(), "refit-rows produced a non-finite model (weights)");
         let e = ServeError::ShapeMismatch { expected: 8, got: 5 };
         assert!(e.to_string().contains("d=5"));
+        let e = ServeError::Cancelled { kind: "refit-rows", epoch: 3 };
+        assert_eq!(e.to_string(), "refit-rows cancelled at epoch 3");
         assert_eq!(ServeHealth::default(), ServeHealth::Healthy);
         assert!(ServeHealth::Healthy.is_healthy());
         let d = ServeHealth::degraded("drain failed");

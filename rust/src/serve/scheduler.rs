@@ -101,9 +101,12 @@
 //! * A dead background drain thread is detected (its panic-guard flags
 //!   it) and respawned by the next request that finds work; a *stuck*
 //!   drain is flagged by a heartbeat watchdog
-//!   ([`SchedulerConfig::drain_stall_s`]) and reported as degraded — an
-//!   OS thread cannot be safely killed, so stuck is detected and
-//!   surfaced, never silently ignored.
+//!   ([`SchedulerConfig::drain_stall_s`]), reported as degraded, **and
+//!   force-recovered**: the watchdog trips the session's
+//!   [`CancelToken`], so the stuck refit aborts at its next epoch
+//!   checkpoint with a typed [`ServeError::Cancelled`] and the session
+//!   rolls back to the last-known-good model. An OS thread is never
+//!   killed — the solver cancels itself cooperatively.
 //! * Every report carries a [`ServeHealth`]: `Healthy` after a
 //!   successful publish, `Degraded { reason }` while the most recent
 //!   writer failed or the drain is dead/stalled. `parlin serve` exits
@@ -116,7 +119,7 @@ use crate::obs::{self, EventKind};
 use crate::serve::error::{ServeError, ServeHealth};
 use crate::serve::session::{RefitReport, Session};
 use crate::serve::snapshot::ModelSnapshot;
-use crate::solver::{PoolStats, QueueDelayReport, WorkerPool};
+use crate::solver::{CancelToken, PoolStats, QueueDelayReport, WorkerPool};
 use crate::util::{lock_recover, Percentiles};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -472,6 +475,11 @@ struct Shared<M: AppendExamples> {
     /// Latches the stall diagnosis so the watchdog warns once per stuck
     /// drain, not once per predict.
     stall_flagged: AtomicBool,
+    /// The session's cooperative cancellation token (cloned out at
+    /// construction, before the session goes behind its mutex) — the
+    /// watchdog trips it to force-recover a stuck drain *without* taking
+    /// the session lock the stuck refit is holding.
+    cancel: CancelToken,
     metrics: Mutex<SchedMetrics>,
 }
 
@@ -549,6 +557,10 @@ impl<M: AppendExamples + Send> Shared<M> {
                 obs::registry().counter("sched.drain_retries").inc();
                 std::thread::sleep(Duration::from_millis((10u64 << (attempt - 1)).min(200)));
             }
+            // every attempt starts with a clean cancellation token: a
+            // watchdog that force-cancelled a previous stuck attempt must
+            // not abort this fresh one at its first epoch checkpoint
+            self.cancel.reset();
             self.drain_heartbeat_ns.store(obs::now_ns().max(1), Ordering::Relaxed);
             match sess.partial_fit_rows(&batch) {
                 Ok(report) => {
@@ -711,6 +723,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         );
         let snap = Arc::new(session.snapshot(0, "initial-train"));
         let pool = session.pool_arc();
+        let cancel = session.cancel_token();
         let published_n = AtomicUsize::new(snap.n());
         let dead_letter = Mutex::new(DeadLetter::new(cfg.dead_letter_rows));
         Scheduler {
@@ -732,6 +745,7 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
                 drain_heartbeat_ns: AtomicU64::new(0),
                 drain_died: AtomicBool::new(false),
                 stall_flagged: AtomicBool::new(false),
+                cancel,
                 metrics: Mutex::new(SchedMetrics::default()),
             }),
         }
@@ -935,9 +949,13 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
     /// stamps `drain_heartbeat_ns`; if that stamp grows older than
     /// [`SchedulerConfig::drain_stall_s`] the drain is stuck inside a
     /// refit (not dead — death clears the heartbeat via its panic-guard).
-    /// An OS thread cannot be killed safely, so a stuck drain is
-    /// *flagged* — counted, warned, health degraded — exactly once per
-    /// incident rather than silently waited on.
+    /// An OS thread cannot be killed safely, so a stuck drain is flagged
+    /// — counted, warned, health degraded — exactly once per incident,
+    /// **and force-recovered**: the watchdog trips the session's
+    /// [`CancelToken`], the solver unwinds at its next once-per-epoch
+    /// checkpoint, and [`Session::guarded`] rolls back to the
+    /// last-known-good model with a typed [`ServeError::Cancelled`]. The
+    /// drain's retry loop resets the token before each fresh attempt.
     fn check_drain_watchdog(&self) {
         let hb = self.shared.drain_heartbeat_ns.load(Ordering::Relaxed);
         if hb == 0 {
@@ -950,13 +968,16 @@ impl<M: AppendExamples + Send + 'static> Scheduler<M> {
         if !self.shared.stall_flagged.swap(true, Ordering::SeqCst) {
             lock_recover(&self.shared.metrics).drain_stalls += 1;
             obs::registry().counter("sched.drain_stalls").inc();
+            self.shared.cancel.cancel();
+            obs::registry().counter("sched.drain_cancels").inc();
             *lock_recover(&self.shared.health) = ServeHealth::degraded(format!(
                 "background drain stalled ({age_s:.1}s since last heartbeat)"
             ));
             crate::obs::flight::trip("drain watchdog stall");
             crate::diag!(
                 Warn,
-                "background drain heartbeat is {:.1}s old (budget {}s) — flagging a stall",
+                "background drain heartbeat is {:.1}s old (budget {}s) — flagging a stall \
+                 and cancelling the stuck refit at its next epoch checkpoint",
                 age_s,
                 self.shared.cfg.drain_stall_s
             );
@@ -1317,6 +1338,41 @@ mod tests {
                 ..SchedulerConfig::default()
             },
         );
+    }
+
+    /// The watchdog's force-recovery lever: a heartbeat older than the
+    /// stall budget trips the session's cancel token (so the stuck refit
+    /// will abort at its next epoch checkpoint), degrades health, and
+    /// latches — the second trip does not double-count.
+    #[test]
+    fn watchdog_flags_stall_and_cancels_the_session_token() {
+        let sched = Scheduler::new(
+            session(80, 98),
+            SchedulerConfig {
+                drain_stall_s: 0.001,
+                ..SchedulerConfig::default()
+            },
+        );
+        assert!(!sched.shared.cancel.is_cancelled());
+        // simulate a drain attempt whose heartbeat went stale long ago
+        sched.shared.drain_heartbeat_ns.store(1, Ordering::Relaxed);
+        sched.check_drain_watchdog();
+        assert!(sched.shared.cancel.is_cancelled(), "watchdog must trip the token");
+        assert!(!sched.health().is_healthy());
+        assert_eq!(sched.report().drain_stalls, 1);
+        // latched: a second check neither warns nor counts again
+        sched.check_drain_watchdog();
+        assert_eq!(sched.report().drain_stalls, 1);
+        // a fresh drain attempt resets the token and recovers end-to-end
+        sched.shared.drain_heartbeat_ns.store(0, Ordering::Relaxed);
+        sched.ingest(synthetic::dense_classification(5, 6, 99));
+        let r = sched
+            .flush()
+            .expect("staged rows must drain")
+            .expect("the post-stall drain must succeed");
+        assert_eq!(r.kind, "refit-rows");
+        assert!(!sched.shared.cancel.is_cancelled(), "attempt start reset the token");
+        assert!(sched.health().is_healthy());
     }
 
     #[test]

@@ -33,7 +33,10 @@ use crate::fault::{self, FaultAction, FaultSite, InjectedFault};
 use crate::glm::{self, GapReport, ModelState, Objective};
 use crate::serve::error::ServeError;
 use crate::serve::snapshot::{sharded_margins, ModelSnapshot};
-use crate::solver::{train, Buckets, ExecPolicy, PoolStats, SolverConfig, Variant, WorkerPool};
+use crate::solver::{
+    train, Buckets, CancelToken, ExecPolicy, PoolStats, SolverConfig, TrainCancelled, TuneLog,
+    Variant, WorkerPool,
+};
 use crate::sysinfo::Topology;
 use crate::util::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -59,6 +62,9 @@ pub struct RefitReport {
     /// model (see [`ConvergenceTrace`](crate::obs::ConvergenceTrace)) —
     /// what `--convergence-log` exports for serve-side refits.
     pub convergence: crate::obs::ConvergenceTrace,
+    /// Replayable auto-tuner decision log — `Some` iff the session config
+    /// ran with [`TunePolicy::On`](crate::solver::TunePolicy).
+    pub tune_log: Option<TuneLog>,
 }
 
 /// Lifetime counters of one session.
@@ -110,6 +116,14 @@ pub struct Session<M: AppendExamples> {
     /// Monotone ingestion counter: +1 per absorbed append batch. Carried
     /// by every published [`ModelSnapshot`].
     ds_epoch: u64,
+    /// Cooperative cancellation token threaded into every solver run this
+    /// session launches (checked once per epoch). Tripping it makes the
+    /// in-flight refit unwind into [`Session::guarded`], which restores
+    /// the last-known-good model and reports
+    /// [`ServeError::Cancelled`] — the drain watchdog's force-recovery
+    /// lever. The session never resets it on its own; callers (the
+    /// scheduler's drain loop) reset it at the start of each attempt.
+    cancel: CancelToken,
     stats: SessionStats,
 }
 
@@ -140,6 +154,11 @@ impl<M: AppendExamples> Session<M> {
         cfg.topology = Some(topo.clone());
         cfg.exec = ExecPolicy::Shared(Arc::clone(&pool));
         cfg.warm_start = None;
+        // the session owns its cancellation token; whatever the caller put
+        // in cfg.cancel is replaced so external code cannot abort refits
+        // behind the scheduler's back
+        let cancel = CancelToken::new();
+        cfg.cancel = Some(cancel.clone());
         let mut sess = Session {
             ds: Arc::new(ds),
             cfg,
@@ -150,6 +169,7 @@ impl<M: AppendExamples> Session<M> {
             layout: None,
             node_layout: None,
             ds_epoch: 0,
+            cancel,
             stats: SessionStats::default(),
         };
         sess.rebuild_layout();
@@ -438,6 +458,12 @@ impl<M: AppendExamples> Session<M> {
         let t = Timer::start();
         let mut cfg = self.cfg.clone();
         cfg.warm_start = warm;
+        // always run under the session token (a retrain config may have
+        // arrived without one). Deliberately NOT reset here: a token
+        // tripped before entry aborts at the first epoch checkpoint —
+        // that pre-arming is exactly how the drain watchdog kills a stuck
+        // attempt; the drain loop resets it when it starts a fresh one.
+        cfg.cancel = Some(self.cancel.clone());
         // hand the resident encoding to the solver instead of re-encoding
         // the dataset: the hierarchical solver gets the cached per-node
         // shards, everything else the session's single-shard layout
@@ -455,6 +481,7 @@ impl<M: AppendExamples> Session<M> {
             wall_s: t.elapsed_s(),
             n: self.ds.n(),
             convergence: out.convergence,
+            tune_log: out.tune_log,
         };
         let mut w = out.state.w(&self.cfg.obj);
         // fault site "publish": the last instant before the freshly
@@ -539,6 +566,13 @@ impl<M: AppendExamples> Session<M> {
         self.pool.stats()
     }
 
+    /// The session's cooperative cancellation token. Tripping it aborts
+    /// the in-flight (or next) refit at its epoch checkpoint with
+    /// [`ServeError::Cancelled`]; callers reset it before a fresh attempt.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
     /// Duality gap of the currently served model (`O(nnz)`).
     pub fn gap(&self) -> GapReport {
         glm::duality_gap(&self.ds, &self.cfg.obj, &self.state)
@@ -553,6 +587,9 @@ impl<M: AppendExamples> Session<M> {
 fn classify_panic(kind: &'static str, payload: Box<dyn std::any::Any + Send>) -> ServeError {
     if let Some(injected) = payload.downcast_ref::<InjectedFault>() {
         return ServeError::Injected { site: injected.site };
+    }
+    if let Some(cancelled) = payload.downcast_ref::<TrainCancelled>() {
+        return ServeError::Cancelled { kind, epoch: cancelled.epoch };
     }
     let message = if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
@@ -664,6 +701,28 @@ mod tests {
         // the failure left nothing broken behind: a clean refit works
         let fresh = synthetic::dense_classification(10, 6, 67);
         let r = sess.partial_fit_rows(&fresh).expect("post-recovery refit");
+        assert_eq!((r.n, sess.n()), (110, 110));
+    }
+
+    /// PR-10 force-recovery lever at the session level: a pre-tripped
+    /// token aborts the next refit at its first epoch checkpoint with a
+    /// typed `Cancelled`, the last-known-good model survives bit-wise,
+    /// and a reset makes the session fully usable again.
+    #[test]
+    fn tripped_token_aborts_refit_and_restores() {
+        let ds = synthetic::dense_classification(100, 6, 71);
+        let mut sess = Session::new(ds, cfg(100, 2));
+        let before = sess.predict(&[0, 1, 2]);
+        sess.cancel_token().cancel();
+        let fresh = synthetic::dense_classification(10, 6, 72);
+        match sess.partial_fit_rows(&fresh) {
+            Err(ServeError::Cancelled { kind: "refit-rows", epoch: 1 }) => {}
+            other => panic!("expected Cancelled at epoch 1, got {other:?}"),
+        }
+        assert_eq!(sess.n(), 100, "cancelled rows must not be absorbed");
+        assert_eq!(sess.predict(&[0, 1, 2]), before, "bit-wise last-known-good");
+        sess.cancel_token().reset();
+        let r = sess.partial_fit_rows(&fresh).expect("post-reset refit");
         assert_eq!((r.n, sess.n()), (110, 110));
     }
 

@@ -24,7 +24,10 @@ use crate::metrics::{EpochStats, RunRecord};
 use crate::obs::{self, EventKind};
 use crate::solver::exec::Executor;
 use crate::solver::seq::sdca_delta_at;
-use crate::solver::{kernel, Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput};
+use crate::solver::tune::{EpochTuner, Knob, TuneCaps};
+use crate::solver::{
+    kernel, BucketPolicy, Buckets, ConvergenceMonitor, Partitioning, SolverConfig, TrainOutput,
+};
 use crate::solver::partition::Partitioner;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
 use crate::util::{Rng, Timer};
@@ -133,20 +136,28 @@ pub fn train_domesticated_exec<M: DataMatrix>(
     // again — reverts are finite (≤ log₂K) and the tail is stable
     let mut sigma_floor = 1.0f64;
 
-    let bucket_size = cfg.bucket.resolve_host(n);
-    let buckets = Buckets::new(n, bucket_size);
+    let mut bucket_size = cfg.bucket.resolve_host(n);
+    let mut buckets = Buckets::new(n, bucket_size);
     // One global interleaved shard, shared read-only by every worker:
     // dynamic re-deals move bucket *ids* between workers, never entries,
     // so the encoding is built exactly once per run — or not at all, when
-    // the caller's cached layout already has the right geometry.
-    let layout = RunLayout::resolve(
-        cfg.layout == LayoutPolicy::Interleaved,
+    // the caller's cached layout already has the right geometry. The
+    // tuner may flip `use_interleaved` (bit-free) or rebuild the shard at
+    // an epoch boundary when it re-buckets.
+    let mut use_interleaved = cfg.layout == LayoutPolicy::Interleaved;
+    let mut layout = RunLayout::resolve(
+        use_interleaved,
         cfg.layout_cache.as_ref(),
         |l| l.matches_single(n, ds.d(), ds.x.nnz(), bucket_size),
         || ShardedLayout::single(&ds.x, &buckets),
     );
-    let shard = layout.shard(0);
-    let mut partitioner = Partitioner::new(cfg.partition, buckets.count(), t_workers);
+    // `eff_workers` is the number of per-epoch jobs the partitioner deals
+    // to (the tuner may retire workers on persistent imbalance); the σ′
+    // machinery stays keyed to the configured `t_workers`, which remains
+    // a safe upper bound when fewer replicas actually run.
+    let mut eff_workers = t_workers;
+    let mut partitioning = cfg.partition;
+    let mut partitioner = Partitioner::new(partitioning, buckets.count(), eff_workers);
     let rounds = cfg.resolve_merges(ds);
 
     let init = crate::solver::initial_state(cfg, ds);
@@ -188,6 +199,20 @@ pub fn train_domesticated_exec<M: DataMatrix>(
     // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
     // no clock read or gap computation of its own
     let mut conv = obs::ConvergenceTrace::new(label.clone(), t_workers);
+    let caps = TuneCaps {
+        bucket: matches!(cfg.bucket, BucketPolicy::Auto),
+        layout: true,
+        workers: true,
+    };
+    let mut tuner = EpochTuner::for_run(
+        cfg.tune,
+        caps,
+        &label,
+        bucket_size,
+        use_interleaved,
+        eff_workers,
+        partitioning == Partitioning::Dynamic,
+    );
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -196,13 +221,18 @@ pub fn train_domesticated_exec<M: DataMatrix>(
         // armed fault plans fire here (coordinator thread, before any
         // dispatch) so an injected panic unwinds cleanly through the epoch
         crate::fault::poke(crate::fault::FaultSite::Epoch);
+        // cooperative cancellation: the once-per-epoch checkpoint
+        if let Some(c) = &cfg.cancel {
+            c.checkpoint(&label, epoch);
+        }
+        let shard = if use_interleaved { layout.shard(0) } else { None };
         // snapshot for possible backtracking
         let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
         let n_eff = ((n as f64 / sigma).round() as usize).max(1);
         let assignment = partitioner.assign(&mut rng);
         for round in 0..rounds {
             // each worker takes the `round`-th segment of its epoch list
-            let jobs: Vec<_> = (0..t_workers)
+            let jobs: Vec<_> = (0..eff_workers)
                 .map(|tid| {
                     let list = &assignment.per_worker[tid];
                     let seg = segment(list, round, rounds);
@@ -278,6 +308,42 @@ pub fn train_domesticated_exec<M: DataMatrix>(
             pool_stats.as_ref().map(|s| s.imbalance()),
             pool_stats.as_ref().map(|s| s.total_busy_s()),
         );
+        // Epoch-boundary tuning: feed the point just recorded, apply any
+        // decisions before the next epoch starts.
+        for d in tuner.observe(conv.points.last().expect("recorded this epoch")) {
+            match d.knob {
+                Knob::Layout => {
+                    use_interleaved = d.to == "interleaved";
+                    if use_interleaved && layout.shard(0).is_none() {
+                        layout = RunLayout::resolve(true, None, |_| false, || {
+                            ShardedLayout::single(&ds.x, &buckets)
+                        });
+                    }
+                }
+                Knob::Bucket => {
+                    if let Ok(nb) = d.to.parse::<usize>() {
+                        bucket_size = nb.max(1);
+                        buckets = Buckets::new(n, bucket_size);
+                        if use_interleaved {
+                            layout = RunLayout::resolve(true, None, |_| false, || {
+                                ShardedLayout::single(&ds.x, &buckets)
+                            });
+                        }
+                        partitioner = Partitioner::new(partitioning, buckets.count(), eff_workers);
+                    }
+                }
+                Knob::Steal => {
+                    partitioning = Partitioning::Dynamic;
+                    partitioner = Partitioner::new(partitioning, buckets.count(), eff_workers);
+                }
+                Knob::Workers => {
+                    if let Ok(w) = d.to.parse::<usize>() {
+                        eff_workers = w.max(1);
+                        partitioner = Partitioner::new(partitioning, buckets.count(), eff_workers);
+                    }
+                }
+            }
+        }
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -299,7 +365,9 @@ pub fn train_domesticated_exec<M: DataMatrix>(
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
+    TrainOutput::assemble(ds, &obj, st, record)
+        .with_convergence(conv)
+        .with_tune_log(tuner.finish())
 }
 
 /// `round`-th of `rounds` near-equal segments of a worker's bucket list.

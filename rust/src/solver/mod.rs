@@ -34,6 +34,7 @@ pub mod numa;
 pub mod partition;
 pub mod pool;
 pub mod seq;
+pub mod tune;
 pub mod wild;
 
 pub use bucket::{BucketPolicy, Buckets};
@@ -41,6 +42,10 @@ pub use convergence::ConvergenceMonitor;
 pub use exec::{ExecPolicy, Executor};
 pub use partition::Partitioning;
 pub use pool::{ClassDelay, JobClass, PoolStats, QueueDelayReport, WorkerPool, WorkerStats};
+pub use tune::{
+    AutoTuner, CancelToken, Knob, TrainCancelled, TuneCaps, TuneDecision, TuneInit, TuneLog,
+    TunePolicy, TUNE_LOG_MAGIC,
+};
 
 pub use crate::data::LayoutPolicy;
 
@@ -137,6 +142,16 @@ pub struct SolverConfig {
     /// Abort when the primal objective exceeds this multiple of its initial
     /// value (divergence detection for the wild solver).
     pub divergence_factor: f64,
+    /// Online auto-tuning of bucket size / layout / workers (see
+    /// [`tune`]). `Off` (the default) constructs no tuner and leaves the
+    /// epoch loops bit-for-bit unchanged — locked by `rust/tests/tune.rs`.
+    pub tune: TunePolicy,
+    /// Optional cooperative cancellation token, checked once per epoch at
+    /// the boundary checkpoint (see [`CancelToken`]). A cancelled run
+    /// unwinds with a [`TrainCancelled`] panic payload that
+    /// `serve::Session::guarded` converts into the typed
+    /// `ServeError::Cancelled` after rolling the session back.
+    pub cancel: Option<CancelToken>,
 }
 
 impl SolverConfig {
@@ -160,6 +175,8 @@ impl SolverConfig {
             warm_start: None,
             topology: None,
             divergence_factor: 1e3,
+            tune: TunePolicy::Off,
+            cancel: None,
         }
     }
 
@@ -224,6 +241,19 @@ impl SolverConfig {
     /// [`SolverConfig::warm_start`]).
     pub fn with_warm_start(mut self, st: ModelState) -> Self {
         self.warm_start = Some(st);
+        self
+    }
+
+    /// Enable or disable online auto-tuning (see [`SolverConfig::tune`]).
+    pub fn with_tune(mut self, t: TunePolicy) -> Self {
+        self.tune = t;
+        self
+    }
+
+    /// Install a cooperative cancellation token (see
+    /// [`SolverConfig::cancel`]).
+    pub fn with_cancel(mut self, c: CancelToken) -> Self {
+        self.cancel = Some(c);
         self
     }
 
@@ -304,6 +334,10 @@ pub struct TrainOutput {
     /// pool imbalance), an exact mirror of `record.epochs` — see
     /// [`crate::obs::ConvergenceTrace`]'s non-perturbation contract.
     pub convergence: crate::obs::ConvergenceTrace,
+    /// The auto-tuner's replayable decision log: `Some` iff the run had
+    /// [`TunePolicy::On`] (even when no decision fired), `None` under
+    /// `Off`. Exported by the CLI via `--tune-log`.
+    pub tune_log: Option<TuneLog>,
 }
 
 impl TrainOutput {
@@ -320,6 +354,7 @@ impl TrainOutput {
             final_gap: gap,
             final_primal: primal,
             convergence: crate::obs::ConvergenceTrace::new(record.solver.clone(), record.threads),
+            tune_log: None,
             state,
             record,
         }
@@ -329,6 +364,12 @@ impl TrainOutput {
     /// [`TrainOutput::convergence`]).
     pub(crate) fn with_convergence(mut self, trace: crate::obs::ConvergenceTrace) -> Self {
         self.convergence = trace;
+        self
+    }
+
+    /// Stamp the tuner's decision log (see [`TrainOutput::tune_log`]).
+    pub(crate) fn with_tune_log(mut self, log: Option<TuneLog>) -> Self {
+        self.tune_log = log;
         self
     }
 

@@ -26,6 +26,7 @@ use crate::obs::{self, EventKind};
 use crate::solver::exec::Executor;
 use crate::solver::partition::Partitioner;
 use crate::solver::seq::sdca_delta_at;
+use crate::solver::tune::{EpochTuner, Knob, TuneCaps};
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::sysinfo::Topology;
 use crate::util::atomic::{atomic_vec, snapshot, AtomicF64};
@@ -108,8 +109,9 @@ pub fn train_numa_exec<M: DataMatrix>(
     // A caller-provided cache (a serving session's resident per-node
     // layout) is reused when it describes exactly this dataset, bucket
     // geometry and node split — refits then skip the O(nnz) re-encode.
-    let layout = RunLayout::resolve(
-        cfg.layout == LayoutPolicy::Interleaved,
+    let mut use_interleaved = cfg.layout == LayoutPolicy::Interleaved;
+    let mut layout = RunLayout::resolve(
+        use_interleaved,
         cfg.layout_cache.as_ref(),
         |l| l.matches_nodes(n, ds.d(), ds.x.nnz(), bucket_size, &node_ranges),
         || ShardedLayout::for_nodes(&ds.x, &buckets, &node_ranges),
@@ -169,6 +171,19 @@ pub fn train_numa_exec<M: DataMatrix>(
     // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
     // no clock read or gap computation of its own
     let mut conv = obs::ConvergenceTrace::new(label.clone(), threads);
+    // The hierarchical solver pins its bucketing (the static cross-node
+    // split is keyed to it) and its per-node thread placement, so the
+    // tuner may only move the bit-free layout knob.
+    let caps = TuneCaps { bucket: false, layout: true, workers: false };
+    let mut tuner = EpochTuner::for_run(
+        cfg.tune,
+        caps,
+        &label,
+        bucket_size,
+        use_interleaved,
+        threads,
+        cfg.partition == crate::solver::Partitioning::Dynamic,
+    );
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -177,6 +192,10 @@ pub fn train_numa_exec<M: DataMatrix>(
         // armed fault plans fire here (coordinator thread, before any
         // dispatch) so an injected panic unwinds cleanly through the epoch
         crate::fault::poke(crate::fault::FaultSite::Epoch);
+        // cooperative cancellation: the once-per-epoch checkpoint
+        if let Some(c) = &cfg.cancel {
+            c.checkpoint(&label, epoch);
+        }
         let snap_state = adaptive.then(|| (snapshot(&alpha), v_global.clone()));
         let n_eff = ((n as f64 / sigma).round() as usize).max(1);
         // per-node epoch assignments (bucket ids relative to node range)
@@ -199,7 +218,7 @@ pub fn train_numa_exec<M: DataMatrix>(
                     let seg = super::dom::segment(tl, round, rounds);
                     let (ds, obj, buckets, alpha, v_ref) =
                         (&*ds, &obj, &buckets, &alpha[..], &v_nodes[k][..]);
-                    let shard = layout.shard(k);
+                    let shard = if use_interleaved { layout.shard(k) } else { None };
                     jobs.push((k, move || {
                         // σ′-scaled replica: u = v_node + σ′·A·Δα_local
                         // (see solver::dom::worker_round for the algebra)
@@ -328,6 +347,17 @@ pub fn train_numa_exec<M: DataMatrix>(
             pool_stats.as_ref().map(|s| s.imbalance()),
             pool_stats.as_ref().map(|s| s.total_busy_s()),
         );
+        // Epoch-boundary tuning: layout is the only knob numa exposes.
+        for d in tuner.observe(conv.points.last().expect("recorded this epoch")) {
+            if d.knob == Knob::Layout {
+                use_interleaved = d.to == "interleaved";
+                if use_interleaved && layout.shard(0).is_none() {
+                    layout = RunLayout::resolve(true, None, |_| false, || {
+                        ShardedLayout::for_nodes(&ds.x, &buckets, &node_ranges)
+                    });
+                }
+            }
+        }
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -349,7 +379,9 @@ pub fn train_numa_exec<M: DataMatrix>(
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
+    TrainOutput::assemble(ds, &obj, st, record)
+        .with_convergence(conv)
+        .with_tune_log(tuner.finish())
 }
 
 #[cfg(test)]

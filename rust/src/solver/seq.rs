@@ -7,7 +7,8 @@ use crate::data::{ColCursor, DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::Objective;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::obs::{self, EventKind};
-use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
+use crate::solver::tune::{EpochTuner, Knob, TuneCaps};
+use crate::solver::{kernel, BucketPolicy, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::{Rng, Timer};
 
 /// One exact SDCA coordinate step on example `j` against the vector `v`
@@ -66,18 +67,21 @@ pub fn run_bucket<M: DataMatrix>(
 pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOutput {
     let n = ds.n();
     let obj = cfg.obj;
-    let bucket_size = cfg.bucket.resolve_host(n);
-    let buckets = Buckets::new(n, bucket_size);
+    let mut bucket_size = cfg.bucket.resolve_host(n);
+    let mut buckets = Buckets::new(n, bucket_size);
     // Interleaved layout: one global shard, materialized once for the
     // whole run (or borrowed from the caller's cache when its geometry
     // matches) — per-epoch shuffles only permute bucket *ids* over it.
-    let layout = RunLayout::resolve(
-        cfg.layout == LayoutPolicy::Interleaved,
+    // `use_interleaved` can flip at an epoch boundary under the tuner;
+    // both encodings route through `util::dot4_by`, so the switch is
+    // bit-free (locked by `rust/tests/tune.rs`).
+    let mut use_interleaved = cfg.layout == LayoutPolicy::Interleaved;
+    let mut layout = RunLayout::resolve(
+        use_interleaved,
         cfg.layout_cache.as_ref(),
         |l| l.matches_single(n, ds.d(), ds.x.nnz(), bucket_size),
         || ShardedLayout::single(&ds.x, &buckets),
     );
-    let shard = layout.shard(0);
     let mut ids = buckets.ids();
     let mut rng = Rng::new(cfg.seed);
     let mut st = crate::solver::initial_state(cfg, ds);
@@ -96,6 +100,13 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
     // per-epoch convergence telemetry: reuses rel/gap/wall_s below, adds
     // no clock read or gap computation of its own (no pool → no imbalance)
     let mut conv = obs::ConvergenceTrace::new(label.clone(), 1);
+    let caps = TuneCaps {
+        bucket: matches!(cfg.bucket, BucketPolicy::Auto),
+        layout: true,
+        workers: false,
+    };
+    let mut tuner =
+        EpochTuner::for_run(cfg.tune, caps, &label, bucket_size, use_interleaved, 1, false);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -104,6 +115,11 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
         // armed fault plans fire here (coordinator thread, before any
         // dispatch) so an injected panic unwinds cleanly through the epoch
         crate::fault::poke(crate::fault::FaultSite::Epoch);
+        // cooperative cancellation: the once-per-epoch checkpoint
+        if let Some(c) = &cfg.cancel {
+            c.checkpoint(&label, epoch);
+        }
+        let shard = if use_interleaved { layout.shard(0) } else { None };
         rng.shuffle(&mut ids);
         for (i, &b) in ids.iter().enumerate() {
             // overlap the next bucket's memory fetch with this bucket's
@@ -156,6 +172,33 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
             primal: None,
         });
         conv.record(epoch, wall_s, rel, gap, None, None);
+        // Epoch-boundary tuning: feed the point just recorded, apply any
+        // decisions before the next epoch starts.
+        for d in tuner.observe(conv.points.last().expect("recorded this epoch")) {
+            match d.knob {
+                Knob::Layout => {
+                    use_interleaved = d.to == "interleaved";
+                    if use_interleaved && layout.shard(0).is_none() {
+                        layout = RunLayout::resolve(true, None, |_| false, || {
+                            ShardedLayout::single(&ds.x, &buckets)
+                        });
+                    }
+                }
+                Knob::Bucket => {
+                    if let Ok(nb) = d.to.parse::<usize>() {
+                        bucket_size = nb.max(1);
+                        buckets = Buckets::new(n, bucket_size);
+                        ids = buckets.ids();
+                        if use_interleaved {
+                            layout = RunLayout::resolve(true, None, |_| false, || {
+                                ShardedLayout::single(&ds.x, &buckets)
+                            });
+                        }
+                    }
+                }
+                Knob::Workers | Knob::Steal => {}
+            }
+        }
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -172,7 +215,9 @@ pub fn train_sequential<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> T
         diverged: false,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
+    TrainOutput::assemble(ds, &obj, st, record)
+        .with_convergence(conv)
+        .with_tune_log(tuner.finish())
 }
 
 #[cfg(test)]

@@ -1,0 +1,990 @@
+//! System-aware online auto-tuning of the solver's systems knobs.
+//!
+//! The source paper resolves its core tension — systems optimizations
+//! (bucket size, cache layout, thread count) speed up epochs but can cost
+//! convergence — by *measuring* both sides; the SySCD follow-on makes the
+//! knobs self-tuning at runtime. This module is that loop: an
+//! [`AutoTuner`] that rides the instrumentation the epoch loops already
+//! emit (the per-epoch [`ConvergencePoint`] — wall time, rel-change,
+//! pool imbalance; **zero new clock reads**) and, at epoch boundaries
+//! only, adapts
+//!
+//! * **bucket size** (only under `BucketPolicy::Auto`) via a bounded
+//!   hill-climb on the power-of-two ladder,
+//! * **layout** interleaved ↔ csc — bit-wise *free* to switch, because
+//!   both encodings route every dot product through [`crate::util::dot4_by`]
+//!   (locked by `rust/tests/pool_equivalence.rs` and `rust/tests/tune.rs`),
+//! * **work stealing / effective worker count** when the pool's measured
+//!   busy imbalance (max/mean) is materially above 1.
+//!
+//! # Determinism contract
+//!
+//! With [`TunePolicy::Off`] (the default) no tuner is constructed and the
+//! epoch loops are bit-for-bit the pre-tuner code paths. With
+//! [`TunePolicy::On`], every decision is a **pure function** of the
+//! fixed-size observation window (disjoint windows of
+//! [`TuneInit::window`] epochs) plus the seed: no clock is read, no
+//! global state is consulted, and the only randomness is a seeded
+//! [`Rng`] draw for the initial hill-climb direction. The full decision
+//! list is recorded as a [`TuneLog`] stamped on
+//! `TrainOutput`/`RefitReport`, exported by `--tune-log`, and replayable:
+//! feeding the run's own `ConvergenceTrace` back through
+//! [`AutoTuner::replay`] reproduces the log byte-for-byte (locked by a
+//! property test and `examples/check_tune.rs`).
+//!
+//! Applied decisions tick the repo's first *labelled* metric,
+//! `tuner.decisions` with a `knob` label — rendered by the Prometheus
+//! exposition as `parlin_tuner_decisions{knob="layout"}` etc.
+//!
+//! This module also owns the cooperative [`CancelToken`] checked once per
+//! epoch by every solver: it shares the epoch-boundary-only philosophy
+//! (never interrupt mid-bucket, unwind only at a checkpoint) and lets the
+//! serve scheduler's drain watchdog force-recover a stuck refit instead
+//! of merely reporting it.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::{csv_field, split_csv_row};
+use crate::obs::ConvergencePoint;
+use crate::util::Rng;
+
+/// Whether a run auto-tunes its systems knobs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// No tuner is constructed; the epoch loops behave bit-for-bit as if
+    /// this module did not exist.
+    #[default]
+    Off,
+    /// Tune online. `seed` feeds the tuner's private [`Rng`]; same seed +
+    /// same observation stream ⇒ byte-identical decisions.
+    On { seed: u64 },
+}
+
+/// Cooperative cancellation flag checked once per epoch by every solver.
+///
+/// Cancellation unwinds via [`std::panic::panic_any`] with a
+/// [`TrainCancelled`] payload — the same mechanism the fault harness uses
+/// for injected faults — so `serve::Session::guarded` catches it, rolls
+/// the session back to its checkpoint, and classifies it as the typed
+/// `ServeError::Cancelled` instead of a generic panic.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken::default()
+    }
+
+    /// Request cancellation; the next epoch-boundary checkpoint unwinds.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Clear a previous request (e.g. before a drain retry attempt).
+    pub fn reset(&self) {
+        self.0.store(false, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// The once-per-epoch checkpoint: unwinds with a [`TrainCancelled`]
+    /// payload when cancellation was requested, otherwise a single
+    /// relaxed-ish atomic load.
+    pub fn checkpoint(&self, solver: &str, epoch: usize) {
+        if self.is_cancelled() {
+            std::panic::panic_any(TrainCancelled { solver: solver.to_string(), epoch });
+        }
+    }
+}
+
+/// Two tokens are equal when they share the same flag (clone-of), which
+/// is the only notion of equality a cancellation handle needs.
+impl PartialEq for CancelToken {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+/// Panic payload carried by a cooperative cancellation unwind.
+#[derive(Clone, Debug)]
+pub struct TrainCancelled {
+    /// Solver label at the moment of cancellation.
+    pub solver: String,
+    /// Epoch whose boundary checkpoint observed the request (1-based).
+    pub epoch: usize,
+}
+
+/// Which knobs a given solver lets the tuner touch. Capabilities are a
+/// property of the (solver, config) pair: e.g. bucket adaptation needs
+/// `BucketPolicy::Auto`, worker adaptation needs a pool that reports
+/// imbalance, and `wild`/`numa` pin their bucketing by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneCaps {
+    pub bucket: bool,
+    pub layout: bool,
+    pub workers: bool,
+}
+
+impl TuneCaps {
+    pub const NONE: TuneCaps = TuneCaps { bucket: false, layout: false, workers: false };
+
+    fn encode(&self) -> String {
+        let mut parts = Vec::new();
+        if self.bucket {
+            parts.push("bucket");
+        }
+        if self.layout {
+            parts.push("layout");
+        }
+        if self.workers {
+            parts.push("workers");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    fn decode(s: &str) -> Option<TuneCaps> {
+        let mut caps = TuneCaps::NONE;
+        if s == "none" {
+            return Some(caps);
+        }
+        for part in s.split(',') {
+            match part {
+                "bucket" => caps.bucket = true,
+                "layout" => caps.layout = true,
+                "workers" => caps.workers = true,
+                _ => return None,
+            }
+        }
+        Some(caps)
+    }
+}
+
+/// Everything needed to reconstruct a tuner for replay: the seed, the
+/// capability set, the observation window, and the knobs' starting
+/// values. Serialized into the [`TuneLog`] header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuneInit {
+    pub seed: u64,
+    /// Observation window in epochs; decisions happen only when a full
+    /// disjoint window has been observed.
+    pub window: usize,
+    pub caps: TuneCaps,
+    /// Starting bucket size.
+    pub bucket: usize,
+    /// Starting layout: `true` = interleaved shards, `false` = csc.
+    pub interleaved: bool,
+    /// Starting effective worker count.
+    pub workers: usize,
+    /// Starting partitioning: `true` = dynamic (work stealing already on).
+    pub dynamic: bool,
+}
+
+/// Default observation window: four epochs per decision boundary —
+/// enough samples to smooth scheduler noise, short enough to adapt
+/// within a typical run.
+pub const TUNE_WINDOW: usize = 4;
+
+impl TuneInit {
+    pub fn new(seed: u64, caps: TuneCaps) -> TuneInit {
+        TuneInit {
+            seed,
+            window: TUNE_WINDOW,
+            caps,
+            bucket: 1,
+            interleaved: true,
+            workers: 1,
+            dynamic: false,
+        }
+    }
+
+    pub fn with_knobs(mut self, bucket: usize, interleaved: bool, workers: usize, dynamic: bool) -> TuneInit {
+        self.bucket = bucket;
+        self.interleaved = interleaved;
+        self.workers = workers;
+        self.dynamic = dynamic;
+        self
+    }
+}
+
+/// The knob a [`TuneDecision`] moved. Doubles as the value vocabulary of
+/// the `knob` label on the `tuner.decisions` metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Knob {
+    /// Bucket size stepped on the power-of-two ladder.
+    Bucket,
+    /// Layout flipped interleaved ↔ csc (bit-wise free).
+    Layout,
+    /// Effective worker count reduced.
+    Workers,
+    /// Static partitioning upgraded to dynamic work stealing.
+    Steal,
+}
+
+impl Knob {
+    pub fn name(self) -> &'static str {
+        match self {
+            Knob::Bucket => "bucket",
+            Knob::Layout => "layout",
+            Knob::Workers => "workers",
+            Knob::Steal => "steal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Knob> {
+        match s {
+            "bucket" => Some(Knob::Bucket),
+            "layout" => Some(Knob::Layout),
+            "workers" => Some(Knob::Workers),
+            "steal" => Some(Knob::Steal),
+            _ => None,
+        }
+    }
+}
+
+/// One applied knob change, recorded at an epoch boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuneDecision {
+    /// Epoch whose boundary produced the decision (the change takes
+    /// effect from epoch + 1).
+    pub epoch: usize,
+    pub knob: Knob,
+    pub from: String,
+    pub to: String,
+    /// Human-readable rationale; deterministic for a given trace.
+    pub reason: String,
+}
+
+const LAYOUT_NAMES: [&str; 2] = ["csc", "interleaved"];
+
+fn layout_name(interleaved: bool) -> &'static str {
+    LAYOUT_NAMES[interleaved as usize]
+}
+
+/// Layout probe state machine: probe the alternative encoding once, keep
+/// whichever window was faster, re-probe only on drift.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Probe {
+    Idle,
+    Armed { baseline: f64 },
+    Settled,
+}
+
+/// Bucket hill-climb state: at most [`AutoTuner::MAX_BUCKET_MOVES`]
+/// steps, reverting the last step (and stopping) on a regression.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Climb {
+    Idle,
+    Climbing(i8),
+    Done,
+}
+
+/// The online tuner. Feed it every recorded [`ConvergencePoint`] via
+/// [`AutoTuner::observe`]; it returns the (usually empty) decision list
+/// for that epoch's boundary. Decisions are pure: same `TuneInit` + same
+/// point stream ⇒ same decisions, which is what makes the [`TuneLog`]
+/// replayable after the fact.
+#[derive(Clone, Debug)]
+pub struct AutoTuner {
+    solver: String,
+    init: TuneInit,
+    rng: Rng,
+    // Current knob values (start at the TuneInit values).
+    bucket: usize,
+    interleaved: bool,
+    workers: usize,
+    dynamic: bool,
+    // Window accumulation.
+    win_points: usize,
+    win_wall: f64,
+    win_imb_sum: f64,
+    win_imb_n: usize,
+    win_reverted: bool,
+    last_cum_wall: f64,
+    // Cross-window trackers.
+    prev_mean: Option<f64>,
+    best_mean: f64,
+    probe: Probe,
+    climb: Climb,
+    bucket_moves: usize,
+    decisions: Vec<TuneDecision>,
+}
+
+impl AutoTuner {
+    /// Total bucket-ladder steps allowed per run; bounds the numeric
+    /// perturbation the tuner can introduce.
+    pub const MAX_BUCKET_MOVES: usize = 4;
+    /// Bucket sizes stay within this ladder.
+    pub const MAX_BUCKET: usize = 1024;
+    /// Window-mean imbalance above this enables work stealing.
+    pub const STEAL_IMBALANCE: f64 = 1.25;
+    /// Window-mean imbalance above this (with stealing already on)
+    /// retires one effective worker.
+    pub const SHRINK_IMBALANCE: f64 = 1.5;
+
+    pub fn new(solver: impl Into<String>, init: TuneInit) -> AutoTuner {
+        let rng = Rng::new(init.seed);
+        AutoTuner {
+            solver: solver.into(),
+            bucket: init.bucket,
+            interleaved: init.interleaved,
+            workers: init.workers,
+            dynamic: init.dynamic,
+            rng,
+            win_points: 0,
+            win_wall: 0.0,
+            win_imb_sum: 0.0,
+            win_imb_n: 0,
+            win_reverted: false,
+            last_cum_wall: 0.0,
+            prev_mean: None,
+            best_mean: f64::INFINITY,
+            probe: Probe::Idle,
+            climb: Climb::Idle,
+            bucket_moves: 0,
+            decisions: Vec::new(),
+            init,
+        }
+    }
+
+    /// Observe one recorded epoch. Returns the decisions made at this
+    /// boundary (empty unless the observation window just filled).
+    pub fn observe(&mut self, p: &ConvergencePoint) -> Vec<TuneDecision> {
+        // The trace stores cumulative wall clock; diff it back to the
+        // per-epoch time the solver measured. No new clock read.
+        let epoch_wall = (p.wall_s - self.last_cum_wall).max(0.0);
+        self.last_cum_wall = p.wall_s;
+        self.win_wall += epoch_wall;
+        if let Some(i) = p.imbalance {
+            self.win_imb_sum += i;
+            self.win_imb_n += 1;
+        }
+        if p.rel_change.is_infinite() {
+            self.win_reverted = true;
+        }
+        self.win_points += 1;
+        if self.win_points < self.init.window.max(1) {
+            return Vec::new();
+        }
+        let out = self.decide(p.epoch);
+        self.win_points = 0;
+        self.win_wall = 0.0;
+        self.win_imb_sum = 0.0;
+        self.win_imb_n = 0;
+        self.win_reverted = false;
+        out
+    }
+
+    /// Pure boundary logic over the just-closed window's aggregates.
+    fn decide(&mut self, epoch: usize) -> Vec<TuneDecision> {
+        let window = self.init.window.max(1) as f64;
+        let mean = self.win_wall / window;
+        let imbalance =
+            (self.win_imb_n > 0).then(|| self.win_imb_sum / self.win_imb_n as f64);
+        let reverted = self.win_reverted;
+        let mut out = Vec::new();
+
+        // (1) Layout: probe the alternative encoding once, keep the
+        // faster window, re-probe only when the settled layout drifts
+        // 50% past the best window ever seen. Switching is bit-free, so
+        // this knob never perturbs numerics.
+        if self.init.caps.layout {
+            match self.probe {
+                Probe::Idle => {
+                    out.push(self.flip_layout(
+                        epoch,
+                        format!("probe alternative layout (baseline {:.3}ms/epoch)", mean * 1e3),
+                    ));
+                    self.probe = Probe::Armed { baseline: mean };
+                }
+                Probe::Armed { baseline } => {
+                    if mean > baseline {
+                        out.push(self.flip_layout(
+                            epoch,
+                            format!(
+                                "probe lost: {:.3}ms/epoch vs baseline {:.3}ms/epoch",
+                                mean * 1e3,
+                                baseline * 1e3
+                            ),
+                        ));
+                    }
+                    self.probe = Probe::Settled;
+                }
+                Probe::Settled => {
+                    if mean > 1.5 * self.best_mean && self.best_mean.is_finite() {
+                        out.push(self.flip_layout(
+                            epoch,
+                            format!(
+                                "drift: {:.3}ms/epoch vs best {:.3}ms/epoch, re-probing",
+                                mean * 1e3,
+                                self.best_mean * 1e3
+                            ),
+                        ));
+                        self.probe = Probe::Armed { baseline: mean };
+                    }
+                }
+            }
+        }
+
+        // (2) Bucket: bounded hill-climb on the power-of-two ladder,
+        // only once the layout probe has settled (so the two knobs'
+        // effects are not confounded) and never off the back of a window
+        // containing a reverted (adaptive-σ backtracked) epoch.
+        let layout_quiet = !self.init.caps.layout || self.probe == Probe::Settled;
+        if self.init.caps.bucket
+            && layout_quiet
+            && !reverted
+            && self.bucket_moves < Self::MAX_BUCKET_MOVES
+        {
+            if let Some(prev) = self.prev_mean {
+                match self.climb {
+                    Climb::Idle => {
+                        if mean > prev * 1.05 {
+                            // Seeded initial direction: the one rng draw.
+                            let dir: i8 = if self.rng.next_u64() & 1 == 0 { 1 } else { -1 };
+                            if let Some(d) = self.step_bucket(epoch, dir, mean, prev) {
+                                out.push(d);
+                                self.climb = Climb::Climbing(dir);
+                            } else {
+                                self.climb = Climb::Done;
+                            }
+                        }
+                    }
+                    Climb::Climbing(dir) => {
+                        if mean <= prev * 0.95 {
+                            // Still improving: take another step.
+                            if let Some(d) = self.step_bucket(epoch, dir, mean, prev) {
+                                out.push(d);
+                            } else {
+                                self.climb = Climb::Done;
+                            }
+                        } else if mean > prev * 1.05 {
+                            // Regressed: revert the last step, stop.
+                            if let Some(d) = self.step_bucket(epoch, -dir, mean, prev) {
+                                out.push(d);
+                            }
+                            self.climb = Climb::Done;
+                        } else {
+                            // Flat: keep what we have.
+                            self.climb = Climb::Done;
+                        }
+                    }
+                    Climb::Done => {}
+                }
+            }
+        }
+
+        // (3) Workers: measured busy imbalance materially above 1 first
+        // turns on work stealing, then — if stealing cannot fix it —
+        // retires one effective worker per boundary. Skipped on reverted
+        // windows (numerics already unstable there).
+        if self.init.caps.workers && !reverted {
+            if let Some(imb) = imbalance {
+                if imb > Self::STEAL_IMBALANCE && !self.dynamic {
+                    out.push(TuneDecision {
+                        epoch,
+                        knob: Knob::Steal,
+                        from: "static".to_string(),
+                        to: "dynamic".to_string(),
+                        reason: format!(
+                            "imbalance {:.3} > {:.2}: enable work stealing",
+                            imb,
+                            Self::STEAL_IMBALANCE
+                        ),
+                    });
+                    self.dynamic = true;
+                } else if imb > Self::SHRINK_IMBALANCE && self.dynamic && self.workers > 1 {
+                    let to = self.workers - 1;
+                    out.push(TuneDecision {
+                        epoch,
+                        knob: Knob::Workers,
+                        from: self.workers.to_string(),
+                        to: to.to_string(),
+                        reason: format!(
+                            "imbalance {:.3} > {:.2} despite stealing: retire one worker",
+                            imb,
+                            Self::SHRINK_IMBALANCE
+                        ),
+                    });
+                    self.workers = to;
+                }
+            }
+        }
+
+        self.prev_mean = Some(mean);
+        if mean < self.best_mean {
+            self.best_mean = mean;
+        }
+        self.decisions.extend(out.iter().cloned());
+        out
+    }
+
+    fn flip_layout(&mut self, epoch: usize, reason: String) -> TuneDecision {
+        let from = layout_name(self.interleaved);
+        self.interleaved = !self.interleaved;
+        TuneDecision {
+            epoch,
+            knob: Knob::Layout,
+            from: from.to_string(),
+            to: layout_name(self.interleaved).to_string(),
+            reason,
+        }
+    }
+
+    /// One ladder step; `None` when clamped at an edge (no decision).
+    fn step_bucket(&mut self, epoch: usize, dir: i8, mean: f64, prev: f64) -> Option<TuneDecision> {
+        let next = if dir > 0 {
+            (self.bucket.saturating_mul(2)).min(Self::MAX_BUCKET)
+        } else {
+            (self.bucket / 2).max(1)
+        };
+        if next == self.bucket {
+            return None;
+        }
+        let d = TuneDecision {
+            epoch,
+            knob: Knob::Bucket,
+            from: self.bucket.to_string(),
+            to: next.to_string(),
+            reason: format!("epoch wall {:.3}ms vs prev {:.3}ms", mean * 1e3, prev * 1e3),
+        };
+        self.bucket = next;
+        self.bucket_moves += 1;
+        Some(d)
+    }
+
+    /// Finish the run: the full, replayable decision log.
+    pub fn into_log(self) -> TuneLog {
+        TuneLog { solver: self.solver, init: self.init, decisions: self.decisions }
+    }
+
+    /// Replay a recorded observation stream through a fresh tuner. Pure:
+    /// same `init` + same points ⇒ the very decisions the live tuner
+    /// made (the points already reflect every applied decision, so no
+    /// solver simulation is needed).
+    pub fn replay(solver: &str, init: &TuneInit, points: &[ConvergencePoint]) -> TuneLog {
+        let mut t = AutoTuner::new(solver, init.clone());
+        for p in points {
+            t.observe(p);
+        }
+        t.into_log()
+    }
+}
+
+/// Tick the labelled `tuner.decisions` metric for each applied decision.
+/// Kept out of [`AutoTuner::observe`] so replays never double-count.
+pub fn record_decision_metrics(decisions: &[TuneDecision]) {
+    for d in decisions {
+        crate::obs::registry()
+            .labelled_counter("tuner.decisions", &[("knob", d.knob.name())])
+            .inc();
+    }
+}
+
+/// What an epoch loop holds: a live [`AutoTuner`] under
+/// [`TunePolicy::On`], nothing under `Off`. Keeps the per-solver wiring
+/// to three calls (`for_run` / `observe` / `finish`) and guarantees the
+/// `Off` path allocates and computes nothing.
+#[derive(Debug)]
+pub(crate) struct EpochTuner {
+    inner: Option<AutoTuner>,
+}
+
+impl EpochTuner {
+    pub(crate) fn for_run(
+        policy: TunePolicy,
+        caps: TuneCaps,
+        solver: &str,
+        bucket: usize,
+        interleaved: bool,
+        workers: usize,
+        dynamic: bool,
+    ) -> EpochTuner {
+        let inner = match policy {
+            TunePolicy::Off => None,
+            TunePolicy::On { seed } => Some(AutoTuner::new(
+                solver,
+                TuneInit::new(seed, caps).with_knobs(bucket, interleaved, workers, dynamic),
+            )),
+        };
+        EpochTuner { inner }
+    }
+
+    /// Feed the point the epoch loop just recorded; applied decisions are
+    /// returned for the solver to act on and ticked on the labelled
+    /// `tuner.decisions` metric.
+    pub(crate) fn observe(&mut self, p: &ConvergencePoint) -> Vec<TuneDecision> {
+        match &mut self.inner {
+            Some(t) => {
+                let decisions = t.observe(p);
+                record_decision_metrics(&decisions);
+                decisions
+            }
+            None => Vec::new(),
+        }
+    }
+
+    pub(crate) fn finish(self) -> Option<TuneLog> {
+        self.inner.map(AutoTuner::into_log)
+    }
+}
+
+/// First line of every serialized tune log.
+pub const TUNE_LOG_MAGIC: &str = "# parlin-tune-v1";
+
+const TUNE_LOG_COLUMNS: &str = "epoch,knob,from,to,reason";
+
+/// A run's complete, replayable tuning record: the [`TuneInit`] (header)
+/// plus every applied [`TuneDecision`] (CSV rows). `to_csv`/`from_csv`
+/// round-trip byte-exactly, which is what "same seed + same trace ⇒
+/// byte-identical log" means operationally.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuneLog {
+    pub solver: String,
+    pub init: TuneInit,
+    pub decisions: Vec<TuneDecision>,
+}
+
+impl TuneLog {
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} seed={} window={} caps={} bucket0={} layout0={} workers0={} partition0={} solver={}",
+            TUNE_LOG_MAGIC,
+            self.init.seed,
+            self.init.window,
+            self.init.caps.encode(),
+            self.init.bucket,
+            layout_name(self.init.interleaved),
+            self.init.workers,
+            if self.init.dynamic { "dynamic" } else { "static" },
+            self.solver,
+        );
+        s.push_str(TUNE_LOG_COLUMNS);
+        s.push('\n');
+        for d in &self.decisions {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{}",
+                d.epoch,
+                d.knob.name(),
+                csv_field(&d.from),
+                csv_field(&d.to),
+                csv_field(&d.reason),
+            );
+        }
+        s
+    }
+
+    /// Parse a [`TuneLog::to_csv`] dump back; `None` on a wrong magic,
+    /// malformed header token, or bad row.
+    pub fn from_csv(csv: &str) -> Option<TuneLog> {
+        let mut lines = csv.lines();
+        let head = lines.next()?;
+        let rest = head.strip_prefix(TUNE_LOG_MAGIC)?.strip_prefix(' ')?;
+        // `solver=` takes the rest of the line: labels like
+        // `numa(2n,bucket=4)` must survive verbatim.
+        let (kvs, solver) = rest.split_once("solver=")?;
+        let mut init = TuneInit::new(0, TuneCaps::NONE);
+        for tok in kvs.split_whitespace() {
+            let (k, v) = tok.split_once('=')?;
+            match k {
+                "seed" => init.seed = v.parse().ok()?,
+                "window" => init.window = v.parse().ok()?,
+                "caps" => init.caps = TuneCaps::decode(v)?,
+                "bucket0" => init.bucket = v.parse().ok()?,
+                "layout0" => {
+                    init.interleaved = match v {
+                        "interleaved" => true,
+                        "csc" => false,
+                        _ => return None,
+                    }
+                }
+                "workers0" => init.workers = v.parse().ok()?,
+                "partition0" => {
+                    init.dynamic = match v {
+                        "dynamic" => true,
+                        "static" => false,
+                        _ => return None,
+                    }
+                }
+                _ => return None,
+            }
+        }
+        if lines.next()? != TUNE_LOG_COLUMNS {
+            return None;
+        }
+        let mut decisions = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let cells = split_csv_row(line);
+            if cells.len() != 5 {
+                return None;
+            }
+            decisions.push(TuneDecision {
+                epoch: cells[0].parse().ok()?,
+                knob: Knob::parse(&cells[1])?,
+                from: cells[2].clone(),
+                to: cells[3].clone(),
+                reason: cells[4].clone(),
+            });
+        }
+        Some(TuneLog { solver: solver.to_string(), init, decisions })
+    }
+
+    /// Replay this log's own observation stream and check every decision
+    /// matches; `Err` describes the first divergence. Used by the
+    /// property suite and `examples/check_tune.rs`.
+    pub fn verify_replay(&self, points: &[ConvergencePoint]) -> Result<(), String> {
+        let replayed = AutoTuner::replay(&self.solver, &self.init, points);
+        if replayed.decisions.len() != self.decisions.len() {
+            return Err(format!(
+                "decision count diverged: log has {}, replay produced {}",
+                self.decisions.len(),
+                replayed.decisions.len()
+            ));
+        }
+        for (i, (a, b)) in self.decisions.iter().zip(&replayed.decisions).enumerate() {
+            if a != b {
+                return Err(format!("decision {i} diverged: log {a:?}, replay {b:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(
+        epoch: usize,
+        wall_s: f64,
+        rel: f64,
+        imbalance: Option<f64>,
+    ) -> ConvergencePoint {
+        ConvergencePoint { epoch, wall_s, rel_change: rel, gap: None, imbalance, busy_s: None }
+    }
+
+    /// Cumulative-wall trace where each window of 4 epochs has the given
+    /// mean epoch wall (seconds).
+    fn trace_with_window_means(means: &[f64], imbalance: Option<f64>) -> Vec<ConvergencePoint> {
+        let mut points = Vec::new();
+        let mut wall = 0.0;
+        let mut epoch = 0;
+        for &m in means {
+            for _ in 0..TUNE_WINDOW {
+                epoch += 1;
+                wall += m;
+                points.push(point(epoch, wall, 0.1, imbalance));
+            }
+        }
+        points
+    }
+
+    fn layout_init(seed: u64) -> TuneInit {
+        TuneInit::new(seed, TuneCaps { bucket: false, layout: true, workers: false })
+            .with_knobs(8, true, 1, true)
+    }
+
+    #[test]
+    fn cancel_token_cancels_resets_and_unwinds_with_typed_payload() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.checkpoint("seq(bucket=8)", 1); // no-op while not cancelled
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert!(t.clone().is_cancelled(), "clones share the flag");
+        let err = std::panic::catch_unwind(|| t.checkpoint("seq(bucket=8)", 3))
+            .expect_err("cancelled checkpoint must unwind");
+        let payload = err.downcast_ref::<TrainCancelled>().expect("typed payload");
+        assert_eq!(payload.epoch, 3);
+        assert_eq!(payload.solver, "seq(bucket=8)");
+        t.reset();
+        assert!(!t.is_cancelled());
+        t.checkpoint("seq(bucket=8)", 4); // runs again after reset
+    }
+
+    #[test]
+    fn no_decisions_before_a_full_window() {
+        let mut tuner = AutoTuner::new("seq", layout_init(7));
+        for e in 1..TUNE_WINDOW {
+            assert!(tuner.observe(&point(e, e as f64 * 0.01, 0.1, None)).is_empty());
+        }
+        let at_boundary =
+            tuner.observe(&point(TUNE_WINDOW, TUNE_WINDOW as f64 * 0.01, 0.1, None));
+        assert_eq!(at_boundary.len(), 1, "first boundary probes the layout");
+        assert_eq!(at_boundary[0].knob, Knob::Layout);
+        assert_eq!(at_boundary[0].epoch, TUNE_WINDOW);
+    }
+
+    #[test]
+    fn layout_probe_switches_back_when_it_loses() {
+        // Window 1 fast (baseline), window 2 (the probe) slower, window 3
+        // steady: expect probe at epoch 4, revert at epoch 8, silence after.
+        let points = trace_with_window_means(&[0.010, 0.020, 0.010], None);
+        let log = AutoTuner::replay("seq", &layout_init(1), &points);
+        assert_eq!(log.decisions.len(), 2);
+        assert_eq!(log.decisions[0].epoch, 4);
+        assert_eq!((log.decisions[0].from.as_str(), log.decisions[0].to.as_str()), ("interleaved", "csc"));
+        assert_eq!(log.decisions[1].epoch, 8);
+        assert_eq!((log.decisions[1].from.as_str(), log.decisions[1].to.as_str()), ("csc", "interleaved"));
+        assert!(log.decisions[1].reason.contains("probe lost"));
+    }
+
+    #[test]
+    fn layout_probe_keeps_a_winning_layout_silently() {
+        // Probe window is faster: keep it, no second decision.
+        let points = trace_with_window_means(&[0.020, 0.010, 0.010, 0.011], None);
+        let log = AutoTuner::replay("seq", &layout_init(1), &points);
+        assert_eq!(log.decisions.len(), 1, "only the probe itself is logged");
+        assert_eq!(log.decisions[0].to, "csc");
+    }
+
+    #[test]
+    fn caps_gate_which_knobs_can_move() {
+        // Worst-case trace (slow, imbalanced) but with all caps off:
+        // zero decisions, ever.
+        let points = trace_with_window_means(&[0.01, 0.05, 0.2, 0.9], Some(3.0));
+        let log = AutoTuner::replay("seq", &TuneInit::new(9, TuneCaps::NONE), &points);
+        assert!(log.decisions.is_empty());
+        // Layout-only caps: every decision is a layout flip.
+        let log = AutoTuner::replay("seq", &layout_init(9), &points);
+        assert!(!log.decisions.is_empty());
+        assert!(log.decisions.iter().all(|d| d.knob == Knob::Layout));
+    }
+
+    #[test]
+    fn imbalance_turns_on_stealing_then_retires_workers() {
+        let init = TuneInit::new(3, TuneCaps { bucket: false, layout: false, workers: true })
+            .with_knobs(8, true, 4, false);
+        let points = trace_with_window_means(&[0.01, 0.01, 0.01], Some(2.0));
+        let log = AutoTuner::replay("dom", &init, &points);
+        assert_eq!(log.decisions[0].knob, Knob::Steal);
+        assert_eq!(log.decisions[0].from, "static");
+        assert_eq!(log.decisions[0].to, "dynamic");
+        assert_eq!(log.decisions[1].knob, Knob::Workers);
+        assert_eq!((log.decisions[1].from.as_str(), log.decisions[1].to.as_str()), ("4", "3"));
+        assert_eq!(log.decisions[2].knob, Knob::Workers);
+        assert_eq!((log.decisions[2].from.as_str(), log.decisions[2].to.as_str()), ("3", "2"));
+    }
+
+    #[test]
+    fn balanced_pools_and_reverted_windows_leave_workers_alone() {
+        let init = TuneInit::new(3, TuneCaps { bucket: false, layout: false, workers: true })
+            .with_knobs(8, true, 4, false);
+        let balanced = trace_with_window_means(&[0.01, 0.01], Some(1.05));
+        assert!(AutoTuner::replay("dom", &init, &balanced).decisions.is_empty());
+        // Same imbalance, but every window contains a reverted epoch.
+        let mut reverted = trace_with_window_means(&[0.01, 0.01], Some(2.0));
+        for p in reverted.iter_mut().step_by(TUNE_WINDOW) {
+            p.rel_change = f64::INFINITY;
+        }
+        assert!(AutoTuner::replay("dom", &init, &reverted).decisions.is_empty());
+    }
+
+    #[test]
+    fn bucket_climb_is_bounded_and_stops_on_regression() {
+        let init = TuneInit::new(5, TuneCaps { bucket: true, layout: false, workers: false })
+            .with_knobs(8, true, 1, true);
+        // Monotonically degrading epochs force a climb start; whatever
+        // direction the seed picks, total moves stay ≤ MAX_BUCKET_MOVES
+        // and every value stays on the clamped ladder.
+        let means: Vec<f64> = (0..10).map(|i| 0.01 * 1.2f64.powi(i)).collect();
+        let log = AutoTuner::replay("seq", &init, &trace_with_window_means(&means, None));
+        let bucket_moves: Vec<_> =
+            log.decisions.iter().filter(|d| d.knob == Knob::Bucket).collect();
+        assert!(!bucket_moves.is_empty(), "degrading trace must trigger the climb");
+        assert!(bucket_moves.len() <= AutoTuner::MAX_BUCKET_MOVES);
+        for d in &bucket_moves {
+            let v: usize = d.to.parse().expect("ladder values are integers");
+            assert!((1..=AutoTuner::MAX_BUCKET).contains(&v));
+            assert!(v.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace_is_byte_identical() {
+        let points = trace_with_window_means(&[0.01, 0.03, 0.02, 0.05, 0.01], Some(1.8));
+        let init = TuneInit::new(42, TuneCaps { bucket: true, layout: true, workers: true })
+            .with_knobs(16, true, 4, false);
+        let a = AutoTuner::replay("dom-dynamic(bucket=16)", &init, &points);
+        let b = AutoTuner::replay("dom-dynamic(bucket=16)", &init, &points);
+        assert_eq!(a, b);
+        assert_eq!(a.to_csv(), b.to_csv(), "byte-identical serialization");
+    }
+
+    #[test]
+    fn log_csv_round_trips_byte_exactly() {
+        let init = TuneInit::new(7, TuneCaps { bucket: true, layout: true, workers: true })
+            .with_knobs(8, false, 3, false);
+        let log = TuneLog {
+            solver: "numa(2n,bucket=4)".to_string(),
+            init,
+            decisions: vec![
+                TuneDecision {
+                    epoch: 4,
+                    knob: Knob::Layout,
+                    from: "csc".to_string(),
+                    to: "interleaved".to_string(),
+                    reason: "probe alternative layout (baseline 1.250ms/epoch)".to_string(),
+                },
+                TuneDecision {
+                    epoch: 8,
+                    knob: Knob::Steal,
+                    from: "static".to_string(),
+                    to: "dynamic".to_string(),
+                    reason: "imbalance 1.900 > 1.25: enable work stealing".to_string(),
+                },
+            ],
+        };
+        let csv = log.to_csv();
+        assert!(csv.starts_with(TUNE_LOG_MAGIC));
+        assert!(csv.contains("solver=numa(2n,bucket=4)"), "comma labels survive the header");
+        let back = TuneLog::from_csv(&csv).expect("own output must parse");
+        assert_eq!(back, log);
+        assert_eq!(back.to_csv(), csv, "round trip is byte-exact");
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(TuneLog::from_csv("").is_none());
+        assert!(TuneLog::from_csv("epoch,knob,from,to,reason\n").is_none());
+        assert!(TuneLog::from_csv("# parlin-tune-v2 seed=1 solver=seq\n").is_none());
+        let bad_knob = format!(
+            "{TUNE_LOG_MAGIC} seed=1 window=4 caps=layout bucket0=8 layout0=interleaved \
+             workers0=1 partition0=static solver=seq\n{TUNE_LOG_COLUMNS}\n4,warp,a,b,c\n"
+        );
+        assert!(TuneLog::from_csv(&bad_knob).is_none());
+        let bad_layout = format!(
+            "{TUNE_LOG_MAGIC} seed=1 window=4 caps=layout bucket0=8 layout0=diagonal \
+             workers0=1 partition0=static solver=seq\n{TUNE_LOG_COLUMNS}\n"
+        );
+        assert!(TuneLog::from_csv(&bad_layout).is_none());
+    }
+
+    #[test]
+    fn verify_replay_reports_the_first_divergence() {
+        let points = trace_with_window_means(&[0.01, 0.02, 0.01], None);
+        let mut log = AutoTuner::replay("seq", &layout_init(11), &points);
+        log.verify_replay(&points).expect("own trace must replay");
+        log.decisions[0].to = "csc-but-wrong".to_string();
+        let err = log.verify_replay(&points).expect_err("tampered log must fail");
+        assert!(err.contains("decision 0"), "got: {err}");
+    }
+}

@@ -19,6 +19,7 @@ use crate::data::{DataMatrix, Dataset, LayoutPolicy, ShardedLayout};
 use crate::glm::ModelState;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::obs::{self, EventKind};
+use crate::solver::tune::{EpochTuner, Knob, TuneCaps};
 use crate::solver::{kernel, Buckets, ConvergenceMonitor, SolverConfig, TrainOutput};
 use crate::util::atomic::{atomic_vec, padded_atomic_vec, snapshot, AtomicF64, PaddedAtomicF64};
 use crate::util::{Rng, Timer};
@@ -44,13 +45,13 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     // geometry is irrelevant to a per-example walk). Shared vector `v`
     // is cache-line padded — adjacent coordinates no longer false-share
     // under the unsynchronized ADDs.
-    let layout = RunLayout::resolve(
-        cfg.layout == LayoutPolicy::Interleaved,
+    let mut use_interleaved = cfg.layout == LayoutPolicy::Interleaved;
+    let mut layout = RunLayout::resolve(
+        use_interleaved,
         cfg.layout_cache.as_ref(),
         |l| l.covers_examples(n, ds.d(), ds.x.nnz()),
         || ShardedLayout::single(&ds.x, &Buckets::new(n, 1)),
     );
-    let shard = layout.shard(0);
     let init = crate::solver::initial_state(cfg, ds);
     let alpha: Vec<AtomicF64> = atomic_vec(n);
     let v: Vec<PaddedAtomicF64> = padded_atomic_vec(ds.d());
@@ -78,6 +79,12 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
     // per-epoch convergence telemetry: reuses rel/wall_s below, adds no
     // clock read of its own (wild never evaluates the duality gap)
     let mut conv = obs::ConvergenceTrace::new("wild", t_threads);
+    // Wild pins its bucketing (per-example walk) and worker split (one
+    // contiguous permutation slice per thread), so the tuner may only
+    // move the bit-free layout knob.
+    let caps = TuneCaps { bucket: false, layout: true, workers: false };
+    let mut tuner =
+        EpochTuner::for_run(cfg.tune, caps, "wild", 1, use_interleaved, t_threads, false);
     let epoch_ctr = obs::registry().counter("solver.epochs");
     let epoch_wall_us = obs::registry().histogram("solver.epoch_wall_us");
     for epoch in 1..=cfg.max_epochs {
@@ -86,6 +93,11 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         // armed fault plans fire here (coordinator thread, before any
         // dispatch) so an injected panic unwinds cleanly through the epoch
         crate::fault::poke(crate::fault::FaultSite::Epoch);
+        // cooperative cancellation: the once-per-epoch checkpoint
+        if let Some(c) = &cfg.cancel {
+            c.checkpoint("wild", epoch);
+        }
+        let shard = if use_interleaved { layout.shard(0) } else { None };
         // Sequential shuffle — deliberately so; its serial cost is one of
         // the scalability bottlenecks the paper measures (Fig. 2a).
         rng.shuffle(&mut perm);
@@ -162,6 +174,17 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
             pool_stats.as_ref().map(|s| s.imbalance()),
             pool_stats.as_ref().map(|s| s.total_busy_s()),
         );
+        // Epoch-boundary tuning: layout is the only knob wild exposes.
+        for d in tuner.observe(conv.points.last().expect("recorded this epoch")) {
+            if d.knob == Knob::Layout {
+                use_interleaved = d.to == "interleaved";
+                if use_interleaved && layout.shard(0).is_none() {
+                    layout = RunLayout::resolve(true, None, |_| false, || {
+                        ShardedLayout::single(&ds.x, &Buckets::new(n, 1))
+                    });
+                }
+            }
+        }
         epoch_ctr.inc();
         epoch_wall_us.record((wall_s * 1e6) as u64);
         obs::emit(EventKind::EpochEnd, obs::CLASS_NONE, 0, epoch as u64);
@@ -191,7 +214,9 @@ pub fn train_wild<M: DataMatrix>(ds: &Dataset<M>, cfg: &SolverConfig) -> TrainOu
         diverged,
         total_wall_s: total.elapsed_s(),
     };
-    TrainOutput::assemble(ds, &obj, st, record).with_convergence(conv)
+    TrainOutput::assemble(ds, &obj, st, record)
+        .with_convergence(conv)
+        .with_tune_log(tuner.finish())
 }
 
 #[cfg(test)]

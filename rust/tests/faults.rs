@@ -297,6 +297,73 @@ fn nonfinite_ingest_is_rejected_at_the_door() {
     assert!(sched.flush().is_none(), "nothing may have been staged");
 }
 
+/// Cooperative cancellation: a refit dragged out by an injected
+/// `delay@epoch` plan is aborted at its next epoch-boundary checkpoint
+/// when the session's [`CancelToken`] trips — the writer returns the
+/// *typed* `ServeError::Cancelled` (not a generic panic), the session
+/// rolls back to last-known-good (bit-identical predicts, n unchanged),
+/// the thread census stays flat, and after `reset()` the very same
+/// session refits cleanly. This is the lever the drain watchdog pulls to
+/// force-recover a stuck drain instead of merely flagging it.
+#[test]
+fn cancelled_refit_is_typed_rolled_back_and_recoverable() {
+    let _g = gate();
+    let mut sess = session(120, 91);
+    let idx: Vec<usize> = (0..24).map(|i| (i * 5) % 120).collect();
+    let before = sess.predict(&idx);
+    let w0 = sess.weights().to_vec();
+    let baseline = settled_census(usize::MAX - 1);
+
+    // every refit epoch stalls 80ms: the "stuck drain" the watchdog sees
+    let guard = FaultPlan::parse("delay:80@epoch#1x8", 11).unwrap().arm();
+    let token = sess.cancel_token();
+
+    // (1) pre-armed token: the stuck refit dies at its first checkpoint
+    token.cancel();
+    let rows = synthetic::dense_classification(15, 6, 92);
+    match sess.partial_fit_rows(&rows) {
+        Err(ServeError::Cancelled { kind: "refit-rows", epoch: 1 }) => {}
+        other => panic!("expected the typed cancellation at epoch 1, got {other:?}"),
+    }
+    assert_eq!(sess.n(), 120, "the cancelled refit must roll the appended rows back");
+    assert_eq!(sess.weights(), &w0[..], "…and the model");
+    assert_eq!(sess.predict(&idx), before, "predicts stay bit-identical after rollback");
+
+    // (2) mid-flight cancel: trip the token from another thread while the
+    // first delayed epoch grinds — the abort lands at the next boundary
+    token.reset();
+    let trip = {
+        let token = token.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            token.cancel();
+        })
+    };
+    match sess.partial_fit_rows(&rows) {
+        Err(ServeError::Cancelled { kind: "refit-rows", epoch }) => {
+            assert!(epoch >= 1, "cancellation is an epoch-boundary event, got {epoch}")
+        }
+        other => panic!("expected a mid-flight cancellation, got {other:?}"),
+    }
+    trip.join().unwrap();
+    assert_eq!(sess.n(), 120);
+    assert_eq!(sess.predict(&idx), before);
+
+    // (3) recovery: reset + disarm, the same session publishes cleanly
+    token.reset();
+    drop(guard);
+    let clean = sess.partial_fit_rows(&rows).expect("reset token must allow a clean refit");
+    assert_eq!(clean.kind, "refit-rows");
+    assert_eq!(clean.n, 135);
+    assert_eq!(sess.n(), 135);
+
+    let after = settled_census(baseline);
+    assert!(
+        after <= baseline,
+        "cancelled refits leaked threads: baseline={baseline}, after={after}"
+    );
+}
+
 /// Flight forensics: with a tracing session live and the flight recorder
 /// armed, the contained refit panic of test (a) leaves a dump pair on
 /// disk — a chrome-trace JSON whose trailing window holds the

@@ -250,6 +250,76 @@ mod scrape {
         assert_eq!(body.trim_end(), "Degraded (drain failed: injected)");
         srv.shutdown();
     }
+
+    /// Labelled families survive the wire: distinct label sets come out of
+    /// `/metrics` as separate `name{key="value"}` series — exactly one
+    /// sample per label set, one `# TYPE` line per family, and never a
+    /// duplicate (name, label-set) pair anywhere in the exposition. The
+    /// real producer is exercised too: a tuned training run surfaces its
+    /// per-knob decision counters in the same shape.
+    #[test]
+    fn labelled_series_are_exposed_once_per_label_set() {
+        use parlin::obs::registry;
+        use parlin::solver::{train, BucketPolicy, TunePolicy, Variant};
+
+        // seed one family with two label sets, touching one of them twice
+        // (the registry is process-global, so values are lower bounds; the
+        // series *shape* is what this test owns)
+        registry().labelled_counter("obs.test.decisions", &[("knob", "layout")]).add(3);
+        registry().labelled_counter("obs.test.decisions", &[("knob", "bucket")]).inc();
+        registry().labelled_counter("obs.test.decisions", &[("knob", "layout")]).inc();
+
+        // and drive the real producer: 12 fixed epochs cross the tuner's
+        // first window boundary, so the layout probe must record a decision
+        let ds = synthetic::dense_classification(300, 12, 41);
+        let cfg = fixed_epochs(300, 1, 12)
+            .with_variant(Variant::Sequential)
+            .with_bucket(BucketPolicy::Fixed(8))
+            .with_tune(TunePolicy::On { seed: 3 });
+        let out = train(&ds, &cfg);
+        assert!(
+            !out.tune_log.expect("tuned run must stamp a log").decisions.is_empty(),
+            "the tuned run never decided anything — no labelled sample to check"
+        );
+
+        let srv = ExportServer::start("127.0.0.1:0", ExportSources::default())
+            .expect("binding the export server");
+        let (status, body) = http_get(srv.local_addr(), "/metrics");
+        assert_eq!(status, 200);
+
+        let series = |prefix: &str| body.lines().filter(|l| l.starts_with(prefix)).count();
+        assert_eq!(
+            series("parlin_obs_test_decisions{knob=\"layout\"} "),
+            1,
+            "one sample per label set:\n{body}"
+        );
+        assert_eq!(series("parlin_obs_test_decisions{knob=\"bucket\"} "), 1);
+        assert_eq!(
+            series("# TYPE parlin_obs_test_decisions counter"),
+            1,
+            "one TYPE line per labelled family:\n{body}"
+        );
+        let layout_value: u64 = body
+            .lines()
+            .find(|l| l.starts_with("parlin_obs_test_decisions{knob=\"layout\"} "))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .expect("layout series must carry an integer value");
+        assert!(layout_value >= 4, "two bumps landed on one series, got {layout_value}");
+        assert!(
+            body.lines().any(|l| l.starts_with("parlin_tuner_decisions{knob=\"")),
+            "the tuner's decisions never reached the exposition:\n{body}"
+        );
+
+        // global uniqueness: the snapshot is sorted maps all the way down,
+        // so no (name, label-set) may ever repeat
+        let mut seen = std::collections::BTreeSet::new();
+        for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let metric = line.rsplit_once(' ').expect("sample line has a value").0;
+            assert!(seen.insert(metric.to_string()), "duplicate series {metric} in exposition");
+        }
+        srv.shutdown();
+    }
 }
 
 /// The non-perturbation contract of [`parlin::obs::ConvergenceTrace`]:

@@ -618,6 +618,66 @@ fn prop_layout_append_tail_matches_rebuild() {
     }
 }
 
+/// The auto-tuner's purity contract, over randomized observation streams:
+/// a [`TuneLog`] recorded against a trace must replay against that very
+/// trace (same decisions, byte-identical CSV), including after a
+/// serialization round trip — for arbitrary windows, capability sets,
+/// starting knobs, reverted epochs and missing imbalance samples.
+/// Failures print the generator seed for exact replay.
+#[test]
+fn prop_tune_log_replays_against_its_own_trace() {
+    use parlin::obs::ConvergencePoint;
+    use parlin::solver::{AutoTuner, TuneCaps, TuneInit, TuneLog};
+
+    let mut seed_src = Rng::new(0x7E4E);
+    for trial in 0..60 {
+        let seed = seed_src.next_u64();
+        let mut rng = Rng::new(seed);
+        let caps = TuneCaps {
+            bucket: rng.next_f64() < 0.5,
+            layout: rng.next_f64() < 0.5,
+            workers: rng.next_f64() < 0.5,
+        };
+        let mut init = TuneInit::new(rng.next_u64(), caps).with_knobs(
+            1 << rng.next_below(8),
+            rng.next_f64() < 0.5,
+            1 + rng.next_below(8) as usize,
+            rng.next_f64() < 0.5,
+        );
+        init.window = 1 + rng.next_below(6) as usize;
+        let n = 8 + rng.next_below(40) as usize;
+        let mut wall = 0.0;
+        let points: Vec<ConvergencePoint> = (1..=n)
+            .map(|epoch| {
+                wall += 0.001 + rng.next_f64() * 0.01;
+                ConvergencePoint {
+                    epoch,
+                    wall_s: wall,
+                    // ~10% adaptive-σ reverted epochs
+                    rel_change: if rng.next_f64() < 0.1 { f64::INFINITY } else { rng.next_f64() },
+                    gap: (rng.next_f64() < 0.3).then(|| rng.next_f64()),
+                    imbalance: (rng.next_f64() < 0.7).then(|| 1.0 + rng.next_f64() * 2.0),
+                    busy_s: None,
+                }
+            })
+            .collect();
+        let replay = format!(
+            "replay: seed={seed} trial={trial} window={} n={n} caps={caps:?}",
+            init.window
+        );
+        let log = AutoTuner::replay("prop", &init, &points);
+        log.verify_replay(&points)
+            .unwrap_or_else(|e| panic!("{replay}: {e}"));
+        let csv = log.to_csv();
+        let back =
+            TuneLog::from_csv(&csv).unwrap_or_else(|| panic!("{replay}: own csv must parse"));
+        assert_eq!(back, log, "{replay}: round trip");
+        back.verify_replay(&points)
+            .unwrap_or_else(|e| panic!("{replay} (after round trip): {e}"));
+        assert_eq!(back.to_csv(), csv, "{replay}: byte-exact serialization");
+    }
+}
+
 /// The log₂-bucket histogram quantile is the midpoint of the bucket
 /// holding the exact k-th smallest sample (k = ⌈q·n⌉): the approximation
 /// never leaves the exact percentile's bucket, so it stays within a

@@ -1,0 +1,210 @@
+//! Determinism-first lock on the online auto-tuner (ROADMAP item 2, the
+//! SySCD follow-on): `--tune off` must leave every solver bit-for-bit
+//! untouched, layout decisions must be bit-free even mid-run, and a tuned
+//! run's decision log must be a pure, byte-replayable function of its own
+//! convergence trace — while tuned runs still reach the convergence
+//! monitor's tolerance.
+
+use parlin::data::synthetic;
+use parlin::glm::Objective;
+use parlin::solver::{
+    train, AutoTuner, BucketPolicy, CancelToken, ExecPolicy, Knob, LayoutPolicy, SolverConfig,
+    TuneLog, TunePolicy, Variant,
+};
+use parlin::sysinfo::Topology;
+
+fn logistic(n: usize) -> Objective {
+    Objective::Logistic { lambda: 1.0 / n as f64 }
+}
+
+/// The four (solver, thread-count) pairs the determinism matrix sweeps.
+/// `wild` runs one thread: its shared-vector races are the one documented
+/// nondeterminism in the repo, and this suite is about the *tuner* not
+/// perturbing runs that are deterministic to begin with.
+const SOLVERS: [(&str, Variant, usize); 4] = [
+    ("seq", Variant::Sequential, 1),
+    ("wild", Variant::Wild, 1),
+    ("dom", Variant::Domesticated, 4),
+    ("numa", Variant::Numa, 4),
+];
+
+/// `--tune off` (the default) constructs no tuner: for every solver and
+/// both layouts, a run with the policy spelled out (plus an installed but
+/// never-tripped CancelToken, the full new plumbing) is bit-wise
+/// identical to a run that never mentions tuning at all — and neither
+/// stamps a log.
+#[test]
+fn tune_off_is_bitwise_invisible_for_all_solvers_and_layouts() {
+    let ds = synthetic::dense_classification(300, 12, 21);
+    let topo = Topology::uniform(2, 2);
+    for (name, variant, threads) in SOLVERS {
+        let mut per_layout = Vec::new();
+        for layout in [LayoutPolicy::Interleaved, LayoutPolicy::Csc] {
+            let cfg = SolverConfig::new(logistic(300))
+                .with_variant(variant)
+                .with_threads(threads)
+                .with_topology(topo.clone())
+                .with_exec(ExecPolicy::Sequential)
+                .with_layout(layout)
+                .with_tol(0.0)
+                .with_max_epochs(8);
+            let base = train(&ds, &cfg);
+            let off = train(
+                &ds,
+                &cfg.clone()
+                    .with_tune(TunePolicy::Off)
+                    .with_cancel(CancelToken::new()),
+            );
+            assert_eq!(
+                base.state.alpha, off.state.alpha,
+                "{name}/{layout:?}: Off must be bit-identical (alpha)"
+            );
+            assert_eq!(
+                base.state.v, off.state.v,
+                "{name}/{layout:?}: Off must be bit-identical (v)"
+            );
+            assert!(
+                base.tune_log.is_none() && off.tune_log.is_none(),
+                "{name}/{layout:?}: Off runs must not stamp a tune log"
+            );
+            per_layout.push(off.state.alpha);
+        }
+        // and the layouts themselves stay bit-equal, untouched by the
+        // tuner plumbing (the dot4_by argument of docs/ARCHITECTURE.md)
+        assert_eq!(
+            per_layout[0], per_layout[1],
+            "{name}: interleaved and csc must stay bit-identical under Off"
+        );
+    }
+}
+
+/// A mid-run layout switch is bit-free: with every numerics-touching knob
+/// capability off (fixed bucket, no pool workers to retire), a tuned run
+/// makes only `layout` decisions — and lands on exactly the bits of the
+/// untuned run, while its log proves at least one switch happened.
+#[test]
+fn mid_run_layout_switch_is_bit_identical_to_never_switching() {
+    let ds = synthetic::dense_classification(400, 16, 22);
+    let topo = Topology::uniform(2, 2);
+    for (name, variant, threads) in [
+        ("seq", Variant::Sequential, 1),
+        ("wild", Variant::Wild, 1),
+        ("numa", Variant::Numa, 4),
+    ] {
+        let cfg = SolverConfig::new(logistic(400))
+            .with_variant(variant)
+            .with_threads(threads)
+            .with_topology(topo.clone())
+            .with_exec(ExecPolicy::Sequential)
+            .with_bucket(BucketPolicy::Fixed(8))
+            .with_tol(0.0)
+            .with_max_epochs(12);
+        let off = train(&ds, &cfg);
+        let on = train(&ds, &cfg.clone().with_tune(TunePolicy::On { seed: 5 }));
+        let log = on.tune_log.as_ref().expect("tuned run must stamp a log");
+        assert!(
+            !log.decisions.is_empty(),
+            "{name}: 12 epochs cover three windows; the layout probe must fire"
+        );
+        assert!(
+            log.decisions.iter().all(|d| d.knob == Knob::Layout),
+            "{name}: only the bit-free knob may move here, got {:?}",
+            log.decisions
+        );
+        assert_eq!(
+            off.state.alpha, on.state.alpha,
+            "{name}: a mid-run layout switch must be bit-free (alpha)"
+        );
+        assert_eq!(
+            off.state.v, on.state.v,
+            "{name}: a mid-run layout switch must be bit-free (v)"
+        );
+    }
+}
+
+/// The decision list is a pure function of (seed, observation stream):
+/// replaying a live run's own convergence trace through a fresh tuner
+/// reproduces the stamped log byte-for-byte, twice over, and the CSV
+/// round-trips exactly.
+#[test]
+fn same_seed_and_trace_reproduce_the_log_byte_for_byte() {
+    let ds = synthetic::dense_classification(500, 20, 23);
+    let cfg = SolverConfig::new(logistic(500))
+        .with_variant(Variant::Domesticated)
+        .with_threads(4)
+        .with_topology(Topology::uniform(1, 4))
+        .with_tol(0.0)
+        .with_max_epochs(16)
+        .with_tune(TunePolicy::On { seed: 7 });
+    let out = train(&ds, &cfg);
+    let log = out.tune_log.expect("tuned run must stamp a log");
+    log.verify_replay(&out.convergence.points)
+        .expect("a run's own trace must replay its own log");
+    let a = AutoTuner::replay(&log.solver, &log.init, &out.convergence.points);
+    let b = AutoTuner::replay(&log.solver, &log.init, &out.convergence.points);
+    assert_eq!(a, b, "replay is deterministic");
+    assert_eq!(
+        a.to_csv(),
+        log.to_csv(),
+        "replayed log is byte-identical to the live log"
+    );
+    let back = TuneLog::from_csv(&log.to_csv()).expect("a log's own csv must parse");
+    assert_eq!(back, log, "csv round trip is exact");
+    assert_eq!(back.to_csv(), log.to_csv(), "…and byte-exact");
+}
+
+/// Tuning never costs convergence: tuned runs still reach the monitor's
+/// tolerance, and across every decision boundary the measured duality gap
+/// is non-increasing by the end of the run (a decision may shift the
+/// trajectory, but the run keeps converging through it).
+#[test]
+fn tuned_runs_reach_tolerance_and_gaps_shrink_across_decisions() {
+    let ds = synthetic::dense_classification(400, 15, 24);
+    for (name, variant, threads) in [
+        ("seq", Variant::Sequential, 1),
+        ("dom", Variant::Domesticated, 4),
+    ] {
+        let mut cfg = SolverConfig::new(logistic(400))
+            .with_variant(variant)
+            .with_threads(threads)
+            .with_topology(Topology::uniform(1, 4))
+            .with_tol(1e-6)
+            .with_max_epochs(600)
+            .with_tune(TunePolicy::On { seed: 11 });
+        // record a gap on every epoch (the gap_tol itself is unreachable,
+        // so the rel-change monitor still decides convergence)
+        cfg.gap_tol = Some(1e-14);
+        cfg.gap_check_every = 1;
+        let out = train(&ds, &cfg);
+        assert!(
+            out.converged,
+            "{name}: tuned run must still reach the monitor tolerance"
+        );
+        assert!(out.final_gap < 1e-3, "{name}: gap={}", out.final_gap);
+        let log = out.tune_log.as_ref().expect("tuned run must stamp a log");
+        assert!(
+            !log.decisions.is_empty(),
+            "{name}: a run this long must cross at least one decision boundary"
+        );
+        let gap_at = |epoch: usize| {
+            out.convergence
+                .points
+                .iter()
+                .filter(|p| p.epoch <= epoch)
+                .filter_map(|p| p.gap)
+                .next_back()
+                .expect("gap recorded every epoch")
+        };
+        let last_gap = out.convergence.last_gap().expect("gap recorded every epoch");
+        for d in &log.decisions {
+            let before = gap_at(d.epoch);
+            assert!(
+                last_gap <= before + 1e-12,
+                "{name}: gap grew across the {} decision at epoch {} \
+                 (before {before:.3e}, end of run {last_gap:.3e})",
+                d.knob.name(),
+                d.epoch
+            );
+        }
+    }
+}
